@@ -1,0 +1,156 @@
+//! End-to-end validation (DESIGN.md §5): the full system on a real small
+//! workload, proving all three layers compose.
+//!
+//!   jax/pallas (build time) -> HLO artifacts -> rust PJRT runtime ->
+//!   router EM -> balanced sharding -> E independent experts ->
+//!   FLOPs-matched dense baseline -> held-out perplexity + downstream.
+//!
+//! Default scale: 4 x expert_sm (~0.9M params) for a few hundred steps on
+//! one CPU core. `--scale md` uses expert_md (~5M params); the loss curve
+//! and final comparison land in results/e2e_train.json and are recorded in
+//! EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example e2e_train -- [--scale sm|md]
+//!       [--experts N] [--steps N]`
+
+use smalltalk::baselines::{train_dense, train_dense_batched};
+use smalltalk::coordinator::{comm, dense_perplexity, run_pipeline, PipelineConfig};
+use smalltalk::data::corpus::Corpus;
+use smalltalk::data::SequenceGen;
+use smalltalk::eval::downstream::macro_accuracy;
+use smalltalk::eval::{build_tasks, mixture_accuracy, single_model_accuracy};
+use smalltalk::metrics::{sparkline, RunLog};
+use smalltalk::runtime::Engine;
+use smalltalk::tokenizer::BpeTrainer;
+use smalltalk::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, &["scale", "experts", "steps", "seed"])?;
+    let scale = args.get_or("scale", "sm");
+    let expert_variant = match scale {
+        "sm" => "expert_sm",
+        "md" => "expert_md",
+        "lg" => "expert_lg",
+        other => anyhow::bail!("unknown --scale {other} (sm|md|lg)"),
+    };
+    let n_experts = args.get_usize("experts", 4)?;
+    let expert_steps = args.get_usize("steps", 120)?;
+    let seed = args.get_u64("seed", 1234)?;
+
+    let t_start = std::time::Instant::now();
+    let engine = Engine::new("artifacts")?;
+    let corpus = Corpus::generate(120, 500, seed, None);
+    let bpe = BpeTrainer::new(512).train(corpus.texts())?;
+
+    let cfg = PipelineConfig {
+        router_variant: "router_micro".into(),
+        expert_variant: expert_variant.into(),
+        n_experts,
+        em_rounds: 3,
+        em_chunk: 192,
+        em_steps_per_round: 30,
+        shard_sequences: (n_experts * expert_steps).min(640),
+        expert_steps,
+        prefix_len: 32,
+        seed,
+    };
+    let meta = engine.variant(expert_variant)?.clone();
+    println!(
+        "[e2e] {} x {} ({} params each, {} total), {} steps/expert, seq {}",
+        n_experts,
+        expert_variant,
+        meta.param_count,
+        n_experts * meta.param_count,
+        expert_steps,
+        meta.seq_len
+    );
+
+    let result = run_pipeline(&engine, &bpe, &cfg)?;
+    println!(
+        "[e2e] segments: sizes {:?}, domain purity {:?}",
+        result.segment_sizes,
+        result
+            .segment_purity
+            .iter()
+            .map(|p| (p * 100.0).round() / 100.0)
+            .collect::<Vec<_>>()
+    );
+    for e in 0..n_experts {
+        if let Some(curve) = result.log.get(&format!("expert{e}/loss")) {
+            println!(
+                "[e2e] expert{e} loss {:.3} -> {:.3}  {}",
+                curve.first().unwrap().y,
+                curve.last().unwrap().y,
+                sparkline(curve, 40)
+            );
+        }
+    }
+
+    // FLOPs-matched dense baseline: the paper's pairing is the SAME number
+    // of steps at E x the expert batch (falls back to E x steps at native
+    // batch when that shape isn't compiled).
+    let dense_batch = n_experts * meta.train_batch;
+    let batched_ok = dense_batch == meta.train_batch || meta.dense_batches.contains(&dense_batch);
+    let mut dense_log = RunLog::new();
+    let dense = if batched_ok {
+        println!("[e2e] dense baseline: {expert_steps} steps @ batch {dense_batch} ...");
+        train_dense_batched(&engine, &bpe, expert_variant, expert_steps, dense_batch, seed ^ 0xD, &mut dense_log)?
+    } else {
+        let dense_steps = n_experts * expert_steps;
+        println!("[e2e] dense baseline: {dense_steps} steps @ native batch (no compiled batch {dense_batch}) ...");
+        train_dense(&engine, &bpe, expert_variant, dense_steps, seed ^ 0xD, &mut dense_log)?
+    };
+    if let Some(curve) = dense_log.get("loss") {
+        println!(
+            "[e2e] dense   loss {:.3} -> {:.3}  {}",
+            curve.first().unwrap().y,
+            curve.last().unwrap().y,
+            sparkline(curve, 40)
+        );
+    }
+
+    // Held-out evaluation.
+    let mut eval_gen = SequenceGen::new(&bpe, meta.seq_len, seed ^ 0xE7A1);
+    let held_out = eval_gen.batch(96);
+    let mix_ppl = result.mixture.perplexity(&engine, &held_out, cfg.prefix_len)?;
+    let dense_ppl = dense_perplexity(&engine, &dense, &meta, &held_out)?;
+
+    // Downstream.
+    let tasks = build_tasks(&bpe, 10, 4, 32, seed ^ 0x7A5);
+    let mix_acc = mixture_accuracy(&engine, &result.mixture, &tasks, cfg.prefix_len)?;
+    let dense_acc = single_model_accuracy(&engine, &dense, &meta, &tasks)?;
+
+    println!("\n=== e2e summary ({:.0?}) ===", t_start.elapsed());
+    println!("held-out ppl : mixture {mix_ppl:.3}  dense {dense_ppl:.3}  ({:+.1}%)",
+        (mix_ppl / dense_ppl - 1.0) * 100.0);
+    println!(
+        "downstream   : mixture {:.3}  dense {:.3} (macro accuracy, {} tasks)",
+        macro_accuracy(&mix_acc),
+        macro_accuracy(&dense_acc),
+        tasks.tasks.len()
+    );
+    println!(
+        "communication: {} all-gathers, {} total bytes (DDP equivalent: {} bytes/node/step)",
+        result.ledger.rounds(comm::CommKind::ScoreAllGather),
+        result.ledger.total_bytes(),
+        comm::ddp_bytes_per_step(meta.param_count as u64)
+    );
+    let stats = engine.stats();
+    println!(
+        "engine       : {} compiles ({:.1}s), {} executions ({:.1}s)",
+        stats.compiles, stats.compile_secs, stats.executions, stats.execute_secs
+    );
+
+    // Persist the run record.
+    let mut log = result.log;
+    log.merge_prefixed("dense", &dense_log);
+    log.scalar("final/mixture_ppl", 0.0, mix_ppl);
+    log.scalar("final/dense_ppl", 0.0, dense_ppl);
+    log.scalar("final/mixture_acc", 0.0, macro_accuracy(&mix_acc));
+    log.scalar("final/dense_acc", 0.0, macro_accuracy(&dense_acc));
+    std::fs::create_dir_all("results").ok();
+    log.save("results/e2e_train.json")?;
+    println!("wrote results/e2e_train.json");
+    Ok(())
+}

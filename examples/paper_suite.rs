@@ -1,0 +1,159 @@
+//! Paper suite: regenerate every table and figure of the paper's
+//! evaluation (DESIGN.md §4) at the scaled budget.
+//!
+//!   cargo run --release --example paper_suite -- all
+//!   cargo run --release --example paper_suite -- fig2 fig4b table3
+//!   cargo run --release --example paper_suite -- all --budget smoke
+//!
+//! Each driver writes `results/<id>.json` and prints the paper-shaped
+//! rows. EXPERIMENTS.md records paper-vs-measured for every id.
+
+use anyhow::Result;
+
+use smalltalk::data::corpus::Corpus;
+use smalltalk::experiments::{
+    comm_overhead, fig2, fig3_tables45, fig4a, fig4b, fig4c, fig6, table3, Budget, Suite,
+};
+use smalltalk::runtime::Engine;
+use smalltalk::tokenizer::BpeTrainer;
+use smalltalk::util::cli::Args;
+use smalltalk::util::json::Json;
+
+fn save(id: &str, j: &Json) -> Result<()> {
+    std::fs::create_dir_all("results")?;
+    let path = format!("results/{id}.json");
+    std::fs::write(&path, j.to_string_pretty())?;
+    println!("--- {id} -> {path}");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, &["budget", "seed", "steps", "experts"])?;
+    let mut which: Vec<String> = args.positional.clone();
+    if which.is_empty() || which.iter().any(|w| w == "all") {
+        which = ["fig2", "fig3", "fig4a", "fig4b", "fig4c", "fig6", "table3", "comm"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+    }
+    let mut budget = match args.get_or("budget", "scaled") {
+        "smoke" => Budget::smoke(),
+        "scaled" => Budget::scaled(),
+        other => anyhow::bail!("unknown --budget {other} (smoke|scaled)"),
+    };
+    budget.seed = args.get_u64("seed", budget.seed)?;
+    budget.expert_steps = args.get_usize("steps", budget.expert_steps)?;
+    if let Some(list) = args.get("experts") {
+        budget.experts_sweep = list
+            .split(',')
+            .filter_map(|p| p.trim().parse().ok())
+            .collect();
+    }
+
+    let engine = Engine::new("artifacts")?;
+    let corpus = Corpus::generate(120, 500, budget.seed, None);
+    let bpe = BpeTrainer::new(512).train(corpus.texts())?;
+    let suite = Suite::new(&engine, &bpe, budget);
+
+    let t0 = std::time::Instant::now();
+    let mut fig2_artifacts = None;
+
+    for id in &which {
+        let t = std::time::Instant::now();
+        eprintln!("[suite] running {id} ...");
+        match id.as_str() {
+            "fig2" | "fig5" => {
+                let a = fig2(&suite)?;
+                print_fig2(&a.json);
+                save("fig2_fig5", &a.json)?;
+                fig2_artifacts = Some(a);
+            }
+            "fig3" | "table45" => {
+                let j = fig3_tables45(&suite, fig2_artifacts.as_ref())?;
+                print_fig3(&j);
+                save("fig3_tables45", &j)?;
+            }
+            "fig4a" => {
+                let j = fig4a(&suite)?;
+                print_rows(&j, "rows", &["router", "router_params", "mixture_ppl"]);
+                save("fig4a", &j)?;
+            }
+            "fig4b" => {
+                let j = fig4b(&suite, fig2_artifacts.as_ref())?;
+                print_rows(&j, "rows", &["prefix", "mixture_ppl"]);
+                save("fig4b", &j)?;
+            }
+            "fig4c" => {
+                let j = fig4c(&suite)?;
+                print_rows(&j, "rows", &["prefix", "ours_ppl", "tfidf_ppl"]);
+                save("fig4c", &j)?;
+            }
+            "fig6" => {
+                let j = fig6(&suite)?;
+                save("fig6", &j)?;
+            }
+            "table3" => {
+                let j = table3(&suite, fig2_artifacts.as_ref().map(|a| &a.json))?;
+                print_rows(
+                    &j,
+                    "paper_scale",
+                    &["config", "train_e19", "train_overhead_e19", "infer_e12_mixture"],
+                );
+                save("table3", &j)?;
+            }
+            "comm" => {
+                let j = comm_overhead(&suite)?;
+                println!("{}", j.to_string_pretty());
+                save("comm_overhead", &j)?;
+            }
+            other => eprintln!("[suite] unknown id {other}, skipping"),
+        }
+        eprintln!("[suite] {id} done in {:.1?}", t.elapsed());
+    }
+    eprintln!("[suite] total {:.1?}", t0.elapsed());
+    Ok(())
+}
+
+fn print_rows(j: &Json, key: &str, cols: &[&str]) {
+    let Some(rows) = j.get(key).and_then(Json::as_arr) else {
+        return;
+    };
+    println!("{}", cols.join("\t"));
+    for r in rows {
+        let vals: Vec<String> = cols
+            .iter()
+            .map(|c| match r.get(c) {
+                Some(Json::Num(n)) => format!("{n:.4}"),
+                Some(Json::Str(s)) => s.clone(),
+                Some(Json::Null) | None => "-".into(),
+                Some(v) => v.to_string(),
+            })
+            .collect();
+        println!("{}", vals.join("\t"));
+    }
+}
+
+fn print_fig2(j: &Json) {
+    println!("E\tmix_ppl\tdense_ppl\ttrainPF_mix\ttrainPF_dense");
+    for r in j.get("rows").and_then(Json::as_arr).unwrap_or(&[]) {
+        println!(
+            "{}\t{:.3}\t{:.3}\t{:.3}\t{:.3}",
+            r.get("experts").and_then(Json::as_f64).unwrap_or(0.0),
+            r.get("mixture_ppl").and_then(Json::as_f64).unwrap_or(0.0),
+            r.get("dense_ppl").and_then(Json::as_f64).unwrap_or(0.0),
+            r.get("train_pflops_mixture").and_then(Json::as_f64).unwrap_or(0.0),
+            r.get("train_pflops_dense").and_then(Json::as_f64).unwrap_or(0.0),
+        );
+    }
+}
+
+fn print_fig3(j: &Json) {
+    println!(
+        "downstream macro: mixture {:.3} vs dense {:.3} (win rate {:.0}%)",
+        j.get("mixture_macro").and_then(Json::as_f64).unwrap_or(0.0),
+        j.get("dense_macro").and_then(Json::as_f64).unwrap_or(0.0),
+        j.get("win_fraction").and_then(Json::as_f64).unwrap_or(0.0) * 100.0
+    );
+    print_rows(j, "per_task", &["task", "mixture", "dense"]);
+}

@@ -1,0 +1,163 @@
+"""AOT compiler: lower every model variant's entry points to HLO text.
+
+HLO **text** (not ``HloModuleProto.serialize()``) is the interchange
+format: jax ≥ 0.5 emits protos with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Layout:
+
+  artifacts/
+    manifest.json                  # variants, shapes, entry points
+    <variant>/<entry>.hlo.txt      # one HLO module per entry point
+
+Usage: ``python -m compile.aot [--out-dir ../artifacts] [--variants a,b]
+[--all] [--force]``.  Unchanged artifacts are skipped by hashing the
+compile inputs, so `make artifacts` is a cheap no-op when nothing moved.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import variants as V
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def entry_specs(v: V.Variant):
+    """Example argument specs for each entry point of a variant."""
+    n = M.param_count(v.model)
+    S = v.model.seq_len
+    flat = _spec((n,))
+    specs = {
+        "init": (_spec((2,), jnp.uint32),),
+        "train_step": (flat, flat, flat, _spec(()), _spec((v.train_batch, S + 1), jnp.int32)),
+        "eval_nll": (flat, _spec((v.eval_batch, S + 1), jnp.int32)),
+        "last_logits": (flat, _spec((1, S), jnp.int32)),
+    }
+    for m in v.prefix_lens:
+        specs[f"prefix_nll_{m}"] = (flat, _spec((v.prefix_batch, m), jnp.int32))
+    for b in v.dense_batches:
+        specs[f"train_step_b{b}"] = (
+            flat, flat, flat, _spec(()), _spec((b, S + 1), jnp.int32))
+    return specs
+
+
+def entry_fn(v: V.Variant, name: str):
+    cfg, opt = v.model, v.opt
+    if name == "init":
+        return M.make_init(cfg)
+    if name.startswith("train_step"):
+        fn = M.make_train_step(cfg, opt)
+        # jax requires tuple output for uniform unpacking on the rust side
+        return lambda flat, m, mv, step, tokens: tuple(fn(flat, m, mv, step, tokens))
+    if name == "eval_nll":
+        return M.make_eval_nll(cfg)
+    if name.startswith("prefix_nll"):
+        return M.make_prefix_nll(cfg)
+    if name == "last_logits":
+        return M.make_last_logits(cfg)
+    raise KeyError(name)
+
+
+def _input_fingerprint() -> str:
+    """Hash of the compile-path sources; artifact staleness key."""
+    here = pathlib.Path(__file__).parent
+    h = hashlib.sha256()
+    for p in sorted(here.rglob("*.py")):
+        h.update(p.read_bytes())
+    return h.hexdigest()[:16]
+
+
+def compile_variant(v: V.Variant, out_dir: pathlib.Path, force: bool, fp: str):
+    vdir = out_dir / v.name
+    vdir.mkdir(parents=True, exist_ok=True)
+    stamp = vdir / ".fingerprint"
+    if not force and stamp.exists() and stamp.read_text() == fp:
+        all_there = all(
+            (vdir / f"{e}.hlo.txt").exists() for e in v.entry_points()
+        )
+        if all_there:
+            print(f"[aot] {v.name}: up to date")
+            return
+    specs = entry_specs(v)
+    for entry in v.entry_points():
+        fn = entry_fn(v, entry)
+        lowered = jax.jit(fn).lower(*specs[entry])
+        text = to_hlo_text(lowered)
+        path = vdir / f"{entry}.hlo.txt"
+        path.write_text(text)
+        print(f"[aot] {v.name}/{entry}: {len(text)} chars")
+    stamp.write_text(fp)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--variants", default="",
+                    help="comma-separated subset (default: all `default` variants)")
+    ap.add_argument("--all", action="store_true", help="include non-default variants")
+    ap.add_argument("--force", action="store_true")
+    # Back-compat with the scaffold Makefile (`--out path/model.hlo.txt`).
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args(argv)
+
+    out_dir = pathlib.Path(args.out if args.out else args.out_dir)
+    if args.out:
+        out_dir = pathlib.Path(args.out).parent
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    if args.variants:
+        selected = [V.by_name(n) for n in args.variants.split(",")]
+    else:
+        selected = [v for v in V.VARIANTS if v.default or args.all]
+
+    fp = _input_fingerprint()
+    manifest = {"fingerprint": fp, "variants": []}
+    for v in selected:
+        compile_variant(v, out_dir, args.force, fp)
+        manifest["variants"].append(V.manifest_entry(v, M.param_count(v.model)))
+
+    man_path = out_dir / "manifest.json"
+    # Merge with any variants compiled earlier (e.g. --variants expert_lg).
+    if man_path.exists():
+        try:
+            old = json.loads(man_path.read_text())
+            names = {e["name"] for e in manifest["variants"]}
+            for e in old.get("variants", []):
+                if e["name"] not in names and (out_dir / e["name"]).exists():
+                    manifest["variants"].append(e)
+        except (json.JSONDecodeError, KeyError):
+            pass
+    man_path.write_text(json.dumps(manifest, indent=2))
+    # Marker file so `make artifacts` has a single staleness target.
+    (out_dir / "model.hlo.txt").write_text(
+        "see manifest.json; per-variant HLO lives in <variant>/<entry>.hlo.txt\n"
+    )
+    print(f"[aot] wrote {man_path} ({len(manifest['variants'])} variants)")
+
+
+if __name__ == "__main__":
+    main()

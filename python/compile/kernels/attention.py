@@ -1,0 +1,185 @@
+"""L1 — fused causal attention with in-kernel rotary embedding (Pallas).
+
+This is the compute hot-spot of every SmallTalk LM artifact that runs on
+the request path (router ``prefix_nll`` scoring and expert ``eval_nll`` /
+``generate_step``).  The kernel is written as a TPU Pallas kernel and
+executed with ``interpret=True`` because the CPU PJRT plugin cannot run
+Mosaic custom-calls; the *structure* (BlockSpec schedule, streaming
+softmax, VMEM-resident running statistics) is the TPU program and is what
+the §Perf VMEM/MXU estimates in EXPERIMENTS.md are derived from.
+
+Schedule (flash-attention style):
+
+  grid = (batch * heads, seq // block_q)
+    - every program owns one query block ``(block_q, head_dim)`` in VMEM,
+    - K/V for the whole sequence are staged into VMEM per program (at the
+      scaled sequence lengths used in this repo, S*d*4B*2 is a few hundred
+      KiB — far below the ~16 MiB VMEM budget; see DESIGN.md §6/§8),
+    - the kernel streams over key blocks with ``lax.fori_loop`` keeping a
+      running max ``m``, normalizer ``l`` and accumulator ``acc``,
+    - causality prunes the loop: query block ``j`` only visits key blocks
+      ``0 .. ceil((j+1)*block_q / block_k)`` — fully-masked blocks are
+      never touched,
+    - rotary embedding is applied in-kernel to the Q block and to each
+      streamed K block (cos/sin tables are inputs, not recomputed).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _rotate_half(x):
+    half = x.shape[-1] // 2
+    return jnp.concatenate([-x[..., half:], x[..., :half]], axis=-1)
+
+
+def _apply_rope(x, cos, sin):
+    """Rotary position embedding, rotate-half convention."""
+    return x * cos + _rotate_half(x) * sin
+
+
+def _attn_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    cos_ref,
+    sin_ref,
+    o_ref,
+    *,
+    block_q: int,
+    block_k: int,
+    seq_len: int,
+    scale: float,
+):
+    j = pl.program_id(1)
+    q_start = j * block_q
+    q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+
+    cos_q = cos_ref[pl.ds(q_start, block_q), :]
+    sin_q = sin_ref[pl.ds(q_start, block_q), :]
+    q = _apply_rope(q_ref[...], cos_q, sin_q) * scale
+
+    # Only key blocks that intersect the causal triangle of this q block.
+    num_k_blocks = (q_start + block_q + block_k - 1) // block_k
+
+    def body(i, carry):
+        m_prev, l_prev, acc_prev = carry
+        k_start = i * block_k
+        cos_k = cos_ref[pl.ds(k_start, block_k), :]
+        sin_k = sin_ref[pl.ds(k_start, block_k), :]
+        k = _apply_rope(k_ref[pl.ds(k_start, block_k), :], cos_k, sin_k)
+        v = v_ref[pl.ds(k_start, block_k), :]
+
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = alpha * acc_prev + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc_new
+
+    head_dim = q_ref.shape[-1]
+    m0 = jnp.full((block_q, 1), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q, 1), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, head_dim), dtype=jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, num_k_blocks, body, (m0, l0, acc0))
+
+    # Every causal row sees at least its own position, so l > 0.
+    o_ref[...] = (acc / l).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q,
+    k,
+    v,
+    cos,
+    sin,
+    *,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+):
+    """Causal multi-head attention with rotary embedding.
+
+    Args:
+      q, k, v: ``f32[batch*heads, seq, head_dim]``.
+      cos, sin: ``f32[seq, head_dim]`` rotary tables.
+      block_q, block_k: VMEM tile sizes; must divide ``seq``. The default
+        is the MXU-native 128 (clamped to ``seq``): §Perf iteration 1
+        measured 32x32 tiles at 6.2% systolic-array occupancy vs 100% for
+        128x128, and VMEM stays <1% of budget at every artifact shape.
+      interpret: run the Pallas interpreter (required on CPU PJRT).
+
+    Returns:
+      ``f32[batch*heads, seq, head_dim]`` attention output (pre W_O).
+    """
+    bh, seq_len, head_dim = q.shape
+    block_q = min(block_q, seq_len)
+    block_k = min(block_k, seq_len)
+    if seq_len % block_q or seq_len % block_k:
+        raise ValueError(
+            f"seq_len={seq_len} must be divisible by block_q={block_q} "
+            f"and block_k={block_k}"
+        )
+    if cos.shape != (seq_len, head_dim):
+        raise ValueError(f"cos shape {cos.shape} != {(seq_len, head_dim)}")
+
+    grid = (bh, seq_len // block_q)
+    kernel = functools.partial(
+        _attn_kernel,
+        block_q=block_q,
+        block_k=block_k,
+        seq_len=seq_len,
+        scale=1.0 / float(head_dim) ** 0.5,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, head_dim), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((None, seq_len, head_dim), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((None, seq_len, head_dim), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((seq_len, head_dim), lambda b, j: (0, 0)),
+            pl.BlockSpec((seq_len, head_dim), lambda b, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, head_dim), lambda b, j: (b, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, seq_len, head_dim), q.dtype),
+        interpret=interpret,
+    )(q, k, v, cos, sin)
+
+
+def vmem_bytes(seq_len: int, head_dim: int, block_q: int, block_k: int) -> int:
+    """Estimated per-program VMEM footprint of the kernel in bytes (f32).
+
+    Used by the §Perf analysis: Q block + staged K/V + cos/sin tables +
+    running statistics + accumulator + score tile.
+    """
+    f32 = 4
+    q = block_q * head_dim
+    kv = 2 * seq_len * head_dim
+    tables = 2 * seq_len * head_dim
+    stats = 2 * block_q
+    acc = block_q * head_dim
+    scores = block_q * block_k
+    out = block_q * head_dim
+    return f32 * (q + kv + tables + stats + acc + scores + out)
+
+
+def mxu_flops(seq_len: int, head_dim: int) -> int:
+    """MXU (matmul) FLOPs per (batch*head) slice: QK^T + PV over the causal
+    triangle — the quantity the §Perf MXU-utilization estimate is built on."""
+    # ~half the S^2 tiles are live under causal pruning
+    return 2 * 2 * (seq_len * seq_len // 2) * head_dim

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the Pallas attention kernel.
+
+Materializes the full score matrix — O(S^2) memory, numerically plain —
+and is the ground truth for every kernel test.  Also used on the
+*training* graph (`train_step`) where autodiff through the Pallas
+interpreter is not supported; XLA fuses this form well on CPU.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rotate_half(x):
+    half = x.shape[-1] // 2
+    return jnp.concatenate([-x[..., half:], x[..., :half]], axis=-1)
+
+
+def apply_rope(x, cos, sin):
+    """Rotary embedding, rotate-half convention. x: [..., seq, head_dim]."""
+    return x * cos + rotate_half(x) * sin
+
+
+def rope_tables(seq_len: int, head_dim: int, base: float = 10000.0):
+    """cos/sin tables, shape [seq, head_dim] (frequencies repeated twice)."""
+    half = head_dim // 2
+    freqs = 1.0 / (base ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = jnp.arange(seq_len, dtype=jnp.float32)[:, None] * freqs[None, :]
+    angles = jnp.concatenate([angles, angles], axis=-1)
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def attention(q, k, v, cos, sin):
+    """Causal attention with RoPE. q,k,v: [bh, seq, head_dim]."""
+    head_dim = q.shape[-1]
+    q = apply_rope(q, cos, sin) / jnp.sqrt(jnp.float32(head_dim))
+    k = apply_rope(k, cos, sin)
+    s = jnp.einsum("bqd,bkd->bqk", q, k)
+    seq = q.shape[1]
+    mask = jnp.tril(jnp.ones((seq, seq), dtype=bool))
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, v)

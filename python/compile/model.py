@@ -1,0 +1,297 @@
+"""L2 — SmallTalk LM transformer in JAX (build-time only).
+
+Decoder-only transformer with rotary position embedding (paper §3.1 /
+App. A.1), pre-LN, GELU MLP with expansion factor 4.  All parameters of a
+model live in **one flat f32 vector**; the forward pass slices it with
+static offsets.  This keeps the Rust↔XLA interface to a handful of
+buffers (params / m / v / step / tokens) and makes the Rust training loop
+entirely model-agnostic — the HLO artifact is the model.
+
+Two attention paths:
+  * ``use_kernel=True``  — the Pallas flash-attention kernel
+    (:mod:`compile.kernels.attention`); used on inference-side artifacts
+    (``prefix_nll`` router scoring, ``eval_nll``, ``generate_step``).
+  * ``use_kernel=False`` — the pure-jnp oracle (:mod:`compile.kernels.ref`);
+    used on the training graph, where autodiff through the Pallas
+    interpreter is unsupported.
+Both are verified equal by the pytest suite.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as kernel_attn
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    """Architecture of one transformer (router or expert)."""
+
+    vocab: int
+    seq_len: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    ffw_mult: int = 4
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ffw(self) -> int:
+        return self.d_model * self.ffw_mult
+
+
+@dataclasses.dataclass(frozen=True)
+class OptCfg:
+    """AdamW + schedule hyperparameters (paper §3.1)."""
+
+    peak_lr: float = 5e-4
+    warmup_steps: int = 50
+    total_steps: int = 400
+    schedule: str = "cosine"  # "cosine" (experts) | "constant" (routers)
+    beta1: float = 0.9
+    beta2: float = 0.99
+    weight_decay: float = 0.1
+    clip_norm: float = 0.1
+    eps: float = 1e-8
+    min_lr_frac: float = 0.1
+
+
+# --------------------------------------------------------------------------
+# Flat parameter layout
+# --------------------------------------------------------------------------
+
+
+def param_spec(cfg: ModelCfg) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list defining the flat layout."""
+    H, F, V = cfg.d_model, cfg.d_ffw, cfg.vocab
+    spec: List[Tuple[str, Tuple[int, ...]]] = [("embed", (V, H))]
+    for i in range(cfg.n_layers):
+        spec += [
+            (f"l{i}.ln1_s", (H,)),
+            (f"l{i}.ln1_b", (H,)),
+            (f"l{i}.wqkv", (H, 3 * H)),
+            (f"l{i}.bqkv", (3 * H,)),
+            (f"l{i}.wo", (H, H)),
+            (f"l{i}.bo", (H,)),
+            (f"l{i}.ln2_s", (H,)),
+            (f"l{i}.ln2_b", (H,)),
+            (f"l{i}.w1", (H, F)),
+            (f"l{i}.b1", (F,)),
+            (f"l{i}.w2", (F, H)),
+            (f"l{i}.b2", (H,)),
+        ]
+    spec += [("lnf_s", (H,)), ("lnf_b", (H,)), ("wout", (H, V)), ("bout", (V,))]
+    return spec
+
+
+def param_offsets(cfg: ModelCfg) -> Dict[str, Tuple[int, Tuple[int, ...]]]:
+    """name -> (offset, shape) in the flat vector."""
+    out: Dict[str, Tuple[int, Tuple[int, ...]]] = {}
+    off = 0
+    for name, shape in param_spec(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        out[name] = (off, shape)
+        off += n
+    return out
+
+
+def param_count(cfg: ModelCfg) -> int:
+    off = 0
+    for _, shape in param_spec(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        off += n
+    return off
+
+
+def unflatten(cfg: ModelCfg, flat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Static slices of the flat vector into named tensors."""
+    params = {}
+    for name, (off, shape) in param_offsets(cfg).items():
+        n = 1
+        for s in shape:
+            n *= s
+        params[name] = jax.lax.slice(flat, (off,), (off + n,)).reshape(shape)
+    return params
+
+
+def init_params(cfg: ModelCfg, key: jnp.ndarray) -> jnp.ndarray:
+    """GPT-style init, residual projections scaled by 1/sqrt(2L). Returns flat."""
+    std = 0.02
+    resid_std = std / (2.0 * cfg.n_layers) ** 0.5
+    chunks = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        short = name.split(".")[-1]
+        if short in ("ln1_s", "ln2_s", "lnf_s"):
+            t = jnp.ones(shape, jnp.float32)
+        elif short in ("ln1_b", "ln2_b", "lnf_b", "bqkv", "bo", "b1", "b2", "bout"):
+            t = jnp.zeros(shape, jnp.float32)
+        elif short in ("wo", "w2"):
+            t = jax.random.normal(sub, shape, jnp.float32) * resid_std
+        else:
+            t = jax.random.normal(sub, shape, jnp.float32) * std
+        chunks.append(t.reshape(-1))
+    return jnp.concatenate(chunks)
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _attention(cfg: ModelCfg, p, i: int, x, cos, sin, use_kernel: bool):
+    B, S, H = x.shape
+    nh, dh = cfg.n_heads, cfg.head_dim
+    qkv = x @ p[f"l{i}.wqkv"] + p[f"l{i}.bqkv"]  # [B,S,3H]
+    qkv = qkv.reshape(B, S, 3, nh, dh).transpose(2, 0, 3, 1, 4)  # [3,B,nh,S,dh]
+    q, k, v = (t.reshape(B * nh, S, dh) for t in (qkv[0], qkv[1], qkv[2]))
+    if use_kernel:
+        o = kernel_attn.flash_attention(q, k, v, cos, sin)
+    else:
+        o = ref.attention(q, k, v, cos, sin)
+    o = o.reshape(B, nh, S, dh).transpose(0, 2, 1, 3).reshape(B, S, H)
+    return o @ p[f"l{i}.wo"] + p[f"l{i}.bo"]
+
+
+def forward(cfg: ModelCfg, flat, tokens, *, use_kernel: bool = False):
+    """tokens: i32[B, S] -> logits f32[B, S, vocab]."""
+    p = unflatten(cfg, flat)
+    S = tokens.shape[1]
+    cos, sin = ref.rope_tables(S, cfg.head_dim)
+    x = p["embed"][tokens]  # [B,S,H]
+    for i in range(cfg.n_layers):
+        x = x + _attention(
+            cfg, p, i, _layer_norm(x, p[f"l{i}.ln1_s"], p[f"l{i}.ln1_b"]), cos, sin,
+            use_kernel,
+        )
+        h = _layer_norm(x, p[f"l{i}.ln2_s"], p[f"l{i}.ln2_b"])
+        h = jax.nn.gelu(h @ p[f"l{i}.w1"] + p[f"l{i}.b1"])
+        x = x + h @ p[f"l{i}.w2"] + p[f"l{i}.b2"]
+    x = _layer_norm(x, p["lnf_s"], p["lnf_b"])
+    return x @ p["wout"] + p["bout"]
+
+
+def sequence_nll(cfg: ModelCfg, flat, tokens, *, use_kernel: bool = False):
+    """Per-sequence summed next-token NLL.
+
+    tokens: i32[B, T] -> nll f32[B] over the T-1 predicted positions.
+    """
+    logits = forward(cfg, flat, tokens[:, :-1], use_kernel=use_kernel)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll, axis=-1)
+
+
+def mean_loss(cfg: ModelCfg, flat, tokens, *, use_kernel: bool = False):
+    """Mean next-token cross-entropy (Eq. 1)."""
+    B, T = tokens.shape
+    return jnp.sum(sequence_nll(cfg, flat, tokens, use_kernel=use_kernel)) / (
+        B * (T - 1)
+    )
+
+
+# --------------------------------------------------------------------------
+# Training step (fused AdamW, Eq. 1 optimized with SGD per Algorithm 1)
+# --------------------------------------------------------------------------
+
+
+def lr_at(opt: OptCfg, step):
+    """Learning-rate schedule: linear warmup then cosine decay (experts) or
+    constant (routers) — paper §3.1 / App. A.1."""
+    warm = jnp.minimum(step / max(opt.warmup_steps, 1), 1.0)
+    if opt.schedule == "constant":
+        return opt.peak_lr * warm
+    t = jnp.clip(
+        (step - opt.warmup_steps) / max(opt.total_steps - opt.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    frac = opt.min_lr_frac + (1.0 - opt.min_lr_frac) * cos
+    return opt.peak_lr * warm * frac
+
+
+def train_step(cfg: ModelCfg, opt: OptCfg, flat, m, v, step, tokens):
+    """One fused SGD step: loss+grad, global-norm clip, AdamW update.
+
+    Returns (flat', m', v', loss). ``step`` is f32[] (0-based).
+    """
+    loss, g = jax.value_and_grad(
+        lambda f: mean_loss(cfg, f, tokens, use_kernel=False)
+    )(flat)
+    gnorm = jnp.sqrt(jnp.sum(g * g))
+    g = g * jnp.minimum(1.0, opt.clip_norm / (gnorm + 1e-12))
+    lr = lr_at(opt, step)
+    m_new = opt.beta1 * m + (1.0 - opt.beta1) * g
+    v_new = opt.beta2 * v + (1.0 - opt.beta2) * g * g
+    t = step + 1.0
+    m_hat = m_new / (1.0 - opt.beta1**t)
+    v_hat = v_new / (1.0 - opt.beta2**t)
+    update = m_hat / (jnp.sqrt(v_hat) + opt.eps) + opt.weight_decay * flat
+    return flat - lr * update, m_new, v_new, loss
+
+
+# --------------------------------------------------------------------------
+# Exported entry points (see aot.py)
+# --------------------------------------------------------------------------
+
+
+def make_init(cfg: ModelCfg):
+    def init(seed):
+        return (init_params(cfg, seed),)
+
+    return init
+
+
+def make_train_step(cfg: ModelCfg, opt: OptCfg):
+    def step_fn(flat, m, v, step, tokens):
+        return train_step(cfg, opt, flat, m, v, step, tokens)
+
+    return step_fn
+
+
+def make_eval_nll(cfg: ModelCfg, *, use_kernel: bool = True):
+    def eval_nll(flat, tokens):
+        return (sequence_nll(cfg, flat, tokens, use_kernel=use_kernel),)
+
+    return eval_nll
+
+
+def make_prefix_nll(cfg: ModelCfg, *, use_kernel: bool = True):
+    """Router scoring: summed NLL of a short prefix (Eq. 4/9)."""
+
+    def prefix_nll(flat, tokens):
+        return (sequence_nll(cfg, flat, tokens, use_kernel=use_kernel),)
+
+    return prefix_nll
+
+
+def make_last_logits(cfg: ModelCfg, *, use_kernel: bool = True):
+    """Greedy-decode helper: logits of the final position."""
+
+    def last_logits(flat, tokens):
+        logits = forward(cfg, flat, tokens, use_kernel=use_kernel)
+        return (logits[:, -1, :],)
+
+    return last_logits

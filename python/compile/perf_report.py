@@ -1,0 +1,123 @@
+"""§Perf L1/L2 analysis: BlockSpec-derived VMEM/MXU estimates for the
+Pallas kernel and HLO-level structure stats for every emitted artifact.
+
+Interpret-mode wallclock is CPU-numpy, NOT a TPU proxy (see DESIGN.md §8)
+— so the kernel is assessed structurally:
+
+  * VMEM footprint per program from the BlockSpec schedule (must fit the
+    ~16 MiB/core budget with double-buffering headroom),
+  * MXU work per program and the systolic-array occupancy implied by the
+    contraction shapes (head_dim / block sizes vs the 128x128 array),
+  * causal-pruning efficiency (fraction of k-blocks actually visited).
+
+Usage: ``python -m compile.perf_report [--out ../results/perf_l1_l2.json]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import re
+
+from .kernels import attention as ka
+from . import model as M
+from . import variants as V
+
+MXU_DIM = 128          # TPU systolic array is 128x128
+VMEM_BYTES = 16 << 20  # per-core VMEM budget
+
+
+def kernel_report(v: V.Variant) -> dict:
+    cfg = v.model
+    s, d = cfg.seq_len, cfg.head_dim
+    bq = bk = min(128, s)
+    vmem = ka.vmem_bytes(s, d, bq, bk)
+    # MXU occupancy: a (bq x d) @ (d x bk) contraction occupies
+    # min(bq,128) x min(bk,128) of the array with d-deep pipelining.
+    occupancy = (min(bq, MXU_DIM) / MXU_DIM) * (min(bk, MXU_DIM) / MXU_DIM)
+    # causal pruning: visited k-blocks / total k-blocks across the grid
+    nq = s // bq
+    visited = sum((j * bq + bq + bk - 1) // bk for j in range(nq))
+    total = nq * (s // bk)
+    return {
+        "variant": v.name,
+        "seq": s,
+        "head_dim": d,
+        "block_q": bq,
+        "block_k": bk,
+        "vmem_bytes_per_program": vmem,
+        "vmem_budget_fraction": vmem / VMEM_BYTES,
+        "mxu_flops_per_bh": ka.mxu_flops(s, d),
+        "mxu_array_occupancy": occupancy,
+        "causal_kblock_fraction": visited / total,
+    }
+
+
+def hlo_report(art_dir: pathlib.Path, variant: str, entry: str) -> dict | None:
+    path = art_dir / variant / f"{entry}.hlo.txt"
+    if not path.exists():
+        return None
+    text = path.read_text()
+    ops = {
+        "dot": len(re.findall(r"\bdot\(", text)),
+        "fusion": text.count(" fusion("),
+        "while": text.count(" while("),
+        "all_instructions": text.count("\n  "),
+        "custom_call": text.count("custom-call"),
+        "bytes": len(text),
+    }
+    return {"variant": variant, "entry": entry, **ops}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../results/perf_l1_l2.json")
+    ap.add_argument("--artifacts", default="../artifacts")
+    args = ap.parse_args()
+
+    art = pathlib.Path(args.artifacts)
+    report = {"l1_kernel": [], "l2_hlo": []}
+
+    print(f"{'variant':<14} {'VMEM/prog':>10} {'%budget':>8} {'MXU occ':>8} {'causal':>7}")
+    for v in V.VARIANTS:
+        k = kernel_report(v)
+        report["l1_kernel"].append(k)
+        print(
+            f"{v.name:<14} {k['vmem_bytes_per_program']:>10} "
+            f"{k['vmem_budget_fraction']*100:>7.2f}% "
+            f"{k['mxu_array_occupancy']*100:>7.1f}% "
+            f"{k['causal_kblock_fraction']*100:>6.1f}%"
+        )
+
+    print(f"\n{'artifact':<32} {'dots':>5} {'fusions':>8} {'while':>6} {'custom':>7} {'KB':>7}")
+    for v in V.VARIANTS:
+        for entry in v.entry_points():
+            h = hlo_report(art, v.name, entry)
+            if h is None:
+                continue
+            report["l2_hlo"].append(h)
+            print(
+                f"{v.name + '/' + entry:<32} {h['dot']:>5} {h['fusion']:>8} "
+                f"{h['while']:>6} {h['custom_call']:>7} {h['bytes']/1024:>6.0f}K"
+            )
+            # invariant: no un-runnable custom calls in CPU artifacts
+            assert h["custom_call"] == 0, f"{v.name}/{entry} has custom-calls"
+    # L2 invariant: train_step contains exactly 3x the forward's dot ops
+    # (fwd + 2x bwd shares one forward — no recomputation in the graph).
+    by = {(h["variant"], h["entry"]): h["dot"] for h in report["l2_hlo"]}
+    for v in V.VARIANTS:
+        fwd = by.get((v.name, "eval_nll"))
+        train = by.get((v.name, "train_step"))
+        if fwd and train:
+            assert train == 3 * fwd, f"{v.name}: {train} != 3*{fwd} dots"
+    print("L2 invariant ok: train_step dots == 3 x forward dots (no dup fwd)")
+
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(report, indent=2))
+    print(f"\nwrote {out}")
+
+
+if __name__ == "__main__":
+    main()

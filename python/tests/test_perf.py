@@ -1,0 +1,76 @@
+"""§Perf structural invariants (L1 BlockSpec schedule + L2 HLO shape)."""
+
+import pathlib
+import re
+
+import pytest
+
+from compile import model as M, variants as V
+from compile.kernels import attention as ka
+
+ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+class TestL1Schedule:
+    def test_vmem_under_budget_all_variants(self):
+        for v in V.VARIANTS:
+            s, d = v.model.seq_len, v.model.head_dim
+            b = min(128, s)
+            vmem = ka.vmem_bytes(s, d, b, b)
+            # <10% of 16MiB leaves ample double-buffering headroom
+            assert vmem < (16 << 20) // 10, v.name
+
+    def test_mxu_native_tiles_at_model_shapes(self):
+        # default tile is the 128x128 systolic array dimension
+        for v in V.VARIANTS:
+            s = v.model.seq_len
+            assert min(128, s) % 8 == 0
+
+    def test_causal_pruning_monotone_in_blocks(self):
+        # more, smaller blocks -> more pruning opportunity
+        def frac(s, b):
+            nq = s // b
+            visited = sum((j * b + b + b - 1) // b for j in range(nq))
+            return visited / (nq * (s // b))
+
+        assert frac(128, 16) < frac(128, 64) <= 1.0
+
+    def test_head_dims_even_for_rope(self):
+        for v in V.VARIANTS:
+            assert v.model.head_dim % 2 == 0
+
+
+@pytest.mark.skipif(not (ART / "manifest.json").exists(),
+                    reason="run `make artifacts` first")
+class TestL2Hlo:
+    def _dots(self, variant, entry):
+        p = ART / variant / f"{entry}.hlo.txt"
+        if not p.exists():
+            return None
+        return len(re.findall(r"\bdot\(", p.read_text()))
+
+    def test_train_step_has_single_shared_forward(self):
+        """value_and_grad must not duplicate the forward pass: the train
+        graph's matmul count is exactly 3x the inference graph's."""
+        for v in V.VARIANTS:
+            fwd = self._dots(v.name, "eval_nll")
+            train = self._dots(v.name, "train_step")
+            if fwd is None or train is None:
+                continue
+            assert train == 3 * fwd, f"{v.name}: {train} vs 3*{fwd}"
+
+    def test_forward_dot_count_matches_architecture(self):
+        """6 matmuls per layer (qkv, qk, pv, wo, w1, w2) + output proj."""
+        for v in V.VARIANTS:
+            fwd = self._dots(v.name, "eval_nll")
+            if fwd is None:
+                continue
+            expected = 6 * v.model.n_layers + 1
+            assert fwd == expected, f"{v.name}: {fwd} != {expected}"
+
+    def test_no_custom_calls_in_cpu_artifacts(self):
+        for v in V.VARIANTS:
+            for e in v.entry_points():
+                p = ART / v.name / f"{e}.hlo.txt"
+                if p.exists():
+                    assert "custom-call" not in p.read_text(), f"{v.name}/{e}"

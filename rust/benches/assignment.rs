@@ -1,0 +1,39 @@
+//! Bench: balanced assignment (Fig. 1 machinery) — the only coordination
+//! step whose cost grows with corpus size, so it must stay O(n log n).
+
+use smalltalk::coordinator::{argmin_assign, balanced_assign, sequential_assign};
+use smalltalk::util::bench::BenchSuite;
+use smalltalk::util::rng::Rng;
+
+fn matrix(n: usize, e: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..e).map(|_| rng.f32() * 20.0).collect())
+        .collect()
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("assignment");
+    suite.header();
+
+    for &(n, e) in &[(1_000usize, 8usize), (10_000, 8), (10_000, 32), (100_000, 32)] {
+        let m = matrix(n, e, 42);
+        let r = suite.bench(&format!("balanced n={n} E={e}"), || {
+            std::hint::black_box(balanced_assign(&m, None));
+        });
+        println!(
+            "    -> {:.2}M sequences/s",
+            r.throughput(n as f64) / 1e6
+        );
+    }
+
+    let m = matrix(10_000, 8, 7);
+    suite.bench("argmin n=10000 E=8", || {
+        std::hint::black_box(argmin_assign(&m));
+    });
+    suite.bench("sequential n=10000 E=8", || {
+        std::hint::black_box(sequential_assign(&m, None));
+    });
+
+    suite.write_json().unwrap();
+}

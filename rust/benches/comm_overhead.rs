@@ -1,0 +1,54 @@
+//! Bench + table: §A.4 communication overhead, mixture vs DDP.
+//!
+//! Regenerates the paper's closed-form numbers and measures the ledger's
+//! own bookkeeping cost (which must be negligible next to training).
+
+use smalltalk::coordinator::comm::{
+    ddp_bytes_per_step, router_bytes_per_comm, router_comm_rounds, CommLedger,
+};
+use smalltalk::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("comm_overhead");
+    suite.header();
+
+    suite.bench("ledger: 100 allgathers x 32 nodes", || {
+        let mut l = CommLedger::default();
+        for r in 0..100 {
+            l.record_score_allgather(32, 43_945, r);
+        }
+        std::hint::black_box(l.peak_node_bytes());
+    });
+
+    suite.bench("ledger: 512-step DDP x 32 nodes", || {
+        let mut l = CommLedger::default();
+        for s in 0..512 {
+            l.record_ddp_allreduce(32, 1_300_000_000, s);
+        }
+        std::hint::black_box(l.total_bytes());
+    });
+
+    println!("\n§A.4 closed forms (paper scale):");
+    println!(
+        "  router comm rounds (128k steps, B=32, S=1024, T=45M): {}",
+        router_comm_rounds(128_000, 1024, 32, 45_000_000)
+    );
+    println!(
+        "  bytes per router per round (E=32): {:.3} MB",
+        router_bytes_per_comm(45_000_000, 32, 1024) as f64 / 1e6
+    );
+    println!(
+        "  DDP 1.3B gradient all-reduce: {:.1} GB per node per step",
+        ddp_bytes_per_step(1_300_000_000) as f64 / 1e9
+    );
+    let mix_total = 94.0 * 5.625e6;
+    let ddp_total = 1_024_000.0 * 10.4e9;
+    println!(
+        "  total per node over training: mixture {:.1} MB vs DDP {:.1} PB ({}x)",
+        mix_total / 1e6,
+        ddp_total / 1e15,
+        (ddp_total / mix_total) as u64
+    );
+
+    suite.write_json().unwrap();
+}

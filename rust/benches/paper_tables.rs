@@ -1,0 +1,61 @@
+//! Bench: smoke-budget run of every paper table/figure driver.
+//!
+//! `cargo bench --bench paper_tables` proves each experiment regenerator
+//! end to end in seconds; the scaled numbers for EXPERIMENTS.md come from
+//! `cargo run --release --example paper_suite -- all`.
+
+use std::time::Instant;
+
+use smalltalk::data::corpus::Corpus;
+use smalltalk::experiments::{
+    comm_overhead, fig2, fig3_tables45, fig4a, fig4b, fig4c, fig6, table3, Budget, Suite,
+};
+use smalltalk::runtime::Engine;
+use smalltalk::tokenizer::BpeTrainer;
+
+fn main() {
+    let engine = Engine::new("artifacts").expect("run `make artifacts`");
+    let budget = Budget::smoke();
+    let corpus = Corpus::generate(60, 400, budget.seed, None);
+    let bpe = BpeTrainer::new(512).train(corpus.texts()).unwrap();
+    let suite = Suite::new(&engine, &bpe, budget);
+
+    println!("=== bench: paper_tables (smoke budget) ===");
+    let t0 = Instant::now();
+
+    let t = Instant::now();
+    let a = fig2(&suite).unwrap();
+    println!("fig2+fig5   ok in {:>8.1?} ({} rows)", t.elapsed(),
+        a.json.get("rows").and_then(|r| r.as_arr()).map(|r| r.len()).unwrap_or(0));
+
+    let t = Instant::now();
+    let j = fig3_tables45(&suite, Some(&a)).unwrap();
+    println!("fig3+t4/5   ok in {:>8.1?} (win rate {:.0}%)", t.elapsed(),
+        j.get("win_fraction").and_then(|v| v.as_f64()).unwrap_or(0.0) * 100.0);
+
+    let t = Instant::now();
+    fig4a(&suite).unwrap();
+    println!("fig4a       ok in {:>8.1?}", t.elapsed());
+
+    let t = Instant::now();
+    fig4b(&suite, Some(&a)).unwrap();
+    println!("fig4b       ok in {:>8.1?}", t.elapsed());
+
+    let t = Instant::now();
+    fig4c(&suite).unwrap();
+    println!("fig4c       ok in {:>8.1?}", t.elapsed());
+
+    let t = Instant::now();
+    fig6(&suite).unwrap();
+    println!("fig6        ok in {:>8.1?}", t.elapsed());
+
+    let t = Instant::now();
+    table3(&suite, Some(&a.json)).unwrap();
+    println!("table3      ok in {:>8.1?}", t.elapsed());
+
+    let t = Instant::now();
+    comm_overhead(&suite).unwrap();
+    println!("comm        ok in {:>8.1?}", t.elapsed());
+
+    println!("total: {:.1?}", t0.elapsed());
+}

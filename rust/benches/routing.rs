@@ -1,0 +1,83 @@
+//! Bench: the serving path — prefix score matrix, argmin routing, and the
+//! batched serve loop (requests/s). The router overhead must stay a few
+//! percent of expert execution (§3.2).
+
+use std::time::Duration;
+
+use smalltalk::coordinator::scoring::score_matrix;
+use smalltalk::coordinator::{argmin_assign, run_pipeline, serve, PipelineConfig, Request};
+use smalltalk::data::corpus::Corpus;
+use smalltalk::data::SequenceGen;
+use smalltalk::runtime::Engine;
+use smalltalk::tokenizer::BpeTrainer;
+use smalltalk::util::bench::BenchSuite;
+
+fn main() {
+    let engine = Engine::new("artifacts").expect("run `make artifacts`");
+    let corpus = Corpus::generate(60, 400, 42, None);
+    let bpe = BpeTrainer::new(512).train(corpus.texts()).unwrap();
+
+    // a minimal trained mixture to measure against
+    let cfg = PipelineConfig {
+        router_variant: "router_micro".into(),
+        expert_variant: "expert_sm".into(),
+        n_experts: 4,
+        em_rounds: 2,
+        em_chunk: 96,
+        em_steps_per_round: 8,
+        shard_sequences: 128,
+        expert_steps: 10,
+        prefix_len: 32,
+        seed: 3,
+    };
+    eprintln!("[routing bench] preparing mixture ...");
+    let result = run_pipeline(&engine, &bpe, &cfg).unwrap();
+    let mixture = result.mixture;
+
+    let mut suite =
+        BenchSuite::new("routing").with_budget(Duration::from_millis(500), Duration::from_secs(4));
+    suite.header();
+
+    let mut gen = SequenceGen::new(&bpe, mixture.expert_meta.seq_len, 17);
+    let seqs = gen.batch(32);
+
+    let r = suite.bench("score_matrix 32 seqs x 4 routers (M=32)", || {
+        std::hint::black_box(
+            score_matrix(&engine, &mixture.routers, &mixture.router_meta, &seqs, 32).unwrap(),
+        );
+    });
+    println!("    -> {:.0} seqs/s", r.throughput(32.0));
+
+    let nll = score_matrix(&engine, &mixture.routers, &mixture.router_meta, &seqs, 32).unwrap();
+    suite.bench("argmin routing decision x 32", || {
+        std::hint::black_box(argmin_assign(&nll));
+    });
+
+    let requests: Vec<Request> = gen
+        .batch(32)
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| Request {
+            id: i as u64,
+            tokens: s.tokens,
+        })
+        .collect();
+    let r = suite.bench("serve 32 requests end-to-end", || {
+        std::hint::black_box(serve(&engine, &mixture, &requests, 32).unwrap());
+    });
+    println!("    -> {:.1} req/s", r.throughput(32.0));
+
+    // routing overhead share of the serve path
+    let score_only = suite.bench("routing-only share (score+argmin)", || {
+        let nll =
+            score_matrix(&engine, &mixture.routers, &mixture.router_meta, &seqs, 32).unwrap();
+        std::hint::black_box(argmin_assign(&nll));
+    });
+    println!(
+        "    -> routing share of serving: {:.1}% (paper claims ~3% at 1.3B scale; \
+         tiny experts inflate the ratio here)",
+        score_only.mean_ns / r.mean_ns * 100.0
+    );
+
+    suite.write_json().unwrap();
+}

@@ -1,0 +1,38 @@
+//! Bench: BPE tokenizer — encode throughput feeds every pipeline stage.
+
+use smalltalk::data::corpus::Corpus;
+use smalltalk::tokenizer::BpeTrainer;
+use smalltalk::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("tokenizer");
+    suite.header();
+
+    let corpus = Corpus::generate(120, 500, 42, None);
+    let train_docs: Vec<&str> = corpus.texts().collect();
+
+    let r = suite.bench("train vocab=512 (~60KB corpus)", || {
+        std::hint::black_box(
+            BpeTrainer::new(512)
+                .train(train_docs.iter().copied())
+                .unwrap(),
+        );
+    });
+    println!("    -> {:.2}s per training", r.mean_ns * 1e-9);
+
+    let bpe = BpeTrainer::new(512).train(corpus.texts()).unwrap();
+    let doc = Corpus::generate(1, 4000, 7, None).docs.pop().unwrap().text;
+    let bytes = doc.len() as f64;
+    let r = suite.bench("encode 4KB document", || {
+        std::hint::black_box(bpe.encode(&doc));
+    });
+    println!("    -> {:.2} MB/s", r.throughput(bytes) / 1e6);
+
+    let ids = bpe.encode(&doc);
+    let r = suite.bench("decode 4KB document", || {
+        std::hint::black_box(bpe.decode(&ids));
+    });
+    println!("    -> {:.2} MB/s", r.throughput(bytes) / 1e6);
+
+    suite.write_json().unwrap();
+}

@@ -1,0 +1,75 @@
+//! Bench: the XLA hot path — fused train_step, eval_nll and prefix
+//! scoring per variant. Reports tokens/s and the literal-copy overhead
+//! that §Perf tracks.
+
+use std::time::Duration;
+
+use smalltalk::data::corpus::Corpus;
+use smalltalk::data::SequenceGen;
+use smalltalk::runtime::{Engine, TrainState};
+use smalltalk::tokenizer::BpeTrainer;
+use smalltalk::util::bench::BenchSuite;
+
+fn main() {
+    let engine = Engine::new("artifacts").expect("run `make artifacts`");
+    let corpus = Corpus::generate(60, 400, 42, None);
+    let bpe = BpeTrainer::new(512).train(corpus.texts()).unwrap();
+
+    let mut suite = BenchSuite::new("train_step")
+        .with_budget(Duration::from_millis(500), Duration::from_secs(5));
+    suite.header();
+
+    for variant in ["router_micro", "router_sm", "expert_sm", "expert_md"] {
+        let Ok(meta) = engine.variant(variant) else {
+            continue;
+        };
+        let meta = meta.clone();
+        let mut st = TrainState::init(&engine, variant, 1).unwrap();
+        let mut gen = SequenceGen::new(&bpe, meta.seq_len, 5);
+        let train_batch: Vec<Vec<u32>> = gen
+            .batch(meta.train_batch)
+            .into_iter()
+            .map(|s| s.tokens)
+            .collect();
+        let tokens = meta.tokens_per_step() as f64;
+
+        let r = suite.bench(&format!("{variant}: train_step"), || {
+            std::hint::black_box(st.train_step(&engine, &train_batch, &meta).unwrap());
+        });
+        println!("    -> {:.1}k tokens/s", r.throughput(tokens) / 1e3);
+
+        let eval_batch: Vec<Vec<u32>> = gen
+            .batch(meta.eval_batch)
+            .into_iter()
+            .map(|s| s.tokens)
+            .collect();
+        let r = suite.bench(&format!("{variant}: eval_nll"), || {
+            std::hint::black_box(st.eval_nll(&engine, &eval_batch, &meta).unwrap());
+        });
+        println!(
+            "    -> {:.1}k tokens/s",
+            r.throughput((meta.eval_batch * meta.seq_len) as f64) / 1e3
+        );
+
+        let m = *meta.prefix_lens.iter().min().unwrap_or(&32);
+        let prefix_batch: Vec<Vec<u32>> = gen
+            .batch(meta.prefix_batch)
+            .iter()
+            .map(|s| s.prefix(m).to_vec())
+            .collect();
+        let r = suite.bench(&format!("{variant}: prefix_nll_{m}"), || {
+            std::hint::black_box(st.prefix_nll(&engine, &prefix_batch, &meta, m).unwrap());
+        });
+        println!(
+            "    -> {:.0} sequences/s",
+            r.throughput(meta.prefix_batch as f64)
+        );
+    }
+
+    let stats = engine.stats();
+    println!(
+        "\nengine: {} compiles {:.1}s total, {} executions {:.1}s total",
+        stats.compiles, stats.compile_secs, stats.executions, stats.execute_secs
+    );
+    suite.write_json().unwrap();
+}

@@ -1,0 +1,72 @@
+//! FLOPs-matched dense baseline (§3.1 "Comparison to the Dense Model").
+//!
+//! The dense model has the *same architecture as one expert* and trains on
+//! the *same total token volume* as the whole mixture: `E × expert_steps`
+//! SGD steps on the unpartitioned stream. Inference cost is therefore
+//! identical to a single expert's; training FLOPs match the mixture's
+//! expert stage (the router overhead is the paper's ≤4% delta, accounted
+//! in `flops/`).
+
+use anyhow::Result;
+
+use crate::data::SequenceGen;
+use crate::metrics::RunLog;
+use crate::runtime::{Engine, TrainState};
+use crate::tokenizer::Bpe;
+
+/// Train a dense baseline for `total_steps` on the raw (unrouted) stream
+/// at the expert's native batch size.
+pub fn train_dense(
+    engine: &Engine,
+    bpe: &Bpe,
+    variant: &str,
+    total_steps: usize,
+    seed: u64,
+    log: &mut RunLog,
+) -> Result<TrainState> {
+    let meta = engine.variant(variant)?.clone();
+    train_dense_batched(engine, bpe, variant, total_steps, meta.train_batch, seed, log)
+}
+
+/// Train a dense baseline with an explicit batch size (must be the
+/// expert's native batch or one of the compiled `dense_batches`). The
+/// paper's comparator (Table 2) is `batch = E x expert_batch` for the
+/// same number of steps — same total tokens, same step count.
+pub fn train_dense_batched(
+    engine: &Engine,
+    bpe: &Bpe,
+    variant: &str,
+    total_steps: usize,
+    batch_rows: usize,
+    seed: u64,
+    log: &mut RunLog,
+) -> Result<TrainState> {
+    let meta = engine.variant(variant)?.clone();
+    let mut state = TrainState::init(engine, variant, seed)?;
+    let mut gen = SequenceGen::new(bpe, meta.seq_len, seed ^ 0xDE5E);
+
+    // Single-epoch: the dense model never revisits a sequence, matching
+    // the paper's regime; data is drawn in bounded chunks.
+    let mut remaining = total_steps;
+    while remaining > 0 {
+        let steps = remaining.min(32);
+        let rows = gen.batch(steps * batch_rows);
+        for s in 0..steps {
+            let batch: Vec<Vec<u32>> = rows[s * batch_rows..(s + 1) * batch_rows]
+                .iter()
+                .map(|r| r.tokens.clone())
+                .collect();
+            let loss = state.train_step_auto(engine, &batch, &meta)?;
+            if state.step % 10 == 0 || remaining - s <= 1 {
+                log.scalar("loss", state.step as f64, loss as f64);
+                log.scalar(
+                    "tokens",
+                    (state.step as usize * batch_rows * meta.seq_len) as f64,
+                    loss as f64,
+                );
+            }
+        }
+        remaining -= steps;
+    }
+    Ok(state)
+}

@@ -1,0 +1,185 @@
+//! Balanced K-Means clustering (final stage of the Fig. 4c baseline).
+//!
+//! Standard Lloyd iterations with k-means++ seeding, but the assignment
+//! step enforces per-cluster capacity `ceil(n/k)` using the same
+//! best-score-first greedy the paper's balanced assignment uses — so both
+//! routing methods face identical balance constraints.
+
+use crate::coordinator::assignment::balanced_assign;
+use crate::util::rng::Rng;
+
+/// Clustering output.
+#[derive(Clone, Debug)]
+pub struct KMeansResult {
+    pub assignment: Vec<usize>,
+    pub centroids: Vec<Vec<f64>>,
+    pub inertia: f64,
+    pub iterations: usize,
+}
+
+fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+fn kmeanspp_init(points: &[Vec<f64>], k: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
+    let n = points.len();
+    let mut centroids = Vec::with_capacity(k);
+    centroids.push(points[rng.usize_below(n)].clone());
+    let mut d2: Vec<f64> = points.iter().map(|p| sq_dist(p, &centroids[0])).collect();
+    while centroids.len() < k {
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 0.0 {
+            points[rng.usize_below(n)].clone()
+        } else {
+            points[rng.weighted(&d2)].clone()
+        };
+        centroids.push(next);
+        for (i, p) in points.iter().enumerate() {
+            let d = sq_dist(p, centroids.last().unwrap());
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+    }
+    centroids
+}
+
+/// Balanced K-Means: capacity-constrained Lloyd iterations.
+pub fn balanced_kmeans(points: &[Vec<f64>], k: usize, max_iters: usize, seed: u64) -> KMeansResult {
+    assert!(k > 0 && !points.is_empty());
+    let mut rng = Rng::new(seed);
+    let mut centroids = kmeanspp_init(points, k, &mut rng);
+    let mut assignment: Vec<usize> = vec![0; points.len()];
+    let mut last_inertia = f64::INFINITY;
+    let mut iterations = 0;
+
+    for it in 0..max_iters {
+        iterations = it + 1;
+        // capacity-constrained assignment via the shared balanced greedy
+        let dists: Vec<Vec<f32>> = points
+            .iter()
+            .map(|p| centroids.iter().map(|c| sq_dist(p, c) as f32).collect())
+            .collect();
+        let a = balanced_assign(&dists, None);
+        assignment = a.expert_of;
+
+        // recompute centroids
+        let dim = points[0].len();
+        let mut sums = vec![vec![0.0; dim]; k];
+        let mut counts = vec![0usize; k];
+        for (i, &c) in assignment.iter().enumerate() {
+            counts[c] += 1;
+            for (j, &x) in points[i].iter().enumerate() {
+                sums[c][j] += x;
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for j in 0..dim {
+                    sums[c][j] /= counts[c] as f64;
+                }
+                centroids[c] = sums[c].clone();
+            }
+        }
+
+        let inertia: f64 = assignment
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| sq_dist(&points[i], &centroids[c]))
+            .sum();
+        if (last_inertia - inertia).abs() < 1e-9 {
+            last_inertia = inertia;
+            break;
+        }
+        last_inertia = inertia;
+    }
+
+    KMeansResult {
+        assignment,
+        centroids,
+        inertia: last_inertia,
+        iterations,
+    }
+}
+
+/// Assign new points to the nearest centroid (inference-time routing for
+/// the TF-IDF baseline — unconstrained, like Eq. 4 at inference).
+pub fn nearest_centroid(points: &[Vec<f64>], centroids: &[Vec<f64>]) -> Vec<usize> {
+    points
+        .iter()
+        .map(|p| {
+            let mut best = 0usize;
+            let mut best_d = f64::INFINITY;
+            for (c, cent) in centroids.iter().enumerate() {
+                let d = sq_dist(p, cent);
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_blobs(n_per: usize, seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = Rng::new(seed);
+        let mut pts = Vec::new();
+        for _ in 0..n_per {
+            pts.push(vec![1.0 + 0.1 * rng.normal(), 1.0 + 0.1 * rng.normal()]);
+        }
+        for _ in 0..n_per {
+            pts.push(vec![-1.0 + 0.1 * rng.normal(), -1.0 + 0.1 * rng.normal()]);
+        }
+        pts
+    }
+
+    #[test]
+    fn separates_two_blobs() {
+        let pts = two_blobs(20, 3);
+        let r = balanced_kmeans(&pts, 2, 20, 7);
+        // first 20 all same cluster, last 20 all the other
+        let c0 = r.assignment[0];
+        assert!(r.assignment[..20].iter().all(|&c| c == c0));
+        assert!(r.assignment[20..].iter().all(|&c| c != c0));
+    }
+
+    #[test]
+    fn balanced_capacities() {
+        let pts = two_blobs(25, 5);
+        let r = balanced_kmeans(&pts, 4, 15, 9);
+        let mut counts = vec![0usize; 4];
+        for &c in &r.assignment {
+            counts[c] += 1;
+        }
+        let cap = 50usize.div_ceil(4);
+        assert!(counts.iter().all(|&c| c <= cap), "{counts:?}");
+    }
+
+    #[test]
+    fn inertia_decreases_or_converges() {
+        let pts = two_blobs(30, 11);
+        let r1 = balanced_kmeans(&pts, 2, 1, 13);
+        let r5 = balanced_kmeans(&pts, 2, 15, 13);
+        assert!(r5.inertia <= r1.inertia + 1e-9);
+    }
+
+    #[test]
+    fn nearest_centroid_routes_to_closest() {
+        let cents = vec![vec![0.0, 0.0], vec![10.0, 10.0]];
+        let pts = vec![vec![1.0, 0.0], vec![9.0, 9.5]];
+        assert_eq!(nearest_centroid(&pts, &cents), vec![0, 1]);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let pts = two_blobs(10, 17);
+        let a = balanced_kmeans(&pts, 2, 10, 5);
+        let b = balanced_kmeans(&pts, 2, 10, 5);
+        assert_eq!(a.assignment, b.assignment);
+    }
+}

@@ -1,0 +1,17 @@
+//! Baselines the paper compares against.
+//!
+//! * [`dense`] — the FLOPs-matched dense model (Fig. 2 / Table 3): one
+//!   model of the expert's architecture trained on E× the tokens.
+//! * [`tfidf`] + [`svd`] + [`kmeans`] — the Gururangan et al. (2023)
+//!   routing comparator of Fig. 4c: TF-IDF document encoding → truncated
+//!   SVD projection → balanced K-Means clustering.
+
+pub mod dense;
+pub mod kmeans;
+pub mod svd;
+pub mod tfidf;
+
+pub use dense::{train_dense, train_dense_batched};
+pub use kmeans::{balanced_kmeans, KMeansResult};
+pub use svd::truncated_svd;
+pub use tfidf::TfIdf;

@@ -1,0 +1,170 @@
+//! Truncated SVD by randomized subspace iteration (Halko et al. 2011).
+//!
+//! Projects TF-IDF vectors to a low-dimensional space before K-Means,
+//! exactly as the Gururangan et al. (2023) pipeline does. Implemented
+//! from scratch: random Gaussian sketch, a few power iterations with
+//! Gram–Schmidt re-orthonormalization, then projection.
+
+use crate::util::rng::Rng;
+
+/// Row-major dense matrix helper.
+fn matmul_at_a_q(rows: &[Vec<f64>], q: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    // computes A^T (A q) for each column of q; rows: n x d, q: d x k
+    let d = rows.first().map(|r| r.len()).unwrap_or(0);
+    let k = q.first().map(|c| c.len()).unwrap_or(0);
+    let mut out = vec![vec![0.0; k]; d];
+    for row in rows {
+        // s = row . q  (1 x k)
+        let mut s = vec![0.0; k];
+        for (j, &x) in row.iter().enumerate() {
+            if x == 0.0 {
+                continue;
+            }
+            for c in 0..k {
+                s[c] += x * q[j][c];
+            }
+        }
+        // out += row^T s
+        for (j, &x) in row.iter().enumerate() {
+            if x == 0.0 {
+                continue;
+            }
+            for c in 0..k {
+                out[j][c] += x * s[c];
+            }
+        }
+    }
+    out
+}
+
+/// Modified Gram–Schmidt orthonormalization of the columns of `m` (d x k).
+fn orthonormalize(m: &mut [Vec<f64>]) {
+    let d = m.len();
+    let k = m.first().map(|r| r.len()).unwrap_or(0);
+    for c in 0..k {
+        // subtract projections on previous columns
+        for p in 0..c {
+            let mut dot = 0.0;
+            for r in 0..d {
+                dot += m[r][c] * m[r][p];
+            }
+            for r in 0..d {
+                m[r][c] -= dot * m[r][p];
+            }
+        }
+        let mut norm = 0.0;
+        for r in 0..d {
+            norm += m[r][c] * m[r][c];
+        }
+        let norm = norm.sqrt().max(1e-12);
+        for r in 0..d {
+            m[r][c] /= norm;
+        }
+    }
+}
+
+/// Compute a rank-`k` orthonormal basis `V` (d x k) of the row space of
+/// `rows` (n x d) and return the projected rows (n x k).
+pub fn truncated_svd(rows: &[Vec<f64>], k: usize, iters: usize, seed: u64) -> Vec<Vec<f64>> {
+    let n = rows.len();
+    let d = rows.first().map(|r| r.len()).unwrap_or(0);
+    if n == 0 || d == 0 || k == 0 {
+        return vec![vec![]; n];
+    }
+    let k = k.min(d).min(n);
+    let mut rng = Rng::new(seed);
+    // random start: d x k Gaussian
+    let mut q: Vec<Vec<f64>> = (0..d)
+        .map(|_| (0..k).map(|_| rng.normal()).collect())
+        .collect();
+    orthonormalize(&mut q);
+    for _ in 0..iters {
+        q = matmul_at_a_q(rows, &q);
+        orthonormalize(&mut q);
+    }
+    // project: each row (1 x d) times q (d x k)
+    rows.iter()
+        .map(|row| {
+            (0..k)
+                .map(|c| {
+                    row.iter()
+                        .enumerate()
+                        .map(|(j, &x)| x * q[j][c])
+                        .sum::<f64>()
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn projection_has_requested_rank() {
+        let mut rng = Rng::new(1);
+        let rows: Vec<Vec<f64>> = (0..20)
+            .map(|_| (0..10).map(|_| rng.normal()).collect())
+            .collect();
+        let p = truncated_svd(&rows, 3, 3, 7);
+        assert_eq!(p.len(), 20);
+        assert!(p.iter().all(|r| r.len() == 3));
+    }
+
+    #[test]
+    fn separates_two_orthogonal_clusters() {
+        // cluster A lives on axes 0-1, cluster B on axes 8-9
+        let mut rng = Rng::new(2);
+        let mut rows = Vec::new();
+        for _ in 0..15 {
+            let mut r = vec![0.0; 10];
+            r[0] = 1.0 + 0.05 * rng.normal();
+            r[1] = 0.5 + 0.05 * rng.normal();
+            rows.push(r);
+        }
+        for _ in 0..15 {
+            let mut r = vec![0.0; 10];
+            r[8] = 1.0 + 0.05 * rng.normal();
+            r[9] = -0.7 + 0.05 * rng.normal();
+            rows.push(r);
+        }
+        let p = truncated_svd(&rows, 2, 4, 3);
+        // distance within cluster << distance across clusters
+        let dist = |a: &[f64], b: &[f64]| -> f64 {
+            a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt()
+        };
+        let within = dist(&p[0], &p[1]);
+        let across = dist(&p[0], &p[20]);
+        assert!(across > 5.0 * within, "within={within} across={across}");
+    }
+
+    #[test]
+    fn preserves_pairwise_structure_for_full_rank() {
+        let rows = vec![
+            vec![1.0, 0.0, 0.0],
+            vec![0.0, 1.0, 0.0],
+            vec![1.0, 1.0, 0.0],
+        ];
+        let p = truncated_svd(&rows, 2, 5, 11);
+        // row2 = row0 + row1 must hold approximately in the projection
+        for c in 0..2 {
+            assert!((p[2][c] - (p[0][c] + p[1][c])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn empty_input_safe() {
+        let p = truncated_svd(&[], 4, 2, 1);
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let rows: Vec<Vec<f64>> = (0..8).map(|i| vec![i as f64, 1.0, 0.0]).collect();
+        assert_eq!(
+            truncated_svd(&rows, 2, 3, 42),
+            truncated_svd(&rows, 2, 3, 42)
+        );
+    }
+}

@@ -1,0 +1,122 @@
+//! TF-IDF document encoding (first stage of the Gururangan et al. (2023)
+//! routing baseline, Fig. 4c).
+//!
+//! Documents are token sequences (we operate on the BPE ids the routers
+//! see, so both routing methods get exactly the same input). The vocabulary
+//! is the tokenizer's; term frequency is L2-normalized and weighted by
+//! smoothed inverse document frequency.
+
+/// Fitted TF-IDF vocabulary statistics.
+#[derive(Clone, Debug)]
+pub struct TfIdf {
+    pub vocab: usize,
+    /// idf[t] = ln((1 + n_docs) / (1 + df[t])) + 1 (smooth idf)
+    pub idf: Vec<f64>,
+}
+
+impl TfIdf {
+    /// Fit document frequencies over token-id documents.
+    pub fn fit(docs: &[&[u32]], vocab: usize) -> TfIdf {
+        let mut df = vec![0u64; vocab];
+        let mut seen = vec![u32::MAX; vocab];
+        for (i, doc) in docs.iter().enumerate() {
+            for &t in doc.iter() {
+                let t = t as usize;
+                if t < vocab && seen[t] != i as u32 {
+                    seen[t] = i as u32;
+                    df[t] += 1;
+                }
+            }
+        }
+        let n = docs.len() as f64;
+        let idf = df
+            .iter()
+            .map(|&d| ((1.0 + n) / (1.0 + d as f64)).ln() + 1.0)
+            .collect();
+        TfIdf { vocab, idf }
+    }
+
+    /// Encode one document as a dense L2-normalized tf-idf vector.
+    pub fn encode(&self, doc: &[u32]) -> Vec<f64> {
+        let mut tf = vec![0.0f64; self.vocab];
+        for &t in doc {
+            let t = t as usize;
+            if t < self.vocab {
+                tf[t] += 1.0;
+            }
+        }
+        if doc.is_empty() {
+            return tf;
+        }
+        for (t, v) in tf.iter_mut().enumerate() {
+            *v = *v / doc.len() as f64 * self.idf[t];
+        }
+        let norm = tf.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if norm > 0.0 {
+            for v in tf.iter_mut() {
+                *v /= norm;
+            }
+        }
+        tf
+    }
+
+    /// Encode a batch into a row-major matrix.
+    pub fn encode_all(&self, docs: &[&[u32]]) -> Vec<Vec<f64>> {
+        docs.iter().map(|d| self.encode(d)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idf_downweights_ubiquitous_tokens() {
+        // token 0 in every doc, token 1 in one doc
+        let docs: Vec<Vec<u32>> = vec![vec![0, 1], vec![0, 2], vec![0, 3]];
+        let refs: Vec<&[u32]> = docs.iter().map(|d| d.as_slice()).collect();
+        let t = TfIdf::fit(&refs, 8);
+        assert!(t.idf[0] < t.idf[1]);
+        assert_eq!(t.idf[1], t.idf[2]);
+    }
+
+    #[test]
+    fn encoding_is_unit_norm() {
+        let docs: Vec<Vec<u32>> = vec![vec![0, 1, 1, 2], vec![3, 3, 3]];
+        let refs: Vec<&[u32]> = docs.iter().map(|d| d.as_slice()).collect();
+        let t = TfIdf::fit(&refs, 8);
+        for d in &refs {
+            let v = t.encode(d);
+            let norm: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-9, "{norm}");
+        }
+    }
+
+    #[test]
+    fn empty_doc_is_zero_vector() {
+        let docs: Vec<Vec<u32>> = vec![vec![0, 1]];
+        let refs: Vec<&[u32]> = docs.iter().map(|d| d.as_slice()).collect();
+        let t = TfIdf::fit(&refs, 4);
+        assert!(t.encode(&[]).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn similar_docs_have_high_cosine() {
+        let a: &[u32] = &[1, 2, 3, 1, 2, 3];
+        let b: &[u32] = &[1, 2, 3, 3, 2];
+        let c: &[u32] = &[7, 6, 5, 4];
+        let t = TfIdf::fit(&[a, b, c], 8);
+        let (va, vb, vc) = (t.encode(a), t.encode(b), t.encode(c));
+        let dot = |x: &[f64], y: &[f64]| -> f64 { x.iter().zip(y).map(|(a, b)| a * b).sum() };
+        assert!(dot(&va, &vb) > dot(&va, &vc));
+    }
+
+    #[test]
+    fn out_of_vocab_tokens_ignored() {
+        let a: &[u32] = &[1, 999];
+        let t = TfIdf::fit(&[a], 4);
+        let v = t.encode(a);
+        assert_eq!(v.len(), 4);
+        assert!(v[1] > 0.0);
+    }
+}

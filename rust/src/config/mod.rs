@@ -1,0 +1,241 @@
+//! Experiment configuration: JSON files under `configs/` + CLI overrides.
+//!
+//! A config fully describes a run: corpus/tokenizer settings, the model
+//! variants, the mixture shape, and the training budgets. `smalltalk`
+//! subcommands start from [`ExperimentConfig::default()`], optionally load
+//! `--config <file.json>`, then apply `--key value` overrides.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::pipeline::PipelineConfig;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Everything a run needs.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Where AOT artifacts live.
+    pub artifacts_dir: String,
+    /// BPE vocabulary size (must match the manifest's `vocab`).
+    pub vocab: usize,
+    /// Documents used to train the tokenizer.
+    pub tokenizer_docs: usize,
+    /// Target bytes per tokenizer-training document.
+    pub tokenizer_doc_bytes: usize,
+    /// Pipeline (mixture) settings.
+    pub pipeline: PipelineConfig,
+    /// Held-out sequences for perplexity eval.
+    pub eval_sequences: usize,
+    /// Downstream tasks per domain.
+    pub tasks_per_domain: usize,
+    /// Options per downstream task.
+    pub task_options: usize,
+    /// Master seed.
+    pub seed: u64,
+    /// Output directory for results.
+    pub results_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            artifacts_dir: "artifacts".into(),
+            vocab: 512,
+            tokenizer_docs: 120,
+            tokenizer_doc_bytes: 500,
+            pipeline: PipelineConfig::default(),
+            eval_sequences: 128,
+            tasks_per_domain: 12,
+            task_options: 4,
+            seed: 1234,
+            results_dir: "results".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a JSON file (flat keys; missing keys keep defaults).
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {}", path.as_ref().display()))?;
+        let j = Json::parse(&text).context("parsing config json")?;
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_json(&j);
+        Ok(cfg)
+    }
+
+    fn apply_json(&mut self, j: &Json) {
+        let s = |k: &str| j.get(k).and_then(Json::as_str).map(String::from);
+        let u = |k: &str| j.get(k).and_then(Json::as_usize);
+        if let Some(v) = s("artifacts_dir") {
+            self.artifacts_dir = v;
+        }
+        if let Some(v) = s("results_dir") {
+            self.results_dir = v;
+        }
+        if let Some(v) = u("vocab") {
+            self.vocab = v;
+        }
+        if let Some(v) = u("tokenizer_docs") {
+            self.tokenizer_docs = v;
+        }
+        if let Some(v) = u("tokenizer_doc_bytes") {
+            self.tokenizer_doc_bytes = v;
+        }
+        if let Some(v) = u("eval_sequences") {
+            self.eval_sequences = v;
+        }
+        if let Some(v) = u("tasks_per_domain") {
+            self.tasks_per_domain = v;
+        }
+        if let Some(v) = u("task_options") {
+            self.task_options = v;
+        }
+        if let Some(v) = j.get("seed").and_then(Json::as_i64) {
+            self.seed = v as u64;
+            self.pipeline.seed = v as u64;
+        }
+        if let Some(v) = s("router_variant") {
+            self.pipeline.router_variant = v;
+        }
+        if let Some(v) = s("expert_variant") {
+            self.pipeline.expert_variant = v;
+        }
+        if let Some(v) = u("n_experts") {
+            self.pipeline.n_experts = v;
+        }
+        if let Some(v) = u("em_rounds") {
+            self.pipeline.em_rounds = v;
+        }
+        if let Some(v) = u("em_chunk") {
+            self.pipeline.em_chunk = v;
+        }
+        if let Some(v) = u("em_steps_per_round") {
+            self.pipeline.em_steps_per_round = v;
+        }
+        if let Some(v) = u("shard_sequences") {
+            self.pipeline.shard_sequences = v;
+        }
+        if let Some(v) = u("expert_steps") {
+            self.pipeline.expert_steps = v;
+        }
+        if let Some(v) = u("prefix_len") {
+            self.pipeline.prefix_len = v;
+        }
+    }
+
+    /// Apply `--key value` CLI overrides (same keys as the JSON form).
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(v) = args.get("artifacts-dir") {
+            self.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = args.get("results-dir") {
+            self.results_dir = v.to_string();
+        }
+        if let Some(v) = args.get("router") {
+            self.pipeline.router_variant = v.to_string();
+        }
+        if let Some(v) = args.get("expert") {
+            self.pipeline.expert_variant = v.to_string();
+        }
+        self.pipeline.n_experts = args.get_usize("experts", self.pipeline.n_experts)?;
+        self.pipeline.em_rounds = args.get_usize("em-rounds", self.pipeline.em_rounds)?;
+        self.pipeline.em_chunk = args.get_usize("em-chunk", self.pipeline.em_chunk)?;
+        self.pipeline.em_steps_per_round =
+            args.get_usize("em-steps", self.pipeline.em_steps_per_round)?;
+        self.pipeline.shard_sequences =
+            args.get_usize("shard-sequences", self.pipeline.shard_sequences)?;
+        self.pipeline.expert_steps = args.get_usize("expert-steps", self.pipeline.expert_steps)?;
+        self.pipeline.prefix_len = args.get_usize("prefix", self.pipeline.prefix_len)?;
+        self.eval_sequences = args.get_usize("eval-sequences", self.eval_sequences)?;
+        self.tasks_per_domain = args.get_usize("tasks-per-domain", self.tasks_per_domain)?;
+        self.seed = args.get_u64("seed", self.seed)?;
+        self.pipeline.seed = self.seed;
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("artifacts_dir", Json::str(self.artifacts_dir.clone())),
+            ("results_dir", Json::str(self.results_dir.clone())),
+            ("vocab", Json::num(self.vocab as f64)),
+            ("tokenizer_docs", Json::num(self.tokenizer_docs as f64)),
+            (
+                "tokenizer_doc_bytes",
+                Json::num(self.tokenizer_doc_bytes as f64),
+            ),
+            ("eval_sequences", Json::num(self.eval_sequences as f64)),
+            ("tasks_per_domain", Json::num(self.tasks_per_domain as f64)),
+            ("task_options", Json::num(self.task_options as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            (
+                "router_variant",
+                Json::str(self.pipeline.router_variant.clone()),
+            ),
+            (
+                "expert_variant",
+                Json::str(self.pipeline.expert_variant.clone()),
+            ),
+            ("n_experts", Json::num(self.pipeline.n_experts as f64)),
+            ("em_rounds", Json::num(self.pipeline.em_rounds as f64)),
+            ("em_chunk", Json::num(self.pipeline.em_chunk as f64)),
+            (
+                "em_steps_per_round",
+                Json::num(self.pipeline.em_steps_per_round as f64),
+            ),
+            (
+                "shard_sequences",
+                Json::num(self.pipeline.shard_sequences as f64),
+            ),
+            ("expert_steps", Json::num(self.pipeline.expert_steps as f64)),
+            ("prefix_len", Json::num(self.pipeline.prefix_len as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_consistent() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.seed, c.pipeline.seed);
+        assert!(c.pipeline.n_experts >= 2);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_fields() {
+        let mut c = ExperimentConfig::default();
+        c.pipeline.n_experts = 8;
+        c.seed = 99;
+        c.pipeline.seed = 99;
+        let j = c.to_json();
+        let mut c2 = ExperimentConfig::default();
+        c2.apply_json(&j);
+        assert_eq!(c2.pipeline.n_experts, 8);
+        assert_eq!(c2.seed, 99);
+        assert_eq!(c2.pipeline.seed, 99);
+    }
+
+    #[test]
+    fn cli_overrides_apply() {
+        let raw: Vec<String> = ["--experts=6", "--expert-steps=10", "--seed=7"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let args = Args::parse(&raw, &[]).unwrap();
+        let mut c = ExperimentConfig::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.pipeline.n_experts, 6);
+        assert_eq!(c.pipeline.expert_steps, 10);
+        assert_eq!(c.pipeline.seed, 7);
+    }
+
+    #[test]
+    fn from_file_missing_is_error() {
+        assert!(ExperimentConfig::from_file("/nope/missing.json").is_err());
+    }
+}

@@ -1,0 +1,210 @@
+//! Communication ledger — the §A.4 accounting, measured not assumed.
+//!
+//! Every "node" (router trainer, expert trainer, leader) records the
+//! messages it would send/receive on a real cluster. The mixture's only
+//! collective is the all-gather of per-sequence router scores before each
+//! balanced assignment; expert training is fully independent. The ledger
+//! also implements the paper's DDP comparator (gradient all-reduce every
+//! step under a bandwidth-optimal collective: `2 * W * 4` bytes per node
+//! per step).
+
+use std::collections::BTreeMap;
+
+/// Kind of communication event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum CommKind {
+    /// All-gather of router scores for a data chunk (Alg. 1 line 8/13).
+    ScoreAllGather,
+    /// Broadcast of assignment results back to trainers.
+    AssignmentBroadcast,
+    /// Checkpoint/weight movement (once per training, not per step).
+    WeightTransfer,
+    /// DDP gradient all-reduce (baseline comparator only).
+    GradAllReduce,
+}
+
+/// One recorded event.
+#[derive(Clone, Debug)]
+pub struct CommEvent {
+    pub node: usize,
+    pub kind: CommKind,
+    pub bytes_sent: u64,
+    pub bytes_received: u64,
+    pub step: u64,
+}
+
+/// Ledger of all communication in a run.
+#[derive(Clone, Debug, Default)]
+pub struct CommLedger {
+    pub events: Vec<CommEvent>,
+}
+
+/// Aggregate view per node.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct NodeTotals {
+    pub events: usize,
+    pub bytes_sent: u64,
+    pub bytes_received: u64,
+}
+
+impl CommLedger {
+    pub fn record(&mut self, ev: CommEvent) {
+        self.events.push(ev);
+    }
+
+    /// Record a bandwidth-optimal all-gather of `scores_per_node` f16
+    /// scores across `nodes` participants: each node sends its own scores
+    /// once and receives everyone else's.
+    pub fn record_score_allgather(&mut self, nodes: usize, scores_per_node: u64, step: u64) {
+        let own = scores_per_node * 2; // f16 = 2 bytes (paper §A.4)
+        for node in 0..nodes {
+            self.record(CommEvent {
+                node,
+                kind: CommKind::ScoreAllGather,
+                bytes_sent: own,
+                bytes_received: own * (nodes as u64 - 1),
+                step,
+            });
+        }
+    }
+
+    /// Record one DDP gradient all-reduce step: `2 * W * 4` bytes per node
+    /// (bandwidth-optimal ring, f32 gradients — §A.4 "Comparison with
+    /// Distributed Training").
+    pub fn record_ddp_allreduce(&mut self, nodes: usize, params: u64, step: u64) {
+        let bytes = 2 * params * 4;
+        for node in 0..nodes {
+            self.record(CommEvent {
+                node,
+                kind: CommKind::GradAllReduce,
+                bytes_sent: bytes / 2,
+                bytes_received: bytes / 2,
+                step,
+            });
+        }
+    }
+
+    pub fn totals_per_node(&self) -> BTreeMap<usize, NodeTotals> {
+        let mut out: BTreeMap<usize, NodeTotals> = BTreeMap::new();
+        for ev in &self.events {
+            let t = out.entry(ev.node).or_default();
+            t.events += 1;
+            t.bytes_sent += ev.bytes_sent;
+            t.bytes_received += ev.bytes_received;
+        }
+        out
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.events.iter().map(|e| e.bytes_sent).sum()
+    }
+
+    /// Number of distinct collective rounds (unique (kind, step) pairs).
+    pub fn rounds(&self, kind: CommKind) -> usize {
+        let mut steps: Vec<u64> = self
+            .events
+            .iter()
+            .filter(|e| e.kind == kind)
+            .map(|e| e.step)
+            .collect();
+        steps.sort_unstable();
+        steps.dedup();
+        steps.len()
+    }
+
+    /// Max bytes (sent+received) seen by any single node — the interconnect
+    /// requirement.
+    pub fn peak_node_bytes(&self) -> u64 {
+        self.totals_per_node()
+            .values()
+            .map(|t| t.bytes_sent + t.bytes_received)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+// -------------------------------------------------------------------------
+// Closed forms from the paper's §A.4, used to cross-check the ledger and to
+// evaluate paper-scale configurations in the comm_overhead bench.
+// -------------------------------------------------------------------------
+
+/// Number of router communication rounds:
+/// `N_comm = N_steps_router * S * B_r / T` (§A.4).
+pub fn router_comm_rounds(steps: u64, seq_len: u64, batch: u64, tokens_between_comm: u64) -> u64 {
+    (steps * seq_len * batch).div_ceil(tokens_between_comm)
+}
+
+/// Data per router over its whole training, bytes:
+/// `2 * 2 * T * E / S` (§A.4, f16 scores, send+receive).
+pub fn router_bytes_per_comm(tokens_between_comm: u64, experts: u64, seq_len: u64) -> u64 {
+    2 * 2 * tokens_between_comm * experts / seq_len
+}
+
+/// DDP bytes per node per step for a model of `params` f32 parameters:
+/// `2 * W * 4` (§A.4).
+pub fn ddp_bytes_per_step(params: u64) -> u64 {
+    2 * params * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_numbers_router_rounds() {
+        // Paper: 128k steps, B_r=32, S=1024, T=45M tokens -> ~94 rounds (<100)
+        let n = router_comm_rounds(128_000, 1024, 32, 45_000_000);
+        assert!((90..100).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn paper_numbers_router_bytes() {
+        // Paper: T=45e6, E=32, S=1024 -> 5.625 MB per round
+        let b = router_bytes_per_comm(45_000_000, 32, 1024);
+        assert_eq!(b, 5_625_000);
+    }
+
+    #[test]
+    fn paper_numbers_ddp() {
+        // Paper: W=1.3e9 -> 10.4 GB per node per step
+        let b = ddp_bytes_per_step(1_300_000_000);
+        assert_eq!(b, 10_400_000_000);
+    }
+
+    #[test]
+    fn allgather_symmetry() {
+        let mut l = CommLedger::default();
+        l.record_score_allgather(4, 1000, 0);
+        let t = l.totals_per_node();
+        assert_eq!(t.len(), 4);
+        for v in t.values() {
+            assert_eq!(v.bytes_sent, 2000);
+            assert_eq!(v.bytes_received, 6000);
+        }
+        assert_eq!(l.rounds(CommKind::ScoreAllGather), 1);
+    }
+
+    #[test]
+    fn rounds_dedupe_by_step() {
+        let mut l = CommLedger::default();
+        l.record_score_allgather(2, 10, 0);
+        l.record_score_allgather(2, 10, 0);
+        l.record_score_allgather(2, 10, 1);
+        assert_eq!(l.rounds(CommKind::ScoreAllGather), 2);
+    }
+
+    #[test]
+    fn mixture_orders_of_magnitude_below_ddp() {
+        // Scaled run: 4 routers, 100 rounds of 10k scores vs DDP of a 5M
+        // param model for 400 steps on 4 nodes.
+        let mut mix = CommLedger::default();
+        for r in 0..100 {
+            mix.record_score_allgather(4, 10_000, r);
+        }
+        let mut ddp = CommLedger::default();
+        for s in 0..400 {
+            ddp.record_ddp_allreduce(4, 5_000_000, s);
+        }
+        assert!(ddp.peak_node_bytes() > 100 * mix.peak_node_bytes());
+    }
+}

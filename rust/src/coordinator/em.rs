@@ -1,0 +1,143 @@
+//! Router EM training (Algorithm 1, lines 1–10).
+//!
+//! Alternates:
+//!   * **M-step** — each router does SGD on its currently-assigned data
+//!     segment (Eq. 9), independently ("no need to talk");
+//!   * **E-step** — a fresh chunk of N sequences is scored by every
+//!     router (an all-gather of scores on a real cluster — recorded in the
+//!     [`CommLedger`]) and re-partitioned with balanced assignment.
+//!
+//! Round 0 uses random assignments. Every router is a "node"; the only
+//! inter-node traffic is the score exchange.
+
+use anyhow::Result;
+
+use super::assignment::{balanced_assign, Assignment};
+use super::comm::CommLedger;
+use super::scoring::{routing_purity, score_matrix};
+use crate::data::{Sequence, SequenceGen};
+use crate::metrics::RunLog;
+use crate::runtime::{Engine, TrainState, VariantMeta};
+use crate::util::rng::Rng;
+
+/// Configuration of the router EM loop.
+#[derive(Clone, Debug)]
+pub struct EmConfig {
+    /// Number of routers E (= number of experts).
+    pub n_routers: usize,
+    /// EM rounds T.
+    pub rounds: usize,
+    /// Fresh sequences per round N.
+    pub chunk_size: usize,
+    /// SGD steps per router per round.
+    pub steps_per_round: usize,
+    /// Routing prefix length M used for scoring during training.
+    pub prefix_len: usize,
+    /// Base RNG seed (router init + data order).
+    pub seed: u64,
+}
+
+impl Default for EmConfig {
+    fn default() -> Self {
+        EmConfig {
+            n_routers: 4,
+            rounds: 4,
+            chunk_size: 256,
+            steps_per_round: 24,
+            prefix_len: 32,
+            seed: 17,
+        }
+    }
+}
+
+/// Result of router training: the routers plus diagnostics per round.
+pub struct TrainedRouters {
+    pub routers: Vec<TrainState>,
+    pub meta: VariantMeta,
+    pub purity_per_round: Vec<f64>,
+    pub mean_score_per_round: Vec<f64>,
+}
+
+/// Train `cfg.n_routers` routers of `variant` with EM.
+///
+/// `gen` supplies "fresh sequences from the dataset"; `ledger` records the
+/// per-round score all-gather.
+pub fn train_routers(
+    engine: &Engine,
+    variant: &str,
+    cfg: &EmConfig,
+    gen: &mut SequenceGen,
+    ledger: &mut CommLedger,
+    log: &mut RunLog,
+) -> Result<TrainedRouters> {
+    let meta = engine.variant(variant)?.clone();
+    let mut rng = Rng::new(cfg.seed);
+
+    // independent init per router
+    let mut routers: Vec<TrainState> = (0..cfg.n_routers)
+        .map(|e| TrainState::init(engine, variant, cfg.seed ^ (0xA5A5 + e as u64)))
+        .collect::<Result<_>>()?;
+
+    let mut purity_per_round = Vec::with_capacity(cfg.rounds);
+    let mut mean_score_per_round = Vec::with_capacity(cfg.rounds);
+
+    for round in 0..cfg.rounds {
+        // ---- E-step: draw a fresh chunk and partition it ----
+        let chunk: Vec<Sequence> = gen.batch(cfg.chunk_size);
+        let assignment: Assignment = if round == 0 {
+            // random balanced split (Alg. 1 line 3)
+            let mut ids: Vec<usize> = (0..chunk.len()).collect();
+            rng.shuffle(&mut ids);
+            let cap = chunk.len().div_ceil(cfg.n_routers);
+            let mut expert_of = vec![0usize; chunk.len()];
+            let mut counts = vec![0usize; cfg.n_routers];
+            for (i, &s) in ids.iter().enumerate() {
+                let e = i / cap;
+                expert_of[s] = e;
+                counts[e] += 1;
+            }
+            Assignment { expert_of, counts }
+        } else {
+            let nll = score_matrix(engine, &routers, &meta, &chunk, cfg.prefix_len)?;
+            // all-gather: each node contributes one score per sequence
+            ledger.record_score_allgather(cfg.n_routers, chunk.len() as u64, round as u64);
+            let a = balanced_assign(&nll, None);
+            mean_score_per_round.push(a.total_nll(&nll) / chunk.len() as f64);
+            a
+        };
+        let purity = routing_purity(&assignment.expert_of, &chunk, cfg.n_routers);
+        purity_per_round.push(purity);
+        log.scalar("em/purity", round as f64, purity);
+
+        // ---- M-step: each router trains on its segment, independently ----
+        for (e, router) in routers.iter_mut().enumerate() {
+            let segment = assignment.segment(e);
+            if segment.is_empty() {
+                continue;
+            }
+            let mut cursor = 0usize;
+            let mut last_loss = 0.0f32;
+            for _ in 0..cfg.steps_per_round {
+                let mut batch: Vec<Vec<u32>> = Vec::with_capacity(meta.train_batch);
+                for _ in 0..meta.train_batch {
+                    let s = segment[cursor % segment.len()];
+                    batch.push(chunk[s].tokens.clone());
+                    cursor += 1;
+                }
+                last_loss = router.train_step(engine, &batch, &meta)?;
+            }
+            log.scalar(
+                &format!("em/router{e}_loss"),
+                (round * cfg.steps_per_round) as f64,
+                last_loss as f64,
+            );
+        }
+    }
+
+    Ok(TrainedRouters {
+        routers,
+        meta,
+        purity_per_round,
+        mean_score_per_round,
+    })
+}

@@ -1,0 +1,81 @@
+//! Independent expert training (Algorithm 1, lines 11–16).
+//!
+//! Each expert is a virtual "node": it sees only its own dataset segment,
+//! performs SGD locally, and never communicates (the defining property of
+//! the method). On this single-core testbed the nodes run sequentially;
+//! the comm ledger still models the cluster topology (zero events here).
+
+use anyhow::Result;
+
+use crate::data::Sequence;
+use crate::metrics::RunLog;
+use crate::runtime::{Engine, TrainState, VariantMeta};
+
+/// Training budget for one expert node.
+#[derive(Clone, Debug)]
+pub struct ExpertConfig {
+    pub steps: usize,
+    pub seed: u64,
+    /// Log the loss every `log_every` steps.
+    pub log_every: usize,
+}
+
+impl Default for ExpertConfig {
+    fn default() -> Self {
+        ExpertConfig {
+            steps: 100,
+            seed: 23,
+            log_every: 10,
+        }
+    }
+}
+
+/// Train one expert on its segment. `segment` is this node's private data
+/// shard; batches cycle deterministically through it.
+///
+/// Returns the trained state; appends `loss` (by step) and `tokens` (by
+/// cumulative tokens) series to `log`.
+pub fn train_expert(
+    engine: &Engine,
+    variant: &str,
+    cfg: &ExpertConfig,
+    segment: &[Sequence],
+    log: &mut RunLog,
+) -> Result<TrainState> {
+    let meta: VariantMeta = engine.variant(variant)?.clone();
+    let mut state = TrainState::init(engine, variant, cfg.seed)?;
+    train_expert_continue(engine, &mut state, cfg, segment, &meta, log)?;
+    Ok(state)
+}
+
+/// Continue training an existing state (used by FLOPs-matched baselines
+/// and the perf bench).
+pub fn train_expert_continue(
+    engine: &Engine,
+    state: &mut TrainState,
+    cfg: &ExpertConfig,
+    segment: &[Sequence],
+    meta: &VariantMeta,
+    log: &mut RunLog,
+) -> Result<f32> {
+    anyhow::ensure!(!segment.is_empty(), "cannot train on an empty segment");
+    let mut cursor = 0usize;
+    let mut last = 0.0f32;
+    for step in 0..cfg.steps {
+        let mut batch: Vec<Vec<u32>> = Vec::with_capacity(meta.train_batch);
+        for _ in 0..meta.train_batch {
+            batch.push(segment[cursor % segment.len()].tokens.clone());
+            cursor += 1;
+        }
+        last = state.train_step(engine, &batch, meta)?;
+        if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+            log.scalar("loss", state.step as f64, last as f64);
+            log.scalar(
+                "tokens",
+                (state.step as usize * meta.tokens_per_step()) as f64,
+                last as f64,
+            );
+        }
+    }
+    Ok(last)
+}

@@ -1,0 +1,181 @@
+//! Inference-time routing and serving (§2.2: "During inference, no
+//! balancing is performed, and the expert is selected solely based on
+//! equation 4").
+//!
+//! [`Mixture`] bundles E tiny routers + E experts. A request's prefix is
+//! scored by every router; the argmin router's expert alone evaluates the
+//! sequence. [`serve`] implements the batched request loop: requests are
+//! routed, grouped per expert, and executed in expert-batch-sized chunks
+//! — the dispatch pattern a vLLM-style front-end would use.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::assignment::argmin_assign;
+use super::scoring::score_matrix;
+use crate::data::Sequence;
+use crate::runtime::{Engine, TrainState, VariantMeta};
+
+/// A trained mixture: E routers (tiny LMs) + E experts.
+pub struct Mixture {
+    pub routers: Vec<TrainState>,
+    pub router_meta: VariantMeta,
+    pub experts: Vec<TrainState>,
+    pub expert_meta: VariantMeta,
+}
+
+impl Mixture {
+    pub fn n_experts(&self) -> usize {
+        self.experts.len()
+    }
+
+    /// Route a batch of sequences: returns the chosen expert per sequence.
+    pub fn route(&self, engine: &Engine, seqs: &[Sequence], m: usize) -> Result<Vec<usize>> {
+        let nll = score_matrix(engine, &self.routers, &self.router_meta, seqs, m)?;
+        Ok(argmin_assign(&nll).expert_of)
+    }
+
+    /// Per-sequence full NLL under the routed expert, grouped per expert
+    /// for batching. Returns (nll, expert) per input sequence.
+    pub fn eval_routed(
+        &self,
+        engine: &Engine,
+        seqs: &[Sequence],
+        m: usize,
+    ) -> Result<Vec<(f32, usize)>> {
+        let routes = self.route(engine, seqs, m)?;
+        let mut out = vec![(0.0f32, 0usize); seqs.len()];
+        for e in 0..self.n_experts() {
+            let idx: Vec<usize> = (0..seqs.len()).filter(|&i| routes[i] == e).collect();
+            if idx.is_empty() {
+                continue;
+            }
+            let nll = eval_nll_all(
+                engine,
+                &self.experts[e],
+                &self.expert_meta,
+                &idx.iter().map(|&i| seqs[i].tokens.clone()).collect::<Vec<_>>(),
+            )?;
+            for (k, &i) in idx.iter().enumerate() {
+                out[i] = (nll[k], e);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Mixture perplexity on a held-out set (routing with prefix `m`).
+    pub fn perplexity(&self, engine: &Engine, seqs: &[Sequence], m: usize) -> Result<f64> {
+        let per_seq = self.eval_routed(engine, seqs, m)?;
+        let total: f64 = per_seq.iter().map(|&(n, _)| n as f64).sum();
+        let tokens = seqs.len() * (self.expert_meta.seq_len);
+        Ok((total / tokens as f64).exp())
+    }
+}
+
+/// Evaluate full-sequence NLL for an arbitrary number of rows, padding the
+/// tail to the compiled eval batch shape.
+pub fn eval_nll_all(
+    engine: &Engine,
+    state: &TrainState,
+    meta: &VariantMeta,
+    rows: &[Vec<u32>],
+) -> Result<Vec<f32>> {
+    let bs = meta.eval_batch;
+    let mut out = Vec::with_capacity(rows.len());
+    let mut i = 0;
+    while i < rows.len() {
+        let real = (rows.len() - i).min(bs);
+        let mut batch: Vec<Vec<u32>> = rows[i..i + real].to_vec();
+        while batch.len() < bs {
+            batch.push(batch[real - 1].clone());
+        }
+        let nll = state.eval_nll(engine, &batch, meta)?;
+        out.extend_from_slice(&nll[..real]);
+        i += real;
+    }
+    Ok(out)
+}
+
+/// Dense-baseline perplexity on the same sequences (comparator).
+pub fn dense_perplexity(
+    engine: &Engine,
+    state: &TrainState,
+    meta: &VariantMeta,
+    seqs: &[Sequence],
+) -> Result<f64> {
+    let rows: Vec<Vec<u32>> = seqs.iter().map(|s| s.tokens.clone()).collect();
+    let nll = eval_nll_all(engine, state, meta, &rows)?;
+    let total: f64 = nll.iter().map(|&n| n as f64).sum();
+    Ok((total / (seqs.len() * meta.seq_len) as f64).exp())
+}
+
+// ----------------------------------------------------------------------
+// Serving loop
+// ----------------------------------------------------------------------
+
+/// One inference request: a token sequence to score (seq_len + 1 tokens).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+}
+
+/// The server's answer.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub expert: usize,
+    pub nll: f32,
+    pub route_micros: u128,
+    pub exec_micros: u128,
+}
+
+/// Batched serving: route all queued requests, group by expert, execute.
+/// Returns responses in input order plus aggregate wall time.
+pub fn serve(engine: &Engine, mixture: &Mixture, requests: &[Request], m: usize) -> Result<Vec<Response>> {
+    let seqs: Vec<Sequence> = requests
+        .iter()
+        .map(|r| Sequence {
+            tokens: r.tokens.clone(),
+            domain: usize::MAX,
+        })
+        .collect();
+    let t0 = Instant::now();
+    let routes = mixture.route(engine, &seqs, m)?;
+    let route_us = t0.elapsed().as_micros() / requests.len().max(1) as u128;
+
+    let mut responses: Vec<Response> = requests
+        .iter()
+        .zip(&routes)
+        .map(|(r, &e)| Response {
+            id: r.id,
+            expert: e,
+            nll: 0.0,
+            route_micros: route_us,
+            exec_micros: 0,
+        })
+        .collect();
+
+    for e in 0..mixture.n_experts() {
+        let idx: Vec<usize> = (0..requests.len()).filter(|&i| routes[i] == e).collect();
+        if idx.is_empty() {
+            continue;
+        }
+        let t1 = Instant::now();
+        let nll = eval_nll_all(
+            engine,
+            &mixture.experts[e],
+            &mixture.expert_meta,
+            &idx.iter()
+                .map(|&i| requests[i].tokens.clone())
+                .collect::<Vec<_>>(),
+        )?;
+        let exec_us = t1.elapsed().as_micros() / idx.len() as u128;
+        for (k, &i) in idx.iter().enumerate() {
+            responses[i].nll = nll[k];
+            responses[i].exec_micros = exec_us;
+        }
+    }
+    Ok(responses)
+}

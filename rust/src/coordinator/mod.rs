@@ -1,0 +1,27 @@
+//! The paper's contribution: the SmallTalk LM coordinator.
+//!
+//! * [`assignment`] — balanced / argmin assignment (Fig. 1, Eq. 4)
+//! * [`scoring`] — batched prefix-NLL score matrices
+//! * [`em`] — router EM training (Algorithm 1 lines 1–10)
+//! * [`sharding`] — corpus segmentation by trained routers (lines 12–13)
+//! * [`expert`] — independent expert training (lines 14–16)
+//! * [`inference`] — argmin routing + batched serving loop
+//! * [`comm`] — communication ledger and §A.4 closed forms
+//! * [`pipeline`] — end-to-end orchestration (routers → shard → experts)
+
+pub mod assignment;
+pub mod comm;
+pub mod em;
+pub mod expert;
+pub mod inference;
+pub mod pipeline;
+pub mod scoring;
+pub mod sharding;
+
+pub use assignment::{argmin_assign, balanced_assign, sequential_assign, Assignment};
+pub use comm::{CommKind, CommLedger};
+pub use em::{train_routers, EmConfig, TrainedRouters};
+pub use expert::{train_expert, ExpertConfig};
+pub use inference::{dense_perplexity, serve, Mixture, Request, Response};
+pub use pipeline::{run_pipeline, PipelineConfig, PipelineResult};
+pub use sharding::{shard_corpus, Shards};

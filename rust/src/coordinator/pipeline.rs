@@ -1,0 +1,146 @@
+//! End-to-end orchestration: Algorithm 1 as one call.
+//!
+//!   1. train E routers with EM on fresh chunks,
+//!   2. shard the expert-training corpus with the trained routers,
+//!   3. train E experts independently on their segments,
+//!
+//! returning the [`Mixture`], the communication ledger, and the full
+//! metric log. This is what `smalltalk e2e`, the examples, and the Fig. 2
+//! benches drive.
+
+use anyhow::Result;
+
+use super::comm::CommLedger;
+use super::em::{train_routers, EmConfig};
+use super::expert::{train_expert, ExpertConfig};
+use super::inference::Mixture;
+use super::sharding::shard_corpus;
+use crate::data::SequenceGen;
+use crate::metrics::RunLog;
+use crate::runtime::Engine;
+use crate::tokenizer::Bpe;
+
+/// Configuration of a full mixture training run.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub router_variant: String,
+    pub expert_variant: String,
+    pub n_experts: usize,
+    /// EM rounds for router training.
+    pub em_rounds: usize,
+    /// Fresh sequences per EM round.
+    pub em_chunk: usize,
+    /// Router SGD steps per EM round.
+    pub em_steps_per_round: usize,
+    /// Sequences in the expert-training corpus (sharded across experts).
+    pub shard_sequences: usize,
+    /// SGD steps per expert.
+    pub expert_steps: usize,
+    /// Routing prefix length M (training-time).
+    pub prefix_len: usize,
+    pub seed: u64,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            router_variant: "router_micro".into(),
+            expert_variant: "expert_sm".into(),
+            n_experts: 4,
+            em_rounds: 3,
+            em_chunk: 192,
+            em_steps_per_round: 16,
+            shard_sequences: 512,
+            expert_steps: 60,
+            prefix_len: 32,
+            seed: 1234,
+        }
+    }
+}
+
+/// Everything a run produces.
+pub struct PipelineResult {
+    pub mixture: Mixture,
+    pub ledger: CommLedger,
+    pub log: RunLog,
+    /// Plurality-domain fraction per expert segment (specialization).
+    pub segment_purity: Vec<f64>,
+    /// Segment sizes after sharding.
+    pub segment_sizes: Vec<usize>,
+}
+
+/// Run Algorithm 1 end to end.
+pub fn run_pipeline(engine: &Engine, bpe: &Bpe, cfg: &PipelineConfig) -> Result<PipelineResult> {
+    let mut ledger = CommLedger::default();
+    let mut log = RunLog::new();
+    let router_meta = engine.variant(&cfg.router_variant)?.clone();
+    let expert_meta = engine.variant(&cfg.expert_variant)?.clone();
+    anyhow::ensure!(
+        router_meta.seq_len == expert_meta.seq_len,
+        "router/expert seq_len mismatch"
+    );
+
+    // Stage 1: routers (Alg. 1 lines 1-10).
+    let em = EmConfig {
+        n_routers: cfg.n_experts,
+        rounds: cfg.em_rounds,
+        chunk_size: cfg.em_chunk,
+        steps_per_round: cfg.em_steps_per_round,
+        prefix_len: cfg.prefix_len,
+        seed: cfg.seed,
+    };
+    let mut router_gen = SequenceGen::new(bpe, router_meta.seq_len, cfg.seed ^ 0x52_0000);
+    let trained = train_routers(
+        engine,
+        &cfg.router_variant,
+        &em,
+        &mut router_gen,
+        &mut ledger,
+        &mut log,
+    )?;
+
+    // Stage 2: shard the expert corpus (lines 12-13). The paper's experts
+    // train single-epoch on fresh data; make the corpus at least cover
+    // every expert's step budget so no sequence repeats.
+    let needed = cfg.n_experts * cfg.expert_steps * expert_meta.train_batch;
+    let n_shard = cfg.shard_sequences.max(needed);
+    let mut shard_gen = SequenceGen::new(bpe, expert_meta.seq_len, cfg.seed ^ 0x5AD);
+    let shards = shard_corpus(
+        engine,
+        &trained.routers,
+        &trained.meta,
+        &mut shard_gen,
+        n_shard,
+        cfg.prefix_len,
+        &mut ledger,
+    )?;
+    let segment_purity = shards.segment_purity();
+    let segment_sizes: Vec<usize> = shards.segments.iter().map(Vec::len).collect();
+
+    // Stage 3: independent experts (lines 14-16).
+    let mut experts = Vec::with_capacity(cfg.n_experts);
+    for (e, segment) in shards.segments.iter().enumerate() {
+        let ecfg = ExpertConfig {
+            steps: cfg.expert_steps,
+            seed: cfg.seed ^ (0xE0 + e as u64),
+            log_every: 10,
+        };
+        let mut elog = RunLog::new();
+        let state = train_expert(engine, &cfg.expert_variant, &ecfg, segment, &mut elog)?;
+        log.merge_prefixed(&format!("expert{e}"), &elog);
+        experts.push(state);
+    }
+
+    Ok(PipelineResult {
+        mixture: Mixture {
+            routers: trained.routers,
+            router_meta: trained.meta,
+            experts,
+            expert_meta,
+        },
+        ledger,
+        log,
+        segment_purity,
+        segment_sizes,
+    })
+}

@@ -1,0 +1,126 @@
+//! Batched prefix scoring: the score matrix `nll[seq][router]` behind
+//! every assignment (Eq. 4). Pads the tail batch to the compiled batch
+//! shape and discards the padding rows.
+
+use anyhow::Result;
+
+use crate::data::Sequence;
+use crate::runtime::{Engine, TrainState, VariantMeta};
+
+/// Score all sequences' `m`-token prefixes under every router.
+/// Returns `nll[seq][router]` (summed prefix NLL — lower is better).
+pub fn score_matrix(
+    engine: &Engine,
+    routers: &[TrainState],
+    meta: &VariantMeta,
+    seqs: &[Sequence],
+    m: usize,
+) -> Result<Vec<Vec<f32>>> {
+    let mut out = vec![vec![0.0f32; routers.len()]; seqs.len()];
+    let bs = meta.prefix_batch;
+    let mut batch: Vec<Vec<u32>> = Vec::with_capacity(bs);
+    let mut batch_idx: Vec<usize> = Vec::with_capacity(bs);
+
+    let flush = |engine: &Engine,
+                     batch: &mut Vec<Vec<u32>>,
+                     batch_idx: &mut Vec<usize>,
+                     out: &mut Vec<Vec<f32>>|
+     -> Result<()> {
+        if batch.is_empty() {
+            return Ok(());
+        }
+        let real = batch.len();
+        // pad to the compiled batch shape by repeating the last row
+        while batch.len() < bs {
+            batch.push(batch[real - 1].clone());
+        }
+        for (r, router) in routers.iter().enumerate() {
+            let scores = router.prefix_nll(engine, batch, meta, m)?;
+            for (i, &s) in scores.iter().take(real).enumerate() {
+                out[batch_idx[i]][r] = s;
+            }
+        }
+        batch.clear();
+        batch_idx.clear();
+        Ok(())
+    };
+
+    for (i, s) in seqs.iter().enumerate() {
+        batch.push(s.prefix(m).to_vec());
+        batch_idx.push(i);
+        if batch.len() == bs {
+            flush(engine, &mut batch, &mut batch_idx, &mut out)?;
+        }
+    }
+    flush(engine, &mut batch, &mut batch_idx, &mut out)?;
+    Ok(out)
+}
+
+/// Routing purity: fraction of sequences whose assigned expert is the
+/// plurality expert for their ground-truth domain. A diagnostic of how
+/// well prefix-likelihood routing discovers the latent domains.
+pub fn routing_purity(assignment: &[usize], seqs: &[Sequence], n_experts: usize) -> f64 {
+    use std::collections::HashMap;
+    if seqs.is_empty() {
+        return 0.0;
+    }
+    // majority expert per domain
+    let mut table: HashMap<usize, Vec<usize>> = HashMap::new();
+    for (s, &e) in assignment.iter().enumerate() {
+        table
+            .entry(seqs[s].domain)
+            .or_insert_with(|| vec![0; n_experts])[e] += 1;
+    }
+    let majority: HashMap<usize, usize> = table
+        .iter()
+        .map(|(&d, counts)| {
+            let best = counts
+                .iter()
+                .enumerate()
+                .max_by_key(|&(_, c)| *c)
+                .map(|(e, _)| e)
+                .unwrap_or(0);
+            (d, best)
+        })
+        .collect();
+    let hits = assignment
+        .iter()
+        .enumerate()
+        .filter(|&(s, &e)| majority[&seqs[s].domain] == e)
+        .count();
+    hits as f64 / seqs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(domain: usize) -> Sequence {
+        Sequence {
+            tokens: vec![0; 8],
+            domain,
+        }
+    }
+
+    #[test]
+    fn purity_perfect_partition() {
+        let seqs = vec![seq(0), seq(0), seq(1), seq(1)];
+        let assign = vec![0, 0, 1, 1];
+        assert_eq!(routing_purity(&assign, &seqs, 2), 1.0);
+    }
+
+    #[test]
+    fn purity_half_split_is_half() {
+        // each domain's sequences alternate between experts 0 and 1 -> the
+        // majority expert covers exactly half of each domain.
+        let seqs: Vec<_> = (0..96).map(|i| seq(i % 4)).collect();
+        let assign: Vec<usize> = (0..96).map(|i| (i / 4) % 2).collect();
+        let p = routing_purity(&assign, &seqs, 2);
+        assert!((p - 0.5).abs() < 1e-9, "{p}");
+    }
+
+    #[test]
+    fn purity_empty() {
+        assert_eq!(routing_purity(&[], &[], 2), 0.0);
+    }
+}

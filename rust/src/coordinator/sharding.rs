@@ -1,0 +1,69 @@
+//! Corpus sharding by trained routers (Algorithm 1, lines 12–13).
+//!
+//! Draws the expert-training corpus, scores every sequence's prefix under
+//! every router, and produces E balanced segments. The score exchange is
+//! the mixture's only pre-expert-training collective and is recorded in
+//! the comm ledger (chunked the way §A.4 describes: scores for ~T tokens
+//! of data per exchange).
+
+use anyhow::Result;
+
+use super::assignment::balanced_assign;
+use super::comm::CommLedger;
+use super::scoring::score_matrix;
+use crate::data::{Sequence, SequenceGen};
+use crate::runtime::{Engine, TrainState, VariantMeta};
+
+/// The sharded corpus: one segment per expert plus provenance.
+pub struct Shards {
+    pub segments: Vec<Vec<Sequence>>,
+    /// `nll[seq][router]` for diagnostics (Fig. 5 uses segment scores).
+    pub expert_of: Vec<usize>,
+}
+
+/// Shard `n_sequences` fresh sequences into `routers.len()` balanced
+/// segments using prefix scoring with prefix length `m`.
+pub fn shard_corpus(
+    engine: &Engine,
+    routers: &[TrainState],
+    meta: &VariantMeta,
+    gen: &mut SequenceGen,
+    n_sequences: usize,
+    m: usize,
+    ledger: &mut CommLedger,
+) -> Result<Shards> {
+    let seqs: Vec<Sequence> = gen.batch(n_sequences);
+    let nll = score_matrix(engine, routers, meta, &seqs, m)?;
+    ledger.record_score_allgather(routers.len(), n_sequences as u64, u64::MAX);
+    let assignment = balanced_assign(&nll, None);
+
+    let mut segments: Vec<Vec<Sequence>> = (0..routers.len()).map(|_| Vec::new()).collect();
+    for (i, seq) in seqs.into_iter().enumerate() {
+        segments[assignment.expert_of[i]].push(seq);
+    }
+    Ok(Shards {
+        segments,
+        expert_of: assignment.expert_of,
+    })
+}
+
+impl Shards {
+    /// Fraction of each segment drawn from its plurality domain — the
+    /// specialization diagnostic reported alongside Fig. 5.
+    pub fn segment_purity(&self) -> Vec<f64> {
+        self.segments
+            .iter()
+            .map(|seg| {
+                if seg.is_empty() {
+                    return 0.0;
+                }
+                let mut counts = std::collections::HashMap::new();
+                for s in seg {
+                    *counts.entry(s.domain).or_insert(0usize) += 1;
+                }
+                let max = counts.values().copied().max().unwrap_or(0);
+                max as f64 / seg.len() as f64
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,308 @@
+//! Template + word-bank document generators, one per latent domain.
+//!
+//! Each domain has its own vocabulary banks and sentence templates, so the
+//! token distributions are distinct but share a common byte/BPE vocabulary
+//! — the setting in which prefix-likelihood routing (Eq. 4) has signal and
+//! TF-IDF on short prefixes struggles (Fig. 4c).
+
+use crate::util::rng::Rng;
+
+/// One generated document with its ground-truth domain.
+#[derive(Clone, Debug)]
+pub struct Document {
+    pub domain: usize,
+    pub text: String,
+}
+
+/// A synthetic corpus.
+#[derive(Clone, Debug, Default)]
+pub struct Corpus {
+    pub docs: Vec<Document>,
+}
+
+struct Domain {
+    name: &'static str,
+    templates: &'static [&'static str],
+    nouns: &'static [&'static str],
+    verbs: &'static [&'static str],
+    adjs: &'static [&'static str],
+    extras: &'static [&'static str],
+}
+
+/// Number of latent domains in the corpus.
+pub const DOMAINS: usize = 8;
+
+static DOMAIN_TABLE: [Domain; DOMAINS] = [
+    Domain {
+        name: "news",
+        templates: &[
+            "{a} officials said the {n} will {v} next week after talks in {x}.",
+            "Reports from {x} confirm that {n} {v} amid {a} pressure.",
+            "The {a} ministry announced a {n} to {v} by the end of the quarter.",
+            "Witnesses described a {a} {n} as markets {v} across {x}.",
+            "Analysts expect the {n} to {v}, citing {a} indicators from {x}.",
+        ],
+        nouns: &["government", "economy", "parliament", "coalition", "budget", "election", "summit", "treaty", "inflation", "senate"],
+        verbs: &["vote", "collapse", "rally", "negotiate", "recover", "expand", "tighten", "stabilize"],
+        adjs: &["federal", "regional", "unprecedented", "controversial", "bipartisan", "fragile", "sweeping"],
+        extras: &["Brussels", "Washington", "Nairobi", "Geneva", "Jakarta", "Ottawa", "Santiago"],
+    },
+    Domain {
+        name: "code",
+        templates: &[
+            "fn {n}_{x}(input: &{a}) -> Result<{n}> {{ let value = input.{v}()?; Ok(value) }}",
+            "// {v} the {n} before returning the {a} handle to {x}",
+            "let {n} = {x}::new().{v}().expect(\"{a} {n} failed\");",
+            "impl {a} for {n} {{ fn {v}(&self) -> usize {{ self.{x}.len() }} }}",
+            "assert_eq!({n}.{v}(), {x}_{n}, \"{a} invariant violated\");",
+        ],
+        nouns: &["buffer", "cursor", "socket", "parser", "registry", "mutex", "iterator", "scheduler", "arena", "channel"],
+        verbs: &["flush", "acquire", "decode", "split_off", "rebalance", "poll", "serialize", "drain"],
+        adjs: &["Send", "Sync", "Clone", "Default", "atomic", "bounded", "lazy"],
+        extras: &["ctx", "pool", "cfg", "env", "hdr", "tmp", "idx"],
+    },
+    Domain {
+        name: "recipes",
+        templates: &[
+            "Whisk the {n} with {x} until {a}, then {v} over medium heat.",
+            "Add two cups of {n} and gently {v} until the mixture turns {a}.",
+            "For the {a} {n}: {v} with a pinch of {x} and rest for ten minutes.",
+            "Preheat the oven; {v} the {n} and fold in the {a} {x}.",
+            "Season the {n} with {x}, {v}, and serve while still {a}.",
+        ],
+        nouns: &["dough", "broth", "batter", "marinade", "glaze", "filling", "custard", "roux", "brine", "zest"],
+        verbs: &["simmer", "knead", "saute", "caramelize", "braise", "reduce", "poach", "deglaze"],
+        adjs: &["golden", "fragrant", "silky", "tender", "crisp", "velvety", "aromatic"],
+        extras: &["saffron", "thyme", "cardamom", "shallots", "miso", "paprika", "tarragon"],
+    },
+    Domain {
+        name: "math",
+        templates: &[
+            "Theorem: every {a} {n} admits a {x} that {v} under composition.",
+            "Proof. Suppose the {n} does not {v}; then by the {a} lemma on {x} we derive a contradiction.",
+            "Let {n} be a {a} space and consider the map that {v} each {x}.",
+            "Corollary: if the {n} is {a}, its {x} must {v} almost everywhere.",
+            "We {v} the {n} by induction on the {a} degree of {x}.",
+        ],
+        nouns: &["manifold", "functor", "lattice", "semigroup", "kernel", "fibration", "polytope", "sheaf", "operad", "graph"],
+        verbs: &["commute", "converge", "factorize", "vanish", "bifurcate", "dominate", "embed"],
+        adjs: &["compact", "abelian", "measurable", "nontrivial", "bounded", "simplicial", "ergodic"],
+        extras: &["homomorphism", "eigenvalue", "subspace", "ideal", "metric", "cover", "chain"],
+    },
+    Domain {
+        name: "dialog",
+        templates: &[
+            "\"Did you {v} the {n}?\" she asked, sounding {a}. \"Only after {x},\" he replied.",
+            "\"I never meant to {v} your {n},\" he said. \"That's {a},\" she laughed, \"tell it to {x}.\"",
+            "\"The {n} is {a} again.\" \"Then {v} it before {x} notices.\"",
+            "\"Honestly, {x}, you can't just {v} a {n} and call it {a}.\"",
+            "\"What happened to the {n}?\" \"It got {a}. We had to {v} it near {x}.\"",
+        ],
+        nouns: &["letter", "garden", "violin", "secret", "promise", "ladder", "lantern", "map", "coat", "clock"],
+        verbs: &["borrow", "forgive", "hide", "repair", "remember", "ruin", "trade", "bury"],
+        adjs: &["ridiculous", "broken", "lovely", "suspicious", "hopeless", "perfect", "strange"],
+        extras: &["grandma", "the neighbors", "Mr. Alvarez", "the twins", "the landlord", "Rosa"],
+    },
+    Domain {
+        name: "legal",
+        templates: &[
+            "The {n} shall {v} all {a} obligations arising under section {x} hereof.",
+            "Notwithstanding the foregoing, no {a} {n} may {v} without prior written consent of {x}.",
+            "Each party represents that its {n} will {v} in accordance with {a} law of {x}.",
+            "Failure to {v} the {n} constitutes a {a} breach as defined in clause {x}.",
+            "The {a} provisions of this {n} {v} upon termination, except as stated in {x}.",
+        ],
+        nouns: &["licensee", "indemnity", "covenant", "assignee", "warranty", "tribunal", "escrow", "arbitration", "disclosure"],
+        verbs: &["indemnify", "survive", "terminate", "assign", "enforce", "waive", "supersede"],
+        adjs: &["material", "irrevocable", "exclusive", "severable", "binding", "statutory", "consequential"],
+        extras: &["4.2(b)", "7.1", "9.3(c)", "the Licensor", "Exhibit A", "12.8", "Schedule II"],
+    },
+    Domain {
+        name: "science",
+        templates: &[
+            "We measured the {n} of {x} samples and observed a {a} shift as temperatures {v}.",
+            "The {a} {n} hypothesis predicts that {x} concentrations {v} under UV exposure.",
+            "Figure 3 shows the {n} response: {x} cells {v} after a {a} dose.",
+            "Our assay indicates the {n} does not {v} unless the {a} {x} pathway is active.",
+            "Sequencing revealed a {a} {n} variant that may {v} in {x} tissue.",
+        ],
+        nouns: &["enzyme", "isotope", "membrane", "catalyst", "genome", "plasma", "electrode", "receptor", "polymer"],
+        verbs: &["oxidize", "decay", "proliferate", "diffuse", "denature", "fluoresce", "mutate"],
+        adjs: &["thermal", "anomalous", "reversible", "synthetic", "mitochondrial", "colloidal", "photonic"],
+        extras: &["cortical", "basalt", "zebrafish", "graphene", "serum", "reef", "permafrost"],
+    },
+    Domain {
+        name: "story",
+        templates: &[
+            "At dusk the {n} crossed the {a} valley, and nobody dared to {v} near {x}.",
+            "The {a} {n} had waited a hundred years for someone to {v} the gates of {x}.",
+            "She carried the {n} through {x}, humming a {a} tune no one could {v}.",
+            "When the {n} began to {v}, the villagers of {x} lit their {a} fires.",
+            "Legends said the {n} would only {v} for a heart both {a} and unafraid of {x}.",
+        ],
+        nouns: &["wanderer", "raven", "lighthouse", "orchard", "tide", "caravan", "smith", "fox", "harp", "storm"],
+        verbs: &["whisper", "wander", "glimmer", "awaken", "vanish", "sing", "drift", "burn"],
+        adjs: &["forgotten", "silver", "restless", "ancient", "moonlit", "hollow", "kindled"],
+        extras: &["the northern marsh", "Eldermoor", "the salt road", "the glass harbor", "Winterfen"],
+    },
+];
+
+/// Name of a domain id (panics on out-of-range).
+pub fn domain_name(d: usize) -> &'static str {
+    DOMAIN_TABLE[d].name
+}
+
+fn fill_template(rng: &mut Rng, dom: &Domain) -> String {
+    let tpl = dom.templates[rng.usize_below(dom.templates.len())];
+    let mut out = String::with_capacity(tpl.len() + 32);
+    let mut chars = tpl.chars().peekable();
+    while let Some(c) = chars.next() {
+        if c == '{' {
+            match chars.peek() {
+                Some('{') => {
+                    chars.next();
+                    out.push('{');
+                    continue;
+                }
+                _ => {}
+            }
+            let key = chars.next().unwrap_or('n');
+            let _ = chars.next(); // closing '}'
+            let bank: &[&str] = match key {
+                'n' => dom.nouns,
+                'v' => dom.verbs,
+                'a' => dom.adjs,
+                'x' => dom.extras,
+                _ => dom.nouns,
+            };
+            out.push_str(bank[rng.usize_below(bank.len())]);
+        } else if c == '}' {
+            if chars.peek() == Some(&'}') {
+                chars.next();
+                out.push('}');
+            }
+            // single '}' after a placeholder was consumed above
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Generate one document of roughly `target_bytes` from a domain.
+pub fn generate_document(rng: &mut Rng, domain: usize, target_bytes: usize) -> Document {
+    let dom = &DOMAIN_TABLE[domain];
+    let mut text = String::with_capacity(target_bytes + 120);
+    while text.len() < target_bytes {
+        let sentence = fill_template(rng, dom);
+        text.push_str(&sentence);
+        text.push(' ');
+    }
+    Document {
+        domain,
+        text,
+    }
+}
+
+impl Corpus {
+    /// Generate `n_docs` documents with the given per-domain weights
+    /// (uniform if `None`). Deterministic in `seed`.
+    pub fn generate(n_docs: usize, target_bytes: usize, seed: u64, weights: Option<&[f64]>) -> Corpus {
+        let uniform = vec![1.0; DOMAINS];
+        let w = weights.unwrap_or(&uniform);
+        assert_eq!(w.len(), DOMAINS, "need one weight per domain");
+        let mut rng = Rng::new(seed);
+        let docs = (0..n_docs)
+            .map(|_| {
+                let d = rng.weighted(w);
+                generate_document(&mut rng, d, target_bytes)
+            })
+            .collect();
+        Corpus { docs }
+    }
+
+    pub fn len(&self) -> usize {
+        self.docs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.docs.is_empty()
+    }
+
+    /// Concatenated text (tokenizer training input).
+    pub fn texts(&self) -> impl Iterator<Item = &str> {
+        self.docs.iter().map(|d| d.text.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = Corpus::generate(10, 300, 7, None);
+        let b = Corpus::generate(10, 300, 7, None);
+        assert_eq!(
+            a.docs.iter().map(|d| &d.text).collect::<Vec<_>>(),
+            b.docs.iter().map(|d| &d.text).collect::<Vec<_>>()
+        );
+        let c = Corpus::generate(10, 300, 8, None);
+        assert_ne!(a.docs[0].text, c.docs[0].text);
+    }
+
+    #[test]
+    fn documents_reach_target_size() {
+        let c = Corpus::generate(20, 500, 1, None);
+        assert!(c.docs.iter().all(|d| d.text.len() >= 500));
+    }
+
+    #[test]
+    fn all_domains_appear_under_uniform_weights() {
+        let c = Corpus::generate(400, 120, 3, None);
+        let mut seen = [false; DOMAINS];
+        for d in &c.docs {
+            seen[d.domain] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "{seen:?}");
+    }
+
+    #[test]
+    fn weights_skew_domain_mix() {
+        let mut w = vec![0.0; DOMAINS];
+        w[2] = 1.0;
+        let c = Corpus::generate(50, 100, 5, Some(&w));
+        assert!(c.docs.iter().all(|d| d.domain == 2));
+    }
+
+    #[test]
+    fn domains_have_distinct_vocabulary() {
+        // rough separability check: type overlap between domain texts is low
+        let mut rng = Rng::new(9);
+        let a = generate_document(&mut rng, 1, 2000).text; // code
+        let b = generate_document(&mut rng, 2, 2000).text; // recipes
+        let set = |s: &str| {
+            s.split_whitespace()
+                .map(|w| w.trim_matches(|c: char| !c.is_alphanumeric()).to_lowercase())
+                .filter(|w| w.len() > 3)
+                .collect::<std::collections::HashSet<_>>()
+        };
+        let sa = set(&a);
+        let sb = set(&b);
+        let inter = sa.intersection(&sb).count();
+        let union = sa.union(&sb).count();
+        assert!((inter as f64) / (union as f64) < 0.2, "{inter}/{union}");
+    }
+
+    #[test]
+    fn templates_expand_without_braces() {
+        let mut rng = Rng::new(11);
+        for d in 0..DOMAINS {
+            let doc = generate_document(&mut rng, d, 400);
+            // code domain legitimately contains {{ }} braces; others don't
+            if domain_name(d) != "code" {
+                assert!(!doc.text.contains('{'), "{}: {}", domain_name(d), doc.text);
+            }
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Data substrate: synthetic multi-domain corpus + sequence pipeline.
+//!
+//! The paper trains on RedPajama-V2 (2T tokens of web crawl). That corpus
+//! is hardware/data-gated here, so we build a controlled substitute: a
+//! mixture of K latent *domains* (news, code, recipes, …), each a distinct
+//! template + word-bank generator. The mixture mechanism the paper relies
+//! on is distributional heterogeneity that a prefix-likelihood router can
+//! separate — which this corpus provides *and* lets us verify exactly,
+//! because every sequence carries its ground-truth domain id
+//! (DESIGN.md §3).
+
+pub mod corpus;
+pub mod stream;
+
+pub use corpus::{Corpus, Document, DOMAINS};
+pub use stream::{Sequence, SequenceGen};

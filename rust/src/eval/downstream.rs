@@ -1,0 +1,330 @@
+//! Downstream tasks: domain continuation selection (Fig. 3, Tables 4–5).
+//!
+//! The paper evaluates zero-shot on ARC/HellaSwag/SciQ/MMLU; those need
+//! real pre-trained knowledge, which a scaled synthetic run cannot have.
+//! The *mechanism* being tested is: given a short question prefix, does
+//! prefix routing pick an expert whose distribution matches, and does that
+//! expert score the correct continuation higher than distractors? We test
+//! exactly that with HellaSwag-style tasks built from held-out synthetic
+//! documents: the question is a document opening, the correct option is
+//! its true continuation, distractors are continuations of *other*
+//! domains' documents. Every option row is the same token length so the
+//! conditional NLLs are comparable (the lm-eval length-normalization
+//! concern vanishes by construction).
+
+use anyhow::Result;
+
+use crate::coordinator::inference::Mixture;
+use crate::coordinator::scoring::score_matrix;
+use crate::coordinator::assignment::argmin_assign;
+use crate::data::corpus::{domain_name, generate_document, DOMAINS};
+use crate::data::Sequence;
+use crate::runtime::{Engine, TrainState, VariantMeta};
+use crate::tokenizer::Bpe;
+use crate::util::rng::Rng;
+
+/// Number of answer tokens per option.
+pub const ANSWER_TOKENS: usize = 8;
+
+/// One multiple-choice task.
+#[derive(Clone, Debug)]
+pub struct Task {
+    /// Ground-truth domain (the "subtask" of Tables 4-5).
+    pub domain: usize,
+    /// Routing prefix: the first `m` tokens of the question document.
+    pub question: Vec<u32>,
+    /// Scoring rows: `question_tail + option` — all the same length.
+    pub options: Vec<Vec<u32>>,
+    pub correct: usize,
+}
+
+/// A full evaluation set.
+#[derive(Clone, Debug)]
+pub struct TaskSet {
+    pub tasks: Vec<Task>,
+    /// Row length of every option (must equal a compiled prefix length of
+    /// the expert variant).
+    pub row_len: usize,
+}
+
+/// Build `per_domain` tasks per domain with `n_options` choices each.
+///
+/// `row_len` is the scoring-row length (question tail + ANSWER_TOKENS) and
+/// must be one of the expert variant's compiled `prefix_lens`.
+pub fn build_tasks(
+    bpe: &Bpe,
+    per_domain: usize,
+    n_options: usize,
+    row_len: usize,
+    seed: u64,
+) -> TaskSet {
+    assert!(row_len > ANSWER_TOKENS + 4, "row too short for context");
+    let ctx = row_len - ANSWER_TOKENS;
+    let mut rng = Rng::new(seed);
+    let mut tasks = Vec::with_capacity(per_domain * DOMAINS);
+
+    // continuation pool per domain for distractors
+    let mut pools: Vec<Vec<Vec<u32>>> = vec![Vec::new(); DOMAINS];
+    for d in 0..DOMAINS {
+        for _ in 0..per_domain + 4 {
+            let doc = generate_document(&mut rng, d, 600);
+            let toks = bpe.encode(&doc.text);
+            if toks.len() >= ANSWER_TOKENS {
+                let start = rng.usize_below(toks.len() - ANSWER_TOKENS + 1);
+                pools[d].push(toks[start..start + ANSWER_TOKENS].to_vec());
+            }
+        }
+    }
+
+    for d in 0..DOMAINS {
+        for _ in 0..per_domain {
+            // question document long enough for routing + context + answer
+            let doc = generate_document(&mut rng, d, (ctx + ANSWER_TOKENS) * 5 + 400);
+            let toks = bpe.encode(&doc.text);
+            if toks.len() < ctx + ANSWER_TOKENS + 8 {
+                continue;
+            }
+            let split = ctx + rng.usize_below(toks.len() - ctx - ANSWER_TOKENS);
+            let question: Vec<u32> = toks[..split].to_vec();
+            let tail: Vec<u32> = toks[split - ctx..split].to_vec();
+            let truth: Vec<u32> = toks[split..split + ANSWER_TOKENS].to_vec();
+
+            let correct = rng.usize_below(n_options);
+            let mut options = Vec::with_capacity(n_options);
+            for o in 0..n_options {
+                let answer = if o == correct {
+                    truth.clone()
+                } else {
+                    // distractor: continuation from a different domain
+                    let mut od = rng.usize_below(DOMAINS);
+                    while od == d || pools[od].is_empty() {
+                        od = rng.usize_below(DOMAINS);
+                    }
+                    pools[od][rng.usize_below(pools[od].len())].clone()
+                };
+                let mut row = tail.clone();
+                row.extend_from_slice(&answer);
+                debug_assert_eq!(row.len(), row_len);
+                options.push(row);
+            }
+            tasks.push(Task {
+                domain: d,
+                question,
+                options,
+                correct,
+            });
+        }
+    }
+    TaskSet { tasks, row_len }
+}
+
+/// Score all option rows of a set of tasks under one model using its
+/// compiled `prefix_nll_{row_len}` entry. Returns per-task predicted index.
+fn predict_options(
+    engine: &Engine,
+    state: &TrainState,
+    meta: &VariantMeta,
+    tasks: &[&Task],
+    row_len: usize,
+) -> Result<Vec<usize>> {
+    // flatten all rows, score in prefix_batch chunks
+    let rows: Vec<Vec<u32>> = tasks
+        .iter()
+        .flat_map(|t| t.options.iter().cloned())
+        .collect();
+    let bs = meta.prefix_batch;
+    let mut scores = Vec::with_capacity(rows.len());
+    let mut i = 0;
+    while i < rows.len() {
+        let real = (rows.len() - i).min(bs);
+        let mut batch = rows[i..i + real].to_vec();
+        while batch.len() < bs {
+            batch.push(batch[real - 1].clone());
+        }
+        let nll = state.prefix_nll(engine, &batch, meta, row_len)?;
+        scores.extend_from_slice(&nll[..real]);
+        i += real;
+    }
+    // argmin per task
+    let mut out = Vec::with_capacity(tasks.len());
+    let mut k = 0;
+    for t in tasks {
+        let n = t.options.len();
+        let slice = &scores[k..k + n];
+        let mut best = 0;
+        for (o, &s) in slice.iter().enumerate() {
+            if s < slice[best] {
+                best = o;
+            }
+        }
+        out.push(best);
+        k += n;
+    }
+    Ok(out)
+}
+
+/// Per-domain accuracy of a single model (the dense baseline).
+pub fn single_model_accuracy(
+    engine: &Engine,
+    state: &TrainState,
+    meta: &VariantMeta,
+    set: &TaskSet,
+) -> Result<Vec<(String, f64)>> {
+    let refs: Vec<&Task> = set.tasks.iter().collect();
+    let preds = predict_options(engine, state, meta, &refs, set.row_len)?;
+    Ok(per_domain_accuracy(&refs, &preds))
+}
+
+/// Per-domain accuracy of the mixture: route each task on its question
+/// prefix (first `m` tokens), then score options with the routed expert.
+pub fn mixture_accuracy(
+    engine: &Engine,
+    mixture: &Mixture,
+    set: &TaskSet,
+    m: usize,
+) -> Result<Vec<(String, f64)>> {
+    // route on question prefixes
+    let seqs: Vec<Sequence> = set
+        .tasks
+        .iter()
+        .map(|t| {
+            let mut toks = t.question.clone();
+            while toks.len() < m {
+                toks.extend_from_within(..(m - toks.len()).min(toks.len()));
+            }
+            Sequence {
+                tokens: toks,
+                domain: t.domain,
+            }
+        })
+        .collect();
+    let nll = score_matrix(engine, &mixture.routers, &mixture.router_meta, &seqs, m)?;
+    let routes = argmin_assign(&nll).expert_of;
+
+    let mut preds = vec![0usize; set.tasks.len()];
+    for e in 0..mixture.n_experts() {
+        let idx: Vec<usize> = (0..set.tasks.len()).filter(|&i| routes[i] == e).collect();
+        if idx.is_empty() {
+            continue;
+        }
+        let refs: Vec<&Task> = idx.iter().map(|&i| &set.tasks[i]).collect();
+        let p = predict_options(
+            engine,
+            &mixture.experts[e],
+            &mixture.expert_meta,
+            &refs,
+            set.row_len,
+        )?;
+        for (k, &i) in idx.iter().enumerate() {
+            preds[i] = p[k];
+        }
+    }
+    let refs: Vec<&Task> = set.tasks.iter().collect();
+    Ok(per_domain_accuracy(&refs, &preds))
+}
+
+fn per_domain_accuracy(tasks: &[&Task], preds: &[usize]) -> Vec<(String, f64)> {
+    let mut hit = vec![0usize; DOMAINS];
+    let mut tot = vec![0usize; DOMAINS];
+    for (t, &p) in tasks.iter().zip(preds) {
+        tot[t.domain] += 1;
+        if p == t.correct {
+            hit[t.domain] += 1;
+        }
+    }
+    (0..DOMAINS)
+        .filter(|&d| tot[d] > 0)
+        .map(|d| {
+            (
+                domain_name(d).to_string(),
+                hit[d] as f64 / tot[d] as f64,
+            )
+        })
+        .collect()
+}
+
+/// Macro-average over the per-domain accuracies.
+pub fn macro_accuracy(per_domain: &[(String, f64)]) -> f64 {
+    if per_domain.is_empty() {
+        return 0.0;
+    }
+    per_domain.iter().map(|(_, a)| a).sum::<f64>() / per_domain.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::Corpus;
+    use crate::tokenizer::BpeTrainer;
+
+    fn bpe() -> Bpe {
+        let corpus = Corpus::generate(40, 400, 99, None);
+        BpeTrainer::new(512).train(corpus.texts()).unwrap()
+    }
+
+    #[test]
+    fn tasks_have_uniform_row_length() {
+        let b = bpe();
+        let set = build_tasks(&b, 3, 4, 32, 5);
+        assert!(!set.tasks.is_empty());
+        for t in &set.tasks {
+            assert_eq!(t.options.len(), 4);
+            for o in &t.options {
+                assert_eq!(o.len(), 32);
+            }
+            assert!(t.correct < 4);
+            assert!(t.question.len() >= 24);
+        }
+    }
+
+    #[test]
+    fn correct_option_is_true_continuation() {
+        // the correct row's answer segment must differ from distractors'
+        let b = bpe();
+        let set = build_tasks(&b, 2, 4, 32, 7);
+        for t in &set.tasks {
+            let ctx = set.row_len - ANSWER_TOKENS;
+            let correct_ans = &t.options[t.correct][ctx..];
+            // context identical across options
+            for o in &t.options {
+                assert_eq!(&o[..ctx], &t.options[0][..ctx]);
+            }
+            // at least one distractor differs
+            assert!(t
+                .options
+                .iter()
+                .enumerate()
+                .any(|(i, o)| i != t.correct && &o[ctx..] != correct_ans));
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let b = bpe();
+        let s1 = build_tasks(&b, 2, 4, 32, 11);
+        let s2 = build_tasks(&b, 2, 4, 32, 11);
+        assert_eq!(s1.tasks.len(), s2.tasks.len());
+        for (a, bb) in s1.tasks.iter().zip(&s2.tasks) {
+            assert_eq!(a.options, bb.options);
+            assert_eq!(a.correct, bb.correct);
+        }
+    }
+
+    #[test]
+    fn macro_accuracy_averages() {
+        let pd = vec![("a".to_string(), 1.0), ("b".to_string(), 0.0)];
+        assert_eq!(macro_accuracy(&pd), 0.5);
+        assert_eq!(macro_accuracy(&[]), 0.0);
+    }
+
+    #[test]
+    fn every_domain_gets_tasks() {
+        let b = bpe();
+        let set = build_tasks(&b, 3, 4, 32, 13);
+        let mut seen = [false; DOMAINS];
+        for t in &set.tasks {
+            seen[t.domain] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

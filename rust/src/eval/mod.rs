@@ -1,0 +1,11 @@
+//! Evaluation: held-out perplexity and downstream tasks.
+//!
+//! Perplexity comparisons live on [`crate::coordinator::inference`]
+//! (`Mixture::perplexity`, `dense_perplexity`); this module adds the
+//! downstream harness — HellaSwag-style continuation selection built from
+//! the synthetic corpus (DESIGN.md §3: the lm-eval substitution), scored
+//! with the paper's "Question: … Answer: …" conditional-NLL protocol.
+
+pub mod downstream;
+
+pub use downstream::{build_tasks, mixture_accuracy, single_model_accuracy, Task, TaskSet};

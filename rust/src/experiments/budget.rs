@@ -1,0 +1,108 @@
+//! Experiment budgets: how much compute each suite run spends.
+//!
+//! The paper's budgets (Table 2) are hardware-gated; these are the scaled
+//! equivalents. `smoke` finishes in ~a minute (CI / benches); `scaled` is
+//! the EXPERIMENTS.md configuration (tens of minutes on one CPU core).
+
+#[derive(Clone, Debug)]
+pub struct Budget {
+    /// Expert counts swept in Fig. 2 (paper: 4/8/16/32).
+    pub experts_sweep: Vec<usize>,
+    /// SGD steps per expert (paper: 256k-512k).
+    pub expert_steps: usize,
+    /// Router EM rounds and steps.
+    pub em_rounds: usize,
+    pub em_chunk: usize,
+    pub em_steps_per_round: usize,
+    /// Sequences sharded for expert training.
+    pub shard_sequences: usize,
+    /// Held-out sequences for perplexity.
+    pub eval_sequences: usize,
+    /// Downstream tasks per domain.
+    pub tasks_per_domain: usize,
+    /// Routing prefix (training) — paper: 256 of 1024; here 32 of 128.
+    pub prefix_len: usize,
+    /// Inference prefix sweep (Fig. 4b) — must be compiled lengths.
+    pub prefix_sweep: Vec<usize>,
+    pub seed: u64,
+    /// Expert/router variant names.
+    pub expert_variant: String,
+    pub router_variant: String,
+}
+
+impl Budget {
+    /// Seconds-scale budget for benches and CI.
+    pub fn smoke() -> Budget {
+        Budget {
+            experts_sweep: vec![1, 2],
+            expert_steps: 8,
+            em_rounds: 2,
+            em_chunk: 64,
+            em_steps_per_round: 6,
+            shard_sequences: 64,
+            eval_sequences: 32,
+            tasks_per_domain: 4,
+            prefix_len: 32,
+            prefix_sweep: vec![8, 32],
+            seed: 97,
+            expert_variant: "router_micro".into(), // tiny "expert" for speed
+            router_variant: "router_micro".into(),
+        }
+    }
+
+    /// The EXPERIMENTS.md configuration (minutes-scale per figure).
+    pub fn scaled() -> Budget {
+        Budget {
+            experts_sweep: vec![1, 2, 4, 8],
+            expert_steps: 60,
+            em_rounds: 3,
+            em_chunk: 192,
+            em_steps_per_round: 30,
+            shard_sequences: 384,
+            eval_sequences: 80,
+            tasks_per_domain: 12,
+            prefix_len: 32,
+            prefix_sweep: vec![8, 16, 32, 64, 128],
+            seed: 1234,
+            expert_variant: "expert_sm".into(),
+            router_variant: "router_micro".into(),
+        }
+    }
+
+    pub fn pipeline(&self, n_experts: usize) -> crate::coordinator::PipelineConfig {
+        crate::coordinator::PipelineConfig {
+            router_variant: self.router_variant.clone(),
+            expert_variant: self.expert_variant.clone(),
+            n_experts,
+            em_rounds: self.em_rounds,
+            em_chunk: self.em_chunk,
+            em_steps_per_round: self.em_steps_per_round,
+            shard_sequences: self.shard_sequences,
+            expert_steps: self.expert_steps,
+            prefix_len: self.prefix_len,
+            seed: self.seed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_is_smaller_than_scaled() {
+        let s = Budget::smoke();
+        let f = Budget::scaled();
+        assert!(s.expert_steps < f.expert_steps);
+        assert!(s.experts_sweep.len() <= f.experts_sweep.len());
+    }
+
+    #[test]
+    fn pipeline_copies_fields() {
+        let b = Budget::smoke();
+        let p = b.pipeline(2);
+        assert_eq!(p.n_experts, 2);
+        assert_eq!(p.expert_steps, b.expert_steps);
+        assert_eq!(p.router_variant, b.router_variant);
+    }
+}

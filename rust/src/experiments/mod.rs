@@ -1,0 +1,12 @@
+//! Experiment drivers: one function per paper table/figure.
+//!
+//! Shared by `examples/paper_suite.rs` (full scaled budgets, writes
+//! `results/*.json`) and `rust/benches/paper_tables.rs` (smoke budgets).
+//! Each driver returns a [`Json`] document with the same rows/series the
+//! paper reports; EXPERIMENTS.md records paper-vs-measured per id.
+
+pub mod budget;
+pub mod figures;
+
+pub use budget::Budget;
+pub use figures::*;

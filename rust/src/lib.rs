@@ -1,0 +1,29 @@
+//! SmallTalk LM — asynchronous mixture of language models.
+//!
+//! Reproduction of *"No Need to Talk: Asynchronous Mixture of Language
+//! Models"* (ICLR 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1/L2 (build time)** — `python/compile/` authors the transformer
+//!   and its Pallas attention kernel and AOT-lowers every entry point to
+//!   HLO text under `artifacts/`.
+//! * **L3 (this crate)** — the coordinator: router EM training, balanced
+//!   assignment, corpus sharding, independent expert training, and the
+//!   prefix-likelihood inference router, plus every substrate the paper
+//!   relies on (tokenizer, corpus, FLOPs accounting, comm ledger,
+//!   TF-IDF/K-Means baseline, downstream eval).
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod flops;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod tokenizer;
+pub mod util;

@@ -1,0 +1,370 @@
+//! `smalltalk` — the SmallTalk LM coordinator CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   e2e            full pipeline: routers -> shard -> experts (+ dense
+//!                  baseline at matched FLOPs) -> perplexity + downstream
+//!   train-routers  router EM training only; writes checkpoints
+//!   train-dense    dense baseline only
+//!   eval           perplexity from checkpoints
+//!   serve          batched inference demo over a trained mixture
+//!   flops          print the paper-scale Table 3 cost model
+//!   comm           print the §A.4 communication comparison
+//!   info           artifact/manifest summary
+
+use anyhow::{bail, Result};
+
+use smalltalk::baselines::train_dense;
+use smalltalk::config::ExperimentConfig;
+use smalltalk::coordinator::{comm, dense_perplexity, run_pipeline, serve, CommLedger, Request};
+use smalltalk::data::corpus::Corpus;
+use smalltalk::data::SequenceGen;
+use smalltalk::eval::downstream::macro_accuracy;
+use smalltalk::eval::{build_tasks, mixture_accuracy, single_model_accuracy};
+use smalltalk::flops;
+use smalltalk::metrics::{sparkline, RunLog};
+use smalltalk::model::{load_checkpoint, save_checkpoint};
+use smalltalk::runtime::Engine;
+use smalltalk::tokenizer::{Bpe, BpeTrainer};
+use smalltalk::util::cli::Args;
+
+const VALUE_OPTS: &[&str] = &[
+    "config", "artifacts-dir", "results-dir", "router", "expert", "experts",
+    "em-rounds", "em-chunk", "em-steps", "shard-sequences", "expert-steps",
+    "prefix", "eval-sequences", "tasks-per-domain", "seed", "requests", "out",
+    "ckpt-dir", "steps",
+];
+
+const EVAL_SEED: u64 = 0xE7A1;
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&raw) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> &'static str {
+    "usage: smalltalk <e2e|train-routers|train-dense|eval|serve|flops|comm|info> [options]\n\
+     common options: --config f.json --experts N --expert-steps N --seed N\n\
+     see configs/ for examples and DESIGN.md for the experiment index"
+}
+
+fn run(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw, VALUE_OPTS)?;
+    let Some(cmd) = args.positional.first().map(String::as_str) else {
+        println!("{}", usage());
+        return Ok(());
+    };
+
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::from_file(path)?,
+        None => ExperimentConfig::default(),
+    };
+    cfg.apply_args(&args)?;
+
+    match cmd {
+        "e2e" => cmd_e2e(&cfg),
+        "train-routers" => cmd_train_routers(&cfg, &args),
+        "train-dense" => cmd_train_dense(&cfg, &args),
+        "eval" => cmd_eval(&cfg, &args),
+        "serve" => cmd_serve(&cfg, &args),
+        "flops" => cmd_flops(),
+        "comm" => cmd_comm(&cfg),
+        "info" => cmd_info(&cfg),
+        other => bail!("unknown subcommand {other:?}\n{}", usage()),
+    }
+}
+
+/// Train (or reload a cached) BPE tokenizer for this config.
+fn load_or_train_bpe(cfg: &ExperimentConfig) -> Result<Bpe> {
+    let cache = std::path::Path::new(&cfg.results_dir)
+        .join(format!("bpe_v{}_s{}.txt", cfg.vocab, cfg.seed));
+    if cache.exists() {
+        return Bpe::load(&cache);
+    }
+    eprintln!("[tokenizer] training byte-level BPE (vocab {}) ...", cfg.vocab);
+    let corpus = Corpus::generate(cfg.tokenizer_docs, cfg.tokenizer_doc_bytes, cfg.seed, None);
+    let bpe = BpeTrainer::new(cfg.vocab).train(corpus.texts())?;
+    std::fs::create_dir_all(&cfg.results_dir).ok();
+    bpe.save(&cache).ok();
+    Ok(bpe)
+}
+
+fn cmd_info(cfg: &ExperimentConfig) -> Result<()> {
+    let engine = Engine::new(&cfg.artifacts_dir)?;
+    println!("artifacts: {}", cfg.artifacts_dir);
+    println!(
+        "{:<14} {:>10} {:>6} {:>7} {:>8} {:>8}  entry points",
+        "variant", "params", "seq", "layers", "d_model", "role"
+    );
+    for v in engine.manifest().variants() {
+        println!(
+            "{:<14} {:>10} {:>6} {:>7} {:>8} {:>8}  {}",
+            v.name,
+            v.param_count,
+            v.seq_len,
+            v.n_layers,
+            v.d_model,
+            v.role,
+            v.entry_points.join(",")
+        );
+    }
+    Ok(())
+}
+
+fn cmd_e2e(cfg: &ExperimentConfig) -> Result<()> {
+    let engine = Engine::new(&cfg.artifacts_dir)?;
+    let bpe = load_or_train_bpe(cfg)?;
+    let p = &cfg.pipeline;
+    eprintln!(
+        "[e2e] mixture: {} x {} (router {}), {} EM rounds, {} expert steps",
+        p.n_experts, p.expert_variant, p.router_variant, p.em_rounds, p.expert_steps
+    );
+
+    let result = run_pipeline(&engine, &bpe, p)?;
+    eprintln!(
+        "[e2e] sharded segments: sizes {:?}, domain purity {:?}",
+        result.segment_sizes,
+        result
+            .segment_purity
+            .iter()
+            .map(|p| (p * 100.0).round() / 100.0)
+            .collect::<Vec<_>>()
+    );
+
+    // FLOPs-matched dense baseline: same total tokens. The paper pairing
+    // (same steps, E x batch) is used when that batch shape is compiled.
+    let meta0 = engine.variant(&p.expert_variant)?.clone();
+    let dense_batch = p.n_experts * meta0.train_batch;
+    let mut dense_log = RunLog::new();
+    let dense = if dense_batch == meta0.train_batch || meta0.dense_batches.contains(&dense_batch) {
+        eprintln!("[e2e] dense baseline: {} steps @ batch {dense_batch} ...", p.expert_steps);
+        smalltalk::baselines::train_dense_batched(
+            &engine, &bpe, &p.expert_variant, p.expert_steps, dense_batch,
+            cfg.seed ^ 0xD, &mut dense_log,
+        )?
+    } else {
+        let dense_steps = p.n_experts * p.expert_steps;
+        eprintln!("[e2e] dense baseline: {dense_steps} steps @ native batch ...");
+        train_dense(&engine, &bpe, &p.expert_variant, dense_steps, cfg.seed ^ 0xD, &mut dense_log)?
+    };
+
+    // Held-out eval.
+    let meta = engine.variant(&p.expert_variant)?.clone();
+    let mut eval_gen = SequenceGen::new(&bpe, meta.seq_len, cfg.seed ^ EVAL_SEED);
+    let held_out = eval_gen.batch(cfg.eval_sequences);
+    let mix_ppl = result.mixture.perplexity(&engine, &held_out, p.prefix_len)?;
+    let dense_ppl = dense_perplexity(&engine, &dense, &meta, &held_out)?;
+
+    // Downstream.
+    let tasks = build_tasks(&bpe, cfg.tasks_per_domain, cfg.task_options, 32, cfg.seed ^ 0x7A5);
+    let mix_acc = mixture_accuracy(&engine, &result.mixture, &tasks, p.prefix_len)?;
+    let dense_acc = single_model_accuracy(&engine, &dense, &meta, &tasks)?;
+
+    println!("\n=== e2e results ===");
+    if let Some(curve) = result.log.get("expert0/loss") {
+        println!("expert0 loss curve: {}", sparkline(curve, 40));
+    }
+    if let Some(curve) = dense_log.get("loss") {
+        println!("dense   loss curve: {}", sparkline(curve, 40));
+    }
+    println!("held-out perplexity: mixture {mix_ppl:.3} vs dense {dense_ppl:.3}");
+    println!(
+        "downstream accuracy (macro): mixture {:.3} vs dense {:.3}",
+        macro_accuracy(&mix_acc),
+        macro_accuracy(&dense_acc)
+    );
+    println!("{:<10} {:>9} {:>9}", "domain", "mixture", "dense");
+    for ((d, a), (_, b)) in mix_acc.iter().zip(&dense_acc) {
+        println!("{d:<10} {a:>9.3} {b:>9.3}");
+    }
+    println!(
+        "comm: {} score all-gathers, peak node traffic {} bytes \
+         (DDP comparator would move {} bytes/node/step)",
+        result.ledger.rounds(comm::CommKind::ScoreAllGather),
+        result.ledger.peak_node_bytes(),
+        comm::ddp_bytes_per_step(meta.param_count as u64),
+    );
+
+    // persist
+    std::fs::create_dir_all(&cfg.results_dir).ok();
+    let mut log = result.log;
+    log.merge_prefixed("dense", &dense_log);
+    log.scalar("final/mixture_ppl", 0.0, mix_ppl);
+    log.scalar("final/dense_ppl", 0.0, dense_ppl);
+    log.save(format!("{}/e2e_run.json", cfg.results_dir))?;
+    eprintln!("[e2e] wrote {}/e2e_run.json", cfg.results_dir);
+    Ok(())
+}
+
+fn cmd_train_routers(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
+    let engine = Engine::new(&cfg.artifacts_dir)?;
+    let bpe = load_or_train_bpe(cfg)?;
+    let p = &cfg.pipeline;
+    let em = smalltalk::coordinator::EmConfig {
+        n_routers: p.n_experts,
+        rounds: p.em_rounds,
+        chunk_size: p.em_chunk,
+        steps_per_round: p.em_steps_per_round,
+        prefix_len: p.prefix_len,
+        seed: p.seed,
+    };
+    let router_meta = engine.variant(&p.router_variant)?.clone();
+    let mut gen = SequenceGen::new(&bpe, router_meta.seq_len, cfg.seed ^ 0x52_0000);
+    let mut ledger = CommLedger::default();
+    let mut log = RunLog::new();
+    let trained = smalltalk::coordinator::train_routers(
+        &engine,
+        &p.router_variant,
+        &em,
+        &mut gen,
+        &mut ledger,
+        &mut log,
+    )?;
+    println!("purity per EM round: {:?}", trained.purity_per_round);
+    let dir = args.get_or("ckpt-dir", "checkpoints");
+    for (e, r) in trained.routers.iter().enumerate() {
+        save_checkpoint(r, format!("{dir}/router{e}.ckpt"))?;
+    }
+    println!("wrote {} router checkpoints to {dir}/", trained.routers.len());
+    Ok(())
+}
+
+fn cmd_train_dense(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
+    let engine = Engine::new(&cfg.artifacts_dir)?;
+    let bpe = load_or_train_bpe(cfg)?;
+    let steps = args.get_usize("steps", cfg.pipeline.expert_steps * cfg.pipeline.n_experts)?;
+    let mut log = RunLog::new();
+    let state = train_dense(
+        &engine,
+        &bpe,
+        &cfg.pipeline.expert_variant,
+        steps,
+        cfg.seed,
+        &mut log,
+    )?;
+    if let Some(c) = log.get("loss") {
+        println!("loss: {}", sparkline(c, 50));
+    }
+    let dir = args.get_or("ckpt-dir", "checkpoints");
+    save_checkpoint(&state, format!("{dir}/dense.ckpt"))?;
+    println!("wrote {dir}/dense.ckpt (step {})", state.step);
+    Ok(())
+}
+
+fn cmd_eval(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
+    let engine = Engine::new(&cfg.artifacts_dir)?;
+    let bpe = load_or_train_bpe(cfg)?;
+    let dir = args.get_or("ckpt-dir", "checkpoints");
+    let dense_path = format!("{dir}/dense.ckpt");
+    if !std::path::Path::new(&dense_path).exists() {
+        bail!("no {dense_path}; run `smalltalk train-dense` first");
+    }
+    let dense = load_checkpoint(&dense_path)?;
+    let meta = engine.variant(&dense.variant)?.clone();
+    let mut gen = SequenceGen::new(&bpe, meta.seq_len, cfg.seed ^ EVAL_SEED);
+    let held_out = gen.batch(cfg.eval_sequences);
+    let ppl = dense_perplexity(&engine, &dense, &meta, &held_out)?;
+    println!(
+        "dense checkpoint ppl: {ppl:.3} over {} sequences",
+        held_out.len()
+    );
+    Ok(())
+}
+
+fn cmd_serve(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
+    let engine = Engine::new(&cfg.artifacts_dir)?;
+    let bpe = load_or_train_bpe(cfg)?;
+    // Train a small mixture inline (serving demo); real deployments load
+    // checkpoints — see examples/serve_mixture.rs.
+    let mut p = cfg.pipeline.clone();
+    p.em_rounds = p.em_rounds.min(2);
+    let result = run_pipeline(&engine, &bpe, &p)?;
+    let n_req = args.get_usize("requests", 32)?;
+    let meta = engine.variant(&p.expert_variant)?.clone();
+    let mut gen = SequenceGen::new(&bpe, meta.seq_len, cfg.seed ^ 0x5EB);
+    let requests: Vec<Request> = gen
+        .batch(n_req)
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| Request {
+            id: i as u64,
+            tokens: s.tokens,
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let responses = serve(&engine, &result.mixture, &requests, p.prefix_len)?;
+    let elapsed = t0.elapsed();
+    let mean_nll: f64 =
+        responses.iter().map(|r| r.nll as f64).sum::<f64>() / responses.len() as f64;
+    println!(
+        "served {} requests in {:.2?} ({:.1} req/s), mean seq NLL {:.2}",
+        responses.len(),
+        elapsed,
+        responses.len() as f64 / elapsed.as_secs_f64(),
+        mean_nll
+    );
+    let mut by_expert = vec![0usize; result.mixture.n_experts()];
+    for r in &responses {
+        by_expert[r.expert] += 1;
+    }
+    println!("requests per expert: {by_expert:?}");
+    Ok(())
+}
+
+fn cmd_flops() -> Result<()> {
+    println!("Table 3 cost model at paper scale (10^19 train FLOPs, 10^12 inference FLOPs):");
+    println!(
+        "{:<22} {:>12} {:>12} {:>10} {:>10}",
+        "config", "train", "overhead%", "infer", "overhead%"
+    );
+    let rows: Vec<(&str, flops::Arch, f64, f64, f64)> = vec![
+        ("335M e4", flops::paper_expert_335m(), 4.0, 256_000.0, 128.0),
+        ("335M e8", flops::paper_expert_335m(), 8.0, 256_000.0, 128.0),
+        ("335M e16", flops::paper_expert_335m(), 16.0, 256_000.0, 128.0),
+        ("335M e32", flops::paper_expert_335m(), 32.0, 256_000.0, 128.0),
+        ("1.3B e4", flops::paper_expert_1_3b(), 4.0, 512_000.0, 128.0),
+        ("1.3B e16", flops::paper_expert_1_3b(), 16.0, 512_000.0, 128.0),
+        ("1.3B e32", flops::paper_expert_1_3b(), 32.0, 512_000.0, 128.0),
+    ];
+    for (name, arch, e, steps, batch) in rows {
+        let m = flops::paper_mixture(arch, e, steps, batch);
+        let train = m.expert_training() / 1e19;
+        let over = m.routing_overhead() / 1e19;
+        let inf = m.inference_per_seq() / 1e12;
+        let dinf = m.dense_inference_per_seq() / 1e12;
+        println!(
+            "{:<22} {:>12.2} {:>11.2}% {:>10.3} {:>9.2}%",
+            name,
+            train,
+            over / train * 100.0,
+            inf,
+            (inf / dinf - 1.0) * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_comm(cfg: &ExperimentConfig) -> Result<()> {
+    let engine = Engine::new(&cfg.artifacts_dir)?;
+    let meta = engine.variant(&cfg.pipeline.expert_variant)?.clone();
+    println!("§A.4 communication comparison (paper scale):");
+    let rounds = comm::router_comm_rounds(128_000, 1024, 32, 45_000_000);
+    let bytes = comm::router_bytes_per_comm(45_000_000, 32, 1024);
+    println!(
+        "  mixture: {rounds} all-gathers x {:.3} MB/router",
+        bytes as f64 / 1e6
+    );
+    println!(
+        "  DDP 1.3B: {:.1} GB per node per STEP",
+        comm::ddp_bytes_per_step(1_300_000_000) as f64 / 1e9
+    );
+    println!("this repo's scale ({} params):", meta.param_count);
+    println!(
+        "  DDP would move {:.2} MB/node/step; the mixture moves ~{:.2} KB per shard exchange",
+        comm::ddp_bytes_per_step(meta.param_count as u64) as f64 / 1e6,
+        (2 * 2 * cfg.pipeline.shard_sequences) as f64 / 1e3,
+    );
+    Ok(())
+}

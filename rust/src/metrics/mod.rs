@@ -1,0 +1,185 @@
+//! Run metrics: named scalar series (loss curves, purity, ppl) with JSON
+//! persistence under `results/`. The Fig. 2c / Fig. 4a token-vs-ppl curves
+//! are regenerated from these logs.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// A point in a scalar series.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Point {
+    pub x: f64,
+    pub y: f64,
+}
+
+/// Named scalar series collected during a run.
+#[derive(Clone, Debug, Default)]
+pub struct RunLog {
+    pub series: BTreeMap<String, Vec<Point>>,
+}
+
+impl RunLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn scalar(&mut self, name: &str, x: f64, y: f64) {
+        self.series
+            .entry(name.to_string())
+            .or_default()
+            .push(Point { x, y });
+    }
+
+    pub fn get(&self, name: &str) -> Option<&[Point]> {
+        self.series.get(name).map(|v| v.as_slice())
+    }
+
+    pub fn last(&self, name: &str) -> Option<Point> {
+        self.series.get(name).and_then(|v| v.last().copied())
+    }
+
+    /// Merge another log (e.g. a per-expert trainer's curve) under a prefix.
+    pub fn merge_prefixed(&mut self, prefix: &str, other: &RunLog) {
+        for (k, v) in &other.series {
+            self.series
+                .entry(format!("{prefix}/{k}"))
+                .or_default()
+                .extend(v.iter().copied());
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.series
+                .iter()
+                .map(|(k, pts)| {
+                    (
+                        k.clone(),
+                        Json::Arr(
+                            pts.iter()
+                                .map(|p| Json::Arr(vec![Json::Num(p.x), Json::Num(p.y)]))
+                                .collect(),
+                        ),
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path.as_ref(), self.to_json().to_string_pretty())
+            .with_context(|| format!("writing {}", path.as_ref().display()))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        let j = Json::parse(&text)?;
+        let mut log = RunLog::new();
+        if let Json::Obj(m) = j {
+            for (k, v) in m {
+                let pts = v
+                    .as_arr()
+                    .context("series must be array")?
+                    .iter()
+                    .filter_map(|p| {
+                        let a = p.as_arr()?;
+                        Some(Point {
+                            x: a.first()?.as_f64()?,
+                            y: a.get(1)?.as_f64()?,
+                        })
+                    })
+                    .collect();
+                log.series.insert(k, pts);
+            }
+        }
+        Ok(log)
+    }
+}
+
+/// Render a crude ASCII sparkline of a series (terminal loss curves).
+pub fn sparkline(points: &[Point], width: usize) -> String {
+    if points.is_empty() || width == 0 {
+        return String::new();
+    }
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let ys: Vec<f64> = resample(points, width);
+    let (lo, hi) = ys
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &y| {
+            (l.min(y), h.max(y))
+        });
+    let span = (hi - lo).max(1e-12);
+    ys.iter()
+        .map(|&y| BARS[(((y - lo) / span) * 7.0).round() as usize])
+        .collect()
+}
+
+fn resample(points: &[Point], width: usize) -> Vec<f64> {
+    (0..width)
+        .map(|i| {
+            let idx = i * points.len() / width;
+            points[idx.min(points.len() - 1)].y
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_series_accumulates_in_order() {
+        let mut log = RunLog::new();
+        log.scalar("loss", 0.0, 3.0);
+        log.scalar("loss", 1.0, 2.0);
+        let s = log.get("loss").unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(log.last("loss"), Some(Point { x: 1.0, y: 2.0 }));
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut log = RunLog::new();
+        for i in 0..5 {
+            log.scalar("a/b", i as f64, (i * i) as f64);
+        }
+        let path = std::env::temp_dir().join("smalltalk_runlog_test.json");
+        log.save(&path).unwrap();
+        let log2 = RunLog::load(&path).unwrap();
+        assert_eq!(log.get("a/b"), log2.get("a/b"));
+    }
+
+    #[test]
+    fn merge_prefixed_namespaces() {
+        let mut a = RunLog::new();
+        let mut b = RunLog::new();
+        b.scalar("loss", 0.0, 1.0);
+        a.merge_prefixed("expert0", &b);
+        assert!(a.get("expert0/loss").is_some());
+    }
+
+    #[test]
+    fn sparkline_monotone() {
+        let pts: Vec<Point> = (0..20)
+            .map(|i| Point {
+                x: i as f64,
+                y: i as f64,
+            })
+            .collect();
+        let s = sparkline(&pts, 10);
+        assert_eq!(s.chars().count(), 10);
+        assert!(s.starts_with('▁') && s.ends_with('█'));
+    }
+
+    #[test]
+    fn sparkline_empty_safe() {
+        assert_eq!(sparkline(&[], 10), "");
+    }
+}

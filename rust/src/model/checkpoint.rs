@@ -1,0 +1,155 @@
+//! Binary checkpoint serialization for [`TrainState`].
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::TrainState;
+
+const MAGIC: &[u8; 4] = b"STLK";
+const VERSION: u32 = 1;
+
+fn checksum(xs: &[f32]) -> u64 {
+    // order-dependent FNV-style fold over bit patterns
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &x in xs {
+        h ^= x.to_bits() as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Write a checkpoint.
+pub fn save_checkpoint(state: &TrainState, path: impl AsRef<Path>) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {}", path.as_ref().display()))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    let name = state.variant.as_bytes();
+    f.write_all(&(name.len() as u32).to_le_bytes())?;
+    f.write_all(name)?;
+    f.write_all(&state.step.to_le_bytes())?;
+    f.write_all(&(state.params.len() as u64).to_le_bytes())?;
+    for arr in [&state.params, &state.m, &state.v] {
+        // bulk write the raw f32 bytes
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(arr.as_ptr() as *const u8, arr.len() * 4)
+        };
+        f.write_all(bytes)?;
+    }
+    f.write_all(&checksum(&state.params).to_le_bytes())?;
+    Ok(())
+}
+
+/// Read a checkpoint.
+pub fn load_checkpoint(path: impl AsRef<Path>) -> Result<TrainState> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {}", path.as_ref().display()))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a smalltalk checkpoint (bad magic)");
+    }
+    let mut u32b = [0u8; 4];
+    f.read_exact(&mut u32b)?;
+    let version = u32::from_le_bytes(u32b);
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    f.read_exact(&mut u32b)?;
+    let name_len = u32::from_le_bytes(u32b) as usize;
+    if name_len > 4096 {
+        bail!("implausible variant name length {name_len}");
+    }
+    let mut name = vec![0u8; name_len];
+    f.read_exact(&mut name)?;
+    let variant = String::from_utf8(name).context("variant name not utf8")?;
+    let mut u64b = [0u8; 8];
+    f.read_exact(&mut u64b)?;
+    let step = u64::from_le_bytes(u64b);
+    f.read_exact(&mut u64b)?;
+    let n = u64::from_le_bytes(u64b) as usize;
+    if n > (1 << 31) {
+        bail!("implausible parameter count {n}");
+    }
+    let read_arr = |f: &mut dyn Read| -> Result<Vec<f32>> {
+        let mut bytes = vec![0u8; n * 4];
+        f.read_exact(&mut bytes)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    };
+    let params = read_arr(&mut f)?;
+    let m = read_arr(&mut f)?;
+    let v = read_arr(&mut f)?;
+    f.read_exact(&mut u64b)?;
+    let expect = u64::from_le_bytes(u64b);
+    if checksum(&params) != expect {
+        bail!("checkpoint checksum mismatch — file corrupt");
+    }
+    Ok(TrainState::from_params(&variant, params, m, v, step))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state() -> TrainState {
+        TrainState::from_params(
+            "router_micro",
+            vec![1.0, -2.5, 3.25],
+            vec![0.1, 0.2, 0.3],
+            vec![1e-6, 2e-6, 3e-6],
+            42,
+        )
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("smalltalk_ckpt_test");
+        let path = dir.join("a.ckpt");
+        save_checkpoint(&state(), &path).unwrap();
+        let s = load_checkpoint(&path).unwrap();
+        assert_eq!(s.variant, "router_micro");
+        assert_eq!(s.step, 42);
+        assert_eq!(s.params, vec![1.0, -2.5, 3.25]);
+        assert_eq!(s.m, vec![0.1, 0.2, 0.3]);
+        assert_eq!(s.v, vec![1e-6, 2e-6, 3e-6]);
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let dir = std::env::temp_dir().join("smalltalk_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.ckpt");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(load_checkpoint(&path).is_err());
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let dir = std::env::temp_dir().join("smalltalk_ckpt_test");
+        let path = dir.join("b.ckpt");
+        save_checkpoint(&state(), &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, bytes).unwrap();
+        assert!(load_checkpoint(&path).is_err());
+    }
+
+    #[test]
+    fn missing_file_is_contextual_error() {
+        let err = load_checkpoint("/nonexistent/x.ckpt").unwrap_err().to_string();
+        assert!(err.contains("x.ckpt"));
+    }
+}

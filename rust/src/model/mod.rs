@@ -1,0 +1,11 @@
+//! Model state persistence: checkpoints for routers, experts and the
+//! dense baseline.
+//!
+//! Format (little-endian): magic `STLK`, u32 version, u32 name length,
+//! name bytes, u64 step, u64 param count, then three f32 arrays
+//! (params, adam m, adam v) and a trailing crc32-like checksum (sum of
+//! byte chunks — integrity, not security).
+
+pub mod checkpoint;
+
+pub use checkpoint::{load_checkpoint, save_checkpoint};

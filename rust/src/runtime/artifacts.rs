@@ -1,0 +1,237 @@
+//! The artifact contract between `python/compile/aot.py` and the runtime.
+//!
+//! `artifacts/manifest.json` lists every compiled model variant with its
+//! shapes, optimizer hyperparameters, and entry points. Rust never
+//! hardcodes a model shape — the manifest is the single source of truth.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Optimizer/schedule hyperparameters baked into a variant's `train_step`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OptMeta {
+    pub peak_lr: f64,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    pub schedule: String,
+    pub weight_decay: f64,
+    pub clip_norm: f64,
+}
+
+/// One compiled model variant (a router or expert size).
+#[derive(Clone, Debug)]
+pub struct VariantMeta {
+    pub name: String,
+    pub role: String, // "router" | "expert"
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ffw: usize,
+    pub param_count: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub prefix_batch: usize,
+    /// Training-time routing prefix M.
+    pub prefix_len: usize,
+    /// Compiled inference prefix lengths M̂ (entry `prefix_nll_{m}`).
+    pub prefix_lens: Vec<usize>,
+    /// Dense-comparator batch sizes (entry `train_step_b{B}`, paper
+    /// Table 2: dense trains the same steps at E x the expert batch).
+    pub dense_batches: Vec<usize>,
+    pub opt: OptMeta,
+    pub entry_points: Vec<String>,
+}
+
+impl VariantMeta {
+    pub fn is_router(&self) -> bool {
+        self.role == "router"
+    }
+
+    /// Token count of one training batch (S predicted positions per row).
+    pub fn tokens_per_step(&self) -> usize {
+        self.train_batch * self.seq_len
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let s = |k: &str| -> Result<String> {
+            Ok(j.get(k)
+                .and_then(Json::as_str)
+                .with_context(|| format!("manifest variant missing '{k}'"))?
+                .to_string())
+        };
+        let u = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("manifest variant missing '{k}'"))
+        };
+        let opt = j.get("opt").context("missing 'opt'")?;
+        let of = |k: &str| -> Result<f64> {
+            opt.get(k)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("opt missing '{k}'"))
+        };
+        Ok(VariantMeta {
+            name: s("name")?,
+            role: s("role")?,
+            vocab: u("vocab")?,
+            seq_len: u("seq_len")?,
+            d_model: u("d_model")?,
+            n_layers: u("n_layers")?,
+            n_heads: u("n_heads")?,
+            d_ffw: u("d_ffw")?,
+            param_count: u("param_count")?,
+            train_batch: u("train_batch")?,
+            eval_batch: u("eval_batch")?,
+            prefix_batch: u("prefix_batch")?,
+            prefix_len: u("prefix_len")?,
+            prefix_lens: j
+                .get("prefix_lens")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_else(|| vec![u("prefix_len").unwrap_or(32)]),
+            dense_batches: j
+                .get("dense_batches")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default(),
+            opt: OptMeta {
+                peak_lr: of("peak_lr")?,
+                warmup_steps: of("warmup_steps")? as usize,
+                total_steps: of("total_steps")? as usize,
+                schedule: opt
+                    .get("schedule")
+                    .and_then(Json::as_str)
+                    .unwrap_or("cosine")
+                    .to_string(),
+                weight_decay: of("weight_decay")?,
+                clip_norm: of("clip_norm")?,
+            },
+            entry_points: j
+                .get("entry_points")
+                .and_then(Json::as_arr)
+                .context("missing entry_points")?
+                .iter()
+                .filter_map(|e| e.as_str().map(String::from))
+                .collect(),
+        })
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub fingerprint: String,
+    variants: BTreeMap<String, VariantMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let mut variants = BTreeMap::new();
+        for v in j
+            .get("variants")
+            .and_then(Json::as_arr)
+            .context("manifest missing 'variants'")?
+        {
+            let meta = VariantMeta::from_json(v)?;
+            variants.insert(meta.name.clone(), meta);
+        }
+        if variants.is_empty() {
+            bail!("manifest has no variants");
+        }
+        Ok(Manifest {
+            dir,
+            fingerprint: j
+                .get("fingerprint")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+            variants,
+        })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantMeta> {
+        self.variants.get(name).with_context(|| {
+            format!(
+                "variant '{name}' not in manifest (have: {:?}); re-run \
+                 `make artifacts` or `python -m compile.aot --variants {name}`",
+                self.variants.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn variants(&self) -> impl Iterator<Item = &VariantMeta> {
+        self.variants.values()
+    }
+
+    pub fn hlo_path(&self, variant: &str, entry: &str) -> PathBuf {
+        self.dir.join(variant).join(format!("{entry}.hlo.txt"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> Option<Manifest> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(dir).ok()
+    }
+
+    #[test]
+    fn parses_variant_json() {
+        let j = Json::parse(
+            r#"{"name":"x","role":"router","vocab":512,"seq_len":128,
+                "d_model":32,"n_layers":2,"n_heads":2,"ffw_mult":4,"d_ffw":128,
+                "param_count":100,"train_batch":16,"eval_batch":32,
+                "prefix_batch":32,"prefix_len":32,
+                "opt":{"peak_lr":0.0001,"warmup_steps":20,"total_steps":2000,
+                       "schedule":"constant","beta1":0.9,"beta2":0.99,
+                       "weight_decay":0.1,"clip_norm":0.1,"eps":1e-8,
+                       "min_lr_frac":0.1},
+                "entry_points":["init","train_step"]}"#,
+        )
+        .unwrap();
+        let v = VariantMeta::from_json(&j).unwrap();
+        assert_eq!(v.name, "x");
+        assert!(v.is_router());
+        assert_eq!(v.tokens_per_step(), 16 * 128);
+        assert_eq!(v.opt.schedule, "constant");
+    }
+
+    #[test]
+    fn missing_field_is_error() {
+        let j = Json::parse(r#"{"name":"x"}"#).unwrap();
+        assert!(VariantMeta::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn loads_repo_manifest_and_paths_exist() {
+        let Some(m) = repo_artifacts() else { return };
+        let v = m.variant("router_micro").unwrap();
+        assert_eq!(v.role, "router");
+        assert!(v.param_count > 0);
+        for e in &v.entry_points {
+            assert!(m.hlo_path(&v.name, e).exists(), "{e}");
+        }
+        assert!(m.variant("expert_sm").unwrap().param_count > v.param_count);
+    }
+
+    #[test]
+    fn unknown_variant_error_lists_available() {
+        let Some(m) = repo_artifacts() else { return };
+        let err = m.variant("nope").unwrap_err().to_string();
+        assert!(err.contains("router_micro"), "{err}");
+    }
+}

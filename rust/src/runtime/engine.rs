@@ -1,0 +1,190 @@
+//! The PJRT engine: one CPU client + a compile cache.
+//!
+//! Compilation is the expensive operation (seconds per module); execution
+//! is the hot path. Every expert of a given variant shares the same
+//! compiled executable — only the parameter *literals* differ — so the
+//! cache is keyed by `(variant, entry_point)`.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::cell::RefCell;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::artifacts::{Manifest, VariantMeta};
+
+/// Wall-clock accounting of engine activity, used by §Perf and the comm
+/// ledger to separate compile time from steady-state execution.
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    pub compiles: usize,
+    pub compile_secs: f64,
+    pub executions: usize,
+    pub execute_secs: f64,
+}
+
+pub struct Engine {
+    client: PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<(String, String), Rc<PjRtLoadedExecutable>>>,
+    stats: RefCell<EngineStats>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu().map_err(anyhow::Error::msg)?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantMeta> {
+        self.manifest.variant(name)
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Load + compile an entry point (cached).
+    pub fn executable(&self, variant: &str, entry: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        let key = (variant.to_string(), entry.to_string());
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.hlo_path(variant, entry);
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(&path)
+            .map_err(anyhow::Error::msg)
+            .with_context(|| format!("loading HLO text {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(anyhow::Error::msg)
+            .with_context(|| format!("compiling {variant}/{entry}"))?;
+        let exe = Rc::new(exe);
+        {
+            let mut st = self.stats.borrow_mut();
+            st.compiles += 1;
+            st.compile_secs += t0.elapsed().as_secs_f64();
+        }
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an entry point with literal inputs, returning the flattened
+    /// tuple elements (jax entry points always return a tuple).
+    ///
+    /// Inputs are uploaded to Rust-owned `PjRtBuffer`s and executed via
+    /// `execute_b`: the crate's literal-taking `execute` leaks every input
+    /// buffer (the C shim `release()`s them into the executable call and
+    /// never frees them — ~11 MB/step at expert_sm scale, found during the
+    /// §Perf pass). Owning the buffers here means Drop reclaims them.
+    pub fn run(&self, variant: &str, entry: &str, args: &[Literal]) -> Result<Vec<Literal>> {
+        let exe = self.executable(variant, entry)?;
+        let t0 = Instant::now();
+        let inputs: Vec<xla::PjRtBuffer> = args
+            .iter()
+            .map(|lit| {
+                self.client
+                    .buffer_from_host_literal(None, lit)
+                    .map_err(anyhow::Error::msg)
+            })
+            .collect::<Result<_>>()?;
+        let mut out = exe.execute_b(&inputs).map_err(anyhow::Error::msg)?;
+        let first = out
+            .pop()
+            .and_then(|mut replicas| {
+                if replicas.is_empty() {
+                    None
+                } else {
+                    Some(replicas.swap_remove(0))
+                }
+            })
+            .context("executable produced no output")?;
+        let lit = first.to_literal_sync().map_err(anyhow::Error::msg)?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.executions += 1;
+            st.execute_secs += t0.elapsed().as_secs_f64();
+        }
+        // Entry points are lowered with return_tuple=True: the root is a
+        // tuple even for single outputs. PJRT hands it back as one buffer.
+        lit.to_tuple().map_err(anyhow::Error::msg)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Literal helpers — the repo's only conversion layer to/from XLA.
+// ---------------------------------------------------------------------
+
+/// Build an `i32[rows, cols]` literal from token rows.
+pub fn tokens_literal(rows: &[Vec<u32>], cols: usize) -> Result<Literal> {
+    let mut flat: Vec<i32> = Vec::with_capacity(rows.len() * cols);
+    for r in rows {
+        anyhow::ensure!(r.len() == cols, "row len {} != {}", r.len(), cols);
+        flat.extend(r.iter().map(|&t| t as i32));
+    }
+    Literal::vec1(&flat)
+        .reshape(&[rows.len() as i64, cols as i64])
+        .map_err(anyhow::Error::msg)
+}
+
+/// f32 vector literal.
+pub fn f32_literal(xs: &[f32]) -> Literal {
+    Literal::vec1(xs)
+}
+
+/// f32 scalar literal.
+pub fn scalar_f32(x: f32) -> Literal {
+    Literal::scalar(x)
+}
+
+/// u32[2] seed literal (jax PRNG key data).
+pub fn seed_literal(seed: u64) -> Result<Literal> {
+    let parts = [(seed >> 32) as u32, (seed & 0xffff_ffff) as u32];
+    Literal::vec1(&parts).reshape(&[2]).map_err(anyhow::Error::msg)
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(anyhow::Error::msg)
+}
+
+/// Extract the single f32 of a scalar literal.
+pub fn to_f32_scalar(lit: &Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().map_err(anyhow::Error::msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_literal_shape_checks() {
+        let rows = vec![vec![1u32, 2, 3], vec![4, 5, 6]];
+        let lit = tokens_literal(&rows, 3).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert!(tokens_literal(&rows, 4).is_err());
+    }
+
+    #[test]
+    fn seed_literal_splits_u64() {
+        let lit = seed_literal(0x1234_5678_9abc_def0).unwrap();
+        let v = lit.to_vec::<u32>().unwrap();
+        assert_eq!(v, vec![0x1234_5678, 0x9abc_def0]);
+    }
+}

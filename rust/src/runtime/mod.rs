@@ -1,0 +1,20 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! Python runs once at build time (`make artifacts`); this module is the
+//! only place the Rust side touches XLA. It provides:
+//!
+//! * [`artifacts::Manifest`] / [`artifacts::VariantMeta`] — the contract
+//!   emitted by `python/compile/aot.py`,
+//! * [`Engine`] — a PJRT CPU client plus a compile cache (one compiled
+//!   executable per `(variant, entry_point)`, shared by every expert of
+//!   that variant),
+//! * [`TrainState`] — host-resident flat parameter/optimizer vectors and
+//!   the fused `train_step` / `eval_nll` / `prefix_nll` call wrappers.
+
+pub mod artifacts;
+pub mod engine;
+pub mod state;
+
+pub use artifacts::{Manifest, VariantMeta};
+pub use engine::Engine;
+pub use state::TrainState;

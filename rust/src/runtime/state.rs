@@ -1,0 +1,151 @@
+//! Host-resident training state for one model (router or expert).
+//!
+//! Parameters and AdamW moments live as flat `f32` vectors on the host and
+//! round-trip through PJRT literals each call. On this CPU-only testbed
+//! the copies are a few percent of step time (measured in EXPERIMENTS.md
+//! §Perf); the state is also what checkpoints serialize.
+
+use anyhow::{ensure, Context, Result};
+
+use super::engine::{
+    f32_literal, scalar_f32, seed_literal, to_f32_scalar, to_f32_vec, tokens_literal, Engine,
+};
+use super::VariantMeta;
+
+/// Flat parameter + optimizer state for one model instance.
+#[derive(Clone, Debug)]
+pub struct TrainState {
+    pub variant: String,
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: u64,
+}
+
+impl TrainState {
+    /// Initialize from the variant's AOT `init` executable.
+    pub fn init(engine: &Engine, variant: &str, seed: u64) -> Result<Self> {
+        let meta = engine.variant(variant)?.clone();
+        let out = engine.run(variant, "init", &[seed_literal(seed)?])?;
+        let params = to_f32_vec(out.first().context("init returned nothing")?)?;
+        ensure!(
+            params.len() == meta.param_count,
+            "init produced {} params, manifest says {}",
+            params.len(),
+            meta.param_count
+        );
+        let n = params.len();
+        Ok(TrainState {
+            variant: variant.to_string(),
+            params,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            step: 0,
+        })
+    }
+
+    /// Construct from an existing parameter vector (checkpoint load).
+    pub fn from_params(variant: &str, params: Vec<f32>, m: Vec<f32>, v: Vec<f32>, step: u64) -> Self {
+        TrainState {
+            variant: variant.to_string(),
+            params,
+            m,
+            v,
+            step,
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params.len()
+    }
+
+    /// One fused train step on a `[train_batch, seq_len+1]` token batch.
+    /// Returns the mean next-token loss.
+    pub fn train_step(&mut self, engine: &Engine, batch: &[Vec<u32>], meta: &VariantMeta) -> Result<f32> {
+        ensure!(
+            batch.len() == meta.train_batch,
+            "batch rows {} != train_batch {}",
+            batch.len(),
+            meta.train_batch
+        );
+        self.train_step_entry(engine, batch, meta, "train_step")
+    }
+
+    /// Train step selecting the entry point by batch size: the variant's
+    /// native batch uses `train_step`; any size in `meta.dense_batches`
+    /// uses the matching `train_step_b{B}` (the paper's dense comparator
+    /// trains the same number of steps at E x the expert batch).
+    pub fn train_step_auto(&mut self, engine: &Engine, batch: &[Vec<u32>], meta: &VariantMeta) -> Result<f32> {
+        if batch.len() == meta.train_batch {
+            return self.train_step_entry(engine, batch, meta, "train_step");
+        }
+        ensure!(
+            meta.dense_batches.contains(&batch.len()),
+            "no compiled train_step for batch {} on {} (have {:?} + {})",
+            batch.len(),
+            meta.name,
+            meta.dense_batches,
+            meta.train_batch
+        );
+        let entry = format!("train_step_b{}", batch.len());
+        self.train_step_entry(engine, batch, meta, &entry)
+    }
+
+    fn train_step_entry(
+        &mut self,
+        engine: &Engine,
+        batch: &[Vec<u32>],
+        meta: &VariantMeta,
+        entry: &str,
+    ) -> Result<f32> {
+        let tokens = tokens_literal(batch, meta.seq_len + 1)?;
+        let out = engine.run(
+            &self.variant,
+            entry,
+            &[
+                f32_literal(&self.params),
+                f32_literal(&self.m),
+                f32_literal(&self.v),
+                scalar_f32(self.step as f32),
+                tokens,
+            ],
+        )?;
+        ensure!(out.len() == 4, "train_step returned {} outputs", out.len());
+        self.params = to_f32_vec(&out[0])?;
+        self.m = to_f32_vec(&out[1])?;
+        self.v = to_f32_vec(&out[2])?;
+        self.step += 1;
+        to_f32_scalar(&out[3])
+    }
+
+    /// Per-sequence summed NLL over `[eval_batch, seq_len+1]` rows.
+    pub fn eval_nll(&self, engine: &Engine, batch: &[Vec<u32>], meta: &VariantMeta) -> Result<Vec<f32>> {
+        ensure!(batch.len() == meta.eval_batch, "eval batch size mismatch");
+        let tokens = tokens_literal(batch, meta.seq_len + 1)?;
+        let out = engine.run(&self.variant, "eval_nll", &[f32_literal(&self.params), tokens])?;
+        to_f32_vec(out.first().context("eval_nll empty")?)
+    }
+
+    /// Router scoring: summed NLL of `[prefix_batch, m]` prefixes
+    /// (Eq. 4 / Eq. 9 of the paper). `m` must be one of the variant's
+    /// compiled `prefix_lens`.
+    pub fn prefix_nll(
+        &self,
+        engine: &Engine,
+        batch: &[Vec<u32>],
+        meta: &VariantMeta,
+        m: usize,
+    ) -> Result<Vec<f32>> {
+        ensure!(batch.len() == meta.prefix_batch, "prefix batch size mismatch");
+        ensure!(
+            meta.prefix_lens.contains(&m),
+            "prefix length {m} not compiled for {} (have {:?})",
+            meta.name,
+            meta.prefix_lens
+        );
+        let tokens = tokens_literal(batch, m)?;
+        let entry = format!("prefix_nll_{m}");
+        let out = engine.run(&self.variant, &entry, &[f32_literal(&self.params), tokens])?;
+        to_f32_vec(out.first().context("prefix_nll empty")?)
+    }
+}

@@ -1,0 +1,350 @@
+//! Byte-level byte-pair encoding.
+//!
+//! Token ids `0..256` are raw bytes; ids `256..vocab` are merges in rank
+//! order. Encoding applies merges greedily by rank (lowest rank first),
+//! exactly like GPT-2's BPE, over whole documents (no word pre-split —
+//! the synthetic corpus has no strong word segmentation assumptions).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A trained BPE model.
+#[derive(Clone, Debug)]
+pub struct Bpe {
+    /// merges[i] = (left, right) producing token id 256 + i.
+    merges: Vec<(u32, u32)>,
+    /// (left, right) -> rank (index into merges).
+    ranks: HashMap<(u32, u32), u32>,
+    /// token id -> byte expansion.
+    pieces: Vec<Vec<u8>>,
+}
+
+impl Bpe {
+    pub fn from_merges(merges: Vec<(u32, u32)>) -> Result<Self> {
+        let mut pieces: Vec<Vec<u8>> = (0..=255u8).map(|b| vec![b]).collect();
+        let mut ranks = HashMap::with_capacity(merges.len());
+        for (i, &(l, r)) in merges.iter().enumerate() {
+            let id = 256 + i as u32;
+            if (l as usize) >= pieces.len() || (r as usize) >= pieces.len() {
+                bail!("merge {i} references unknown token ({l},{r})");
+            }
+            let mut piece = pieces[l as usize].clone();
+            piece.extend_from_slice(&pieces[r as usize]);
+            pieces.push(piece);
+            if ranks.insert((l, r), i as u32).is_some() {
+                bail!("duplicate merge pair ({l},{r})");
+            }
+            let _ = id;
+        }
+        Ok(Bpe {
+            merges,
+            ranks,
+            pieces,
+        })
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        256 + self.merges.len()
+    }
+
+    /// Encode UTF-8 text to token ids.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut ids: Vec<u32> = text.bytes().map(u32::from).collect();
+        if ids.len() < 2 {
+            return ids;
+        }
+        loop {
+            // find the lowest-rank applicable merge
+            let mut best: Option<(u32, usize)> = None; // (rank, pos)
+            for i in 0..ids.len() - 1 {
+                if let Some(&rank) = self.ranks.get(&(ids[i], ids[i + 1])) {
+                    if best.map_or(true, |(r, _)| rank < r) {
+                        best = Some((rank, i));
+                    }
+                }
+            }
+            let Some((rank, _)) = best else { break };
+            let (l, r) = self.merges[rank as usize];
+            let new_id = 256 + rank;
+            // merge every occurrence of (l, r) in one pass
+            let mut out = Vec::with_capacity(ids.len());
+            let mut i = 0;
+            while i < ids.len() {
+                if i + 1 < ids.len() && ids[i] == l && ids[i + 1] == r {
+                    out.push(new_id);
+                    i += 2;
+                } else {
+                    out.push(ids[i]);
+                    i += 1;
+                }
+            }
+            ids = out;
+            if ids.len() < 2 {
+                break;
+            }
+        }
+        ids
+    }
+
+    /// Decode token ids back to a string (lossy only for invalid UTF-8).
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            if let Some(p) = self.pieces.get(id as usize) {
+                bytes.extend_from_slice(p);
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn piece(&self, id: u32) -> Option<&[u8]> {
+        self.pieces.get(id as usize).map(|p| p.as_slice())
+    }
+
+    // ------------- persistence -------------
+
+    /// Save as a text file: one `left right` pair per line, rank order.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut s = String::with_capacity(self.merges.len() * 12);
+        s.push_str("# smalltalk bpe v1\n");
+        for &(l, r) in &self.merges {
+            s.push_str(&format!("{l} {r}\n"));
+        }
+        std::fs::write(path.as_ref(), s)
+            .with_context(|| format!("writing {}", path.as_ref().display()))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        let mut merges = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let l: u32 = it
+                .next()
+                .and_then(|t| t.parse().ok())
+                .with_context(|| format!("bad merge at line {}", ln + 1))?;
+            let r: u32 = it
+                .next()
+                .and_then(|t| t.parse().ok())
+                .with_context(|| format!("bad merge at line {}", ln + 1))?;
+            merges.push((l, r));
+        }
+        Bpe::from_merges(merges)
+    }
+}
+
+/// BPE trainer: iterative highest-frequency pair merging.
+pub struct BpeTrainer {
+    pub vocab_size: usize,
+    /// Cap on training bytes (sampled from the head of the corpus).
+    pub max_bytes: usize,
+}
+
+impl Default for BpeTrainer {
+    fn default() -> Self {
+        BpeTrainer {
+            vocab_size: 512,
+            max_bytes: 4 << 20,
+        }
+    }
+}
+
+impl BpeTrainer {
+    pub fn new(vocab_size: usize) -> Self {
+        BpeTrainer {
+            vocab_size,
+            ..Default::default()
+        }
+    }
+
+    /// Train on an iterator of documents.
+    pub fn train<'a>(&self, docs: impl Iterator<Item = &'a str>) -> Result<Bpe> {
+        if self.vocab_size < 256 {
+            bail!("vocab_size must be >= 256 (byte fallback)");
+        }
+        // Working representation: each doc is a Vec<u32> of current tokens.
+        let mut seqs: Vec<Vec<u32>> = Vec::new();
+        let mut total = 0usize;
+        for d in docs {
+            if total >= self.max_bytes {
+                break;
+            }
+            let take = d.len().min(self.max_bytes - total);
+            seqs.push(d.as_bytes()[..take].iter().map(|&b| b as u32).collect());
+            total += take;
+        }
+        if total == 0 {
+            bail!("empty training corpus");
+        }
+
+        let n_merges = self.vocab_size - 256;
+        let mut merges = Vec::with_capacity(n_merges);
+        let mut pair_counts: HashMap<(u32, u32), u64> = HashMap::new();
+
+        for m in 0..n_merges {
+            pair_counts.clear();
+            for s in &seqs {
+                for w in s.windows(2) {
+                    *pair_counts.entry((w[0], w[1])).or_insert(0) += 1;
+                }
+            }
+            // deterministic tie-break: highest count, then smallest pair
+            let best = pair_counts
+                .iter()
+                .map(|(&p, &c)| (c, std::cmp::Reverse(p)))
+                .max()
+                .map(|(c, std::cmp::Reverse(p))| (p, c));
+            let Some(((l, r), count)) = best else { break };
+            if count < 2 {
+                break; // nothing worth merging
+            }
+            let new_id = 256 + m as u32;
+            merges.push((l, r));
+            for s in seqs.iter_mut() {
+                let mut out = Vec::with_capacity(s.len());
+                let mut i = 0;
+                while i < s.len() {
+                    if i + 1 < s.len() && s[i] == l && s[i + 1] == r {
+                        out.push(new_id);
+                        i += 2;
+                    } else {
+                        out.push(s[i]);
+                        i += 1;
+                    }
+                }
+                *s = out;
+            }
+        }
+        Bpe::from_merges(merges)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn sample_corpus() -> Vec<String> {
+        (0..50)
+            .map(|i| {
+                format!(
+                    "the quick brown fox {i} jumps over the lazy dog; \
+                     pack my box with five dozen liquor jugs {i}"
+                )
+            })
+            .collect()
+    }
+
+    fn trained() -> Bpe {
+        BpeTrainer::new(300)
+            .train(sample_corpus().iter().map(|s| s.as_str()))
+            .unwrap()
+    }
+
+    #[test]
+    fn roundtrip_ascii() {
+        let bpe = trained();
+        let s = "the quick brown fox jumps";
+        assert_eq!(bpe.decode(&bpe.encode(s)), s);
+    }
+
+    #[test]
+    fn roundtrip_unseen_unicode() {
+        let bpe = trained();
+        let s = "héllo wörld — 日本語テキスト 🚀";
+        assert_eq!(bpe.decode(&bpe.encode(s)), s);
+    }
+
+    #[test]
+    fn compresses_training_distribution() {
+        let bpe = trained();
+        let s = "the quick brown fox jumps over the lazy dog";
+        let ids = bpe.encode(s);
+        assert!(
+            ids.len() < s.len() / 2,
+            "expected >2x compression, got {} tokens for {} bytes",
+            ids.len(),
+            s.len()
+        );
+    }
+
+    #[test]
+    fn vocab_size_bounded() {
+        let bpe = trained();
+        assert!(bpe.vocab_size() <= 300);
+        let ids = bpe.encode("anything at all");
+        assert!(ids.iter().all(|&t| (t as usize) < bpe.vocab_size()));
+    }
+
+    #[test]
+    fn empty_and_single_byte() {
+        let bpe = trained();
+        assert!(bpe.encode("").is_empty());
+        assert_eq!(bpe.decode(&bpe.encode("x")), "x");
+    }
+
+    #[test]
+    fn save_load_identical_encoding(){
+        let bpe = trained();
+        let dir = std::env::temp_dir().join("smalltalk_bpe_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bpe.txt");
+        bpe.save(&path).unwrap();
+        let bpe2 = Bpe::load(&path).unwrap();
+        let s = "the quick brown fox; unseen œ∑´®†¥";
+        assert_eq!(bpe.encode(s), bpe2.encode(s));
+        assert_eq!(bpe2.vocab_size(), bpe.vocab_size());
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let a = trained();
+        let b = trained();
+        let s = "determinism check 123";
+        assert_eq!(a.encode(s), b.encode(s));
+    }
+
+    #[test]
+    fn rejects_bad_merge_table() {
+        assert!(Bpe::from_merges(vec![(9999, 0)]).is_err());
+        assert!(Bpe::from_merges(vec![(0, 1), (0, 1)]).is_err());
+    }
+
+    #[test]
+    fn prop_roundtrip_random_utf8() {
+        let bpe = trained();
+        prop::check(
+            "bpe-roundtrip",
+            60,
+            |r: &mut Rng| {
+                let len = r.usize_below(200);
+                (0..len)
+                    .map(|_| {
+                        // mix of ascii and multibyte
+                        match r.below(4) {
+                            0 => char::from_u32(0x20 + r.below(0x5e) as u32).unwrap(),
+                            1 => 'é',
+                            2 => '語',
+                            _ => char::from_u32(0x61 + r.below(26) as u32).unwrap(),
+                        }
+                    })
+                    .collect::<String>()
+            },
+            |s| {
+                if bpe.decode(&bpe.encode(s)) == *s {
+                    Ok(())
+                } else {
+                    Err("roundtrip mismatch".into())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,10 @@
+//! Byte-level BPE tokenizer (SentencePiece substitute, DESIGN.md §3).
+//!
+//! The paper tokenizes RedPajama with a 32k SentencePiece model; this repo
+//! trains a byte-level BPE on the synthetic corpus with a scaled-down
+//! vocabulary (the AOT manifest's `vocab`). Byte fallback makes encoding
+//! total and `decode(encode(x)) == x` for all UTF-8 input.
+
+pub mod bpe;
+
+pub use bpe::{Bpe, BpeTrainer};

@@ -1,0 +1,177 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` runs binaries with `harness = false`; each bench builds a
+//! [`BenchSuite`], registers closures, and gets warmup + repeated timing
+//! with median/mean/p90 reporting and optional JSON output under
+//! `results/`.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p90_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns * 1e-9)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub struct BenchSuite {
+    pub title: String,
+    pub warmup: Duration,
+    pub target_time: Duration,
+    pub max_iters: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl BenchSuite {
+    pub fn new(title: &str) -> Self {
+        // Keep budgets modest: XLA-backed benches have multi-ms iterations.
+        BenchSuite {
+            title: title.to_string(),
+            warmup: Duration::from_millis(200),
+            target_time: Duration::from_secs(1),
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_budget(mut self, warmup: Duration, target: Duration) -> Self {
+        self.warmup = warmup;
+        self.target_time = target;
+        self
+    }
+
+    /// Time `f` repeatedly; returns (and records) the aggregate result.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> BenchResult {
+        // Warmup.
+        let w0 = Instant::now();
+        let mut warm_iters = 0usize;
+        while w0.elapsed() < self.warmup && warm_iters < self.max_iters {
+            f();
+            warm_iters += 1;
+        }
+        // Measure.
+        let mut samples: Vec<f64> = Vec::new();
+        let t0 = Instant::now();
+        while t0.elapsed() < self.target_time && samples.len() < self.max_iters {
+            let s = Instant::now();
+            f();
+            samples.push(s.elapsed().as_nanos() as f64);
+        }
+        if samples.is_empty() {
+            let s = Instant::now();
+            f();
+            samples.push(s.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: n,
+            mean_ns: samples.iter().sum::<f64>() / n as f64,
+            median_ns: samples[n / 2],
+            p90_ns: samples[(n * 9 / 10).min(n - 1)],
+            min_ns: samples[0],
+        };
+        println!(
+            "  {:<44} {:>12} median {:>12} mean {:>12} p90  ({} iters)",
+            result.name,
+            fmt_ns(result.median_ns),
+            fmt_ns(result.mean_ns),
+            fmt_ns(result.p90_ns),
+            result.iters
+        );
+        self.results.push(result.clone());
+        result
+    }
+
+    pub fn header(&self) {
+        println!("\n=== bench: {} ===", self.title);
+    }
+
+    /// Write results as JSON under `results/bench_<title>.json`.
+    pub fn write_json(&self) -> std::io::Result<()> {
+        use crate::util::json::Json;
+        std::fs::create_dir_all("results")?;
+        let arr = Json::Arr(
+            self.results
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("name", Json::str(r.name.clone())),
+                        ("iters", Json::num(r.iters as f64)),
+                        ("mean_ns", Json::num(r.mean_ns)),
+                        ("median_ns", Json::num(r.median_ns)),
+                        ("p90_ns", Json::num(r.p90_ns)),
+                        ("min_ns", Json::num(r.min_ns)),
+                    ])
+                })
+                .collect(),
+        );
+        let path = format!(
+            "results/bench_{}.json",
+            self.title.replace([' ', '/'], "_").to_lowercase()
+        );
+        std::fs::write(path, arr.to_string_pretty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut suite = BenchSuite::new("test").with_budget(
+            Duration::from_millis(5),
+            Duration::from_millis(20),
+        );
+        let r = suite.bench("spin", || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.iters >= 1);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.median_ns && r.median_ns <= r.p90_ns);
+    }
+
+    #[test]
+    fn throughput_inverts_time() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1e9,
+            median_ns: 1e9,
+            p90_ns: 1e9,
+            min_ns: 1e9,
+        };
+        assert!((r.throughput(100.0) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5e4).ends_with("µs"));
+        assert!(fmt_ns(5e7).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with("s"));
+    }
+}

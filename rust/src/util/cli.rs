@@ -1,0 +1,151 @@
+//! Tiny command-line parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding the program name).
+    /// `value_opts` lists option names that consume a following value.
+    pub fn parse(raw: &[String], value_opts: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if value_opts.contains(&name) {
+                    i += 1;
+                    let v = raw
+                        .get(i)
+                        .with_context(|| format!("--{name} requires a value"))?;
+                    out.options.insert(name.to_string(), v.clone());
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{name} expects a float, got {v:?}")),
+        }
+    }
+
+    /// Comma-separated usize list.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse::<usize>()
+                        .with_context(|| format!("--{name}: bad element {p:?}"))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        match self.get(name) {
+            Some(v) => Ok(v),
+            None => bail!("missing required option --{name}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(
+            &sv(&["train", "--experts", "4", "--fast", "--lr=0.1", "pos2"]),
+            &["experts"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["train", "pos2"]);
+        assert_eq!(a.get_usize("experts", 0).unwrap(), 4);
+        assert!(a.flag("fast"));
+        assert_eq!(a.get_f64("lr", 0.0).unwrap(), 0.1);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&sv(&["--experts"]), &["experts"]).is_err());
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = Args::parse(&sv(&["--es=1,2, 8"]), &[]).unwrap();
+        assert_eq!(a.get_usize_list("es", &[]).unwrap(), vec![1, 2, 8]);
+        assert_eq!(a.get_usize_list("nope", &[3]).unwrap(), vec![3]);
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::parse(&sv(&["--n=abc"]), &[]).unwrap();
+        assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn require_reports_name() {
+        let a = Args::parse(&sv(&[]), &[]).unwrap();
+        let e = a.require("seed").unwrap_err().to_string();
+        assert!(e.contains("--seed"));
+    }
+}

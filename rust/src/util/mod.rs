@@ -1,0 +1,11 @@
+//! Self-contained utilities (the offline registry ships only `xla`,
+//! `anyhow`, `thiserror` — everything else is implemented here).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,119 @@
+//! Property-based testing harness (proptest is unavailable offline).
+//!
+//! Provides seeded random-case generation with failure reporting that
+//! includes the reproducing seed, plus a simple halving shrinker for
+//! integer-vector inputs. Used by the coordinator invariants tests
+//! (routing, batching, assignment) per the repro guide.
+
+use crate::util::rng::Rng;
+
+/// Run `cases` random property checks. `gen` builds an input from an Rng;
+/// `check` returns `Err(msg)` on violation. Panics with the seed on failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut check: impl FnMut(&T) -> Result<(), String>,
+) {
+    let base = 0x5EED_0000u64;
+    for case in 0..cases {
+        let seed = base + case as u64;
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}): {msg}\n\
+                 input: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Shrinking variant for `Vec`-shaped inputs: on failure, bisect the vector
+/// to a minimal failing prefix/suffix before reporting.
+pub fn check_vec<T: Clone + std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> Vec<T>,
+    mut check: impl FnMut(&[T]) -> Result<(), String>,
+) {
+    let base = 0x5EED_1000u64;
+    for case in 0..cases {
+        let seed = base + case as u64;
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            // shrink: try halves repeatedly
+            let mut minimal = input.clone();
+            let mut last_msg = msg;
+            loop {
+                let n = minimal.len();
+                if n <= 1 {
+                    break;
+                }
+                let halves = [minimal[..n / 2].to_vec(), minimal[n / 2..].to_vec()];
+                let mut shrunk = false;
+                for h in halves {
+                    if let Err(m) = check(&h) {
+                        minimal = h;
+                        last_msg = m;
+                        shrunk = true;
+                        break;
+                    }
+                }
+                if !shrunk {
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}): {last_msg}\n\
+                 minimal input ({} elems): {minimal:#?}",
+                minimal.len()
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check(
+            "sum-commutes",
+            50,
+            |r| (r.below(100) as i64, r.below(100) as i64),
+            |&(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 3, |r| r.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal input")]
+    fn shrinker_reduces_vector() {
+        check_vec(
+            "no-sevens",
+            20,
+            |r| (0..50).map(|_| r.below(10)).collect::<Vec<u64>>(),
+            |xs| {
+                if xs.contains(&7) {
+                    Err("found 7".into())
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,162 @@
+//! Integration: the full Algorithm-1 pipeline at miniature scale, plus
+//! serving, checkpointing, and the TF-IDF baseline comparison.
+//!
+//! Budgets are kept tiny (seconds per test on one CPU core); the paper's
+//! *relative* claims at real budgets are exercised by the benches.
+
+use smalltalk::baselines::{balanced_kmeans, truncated_svd, TfIdf};
+use smalltalk::coordinator::{
+    run_pipeline, serve, CommKind, PipelineConfig, Request,
+};
+use smalltalk::data::corpus::{Corpus, DOMAINS};
+use smalltalk::data::SequenceGen;
+use smalltalk::model::{load_checkpoint, save_checkpoint};
+use smalltalk::runtime::Engine;
+use smalltalk::tokenizer::{Bpe, BpeTrainer};
+
+fn engine() -> Engine {
+    Engine::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).expect("run `make artifacts`")
+}
+
+fn bpe() -> Bpe {
+    let corpus = Corpus::generate(60, 400, 42, None);
+    BpeTrainer::new(512).train(corpus.texts()).unwrap()
+}
+
+fn tiny_pipeline() -> PipelineConfig {
+    PipelineConfig {
+        router_variant: "router_micro".into(),
+        expert_variant: "router_micro".into(), // tiny expert: fast test
+        n_experts: 2,
+        em_rounds: 2,
+        em_chunk: 64,
+        em_steps_per_round: 6,
+        shard_sequences: 96,
+        expert_steps: 10,
+        prefix_len: 32,
+        seed: 7,
+    }
+}
+
+#[test]
+fn pipeline_runs_and_specializes() {
+    let eng = engine();
+    let b = bpe();
+    let cfg = tiny_pipeline();
+    let result = run_pipeline(&eng, &b, &cfg).unwrap();
+
+    // all sequences sharded, capacities respected. The pipeline enforces
+    // single-epoch data: the corpus is grown to cover every expert's step
+    // budget (n_experts * expert_steps * train_batch) when the configured
+    // shard count is smaller.
+    let meta = engine().variant(&cfg.expert_variant).unwrap().clone();
+    let expected = cfg
+        .shard_sequences
+        .max(cfg.n_experts * cfg.expert_steps * meta.train_batch);
+    let total: usize = result.segment_sizes.iter().sum();
+    assert_eq!(total, expected);
+    let cap = expected.div_ceil(cfg.n_experts);
+    assert!(result.segment_sizes.iter().all(|&s| s <= cap));
+
+    // comm: exactly em_rounds-1 (round 0 is random) + 1 sharding all-gather
+    assert_eq!(
+        result.ledger.rounds(CommKind::ScoreAllGather),
+        cfg.em_rounds - 1 + 1
+    );
+
+    // experts trained: loss series present and decreasing
+    for e in 0..cfg.n_experts {
+        let series = result.log.get(&format!("expert{e}/loss")).unwrap();
+        assert!(series.len() >= 2);
+        assert!(series.last().unwrap().y < series.first().unwrap().y + 0.1);
+    }
+
+    // routing a fresh batch uses both experts (balance at inference is
+    // emergent, not enforced — but with 2 experts both must appear)
+    let mut gen = SequenceGen::new(&b, result.mixture.expert_meta.seq_len, 99);
+    let seqs = gen.batch(64);
+    let routes = result.mixture.route(&eng, &seqs, cfg.prefix_len).unwrap();
+    let c0 = routes.iter().filter(|&&e| e == 0).count();
+    assert!(c0 > 0 && c0 < 64, "all sequences routed to one expert");
+}
+
+#[test]
+fn serve_returns_all_responses_in_order() {
+    let eng = engine();
+    let b = bpe();
+    let cfg = tiny_pipeline();
+    let result = run_pipeline(&eng, &b, &cfg).unwrap();
+    let mut gen = SequenceGen::new(&b, result.mixture.expert_meta.seq_len, 123);
+    let requests: Vec<Request> = gen
+        .batch(10)
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| Request {
+            id: 1000 + i as u64,
+            tokens: s.tokens,
+        })
+        .collect();
+    let responses = serve(&eng, &result.mixture, &requests, cfg.prefix_len).unwrap();
+    assert_eq!(responses.len(), 10);
+    for (i, r) in responses.iter().enumerate() {
+        assert_eq!(r.id, 1000 + i as u64);
+        assert!(r.nll > 0.0 && r.nll.is_finite());
+        assert!(r.expert < cfg.n_experts);
+    }
+}
+
+#[test]
+fn checkpoint_roundtrip_through_real_state() {
+    let eng = engine();
+    let st = smalltalk::runtime::TrainState::init(&eng, "router_micro", 31).unwrap();
+    let dir = std::env::temp_dir().join("smalltalk_integration_ckpt");
+    let path = dir.join("r.ckpt");
+    save_checkpoint(&st, &path).unwrap();
+    let st2 = load_checkpoint(&path).unwrap();
+    assert_eq!(st.params, st2.params);
+    assert_eq!(st2.variant, "router_micro");
+}
+
+/// The Fig. 4c comparator at miniature scale: cluster purity of prefix
+/// TF-IDF features must be clearly worse than full-document TF-IDF —
+/// the paper's core argument for why content clustering fails on short
+/// prefixes while likelihood routing keeps working.
+#[test]
+fn tfidf_short_prefix_loses_information() {
+    let b = bpe();
+    let mut gen = SequenceGen::new(&b, 128, 5);
+    let seqs = gen.batch(160);
+    let full_docs: Vec<&[u32]> = seqs.iter().map(|s| &s.tokens[..]).collect();
+    let prefix_docs: Vec<&[u32]> = seqs.iter().map(|s| s.prefix(8)).collect();
+
+    let purity = |docs: &[&[u32]]| -> f64 {
+        let tfidf = TfIdf::fit(docs, b.vocab_size());
+        let enc = tfidf.encode_all(docs);
+        let proj = truncated_svd(&enc, 16, 3, 11);
+        let km = balanced_kmeans(&proj, DOMAINS, 12, 13);
+        // majority-domain purity per cluster
+        let mut hit = 0usize;
+        for c in 0..DOMAINS {
+            let members: Vec<usize> = (0..seqs.len())
+                .filter(|&i| km.assignment[i] == c)
+                .collect();
+            if members.is_empty() {
+                continue;
+            }
+            let mut counts = std::collections::HashMap::new();
+            for &i in &members {
+                *counts.entry(seqs[i].domain).or_insert(0usize) += 1;
+            }
+            hit += counts.values().copied().max().unwrap_or(0);
+        }
+        hit as f64 / seqs.len() as f64
+    };
+
+    let full = purity(&full_docs);
+    let prefix = purity(&prefix_docs);
+    assert!(
+        full > prefix + 0.1,
+        "full-doc purity {full} should beat 8-token prefix purity {prefix}"
+    );
+    assert!(full > 0.6, "full-document tf-idf should cluster well: {full}");
+}

@@ -1,0 +1,170 @@
+//! Integration: AOT artifacts -> PJRT engine -> train/eval/score.
+//!
+//! These tests exercise the real HLO artifacts (run `make artifacts`
+//! first); they are the Rust-side counterpart of the python kernel/model
+//! tests and the ground truth that the three layers compose.
+
+use smalltalk::data::corpus::Corpus;
+use smalltalk::data::SequenceGen;
+use smalltalk::runtime::{Engine, TrainState};
+use smalltalk::tokenizer::{Bpe, BpeTrainer};
+
+fn engine() -> Engine {
+    Engine::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).expect("run `make artifacts`")
+}
+
+fn bpe() -> Bpe {
+    let corpus = Corpus::generate(60, 400, 42, None);
+    BpeTrainer::new(512).train(corpus.texts()).unwrap()
+}
+
+#[test]
+fn init_produces_manifest_sized_params() {
+    let eng = engine();
+    let st = TrainState::init(&eng, "router_micro", 7).unwrap();
+    let meta = eng.variant("router_micro").unwrap();
+    assert_eq!(st.param_count(), meta.param_count);
+    // deterministic in seed
+    let st2 = TrainState::init(&eng, "router_micro", 7).unwrap();
+    assert_eq!(st.params, st2.params);
+    let st3 = TrainState::init(&eng, "router_micro", 8).unwrap();
+    assert_ne!(st.params, st3.params);
+}
+
+#[test]
+fn train_step_decreases_loss_on_fixed_batch() {
+    let eng = engine();
+    let b = bpe();
+    let meta = eng.variant("router_micro").unwrap().clone();
+    let mut st = TrainState::init(&eng, "router_micro", 1).unwrap();
+    let mut gen = SequenceGen::new(&b, meta.seq_len, 5);
+    let batch: Vec<Vec<u32>> = gen
+        .batch(meta.train_batch)
+        .into_iter()
+        .map(|s| s.tokens)
+        .collect();
+    let first = st.train_step(&eng, &batch, &meta).unwrap();
+    // near-uniform init: loss ~ ln(512) = 6.24
+    assert!((first - 6.24).abs() < 0.8, "initial loss {first}");
+    // router schedule: 20 warmup steps to a constant 1e-4 with 0.1 grad
+    // clip — progress is steady but deliberately slow (App. A.1), so give
+    // it a few dozen steps.
+    let mut last = first;
+    for _ in 0..50 {
+        last = st.train_step(&eng, &batch, &meta).unwrap();
+    }
+    assert!(
+        last < first - 0.1,
+        "loss did not drop: {first} -> {last}"
+    );
+    assert_eq!(st.step, 51);
+}
+
+#[test]
+fn eval_nll_matches_scale_and_shape() {
+    let eng = engine();
+    let b = bpe();
+    let meta = eng.variant("router_micro").unwrap().clone();
+    let st = TrainState::init(&eng, "router_micro", 2).unwrap();
+    let mut gen = SequenceGen::new(&b, meta.seq_len, 9);
+    let batch: Vec<Vec<u32>> = gen
+        .batch(meta.eval_batch)
+        .into_iter()
+        .map(|s| s.tokens)
+        .collect();
+    let nll = st.eval_nll(&eng, &batch, &meta).unwrap();
+    assert_eq!(nll.len(), meta.eval_batch);
+    // per-token NLL at init ~ ln(512)
+    for &n in &nll {
+        let per_tok = n / meta.seq_len as f32;
+        assert!((per_tok - 6.24).abs() < 1.0, "per-token NLL {per_tok}");
+    }
+}
+
+#[test]
+fn prefix_nll_all_compiled_lengths() {
+    let eng = engine();
+    let b = bpe();
+    let meta = eng.variant("router_micro").unwrap().clone();
+    let st = TrainState::init(&eng, "router_micro", 3).unwrap();
+    let mut gen = SequenceGen::new(&b, meta.seq_len, 11);
+    let seqs = gen.batch(meta.prefix_batch);
+    for &m in &meta.prefix_lens {
+        let batch: Vec<Vec<u32>> = seqs.iter().map(|s| s.prefix(m).to_vec()).collect();
+        let nll = st.prefix_nll(&eng, &batch, &meta, m).unwrap();
+        assert_eq!(nll.len(), meta.prefix_batch);
+        assert!(nll.iter().all(|&x| x.is_finite() && x > 0.0));
+        // longer prefixes accumulate more NLL
+        let mean: f32 = nll.iter().sum::<f32>() / nll.len() as f32;
+        let expected = (m as f32 - 1.0) * 6.24;
+        assert!(
+            (mean - expected).abs() / expected < 0.3,
+            "m={m} mean={mean} expected~{expected}"
+        );
+    }
+}
+
+#[test]
+fn prefix_nll_rejects_uncompiled_length() {
+    let eng = engine();
+    let meta = eng.variant("router_micro").unwrap().clone();
+    let st = TrainState::init(&eng, "router_micro", 4).unwrap();
+    let batch = vec![vec![0u32; 13]; meta.prefix_batch];
+    assert!(st.prefix_nll(&eng, &batch, &meta, 13).is_err());
+}
+
+#[test]
+fn executables_are_cached() {
+    let eng = engine();
+    let _ = eng.executable("router_micro", "init").unwrap();
+    let c1 = eng.stats().compiles;
+    let _ = eng.executable("router_micro", "init").unwrap();
+    assert_eq!(eng.stats().compiles, c1);
+}
+
+#[test]
+fn trained_router_prefers_its_domain() {
+    // Mini specialization check: train one router on domain 1 ("code")
+    // only; its prefix NLL on code must become lower than on recipes.
+    let eng = engine();
+    let b = bpe();
+    let meta = eng.variant("router_micro").unwrap().clone();
+    let mut st = TrainState::init(&eng, "router_micro", 5).unwrap();
+
+    let mut w_code = vec![0.0; smalltalk::data::corpus::DOMAINS];
+    w_code[1] = 1.0;
+    let mut gen_code = SequenceGen::new(&b, meta.seq_len, 21).with_weights(w_code.clone());
+    for _ in 0..60 {
+        let batch: Vec<Vec<u32>> = gen_code
+            .batch(meta.train_batch)
+            .into_iter()
+            .map(|s| s.tokens)
+            .collect();
+        st.train_step(&eng, &batch, &meta).unwrap();
+    }
+
+    let mut w_rec = vec![0.0; smalltalk::data::corpus::DOMAINS];
+    w_rec[2] = 1.0;
+    let mut gen_code_eval = SequenceGen::new(&b, meta.seq_len, 77).with_weights(w_code);
+    let mut gen_rec_eval = SequenceGen::new(&b, meta.seq_len, 78).with_weights(w_rec);
+    let m = 32;
+    let code_batch: Vec<Vec<u32>> = gen_code_eval
+        .batch(meta.prefix_batch)
+        .iter()
+        .map(|s| s.prefix(m).to_vec())
+        .collect();
+    let rec_batch: Vec<Vec<u32>> = gen_rec_eval
+        .batch(meta.prefix_batch)
+        .iter()
+        .map(|s| s.prefix(m).to_vec())
+        .collect();
+    let nll_code = st.prefix_nll(&eng, &code_batch, &meta, m).unwrap();
+    let nll_rec = st.prefix_nll(&eng, &rec_batch, &meta, m).unwrap();
+    let mean = |v: &[f32]| v.iter().sum::<f32>() / v.len() as f32;
+    assert!(
+        mean(&nll_code) + 2.0 < mean(&nll_rec),
+        "code {} vs recipes {}",
+        mean(&nll_code),
+        mean(&nll_rec)
+    );
+}
