@@ -1,0 +1,24 @@
+# SmallTalk LM — repo-root entry points (tier-1 verify runs from here).
+#
+#   make build        cargo build --release (workspace: rust/ + vendored deps)
+#   make test         cargo test -q  (XLA-backed tests self-skip without artifacts)
+#   make artifacts    AOT-lower every model variant to artifacts/ (needs jax)
+#   make bench-smoke  tiny-budget routing+train_step benches -> BENCH_routing.json
+
+.PHONY: build test artifacts bench-smoke clean
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts
+
+bench-smoke:
+	scripts/bench_smoke.sh
+
+clean:
+	cargo clean
+	rm -rf results BENCH_routing.json BENCH_train_step.json

@@ -12,6 +12,15 @@ fn main() {
     let mut suite = BenchSuite::new("comm_overhead");
     suite.header();
 
+    // annotate each row with the bytes the modeled exchange would move, so
+    // the JSON output carries (modeled) transfer volume next to ledger cost
+    let allgather_bytes = {
+        let mut l = CommLedger::default();
+        for r in 0..100 {
+            l.record_score_allgather(32, 43_945, r);
+        }
+        l.total_bytes() as f64
+    };
     suite.bench("ledger: 100 allgathers x 32 nodes", || {
         let mut l = CommLedger::default();
         for r in 0..100 {
@@ -19,7 +28,15 @@ fn main() {
         }
         std::hint::black_box(l.peak_node_bytes());
     });
+    suite.annotate("modeled_transfer_bytes", allgather_bytes);
 
+    let ddp_bytes = {
+        let mut l = CommLedger::default();
+        for s in 0..512 {
+            l.record_ddp_allreduce(32, 1_300_000_000, s);
+        }
+        l.total_bytes() as f64
+    };
     suite.bench("ledger: 512-step DDP x 32 nodes", || {
         let mut l = CommLedger::default();
         for s in 0..512 {
@@ -27,6 +44,7 @@ fn main() {
         }
         std::hint::black_box(l.total_bytes());
     });
+    suite.annotate("modeled_transfer_bytes", ddp_bytes);
 
     println!("\n§A.4 closed forms (paper scale):");
     println!(

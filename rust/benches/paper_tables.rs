@@ -14,7 +14,11 @@ use smalltalk::runtime::Engine;
 use smalltalk::tokenizer::BpeTrainer;
 
 fn main() {
-    let engine = Engine::new("artifacts").expect("run `make artifacts`");
+    let Some(artifacts) = smalltalk::runtime::locate_artifacts() else {
+        eprintln!("[paper_tables bench] no artifacts/manifest.json — run `make artifacts`; skipping");
+        return;
+    };
+    let engine = Engine::new(artifacts).expect("loading artifacts");
     let budget = Budget::smoke();
     let corpus = Corpus::generate(60, 400, budget.seed, None);
     let bpe = BpeTrainer::new(512).train(corpus.texts()).unwrap();

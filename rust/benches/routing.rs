@@ -1,6 +1,11 @@
 //! Bench: the serving path — prefix score matrix, argmin routing, and the
 //! batched serve loop (requests/s). The router overhead must stay a few
 //! percent of expert execution (§3.2).
+//!
+//! Prints before/after rows for the device-resident buffer cache: the
+//! "seed path" row re-uploads every router's parameter vector and rebuilds
+//! the token literal per router (the pre-cache behavior), the main row
+//! uses the cached path. Per-row transfer bytes come from `EngineStats`.
 
 use std::time::Duration;
 
@@ -8,12 +13,17 @@ use smalltalk::coordinator::scoring::score_matrix;
 use smalltalk::coordinator::{argmin_assign, run_pipeline, serve, PipelineConfig, Request};
 use smalltalk::data::corpus::Corpus;
 use smalltalk::data::SequenceGen;
-use smalltalk::runtime::Engine;
+use smalltalk::runtime::engine::{f32_literal, tokens_literal};
+use smalltalk::runtime::{locate_artifacts, Engine};
 use smalltalk::tokenizer::BpeTrainer;
 use smalltalk::util::bench::BenchSuite;
 
 fn main() {
-    let engine = Engine::new("artifacts").expect("run `make artifacts`");
+    let Some(artifacts) = locate_artifacts() else {
+        eprintln!("[routing bench] no artifacts/manifest.json — run `make artifacts`; skipping");
+        return;
+    };
+    let engine = Engine::new(artifacts).expect("loading artifacts");
     let corpus = Corpus::generate(60, 400, 42, None);
     let bpe = BpeTrainer::new(512).train(corpus.texts()).unwrap();
 
@@ -33,6 +43,7 @@ fn main() {
     eprintln!("[routing bench] preparing mixture ...");
     let result = run_pipeline(&engine, &bpe, &cfg).unwrap();
     let mixture = result.mixture;
+    let n_routers = mixture.routers.len();
 
     let mut suite =
         BenchSuite::new("routing").with_budget(Duration::from_millis(500), Duration::from_secs(4));
@@ -40,15 +51,91 @@ fn main() {
 
     let mut gen = SequenceGen::new(&bpe, mixture.expert_meta.seq_len, 17);
     let seqs = gen.batch(32);
+    let m = 32usize;
 
-    let r = suite.bench("score_matrix 32 seqs x 4 routers (M=32)", || {
-        std::hint::black_box(
-            score_matrix(&engine, &mixture.routers, &mixture.router_meta, &seqs, 32).unwrap(),
-        );
-    });
-    println!("    -> {:.0} seqs/s", r.throughput(32.0));
+    // ---- seed path: rebuild the token literal and re-upload parameters
+    // for every router on every call (what the runtime did before the
+    // device cache) ----
+    let rmeta = mixture.router_meta.clone();
+    let entry = format!("prefix_nll_{m}");
+    let seed_path = |engine: &Engine| {
+        let bs = rmeta.prefix_batch;
+        let mut out = vec![vec![0.0f32; n_routers]; seqs.len()];
+        let mut start = 0;
+        while start < seqs.len() {
+            let real = (seqs.len() - start).min(bs);
+            let mut batch: Vec<Vec<u32>> = seqs[start..start + real]
+                .iter()
+                .map(|s| s.prefix(m).to_vec())
+                .collect();
+            while batch.len() < bs {
+                batch.push(batch[real - 1].clone());
+            }
+            for (r, router) in mixture.routers.iter().enumerate() {
+                let tokens = tokens_literal(&batch, m).unwrap();
+                let scores = engine
+                    .run(&router.variant, &entry, &[f32_literal(&router.params), tokens])
+                    .unwrap();
+                let scores = scores[0].to_vec::<f32>().unwrap();
+                for i in 0..real {
+                    out[start + i][r] = scores[i];
+                }
+            }
+            start += real;
+        }
+        out
+    };
 
-    let nll = score_matrix(&engine, &mixture.routers, &mixture.router_meta, &seqs, 32).unwrap();
+    let seed_r = suite.bench(
+        &format!("score_matrix 32 seqs x {n_routers} routers (seed path: upload per call)"),
+        || {
+            std::hint::black_box(seed_path(&engine));
+        },
+    );
+    println!("    -> {:.0} seqs/s", seed_r.throughput(32.0));
+    let s0 = engine.stats();
+    std::hint::black_box(seed_path(&engine));
+    let d = engine.stats().since(&s0);
+    suite.annotate("h2d_bytes_per_iter", d.h2d_bytes as f64);
+    suite.annotate("d2h_bytes_per_iter", d.d2h_bytes as f64);
+
+    // ---- cached path: token batch uploaded once per batch, parameters
+    // resident per (state, version) ----
+    let cached_r = suite.bench(
+        &format!("score_matrix 32 seqs x {n_routers} routers (device cache)"),
+        || {
+            std::hint::black_box(
+                score_matrix(&engine, &mixture.routers, &mixture.router_meta, &seqs, m).unwrap(),
+            );
+        },
+    );
+    println!("    -> {:.0} seqs/s", cached_r.throughput(32.0));
+    let s0 = engine.stats();
+    std::hint::black_box(
+        score_matrix(&engine, &mixture.routers, &mixture.router_meta, &seqs, m).unwrap(),
+    );
+    let d = engine.stats().since(&s0);
+    suite.annotate("h2d_bytes_per_iter", d.h2d_bytes as f64);
+    suite.annotate("h2d_bytes_avoided_per_iter", d.h2d_bytes_avoided as f64);
+    suite.annotate("uploads_avoided_per_iter", d.uploads_avoided as f64);
+    println!(
+        "    -> cache speedup vs seed path: {:.2}x seqs/s, h2d reduction {:.0}x",
+        seed_r.mean_ns / cached_r.mean_ns,
+        if d.h2d_bytes > 0 {
+            (d.h2d_bytes + d.h2d_bytes_avoided) as f64 / d.h2d_bytes as f64
+        } else {
+            f64::INFINITY
+        }
+    );
+
+    // consistency guard: both paths must produce identical scores
+    assert_eq!(
+        seed_path(&engine),
+        score_matrix(&engine, &mixture.routers, &mixture.router_meta, &seqs, m).unwrap(),
+        "cached score_matrix diverged from the seed path"
+    );
+
+    let nll = score_matrix(&engine, &mixture.routers, &mixture.router_meta, &seqs, m).unwrap();
     suite.bench("argmin routing decision x 32", || {
         std::hint::black_box(argmin_assign(&nll));
     });
@@ -63,20 +150,36 @@ fn main() {
         })
         .collect();
     let r = suite.bench("serve 32 requests end-to-end", || {
-        std::hint::black_box(serve(&engine, &mixture, &requests, 32).unwrap());
+        std::hint::black_box(serve(&engine, &mixture, &requests, m).unwrap());
     });
     println!("    -> {:.1} req/s", r.throughput(32.0));
+    let s0 = engine.stats();
+    std::hint::black_box(serve(&engine, &mixture, &requests, m).unwrap());
+    let d = engine.stats().since(&s0);
+    suite.annotate("h2d_bytes_per_iter", d.h2d_bytes as f64);
+    suite.annotate("h2d_bytes_avoided_per_iter", d.h2d_bytes_avoided as f64);
 
     // routing overhead share of the serve path
     let score_only = suite.bench("routing-only share (score+argmin)", || {
         let nll =
-            score_matrix(&engine, &mixture.routers, &mixture.router_meta, &seqs, 32).unwrap();
+            score_matrix(&engine, &mixture.routers, &mixture.router_meta, &seqs, m).unwrap();
         std::hint::black_box(argmin_assign(&nll));
     });
     println!(
         "    -> routing share of serving: {:.1}% (paper claims ~3% at 1.3B scale; \
          tiny experts inflate the ratio here)",
         score_only.mean_ns / r.mean_ns * 100.0
+    );
+
+    let stats = engine.stats();
+    println!(
+        "\nengine totals: {} uploads ({} B h2d), {} avoided ({} B), {} param uploads, {} evictions",
+        stats.uploads,
+        stats.h2d_bytes,
+        stats.uploads_avoided,
+        stats.h2d_bytes_avoided,
+        stats.param_uploads,
+        stats.cache_evictions
     );
 
     suite.write_json().unwrap();

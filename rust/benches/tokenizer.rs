@@ -23,10 +23,26 @@ fn main() {
     let bpe = BpeTrainer::new(512).train(corpus.texts()).unwrap();
     let doc = Corpus::generate(1, 4000, 7, None).docs.pop().unwrap().text;
     let bytes = doc.len() as f64;
-    let r = suite.bench("encode 4KB document", || {
+
+    // seed encoder (full rescan, O(n²·merges)) as the before/after baseline
+    let r_ref = suite.bench("encode 4KB document (seed O(n^2) rescan)", || {
+        std::hint::black_box(bpe.encode_reference(&doc));
+    });
+    println!("    -> {:.2} MB/s", r_ref.throughput(bytes) / 1e6);
+
+    let r = suite.bench("encode 4KB document (heap single-pass)", || {
         std::hint::black_box(bpe.encode(&doc));
     });
-    println!("    -> {:.2} MB/s", r.throughput(bytes) / 1e6);
+    println!(
+        "    -> {:.2} MB/s ({:.1}x vs seed encoder)",
+        r.throughput(bytes) / 1e6,
+        r_ref.mean_ns / r.mean_ns
+    );
+    assert_eq!(
+        bpe.encode(&doc),
+        bpe.encode_reference(&doc),
+        "heap encoder diverged from reference on the bench document"
+    );
 
     let ids = bpe.encode(&doc);
     let r = suite.bench("decode 4KB document", || {

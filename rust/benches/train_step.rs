@@ -1,23 +1,40 @@
 //! Bench: the XLA hot path — fused train_step, eval_nll and prefix
-//! scoring per variant. Reports tokens/s and the literal-copy overhead
-//! that §Perf tracks.
+//! scoring per variant. Reports tokens/s plus per-row host↔device
+//! transfer bytes from `EngineStats` (the literal-copy overhead §Perf
+//! tracks, and what the device-resident buffer cache eliminates on the
+//! scoring/eval rows).
 
 use std::time::Duration;
 
 use smalltalk::data::corpus::Corpus;
 use smalltalk::data::SequenceGen;
-use smalltalk::runtime::{Engine, TrainState};
+use smalltalk::runtime::{locate_artifacts, Engine, TrainState};
 use smalltalk::tokenizer::BpeTrainer;
 use smalltalk::util::bench::BenchSuite;
 
 fn main() {
-    let engine = Engine::new("artifacts").expect("run `make artifacts`");
+    let Some(artifacts) = locate_artifacts() else {
+        eprintln!("[train_step bench] no artifacts/manifest.json — run `make artifacts`; skipping");
+        return;
+    };
+    let engine = Engine::new(artifacts).expect("loading artifacts");
     let corpus = Corpus::generate(60, 400, 42, None);
     let bpe = BpeTrainer::new(512).train(corpus.texts()).unwrap();
 
     let mut suite = BenchSuite::new("train_step")
         .with_budget(Duration::from_millis(500), Duration::from_secs(5));
     suite.header();
+
+    // measure the transfer bytes of one steady-state call (deterministic
+    // given the shapes, so a single sample is exact)
+    fn annotate_transfer(suite: &mut BenchSuite, engine: &Engine, call: &mut dyn FnMut()) {
+        let s0 = engine.stats();
+        call();
+        let d = engine.stats().since(&s0);
+        suite.annotate("h2d_bytes_per_iter", d.h2d_bytes as f64);
+        suite.annotate("d2h_bytes_per_iter", d.d2h_bytes as f64);
+        suite.annotate("h2d_bytes_avoided_per_iter", d.h2d_bytes_avoided as f64);
+    }
 
     for variant in ["router_micro", "router_sm", "expert_sm", "expert_md"] {
         let Ok(meta) = engine.variant(variant) else {
@@ -37,6 +54,9 @@ fn main() {
             std::hint::black_box(st.train_step(&engine, &train_batch, &meta).unwrap());
         });
         println!("    -> {:.1}k tokens/s", r.throughput(tokens) / 1e3);
+        annotate_transfer(&mut suite, &engine, &mut || {
+            std::hint::black_box(st.train_step(&engine, &train_batch, &meta).unwrap());
+        });
 
         let eval_batch: Vec<Vec<u32>> = gen
             .batch(meta.eval_batch)
@@ -50,6 +70,9 @@ fn main() {
             "    -> {:.1}k tokens/s",
             r.throughput((meta.eval_batch * meta.seq_len) as f64) / 1e3
         );
+        annotate_transfer(&mut suite, &engine, &mut || {
+            std::hint::black_box(st.eval_nll(&engine, &eval_batch, &meta).unwrap());
+        });
 
         let m = *meta.prefix_lens.iter().min().unwrap_or(&32);
         let prefix_batch: Vec<Vec<u32>> = gen
@@ -64,12 +87,26 @@ fn main() {
             "    -> {:.0} sequences/s",
             r.throughput(meta.prefix_batch as f64)
         );
+        annotate_transfer(&mut suite, &engine, &mut || {
+            std::hint::black_box(st.prefix_nll(&engine, &prefix_batch, &meta, m).unwrap());
+        });
     }
 
     let stats = engine.stats();
     println!(
         "\nengine: {} compiles {:.1}s total, {} executions {:.1}s total",
         stats.compiles, stats.compile_secs, stats.executions, stats.execute_secs
+    );
+    println!(
+        "transfers: {} uploads / {} B h2d, {} B d2h; {} uploads avoided / {} B \
+         (params resident per state version: {} param uploads, {} evictions)",
+        stats.uploads,
+        stats.h2d_bytes,
+        stats.d2h_bytes,
+        stats.uploads_avoided,
+        stats.h2d_bytes_avoided,
+        stats.param_uploads,
+        stats.cache_evictions
     );
     suite.write_json().unwrap();
 }

@@ -52,9 +52,9 @@ pub fn train_dense_batched(
         let steps = remaining.min(32);
         let rows = gen.batch(steps * batch_rows);
         for s in 0..steps {
-            let batch: Vec<Vec<u32>> = rows[s * batch_rows..(s + 1) * batch_rows]
+            let batch: Vec<&[u32]> = rows[s * batch_rows..(s + 1) * batch_rows]
                 .iter()
-                .map(|r| r.tokens.clone())
+                .map(|r| r.tokens.as_slice())
                 .collect();
             let loss = state.train_step_auto(engine, &batch, &meta)?;
             if state.step % 10 == 0 || remaining - s <= 1 {

@@ -118,10 +118,11 @@ pub fn train_routers(
             let mut cursor = 0usize;
             let mut last_loss = 0.0f32;
             for _ in 0..cfg.steps_per_round {
-                let mut batch: Vec<Vec<u32>> = Vec::with_capacity(meta.train_batch);
+                // batch by reference into the chunk — no token clones
+                let mut batch: Vec<&[u32]> = Vec::with_capacity(meta.train_batch);
                 for _ in 0..meta.train_batch {
                     let s = segment[cursor % segment.len()];
-                    batch.push(chunk[s].tokens.clone());
+                    batch.push(chunk[s].tokens.as_slice());
                     cursor += 1;
                 }
                 last_loss = router.train_step(engine, &batch, &meta)?;

@@ -62,9 +62,10 @@ pub fn train_expert_continue(
     let mut cursor = 0usize;
     let mut last = 0.0f32;
     for step in 0..cfg.steps {
-        let mut batch: Vec<Vec<u32>> = Vec::with_capacity(meta.train_batch);
+        // batch by reference into the segment — no token clones
+        let mut batch: Vec<&[u32]> = Vec::with_capacity(meta.train_batch);
         for _ in 0..meta.train_batch {
-            batch.push(segment[cursor % segment.len()].tokens.clone());
+            batch.push(segment[cursor % segment.len()].tokens.as_slice());
             cursor += 1;
         }
         last = state.train_step(engine, &batch, meta)?;

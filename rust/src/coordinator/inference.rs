@@ -6,14 +6,17 @@
 //! scored by every router; the argmin router's expert alone evaluates the
 //! sequence. [`serve`] implements the batched request loop: requests are
 //! routed, grouped per expert, and executed in expert-batch-sized chunks
-//! — the dispatch pattern a vLLM-style front-end would use.
+//! — the dispatch pattern a vLLM-style front-end would use. The loop is
+//! allocation-light: requests are batched by index over borrowed token
+//! rows (no `Sequence`/`Vec<u32>` clones), and router/expert parameters
+//! stay device-resident across waves via the engine's buffer cache.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
 use super::assignment::argmin_assign;
-use super::scoring::score_matrix;
+use super::scoring::{batch_spans, score_matrix, score_matrix_rows};
 use crate::data::Sequence;
 use crate::runtime::{Engine, TrainState, VariantMeta};
 
@@ -36,6 +39,14 @@ impl Mixture {
         Ok(argmin_assign(&nll).expert_of)
     }
 
+    /// [`Mixture::route`] over borrowed token rows (full sequences; the
+    /// first `m` tokens of each row are scored).
+    pub fn route_rows(&self, engine: &Engine, rows: &[&[u32]], m: usize) -> Result<Vec<usize>> {
+        let prefixes: Vec<&[u32]> = rows.iter().map(|r| &r[..m.min(r.len())]).collect();
+        let nll = score_matrix_rows(engine, &self.routers, &self.router_meta, &prefixes, m)?;
+        Ok(argmin_assign(&nll).expert_of)
+    }
+
     /// Per-sequence full NLL under the routed expert, grouped per expert
     /// for batching. Returns (nll, expert) per input sequence.
     pub fn eval_routed(
@@ -51,12 +62,9 @@ impl Mixture {
             if idx.is_empty() {
                 continue;
             }
-            let nll = eval_nll_all(
-                engine,
-                &self.experts[e],
-                &self.expert_meta,
-                &idx.iter().map(|&i| seqs[i].tokens.clone()).collect::<Vec<_>>(),
-            )?;
+            // batch by index over borrowed rows — no token clones
+            let rows: Vec<&[u32]> = idx.iter().map(|&i| seqs[i].tokens.as_slice()).collect();
+            let nll = eval_nll_all(engine, &self.experts[e], &self.expert_meta, &rows)?;
             for (k, &i) in idx.iter().enumerate() {
                 out[i] = (nll[k], e);
             }
@@ -74,25 +82,27 @@ impl Mixture {
 }
 
 /// Evaluate full-sequence NLL for an arbitrary number of rows, padding the
-/// tail to the compiled eval batch shape.
-pub fn eval_nll_all(
+/// tail to the compiled eval batch shape (by reference — padding rows are
+/// discarded). Rows may be owned vectors or borrowed slices.
+pub fn eval_nll_all<R: AsRef<[u32]>>(
     engine: &Engine,
     state: &TrainState,
     meta: &VariantMeta,
-    rows: &[Vec<u32>],
+    rows: &[R],
 ) -> Result<Vec<f32>> {
     let bs = meta.eval_batch;
     let mut out = Vec::with_capacity(rows.len());
-    let mut i = 0;
-    while i < rows.len() {
-        let real = (rows.len() - i).min(bs);
-        let mut batch: Vec<Vec<u32>> = rows[i..i + real].to_vec();
+    for (start, real) in batch_spans(rows.len(), bs) {
+        let mut batch: Vec<&[u32]> = rows[start..start + real]
+            .iter()
+            .map(AsRef::as_ref)
+            .collect();
+        let pad = batch[real - 1];
         while batch.len() < bs {
-            batch.push(batch[real - 1].clone());
+            batch.push(pad);
         }
         let nll = state.eval_nll(engine, &batch, meta)?;
         out.extend_from_slice(&nll[..real]);
-        i += real;
     }
     Ok(out)
 }
@@ -104,7 +114,7 @@ pub fn dense_perplexity(
     meta: &VariantMeta,
     seqs: &[Sequence],
 ) -> Result<f64> {
-    let rows: Vec<Vec<u32>> = seqs.iter().map(|s| s.tokens.clone()).collect();
+    let rows: Vec<&[u32]> = seqs.iter().map(|s| s.tokens.as_slice()).collect();
     let nll = eval_nll_all(engine, state, meta, &rows)?;
     let total: f64 = nll.iter().map(|&n| n as f64).sum();
     Ok((total / (seqs.len() * meta.seq_len) as f64).exp())
@@ -122,27 +132,41 @@ pub struct Request {
 }
 
 /// The server's answer.
+///
+/// Timing semantics (unified): both latency fields are **mean microseconds
+/// per request** over the batch that processed this request. Routing is a
+/// single batched score-matrix over the whole wave, so `route_micros` is
+/// wave-total / wave-size and identical for every response in a wave;
+/// execution is batched per expert group, so `exec_micros` is group-total /
+/// group-size and identical within a group. Neither is an isolated
+/// single-request latency — that is the batched-serving cost model.
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
     pub expert: usize,
     pub nll: f32,
+    /// Mean routing microseconds per request (amortized over the wave).
     pub route_micros: u128,
+    /// Mean expert-execution microseconds per request (amortized over the
+    /// request's expert group).
     pub exec_micros: u128,
 }
 
+impl Response {
+    /// Amortized end-to-end latency attributed to this request.
+    pub fn total_micros(&self) -> u128 {
+        self.route_micros + self.exec_micros
+    }
+}
+
 /// Batched serving: route all queued requests, group by expert, execute.
-/// Returns responses in input order plus aggregate wall time.
+/// Returns responses in input order plus amortized per-request timings
+/// (see [`Response`] for the exact semantics).
 pub fn serve(engine: &Engine, mixture: &Mixture, requests: &[Request], m: usize) -> Result<Vec<Response>> {
-    let seqs: Vec<Sequence> = requests
-        .iter()
-        .map(|r| Sequence {
-            tokens: r.tokens.clone(),
-            domain: usize::MAX,
-        })
-        .collect();
+    // borrow token rows straight out of the requests — no Sequence clones
+    let rows: Vec<&[u32]> = requests.iter().map(|r| r.tokens.as_slice()).collect();
     let t0 = Instant::now();
-    let routes = mixture.route(engine, &seqs, m)?;
+    let routes = mixture.route_rows(engine, &rows, m)?;
     let route_us = t0.elapsed().as_micros() / requests.len().max(1) as u128;
 
     let mut responses: Vec<Response> = requests
@@ -162,15 +186,9 @@ pub fn serve(engine: &Engine, mixture: &Mixture, requests: &[Request], m: usize)
         if idx.is_empty() {
             continue;
         }
+        let group: Vec<&[u32]> = idx.iter().map(|&i| rows[i]).collect();
         let t1 = Instant::now();
-        let nll = eval_nll_all(
-            engine,
-            &mixture.experts[e],
-            &mixture.expert_meta,
-            &idx.iter()
-                .map(|&i| requests[i].tokens.clone())
-                .collect::<Vec<_>>(),
-        )?;
+        let nll = eval_nll_all(engine, &mixture.experts[e], &mixture.expert_meta, &group)?;
         let exec_us = t1.elapsed().as_micros() / idx.len() as u128;
         for (k, &i) in idx.iter().enumerate() {
             responses[i].nll = nll[k];

@@ -24,4 +24,5 @@ pub use em::{train_routers, EmConfig, TrainedRouters};
 pub use expert::{train_expert, ExpertConfig};
 pub use inference::{dense_perplexity, serve, Mixture, Request, Response};
 pub use pipeline::{run_pipeline, PipelineConfig, PipelineResult};
+pub use scoring::{score_matrix, score_matrix_rows};
 pub use sharding::{shard_corpus, Shards};

@@ -131,6 +131,17 @@ pub fn run_pipeline(engine: &Engine, bpe: &Bpe, cfg: &PipelineConfig) -> Result<
         experts.push(state);
     }
 
+    // Transfer accounting: engine-lifetime totals at pipeline completion,
+    // so run records show how much host↔device traffic the device-resident
+    // buffer cache saved (uploads_avoided are copies the literal-per-call
+    // path would have performed).
+    let stats = engine.stats();
+    log.scalar("engine/h2d_bytes", 0.0, stats.h2d_bytes as f64);
+    log.scalar("engine/d2h_bytes", 0.0, stats.d2h_bytes as f64);
+    log.scalar("engine/h2d_bytes_avoided", 0.0, stats.h2d_bytes_avoided as f64);
+    log.scalar("engine/uploads_avoided", 0.0, stats.uploads_avoided as f64);
+    log.scalar("engine/param_uploads", 0.0, stats.param_uploads as f64);
+
     Ok(PipelineResult {
         mixture: Mixture {
             routers: trained.routers,

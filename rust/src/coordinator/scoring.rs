@@ -1,11 +1,32 @@
 //! Batched prefix scoring: the score matrix `nll[seq][router]` behind
 //! every assignment (Eq. 4). Pads the tail batch to the compiled batch
-//! shape and discards the padding rows.
+//! shape (repeating the last row *by reference* — no clones) and discards
+//! the padding rows.
+//!
+//! Transfer discipline: each token batch is uploaded to the device **once**
+//! and fanned across all E routers, and router parameters are served from
+//! the engine's `(state, version)` device cache — so a B-batch × E-router
+//! score matrix moves B token uploads instead of the seed path's B×E token
+//! + B×E parameter uploads.
 
 use anyhow::Result;
 
 use crate::data::Sequence;
+use crate::runtime::engine::tokens_literal;
 use crate::runtime::{Engine, TrainState, VariantMeta};
+
+/// `(start, real_rows)` spans that tile `n` items into `bs`-sized batches;
+/// the final span may be short (the caller pads it to the compiled shape).
+pub(crate) fn batch_spans(n: usize, bs: usize) -> Vec<(usize, usize)> {
+    let mut spans = Vec::with_capacity(n.div_ceil(bs.max(1)));
+    let mut start = 0;
+    while start < n {
+        let real = (n - start).min(bs);
+        spans.push((start, real));
+        start += real;
+    }
+    spans
+}
 
 /// Score all sequences' `m`-token prefixes under every router.
 /// Returns `nll[seq][router]` (summed prefix NLL — lower is better).
@@ -16,43 +37,39 @@ pub fn score_matrix(
     seqs: &[Sequence],
     m: usize,
 ) -> Result<Vec<Vec<f32>>> {
-    let mut out = vec![vec![0.0f32; routers.len()]; seqs.len()];
-    let bs = meta.prefix_batch;
-    let mut batch: Vec<Vec<u32>> = Vec::with_capacity(bs);
-    let mut batch_idx: Vec<usize> = Vec::with_capacity(bs);
+    let rows: Vec<&[u32]> = seqs.iter().map(|s| s.prefix(m)).collect();
+    score_matrix_rows(engine, routers, meta, &rows, m)
+}
 
-    let flush = |engine: &Engine,
-                     batch: &mut Vec<Vec<u32>>,
-                     batch_idx: &mut Vec<usize>,
-                     out: &mut Vec<Vec<f32>>|
-     -> Result<()> {
-        if batch.is_empty() {
-            return Ok(());
-        }
-        let real = batch.len();
-        // pad to the compiled batch shape by repeating the last row
+/// [`score_matrix`] over borrowed token rows (each row is the `m`-token
+/// prefix to score). This is the allocation-free entry the serving loop
+/// uses — requests never get wrapped into `Sequence` clones.
+pub fn score_matrix_rows(
+    engine: &Engine,
+    routers: &[TrainState],
+    meta: &VariantMeta,
+    rows: &[&[u32]],
+    m: usize,
+) -> Result<Vec<Vec<f32>>> {
+    let mut out = vec![vec![0.0f32; routers.len()]; rows.len()];
+    let bs = meta.prefix_batch;
+    for (start, real) in batch_spans(rows.len(), bs) {
+        let mut batch: Vec<&[u32]> = rows[start..start + real].to_vec();
+        // pad to the compiled batch shape by repeating the last row (by
+        // reference; padding outputs are discarded below)
+        let pad = batch[real - 1];
         while batch.len() < bs {
-            batch.push(batch[real - 1].clone());
+            batch.push(pad);
         }
+        // one token upload per batch, shared by every router
+        let tokens = engine.upload(&tokens_literal(&batch, m)?)?;
         for (r, router) in routers.iter().enumerate() {
-            let scores = router.prefix_nll(engine, batch, meta, m)?;
+            let scores = router.prefix_nll_device(engine, &tokens, meta, m)?;
             for (i, &s) in scores.iter().take(real).enumerate() {
-                out[batch_idx[i]][r] = s;
+                out[start + i][r] = s;
             }
         }
-        batch.clear();
-        batch_idx.clear();
-        Ok(())
-    };
-
-    for (i, s) in seqs.iter().enumerate() {
-        batch.push(s.prefix(m).to_vec());
-        batch_idx.push(i);
-        if batch.len() == bs {
-            flush(engine, &mut batch, &mut batch_idx, &mut out)?;
-        }
     }
-    flush(engine, &mut batch, &mut batch_idx, &mut out)?;
     Ok(out)
 }
 
@@ -122,5 +139,32 @@ mod tests {
     #[test]
     fn purity_empty() {
         assert_eq!(routing_purity(&[], &[], 2), 0.0);
+    }
+
+    #[test]
+    fn batch_spans_tile_exactly() {
+        // aligned
+        assert_eq!(batch_spans(8, 4), vec![(0, 4), (4, 4)]);
+        // misaligned tail is short, never padded here
+        assert_eq!(batch_spans(10, 4), vec![(0, 4), (4, 4), (8, 2)]);
+        // fewer items than one batch
+        assert_eq!(batch_spans(3, 32), vec![(0, 3)]);
+        // empty input -> no spans
+        assert!(batch_spans(0, 4).is_empty());
+    }
+
+    #[test]
+    fn batch_spans_cover_all_indices_once() {
+        for n in [1usize, 5, 31, 32, 33, 97] {
+            let spans = batch_spans(n, 32);
+            let mut seen = vec![false; n];
+            for (start, real) in spans {
+                for i in start..start + real {
+                    assert!(!seen[i], "index {i} covered twice");
+                    seen[i] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "n={n} not fully covered");
+        }
     }
 }

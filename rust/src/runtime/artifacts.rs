@@ -180,6 +180,28 @@ impl Manifest {
     }
 }
 
+/// Find the AOT artifacts directory, or `None` when the artifacts have not
+/// been compiled (tests and benches skip cleanly in that case).
+///
+/// Search order: `$SMALLTALK_ARTIFACTS`, `./artifacts` (repo root, where
+/// `make artifacts` writes), then relative to the crate manifest for
+/// invocations from other working directories.
+pub fn locate_artifacts() -> Option<PathBuf> {
+    let mut candidates: Vec<PathBuf> = Vec::new();
+    if let Ok(p) = std::env::var("SMALLTALK_ARTIFACTS") {
+        candidates.push(PathBuf::from(p));
+    }
+    candidates.push(PathBuf::from("artifacts"));
+    candidates.push(PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")));
+    candidates.push(PathBuf::from(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../artifacts"
+    )));
+    candidates
+        .into_iter()
+        .find(|p| p.join("manifest.json").is_file())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

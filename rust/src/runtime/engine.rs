@@ -1,36 +1,155 @@
-//! The PJRT engine: one CPU client + a compile cache.
+//! The PJRT engine: one CPU client, a compile cache, and a device-resident
+//! buffer cache.
 //!
 //! Compilation is the expensive operation (seconds per module); execution
 //! is the hot path. Every expert of a given variant shares the same
 //! compiled executable — only the parameter *literals* differ — so the
-//! cache is keyed by `(variant, entry_point)`.
+//! compile cache is keyed by `(variant, entry_point)`.
+//!
+//! Parameter vectors are the dominant host↔device traffic: a serving wave
+//! scores B token batches under E routers, and the seed implementation
+//! re-uploaded every router's full parameter vector on every call (B×E
+//! parameter transfers where E would do). The [`DeviceBuffer`] /
+//! [`Engine::state_buffer`] path keeps parameters resident across calls,
+//! keyed by `(state_id, version)` — [`crate::runtime::TrainState`] bumps
+//! its version whenever parameters change, so stale buffers are replaced
+//! automatically. [`EngineStats`] accounts every transferred byte so the
+//! benches can report the reduction.
 
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::path::Path;
 use std::rc::Rc;
-use std::cell::RefCell;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
-use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 use super::artifacts::{Manifest, VariantMeta};
 
-/// Wall-clock accounting of engine activity, used by §Perf and the comm
-/// ledger to separate compile time from steady-state execution.
+/// Wall-clock + transfer accounting of engine activity, used by §Perf, the
+/// comm ledger, and the benches to separate compile time from steady-state
+/// execution and to prove parameters upload once per `(state, version)`.
 #[derive(Clone, Debug, Default)]
 pub struct EngineStats {
     pub compiles: usize,
     pub compile_secs: f64,
     pub executions: usize,
     pub execute_secs: f64,
+    /// Host→device buffer copies actually performed.
+    pub uploads: usize,
+    /// Bytes moved host→device by those copies.
+    pub h2d_bytes: u64,
+    /// Bytes read back device→host from execution outputs.
+    pub d2h_bytes: u64,
+    /// Inputs served from an already-resident buffer — each one is a copy
+    /// the seed (literal-per-call) path would have performed.
+    pub uploads_avoided: usize,
+    /// Bytes those avoided copies would have moved.
+    pub h2d_bytes_avoided: u64,
+    /// Uploads that went through the `(state_id, version)` device cache
+    /// (i.e. parameter uploads). One per version, not one per call.
+    pub param_uploads: usize,
+    /// Cache entries replaced because the state's version moved on.
+    pub cache_evictions: usize,
+}
+
+impl EngineStats {
+    /// Stats accumulated since an earlier snapshot (for per-bench-row
+    /// transfer reporting).
+    pub fn since(&self, earlier: &EngineStats) -> EngineStats {
+        EngineStats {
+            compiles: self.compiles - earlier.compiles,
+            compile_secs: self.compile_secs - earlier.compile_secs,
+            executions: self.executions - earlier.executions,
+            execute_secs: self.execute_secs - earlier.execute_secs,
+            uploads: self.uploads - earlier.uploads,
+            h2d_bytes: self.h2d_bytes - earlier.h2d_bytes,
+            d2h_bytes: self.d2h_bytes - earlier.d2h_bytes,
+            uploads_avoided: self.uploads_avoided - earlier.uploads_avoided,
+            h2d_bytes_avoided: self.h2d_bytes_avoided - earlier.h2d_bytes_avoided,
+            param_uploads: self.param_uploads - earlier.param_uploads,
+            cache_evictions: self.cache_evictions - earlier.cache_evictions,
+        }
+    }
+}
+
+/// A device-resident input buffer plus its transfer size.
+///
+/// The `fresh` flag marks a buffer whose upload was just paid for; its
+/// first consumption by [`Engine::run_buffers`] is not counted as an
+/// avoided upload, every later consumption is.
+pub struct DeviceBuffer {
+    buf: Rc<PjRtBuffer>,
+    bytes: u64,
+    fresh: Cell<bool>,
+}
+
+impl DeviceBuffer {
+    /// Transfer size of the underlying buffer in bytes.
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    fn pjrt(&self) -> &PjRtBuffer {
+        &self.buf
+    }
+}
+
+/// One engine input: a host literal (uploaded for this call) or a
+/// device-resident buffer (reused across calls).
+pub enum Arg<'a> {
+    Lit(&'a Literal),
+    Dev(&'a DeviceBuffer),
+}
+
+/// `(owner_id → (version, payload))` cache with replace-on-version-bump
+/// eviction: at most one live entry per owner, and a lookup with a newer
+/// version replaces whatever was resident.
+struct VersionedCache<V> {
+    map: HashMap<u64, (u64, V)>,
+}
+
+impl<V> VersionedCache<V> {
+    fn new() -> Self {
+        VersionedCache {
+            map: HashMap::new(),
+        }
+    }
+
+    fn get(&self, id: u64, version: u64) -> Option<&V> {
+        match self.map.get(&id) {
+            Some((v, payload)) if *v == version => Some(payload),
+            _ => None,
+        }
+    }
+
+    /// Insert; returns true when an older-version entry was evicted.
+    fn insert(&mut self, id: u64, version: u64, payload: V) -> bool {
+        self.map.insert(id, (version, payload)).is_some()
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    fn clear(&mut self) {
+        self.map.clear();
+    }
 }
 
 pub struct Engine {
     client: PjRtClient,
     manifest: Manifest,
     cache: RefCell<HashMap<(String, String), Rc<PjRtLoadedExecutable>>>,
+    device_cache: RefCell<VersionedCache<(Rc<PjRtBuffer>, u64)>>,
     stats: RefCell<EngineStats>,
+}
+
+/// Transfer size of a literal. Every dtype this repo moves (f32/i32/u32)
+/// is 4 bytes wide; tuple literals sum their members.
+pub fn literal_bytes(lit: &Literal) -> u64 {
+    lit.element_count() as u64 * 4
 }
 
 impl Engine {
@@ -42,6 +161,7 @@ impl Engine {
             client,
             manifest,
             cache: RefCell::new(HashMap::new()),
+            device_cache: RefCell::new(VersionedCache::new()),
             stats: RefCell::new(EngineStats::default()),
         })
     }
@@ -56,6 +176,17 @@ impl Engine {
 
     pub fn stats(&self) -> EngineStats {
         self.stats.borrow().clone()
+    }
+
+    /// Live entries in the `(state, version)` device cache.
+    pub fn device_cache_entries(&self) -> usize {
+        self.device_cache.borrow().len()
+    }
+
+    /// Drop every device-resident buffer (frees device memory; the next
+    /// call per state re-uploads).
+    pub fn clear_device_cache(&self) {
+        self.device_cache.borrow_mut().clear();
     }
 
     /// Load + compile an entry point (cached).
@@ -85,25 +216,109 @@ impl Engine {
         Ok(exe)
     }
 
-    /// Execute an entry point with literal inputs, returning the flattened
-    /// tuple elements (jax entry points always return a tuple).
+    /// Raw host→device copy with transfer accounting.
+    fn upload_raw(&self, lit: &Literal) -> Result<(Rc<PjRtBuffer>, u64)> {
+        let bytes = literal_bytes(lit);
+        let buf = self
+            .client
+            .buffer_from_host_literal(None, lit)
+            .map_err(anyhow::Error::msg)?;
+        let mut st = self.stats.borrow_mut();
+        st.uploads += 1;
+        st.h2d_bytes += bytes;
+        Ok((Rc::new(buf), bytes))
+    }
+
+    /// Upload a literal once and hold it device-resident; reuse the
+    /// returned [`DeviceBuffer`] across any number of [`run_buffers`]
+    /// calls (e.g. one token batch scored under E routers).
     ///
-    /// Inputs are uploaded to Rust-owned `PjRtBuffer`s and executed via
-    /// `execute_b`: the crate's literal-taking `execute` leaks every input
-    /// buffer (the C shim `release()`s them into the executable call and
-    /// never frees them — ~11 MB/step at expert_sm scale, found during the
-    /// §Perf pass). Owning the buffers here means Drop reclaims them.
-    pub fn run(&self, variant: &str, entry: &str, args: &[Literal]) -> Result<Vec<Literal>> {
+    /// [`run_buffers`]: Engine::run_buffers
+    pub fn upload(&self, lit: &Literal) -> Result<DeviceBuffer> {
+        let (buf, bytes) = self.upload_raw(lit)?;
+        Ok(DeviceBuffer {
+            buf,
+            bytes,
+            fresh: Cell::new(true),
+        })
+    }
+
+    /// Device-resident buffer for a versioned owner (a `TrainState`'s
+    /// parameter vector). On a version hit the resident buffer is returned
+    /// without any host↔device traffic; on a miss `make` builds the
+    /// literal, it is uploaded once, and any stale older-version buffer
+    /// for the same owner is evicted.
+    pub fn state_buffer(
+        &self,
+        state_id: u64,
+        version: u64,
+        make: impl FnOnce() -> Literal,
+    ) -> Result<DeviceBuffer> {
+        if let Some((buf, bytes)) = self.device_cache.borrow().get(state_id, version) {
+            return Ok(DeviceBuffer {
+                buf: buf.clone(),
+                bytes: *bytes,
+                fresh: Cell::new(false),
+            });
+        }
+        let lit = make();
+        let (buf, bytes) = self.upload_raw(&lit)?;
+        let evicted = self
+            .device_cache
+            .borrow_mut()
+            .insert(state_id, version, (buf.clone(), bytes));
+        {
+            let mut st = self.stats.borrow_mut();
+            st.param_uploads += 1;
+            if evicted {
+                st.cache_evictions += 1;
+            }
+        }
+        Ok(DeviceBuffer {
+            buf,
+            bytes,
+            fresh: Cell::new(true),
+        })
+    }
+
+    /// Execute an entry point over a mix of device-resident buffers and
+    /// fresh literals, returning the flattened tuple elements (jax entry
+    /// points always return a tuple).
+    ///
+    /// Literal inputs are uploaded to Rust-owned `PjRtBuffer`s and freed
+    /// by Drop after the call: the crate's literal-taking `execute` leaks
+    /// every input buffer (the C shim `release()`s them into the
+    /// executable call and never frees them — ~11 MB/step at expert_sm
+    /// scale, found during the §Perf pass). Device-resident inputs are
+    /// borrowed and stay alive in their cache slot.
+    pub fn run_buffers(&self, variant: &str, entry: &str, args: &[Arg]) -> Result<Vec<Literal>> {
         let exe = self.executable(variant, entry)?;
         let t0 = Instant::now();
-        let inputs: Vec<xla::PjRtBuffer> = args
-            .iter()
-            .map(|lit| {
-                self.client
-                    .buffer_from_host_literal(None, lit)
-                    .map_err(anyhow::Error::msg)
-            })
-            .collect::<Result<_>>()?;
+        // Upload the literal inputs first so the borrow set below is stable.
+        let mut owned: Vec<Rc<PjRtBuffer>> = Vec::new();
+        for a in args {
+            if let Arg::Lit(lit) = a {
+                owned.push(self.upload_raw(lit)?.0);
+            }
+        }
+        let mut oi = 0usize;
+        let mut inputs: Vec<&PjRtBuffer> = Vec::with_capacity(args.len());
+        for a in args {
+            match a {
+                Arg::Lit(_) => {
+                    inputs.push(&owned[oi]);
+                    oi += 1;
+                }
+                Arg::Dev(d) => {
+                    if !d.fresh.replace(false) {
+                        let mut st = self.stats.borrow_mut();
+                        st.uploads_avoided += 1;
+                        st.h2d_bytes_avoided += d.bytes;
+                    }
+                    inputs.push(d.pjrt());
+                }
+            }
+        }
         let mut out = exe.execute_b(&inputs).map_err(anyhow::Error::msg)?;
         let first = out
             .pop()
@@ -120,10 +335,18 @@ impl Engine {
             let mut st = self.stats.borrow_mut();
             st.executions += 1;
             st.execute_secs += t0.elapsed().as_secs_f64();
+            st.d2h_bytes += literal_bytes(&lit);
         }
         // Entry points are lowered with return_tuple=True: the root is a
         // tuple even for single outputs. PJRT hands it back as one buffer.
         lit.to_tuple().map_err(anyhow::Error::msg)
+    }
+
+    /// Execute an entry point with literal inputs — the upload-per-call
+    /// path, kept for inputs that change every call (train batches, seeds).
+    pub fn run(&self, variant: &str, entry: &str, args: &[Literal]) -> Result<Vec<Literal>> {
+        let wrapped: Vec<Arg> = args.iter().map(Arg::Lit).collect();
+        self.run_buffers(variant, entry, &wrapped)
     }
 }
 
@@ -131,10 +354,13 @@ impl Engine {
 // Literal helpers — the repo's only conversion layer to/from XLA.
 // ---------------------------------------------------------------------
 
-/// Build an `i32[rows, cols]` literal from token rows.
-pub fn tokens_literal(rows: &[Vec<u32>], cols: usize) -> Result<Literal> {
+/// Build an `i32[rows, cols]` literal from token rows. Rows may be owned
+/// vectors or borrowed slices — callers batch by reference to avoid
+/// cloning token data (tail padding repeats the last row by reference).
+pub fn tokens_literal<R: AsRef<[u32]>>(rows: &[R], cols: usize) -> Result<Literal> {
     let mut flat: Vec<i32> = Vec::with_capacity(rows.len() * cols);
     for r in rows {
+        let r = r.as_ref();
         anyhow::ensure!(r.len() == cols, "row len {} != {}", r.len(), cols);
         flat.extend(r.iter().map(|&t| t as i32));
     }
@@ -182,9 +408,58 @@ mod tests {
     }
 
     #[test]
+    fn tokens_literal_accepts_borrowed_rows() {
+        let a = vec![1u32, 2];
+        let rows: Vec<&[u32]> = vec![&a, &a, &a];
+        let lit = tokens_literal(&rows, 2).unwrap();
+        assert_eq!(lit.element_count(), 6);
+    }
+
+    #[test]
     fn seed_literal_splits_u64() {
         let lit = seed_literal(0x1234_5678_9abc_def0).unwrap();
         let v = lit.to_vec::<u32>().unwrap();
         assert_eq!(v, vec![0x1234_5678, 0x9abc_def0]);
+    }
+
+    #[test]
+    fn literal_bytes_counts_four_byte_elements() {
+        assert_eq!(literal_bytes(&f32_literal(&[0.0; 10])), 40);
+        assert_eq!(literal_bytes(&scalar_f32(1.0)), 4);
+    }
+
+    #[test]
+    fn versioned_cache_hits_and_evicts() {
+        let mut c: VersionedCache<u32> = VersionedCache::new();
+        assert!(c.get(1, 0).is_none());
+        assert!(!c.insert(1, 0, 10));
+        assert_eq!(c.get(1, 0), Some(&10));
+        // a different version misses but does not remove
+        assert!(c.get(1, 1).is_none());
+        // bumping the version replaces (evicts) the old entry
+        assert!(c.insert(1, 1, 11));
+        assert!(c.get(1, 0).is_none());
+        assert_eq!(c.get(1, 1), Some(&11));
+        // independent owners coexist
+        assert!(!c.insert(2, 0, 20));
+        assert_eq!(c.len(), 2);
+        c.clear();
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn stats_since_subtracts() {
+        let mut a = EngineStats::default();
+        a.uploads = 5;
+        a.h2d_bytes = 500;
+        a.uploads_avoided = 2;
+        let mut b = a.clone();
+        b.uploads = 9;
+        b.h2d_bytes = 900;
+        b.uploads_avoided = 7;
+        let d = b.since(&a);
+        assert_eq!(d.uploads, 4);
+        assert_eq!(d.h2d_bytes, 400);
+        assert_eq!(d.uploads_avoided, 5);
     }
 }

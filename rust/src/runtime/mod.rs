@@ -15,6 +15,6 @@ pub mod artifacts;
 pub mod engine;
 pub mod state;
 
-pub use artifacts::{Manifest, VariantMeta};
-pub use engine::Engine;
+pub use artifacts::{locate_artifacts, Manifest, VariantMeta};
+pub use engine::{Arg, DeviceBuffer, Engine, EngineStats};
 pub use state::TrainState;

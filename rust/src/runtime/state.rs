@@ -1,25 +1,66 @@
 //! Host-resident training state for one model (router or expert).
 //!
-//! Parameters and AdamW moments live as flat `f32` vectors on the host and
-//! round-trip through PJRT literals each call. On this CPU-only testbed
-//! the copies are a few percent of step time (measured in EXPERIMENTS.md
-//! §Perf); the state is also what checkpoints serialize.
+//! Parameters and AdamW moments live as flat `f32` vectors on the host;
+//! the state is what checkpoints serialize. For device execution the
+//! parameter vector is uploaded through the engine's `(state_id, version)`
+//! device cache: scoring/eval calls reuse the resident buffer, and the
+//! version bump on every `train_step` (or any other parameter change)
+//! evicts stale buffers automatically. Token batches still round-trip per
+//! call — they are fresh data by definition — but batched callers upload
+//! them once per batch via [`Engine::upload`] and fan the buffer out
+//! across models.
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{ensure, Context, Result};
 
 use super::engine::{
-    f32_literal, scalar_f32, seed_literal, to_f32_scalar, to_f32_vec, tokens_literal, Engine,
+    f32_literal, scalar_f32, seed_literal, to_f32_scalar, to_f32_vec, tokens_literal, Arg,
+    DeviceBuffer, Engine,
 };
 use super::VariantMeta;
 
+/// Process-unique state ids: every `TrainState` (including clones, which
+/// diverge from their original the moment either trains) owns a distinct
+/// device-cache key space.
+static NEXT_STATE_ID: AtomicU64 = AtomicU64::new(1);
+
+fn fresh_state_id() -> u64 {
+    NEXT_STATE_ID.fetch_add(1, Ordering::Relaxed)
+}
+
 /// Flat parameter + optimizer state for one model instance.
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct TrainState {
     pub variant: String,
+    /// Flat parameters. If you mutate these directly (rather than through
+    /// `train_step`/checkpoint load), call [`TrainState::invalidate_device_cache`]
+    /// so resident device buffers are not served stale.
     pub params: Vec<f32>,
     pub m: Vec<f32>,
     pub v: Vec<f32>,
     pub step: u64,
+    /// Device-cache owner id (process-unique, fresh per construction/clone).
+    id: u64,
+    /// Bumped whenever `params` changes; part of the device-cache key.
+    version: u64,
+}
+
+impl Clone for TrainState {
+    fn clone(&self) -> Self {
+        // A clone gets its own cache identity: the two copies share bytes
+        // now but diverge independently, and `(id, version)` must uniquely
+        // identify parameter content.
+        TrainState {
+            variant: self.variant.clone(),
+            params: self.params.clone(),
+            m: self.m.clone(),
+            v: self.v.clone(),
+            step: self.step,
+            id: fresh_state_id(),
+            version: 0,
+        }
+    }
 }
 
 impl TrainState {
@@ -41,10 +82,14 @@ impl TrainState {
             m: vec![0.0; n],
             v: vec![0.0; n],
             step: 0,
+            id: fresh_state_id(),
+            version: 0,
         })
     }
 
     /// Construct from an existing parameter vector (checkpoint load).
+    /// Gets a fresh cache identity, so buffers cached for any previous
+    /// state are never confused with the loaded parameters.
     pub fn from_params(variant: &str, params: Vec<f32>, m: Vec<f32>, v: Vec<f32>, step: u64) -> Self {
         TrainState {
             variant: variant.to_string(),
@@ -52,6 +97,8 @@ impl TrainState {
             m,
             v,
             step,
+            id: fresh_state_id(),
+            version: 0,
         }
     }
 
@@ -59,9 +106,36 @@ impl TrainState {
         self.params.len()
     }
 
+    /// Device-cache owner id of this state.
+    pub fn state_id(&self) -> u64 {
+        self.id
+    }
+
+    /// Parameter-content version (monotonic; bumped on every change).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Declare that `params` changed outside `train_step` so the next
+    /// device call re-uploads instead of serving a stale resident buffer.
+    pub fn invalidate_device_cache(&mut self) {
+        self.version += 1;
+    }
+
+    /// The device-resident parameter buffer: uploads on first use per
+    /// version, then reuses (the cache lives on the engine).
+    pub fn params_buffer(&self, engine: &Engine) -> Result<DeviceBuffer> {
+        engine.state_buffer(self.id, self.version, || f32_literal(&self.params))
+    }
+
     /// One fused train step on a `[train_batch, seq_len+1]` token batch.
     /// Returns the mean next-token loss.
-    pub fn train_step(&mut self, engine: &Engine, batch: &[Vec<u32>], meta: &VariantMeta) -> Result<f32> {
+    pub fn train_step<R: AsRef<[u32]>>(
+        &mut self,
+        engine: &Engine,
+        batch: &[R],
+        meta: &VariantMeta,
+    ) -> Result<f32> {
         ensure!(
             batch.len() == meta.train_batch,
             "batch rows {} != train_batch {}",
@@ -75,7 +149,12 @@ impl TrainState {
     /// native batch uses `train_step`; any size in `meta.dense_batches`
     /// uses the matching `train_step_b{B}` (the paper's dense comparator
     /// trains the same number of steps at E x the expert batch).
-    pub fn train_step_auto(&mut self, engine: &Engine, batch: &[Vec<u32>], meta: &VariantMeta) -> Result<f32> {
+    pub fn train_step_auto<R: AsRef<[u32]>>(
+        &mut self,
+        engine: &Engine,
+        batch: &[R],
+        meta: &VariantMeta,
+    ) -> Result<f32> {
         if batch.len() == meta.train_batch {
             return self.train_step_entry(engine, batch, meta, "train_step");
         }
@@ -91,13 +170,16 @@ impl TrainState {
         self.train_step_entry(engine, batch, meta, &entry)
     }
 
-    fn train_step_entry(
+    fn train_step_entry<R: AsRef<[u32]>>(
         &mut self,
         engine: &Engine,
-        batch: &[Vec<u32>],
+        batch: &[R],
         meta: &VariantMeta,
         entry: &str,
     ) -> Result<f32> {
+        // Training mutates params every call, so there is nothing for the
+        // device cache to reuse — this stays on the literal path. The
+        // version bump below evicts any resident buffer of the old params.
         let tokens = tokens_literal(batch, meta.seq_len + 1)?;
         let out = engine.run(
             &self.variant,
@@ -115,37 +197,113 @@ impl TrainState {
         self.m = to_f32_vec(&out[1])?;
         self.v = to_f32_vec(&out[2])?;
         self.step += 1;
+        self.version += 1;
         to_f32_scalar(&out[3])
     }
 
     /// Per-sequence summed NLL over `[eval_batch, seq_len+1]` rows.
-    pub fn eval_nll(&self, engine: &Engine, batch: &[Vec<u32>], meta: &VariantMeta) -> Result<Vec<f32>> {
+    pub fn eval_nll<R: AsRef<[u32]>>(
+        &self,
+        engine: &Engine,
+        batch: &[R],
+        meta: &VariantMeta,
+    ) -> Result<Vec<f32>> {
         ensure!(batch.len() == meta.eval_batch, "eval batch size mismatch");
-        let tokens = tokens_literal(batch, meta.seq_len + 1)?;
-        let out = engine.run(&self.variant, "eval_nll", &[f32_literal(&self.params), tokens])?;
+        let tokens = engine.upload(&tokens_literal(batch, meta.seq_len + 1)?)?;
+        self.eval_nll_device(engine, &tokens)
+    }
+
+    /// `eval_nll` over an already-uploaded `[eval_batch, seq_len+1]` token
+    /// buffer (batched callers share one upload across models).
+    pub fn eval_nll_device(&self, engine: &Engine, tokens: &DeviceBuffer) -> Result<Vec<f32>> {
+        let params = self.params_buffer(engine)?;
+        let out = engine.run_buffers(
+            &self.variant,
+            "eval_nll",
+            &[Arg::Dev(&params), Arg::Dev(tokens)],
+        )?;
         to_f32_vec(out.first().context("eval_nll empty")?)
     }
 
     /// Router scoring: summed NLL of `[prefix_batch, m]` prefixes
     /// (Eq. 4 / Eq. 9 of the paper). `m` must be one of the variant's
     /// compiled `prefix_lens`.
-    pub fn prefix_nll(
+    pub fn prefix_nll<R: AsRef<[u32]>>(
         &self,
         engine: &Engine,
-        batch: &[Vec<u32>],
+        batch: &[R],
         meta: &VariantMeta,
         m: usize,
     ) -> Result<Vec<f32>> {
         ensure!(batch.len() == meta.prefix_batch, "prefix batch size mismatch");
+        Self::ensure_prefix_len(meta, m)?;
+        let tokens = engine.upload(&tokens_literal(batch, m)?)?;
+        self.prefix_nll_device(engine, &tokens, meta, m)
+    }
+
+    /// `prefix_nll` over an already-uploaded `[prefix_batch, m]` token
+    /// buffer. This is the scoring hot path: `score_matrix` uploads each
+    /// token batch once and fans it across all E routers, so the per-call
+    /// traffic is zero once router parameters are resident.
+    pub fn prefix_nll_device(
+        &self,
+        engine: &Engine,
+        tokens: &DeviceBuffer,
+        meta: &VariantMeta,
+        m: usize,
+    ) -> Result<Vec<f32>> {
+        Self::ensure_prefix_len(meta, m)?;
+        let params = self.params_buffer(engine)?;
+        let entry = format!("prefix_nll_{m}");
+        let out = engine.run_buffers(
+            &self.variant,
+            &entry,
+            &[Arg::Dev(&params), Arg::Dev(tokens)],
+        )?;
+        to_f32_vec(out.first().context("prefix_nll empty")?)
+    }
+
+    fn ensure_prefix_len(meta: &VariantMeta, m: usize) -> Result<()> {
         ensure!(
             meta.prefix_lens.contains(&m),
             "prefix length {m} not compiled for {} (have {:?})",
             meta.name,
             meta.prefix_lens
         );
-        let tokens = tokens_literal(batch, m)?;
-        let entry = format!("prefix_nll_{m}");
-        let out = engine.run(&self.variant, &entry, &[f32_literal(&self.params), tokens])?;
-        to_f32_vec(out.first().context("prefix_nll empty")?)
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state() -> TrainState {
+        TrainState::from_params("x", vec![1.0, 2.0], vec![0.0; 2], vec![0.0; 2], 0)
+    }
+
+    #[test]
+    fn fresh_states_get_distinct_ids() {
+        let a = state();
+        let b = state();
+        assert_ne!(a.state_id(), b.state_id());
+    }
+
+    #[test]
+    fn clone_gets_its_own_cache_identity() {
+        let a = state();
+        let b = a.clone();
+        assert_ne!(a.state_id(), b.state_id());
+        assert_eq!(b.params, a.params);
+        assert_eq!(b.version(), 0);
+    }
+
+    #[test]
+    fn invalidate_bumps_version() {
+        let mut a = state();
+        let v0 = a.version();
+        a.params[0] = 9.0;
+        a.invalidate_device_cache();
+        assert_eq!(a.version(), v0 + 1);
     }
 }

@@ -50,7 +50,82 @@ impl Bpe {
     }
 
     /// Encode UTF-8 text to token ids.
+    ///
+    /// Single pass over the byte string with a rank-priority heap: every
+    /// adjacent pair that is a known merge is a candidate; candidates pop
+    /// in `(rank, position)` order, so the lowest-rank merge always applies
+    /// first and equal-rank merges apply left to right — exactly the
+    /// greedy-by-rank semantics of the old full-rescan encoder (verified by
+    /// the `prop_encode_matches_reference_random_utf8` test) but O(n log n) instead
+    /// of O(n² · merges): merging only re-examines the two pairs around the
+    /// merge site instead of rescanning the whole sequence.
     pub fn encode(&self, text: &str) -> Vec<u32> {
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+
+        let mut ids: Vec<u32> = text.bytes().map(u32::from).collect();
+        let n = ids.len();
+        if n < 2 {
+            return ids;
+        }
+
+        // doubly linked list over positions; `n` is the end sentinel and
+        // usize::MAX the front sentinel
+        let mut next: Vec<usize> = (1..=n).collect();
+        let mut prev: Vec<usize> = std::iter::once(usize::MAX).chain(0..n - 1).collect();
+        let mut alive = vec![true; n];
+
+        // candidate = (rank, left position); the pair it refers to is
+        // merges[rank], so staleness is detected by re-checking the ids
+        let mut heap: BinaryHeap<Reverse<(u32, usize)>> = BinaryHeap::new();
+        for i in 0..n - 1 {
+            if let Some(&rank) = self.ranks.get(&(ids[i], ids[i + 1])) {
+                heap.push(Reverse((rank, i)));
+            }
+        }
+
+        while let Some(Reverse((rank, i))) = heap.pop() {
+            if !alive[i] {
+                continue;
+            }
+            let j = next[i];
+            if j >= n || !alive[j] {
+                continue;
+            }
+            let (l, r) = self.merges[rank as usize];
+            if ids[i] != l || ids[j] != r {
+                continue; // stale candidate: a neighbor merged first
+            }
+            // merge: position i becomes the new token, j is consumed
+            ids[i] = 256 + rank;
+            alive[j] = false;
+            let k = next[j];
+            next[i] = k;
+            if k < n {
+                prev[k] = i;
+            }
+            // only the two pairs touching the merge site can change
+            let p = prev[i];
+            if p != usize::MAX {
+                if let Some(&r2) = self.ranks.get(&(ids[p], ids[i])) {
+                    heap.push(Reverse((r2, p)));
+                }
+            }
+            if k < n {
+                if let Some(&r2) = self.ranks.get(&(ids[i], ids[k])) {
+                    heap.push(Reverse((r2, i)));
+                }
+            }
+        }
+
+        (0..n).filter(|&i| alive[i]).map(|i| ids[i]).collect()
+    }
+
+    /// The seed encoder: full rescan for the lowest-rank pair, then a
+    /// whole-sequence replacement pass, repeated to fixpoint —
+    /// O(n² · merges). Kept as the behavioral reference for the property
+    /// tests and the tokenizer bench's before/after comparison.
+    pub fn encode_reference(&self, text: &str) -> Vec<u32> {
         let mut ids: Vec<u32> = text.bytes().map(u32::from).collect();
         if ids.len() < 2 {
             return ids;
@@ -316,6 +391,53 @@ mod tests {
     fn rejects_bad_merge_table() {
         assert!(Bpe::from_merges(vec![(9999, 0)]).is_err());
         assert!(Bpe::from_merges(vec![(0, 1), (0, 1)]).is_err());
+    }
+
+    #[test]
+    fn encode_matches_reference_on_fixtures() {
+        let bpe = trained();
+        for s in [
+            "",
+            "x",
+            "the quick brown fox jumps over the lazy dog",
+            "aaaaaaaaaaaaaaaa",
+            "ththththththth the the the",
+            "héllo wörld — 日本語テキスト 🚀",
+            "pack my box with five dozen liquor jugs",
+        ] {
+            assert_eq!(bpe.encode(s), bpe.encode_reference(s), "input {s:?}");
+        }
+    }
+
+    #[test]
+    fn prop_encode_matches_reference_random_utf8() {
+        // the O(n log n) heap encoder must agree with the seed O(n²·merges)
+        // rescan encoder on arbitrary input
+        let bpe = trained();
+        prop::check(
+            "bpe-new-vs-reference",
+            80,
+            |r: &mut Rng| {
+                let len = r.usize_below(300);
+                (0..len)
+                    .map(|_| match r.below(5) {
+                        0 => char::from_u32(0x20 + r.below(0x5e) as u32).unwrap(),
+                        1 => 'é',
+                        2 => '語',
+                        // heavy repetition stresses overlapping-merge order
+                        3 => 'a',
+                        _ => char::from_u32(0x61 + r.below(26) as u32).unwrap(),
+                    })
+                    .collect::<String>()
+            },
+            |s| {
+                if bpe.encode(s) == bpe.encode_reference(s) {
+                    Ok(())
+                } else {
+                    Err("heap encoder diverged from reference".into())
+                }
+            },
+        );
     }
 
     #[test]

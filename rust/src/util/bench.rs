@@ -15,11 +15,27 @@ pub struct BenchResult {
     pub median_ns: f64,
     pub p90_ns: f64,
     pub min_ns: f64,
+    /// Extra per-row metrics (e.g. `h2d_bytes_per_iter`) attached via
+    /// [`BenchSuite::annotate`]; printed and written to the JSON output.
+    pub extras: Vec<(String, f64)>,
 }
 
 impl BenchResult {
     pub fn throughput(&self, items_per_iter: f64) -> f64 {
         items_per_iter / (self.mean_ns * 1e-9)
+    }
+}
+
+/// Human-readable byte count for bench annotations.
+pub fn fmt_bytes(b: f64) -> String {
+    if b < 1024.0 {
+        format!("{b:.0} B")
+    } else if b < 1024.0 * 1024.0 {
+        format!("{:.1} KiB", b / 1024.0)
+    } else if b < 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.2} MiB", b / (1024.0 * 1024.0))
+    } else {
+        format!("{:.2} GiB", b / (1024.0 * 1024.0 * 1024.0))
     }
 }
 
@@ -43,22 +59,49 @@ pub struct BenchSuite {
     pub results: Vec<BenchResult>,
 }
 
+/// Millisecond budget override from the environment (used by
+/// `scripts/bench_smoke.sh` to shrink every bench to a smoke run).
+fn env_ms(var: &str) -> Option<Duration> {
+    std::env::var(var)
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .map(Duration::from_millis)
+}
+
 impl BenchSuite {
     pub fn new(title: &str) -> Self {
         // Keep budgets modest: XLA-backed benches have multi-ms iterations.
         BenchSuite {
             title: title.to_string(),
-            warmup: Duration::from_millis(200),
-            target_time: Duration::from_secs(1),
+            warmup: env_ms("SMALLTALK_BENCH_WARMUP_MS").unwrap_or(Duration::from_millis(200)),
+            target_time: env_ms("SMALLTALK_BENCH_TARGET_MS").unwrap_or(Duration::from_secs(1)),
             max_iters: 10_000,
             results: Vec::new(),
         }
     }
 
+    /// Set the per-bench budget. `SMALLTALK_BENCH_WARMUP_MS` /
+    /// `SMALLTALK_BENCH_TARGET_MS` win over the programmatic budget so the
+    /// smoke script can cap every suite uniformly.
     pub fn with_budget(mut self, warmup: Duration, target: Duration) -> Self {
-        self.warmup = warmup;
-        self.target_time = target;
+        self.warmup = env_ms("SMALLTALK_BENCH_WARMUP_MS").unwrap_or(warmup);
+        self.target_time = env_ms("SMALLTALK_BENCH_TARGET_MS").unwrap_or(target);
         self
+    }
+
+    /// Attach an extra metric to the most recent bench row (no-op before
+    /// the first row). Byte-flavored keys are pretty-printed.
+    pub fn annotate(&mut self, key: &str, value: f64) {
+        let Some(last) = self.results.last_mut() else {
+            return;
+        };
+        let shown = if key.contains("bytes") {
+            format!("{} ({value:.0})", fmt_bytes(value))
+        } else {
+            format!("{value:.2}")
+        };
+        println!("      {key:<40} {shown}");
+        last.extras.push((key.to_string(), value));
     }
 
     /// Time `f` repeatedly; returns (and records) the aggregate result.
@@ -92,6 +135,7 @@ impl BenchSuite {
             median_ns: samples[n / 2],
             p90_ns: samples[(n * 9 / 10).min(n - 1)],
             min_ns: samples[0],
+            extras: Vec::new(),
         };
         println!(
             "  {:<44} {:>12} median {:>12} mean {:>12} p90  ({} iters)",
@@ -117,14 +161,18 @@ impl BenchSuite {
             self.results
                 .iter()
                 .map(|r| {
-                    Json::obj(vec![
+                    let mut fields = vec![
                         ("name", Json::str(r.name.clone())),
                         ("iters", Json::num(r.iters as f64)),
                         ("mean_ns", Json::num(r.mean_ns)),
                         ("median_ns", Json::num(r.median_ns)),
                         ("p90_ns", Json::num(r.p90_ns)),
                         ("min_ns", Json::num(r.min_ns)),
-                    ])
+                    ];
+                    for (k, v) in &r.extras {
+                        fields.push((k.as_str(), Json::num(*v)));
+                    }
+                    Json::obj(fields)
                 })
                 .collect(),
         );
@@ -163,8 +211,35 @@ mod tests {
             median_ns: 1e9,
             p90_ns: 1e9,
             min_ns: 1e9,
+            extras: Vec::new(),
         };
         assert!((r.throughput(100.0) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn annotate_attaches_to_last_row() {
+        let mut suite = BenchSuite::new("annot").with_budget(
+            Duration::from_millis(1),
+            Duration::from_millis(5),
+        );
+        suite.annotate("h2d_bytes_per_iter", 1.0); // before any row: no-op
+        assert!(suite.results.is_empty());
+        suite.bench("noop", || {
+            std::hint::black_box(1 + 1);
+        });
+        suite.annotate("h2d_bytes_per_iter", 4096.0);
+        suite.annotate("uploads_avoided_per_iter", 3.0);
+        let extras = &suite.results.last().unwrap().extras;
+        assert_eq!(extras.len(), 2);
+        assert_eq!(extras[0], ("h2d_bytes_per_iter".to_string(), 4096.0));
+    }
+
+    #[test]
+    fn fmt_bytes_ranges() {
+        assert_eq!(fmt_bytes(512.0), "512 B");
+        assert!(fmt_bytes(4096.0).ends_with("KiB"));
+        assert!(fmt_bytes(5e6).ends_with("MiB"));
+        assert!(fmt_bytes(5e9).ends_with("GiB"));
     }
 
     #[test]

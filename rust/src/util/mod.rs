@@ -1,5 +1,6 @@
-//! Self-contained utilities (the offline registry ships only `xla`,
-//! `anyhow`, `thiserror` — everything else is implemented here).
+//! Self-contained utilities (the build is fully offline: `xla` and
+//! `anyhow` are vendored under `rust/vendor/` — everything else is
+//! implemented here).
 
 pub mod bench;
 pub mod cli;

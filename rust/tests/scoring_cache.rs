@@ -1,0 +1,155 @@
+//! Integration: the device-resident buffer cache and score-matrix batching.
+//!
+//! Proves the two load-bearing properties of the runtime refactor:
+//!
+//! * parameters upload once per `(state, version)` — not once per call —
+//!   and training evicts stale buffers (version bump);
+//! * `score_matrix` tail-batch padding is invisible: a sequence count that
+//!   is not a multiple of `prefix_batch` produces bit-identical scores to
+//!   the batch-aligned case (padding rows discarded, no index skew).
+//!
+//! Like the other XLA-backed tests, these skip without compiled artifacts.
+
+use smalltalk::coordinator::scoring::{score_matrix, score_matrix_rows};
+use smalltalk::data::corpus::Corpus;
+use smalltalk::data::SequenceGen;
+use smalltalk::runtime::{locate_artifacts, Engine, TrainState};
+use smalltalk::tokenizer::{Bpe, BpeTrainer};
+
+fn engine() -> Option<Engine> {
+    let dir = locate_artifacts()?;
+    Some(Engine::new(dir).expect("loading artifacts"))
+}
+
+fn bpe() -> Bpe {
+    let corpus = Corpus::generate(60, 400, 42, None);
+    BpeTrainer::new(512).train(corpus.texts()).unwrap()
+}
+
+#[test]
+fn params_upload_once_per_state_version() {
+    let Some(eng) = engine() else { return };
+    let b = bpe();
+    let meta = eng.variant("router_micro").unwrap().clone();
+    let st = TrainState::init(&eng, "router_micro", 7).unwrap();
+    let mut gen = SequenceGen::new(&b, meta.seq_len, 3);
+    let m = 32;
+    let batch: Vec<Vec<u32>> = gen
+        .batch(meta.prefix_batch)
+        .iter()
+        .map(|s| s.prefix(m).to_vec())
+        .collect();
+
+    let s0 = eng.stats();
+    st.prefix_nll(&eng, &batch, &meta, m).unwrap();
+    let after_first = eng.stats().since(&s0);
+    assert_eq!(
+        after_first.param_uploads, 1,
+        "first call must upload the parameter vector once"
+    );
+
+    let s1 = eng.stats();
+    for _ in 0..3 {
+        st.prefix_nll(&eng, &batch, &meta, m).unwrap();
+    }
+    let after_more = eng.stats().since(&s1);
+    assert_eq!(
+        after_more.param_uploads, 0,
+        "repeat calls on an unchanged state must reuse the resident buffer"
+    );
+    assert_eq!(
+        after_more.uploads_avoided, 3,
+        "each repeat call serves params from the device cache"
+    );
+    // only the token batch moves host->device on repeat calls
+    assert_eq!(
+        after_more.h2d_bytes,
+        3 * (meta.prefix_batch * m * 4) as u64,
+        "repeat-call h2d traffic must be the token batch alone"
+    );
+}
+
+#[test]
+fn training_evicts_stale_param_buffers() {
+    let Some(eng) = engine() else { return };
+    let b = bpe();
+    let meta = eng.variant("router_micro").unwrap().clone();
+    let mut st = TrainState::init(&eng, "router_micro", 8).unwrap();
+    let mut gen = SequenceGen::new(&b, meta.seq_len, 5);
+    let m = 32;
+    let prefix_batch: Vec<Vec<u32>> = gen
+        .batch(meta.prefix_batch)
+        .iter()
+        .map(|s| s.prefix(m).to_vec())
+        .collect();
+    let train_batch: Vec<Vec<u32>> = gen
+        .batch(meta.train_batch)
+        .into_iter()
+        .map(|s| s.tokens)
+        .collect();
+
+    let before = st.prefix_nll(&eng, &prefix_batch, &meta, m).unwrap();
+    let v0 = st.version();
+    st.train_step(&eng, &train_batch, &meta).unwrap();
+    assert!(st.version() > v0, "train_step must bump the version");
+
+    let s0 = eng.stats();
+    let after = st.prefix_nll(&eng, &prefix_batch, &meta, m).unwrap();
+    let d = eng.stats().since(&s0);
+    assert_eq!(
+        d.param_uploads, 1,
+        "post-training call must re-upload the changed parameters"
+    );
+    assert!(
+        after != before,
+        "scores must reflect the trained (not cached-stale) parameters"
+    );
+}
+
+#[test]
+fn tail_batch_padding_produces_identical_scores() {
+    let Some(eng) = engine() else { return };
+    let b = bpe();
+    let meta = eng.variant("router_micro").unwrap().clone();
+    let routers = vec![
+        TrainState::init(&eng, "router_micro", 11).unwrap(),
+        TrainState::init(&eng, "router_micro", 12).unwrap(),
+    ];
+    let m = 32;
+    let bs = meta.prefix_batch;
+    let mut gen = SequenceGen::new(&b, meta.seq_len, 9);
+    // bs + 3 sequences: one full batch plus a misaligned tail of 3
+    let seqs = gen.batch(bs + 3);
+
+    let full = score_matrix(&eng, &routers, &meta, &seqs, m).unwrap();
+    assert_eq!(full.len(), bs + 3);
+
+    // batch-aligned reference over the first bs sequences
+    let aligned = score_matrix(&eng, &routers, &meta, &seqs[..bs], m).unwrap();
+    for i in 0..bs {
+        assert_eq!(full[i], aligned[i], "aligned row {i} skewed by tail handling");
+    }
+
+    // the tail scored alone (it is padded internally) must equal the same
+    // rows from the combined call — padding rows discarded, no index skew
+    let tail = score_matrix(&eng, &routers, &meta, &seqs[bs..], m).unwrap();
+    for i in 0..3 {
+        assert_eq!(full[bs + i], tail[i], "tail row {i} skewed by padding");
+    }
+}
+
+#[test]
+fn score_matrix_rows_matches_sequence_entry() {
+    let Some(eng) = engine() else { return };
+    let b = bpe();
+    let meta = eng.variant("router_micro").unwrap().clone();
+    let routers = vec![TrainState::init(&eng, "router_micro", 21).unwrap()];
+    let m = 32;
+    let mut gen = SequenceGen::new(&b, meta.seq_len, 13);
+    let seqs = gen.batch(meta.prefix_batch + 1);
+
+    let via_seqs = score_matrix(&eng, &routers, &meta, &seqs, m).unwrap();
+    let rows: Vec<&[u32]> = seqs.iter().map(|s| s.prefix(m)).collect();
+    let via_rows = score_matrix_rows(&eng, &routers, &meta, &rows, m).unwrap();
+    assert_eq!(via_seqs, via_rows);
+}

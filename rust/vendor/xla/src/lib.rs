@@ -1,0 +1,298 @@
+//! API-compatible stub of the `xla` crate (PJRT bindings).
+//!
+//! The build environment has no `xla_extension` native library, so this
+//! vendored crate keeps the workspace compiling and keeps every *host-side*
+//! operation real: literals store typed data, reshape validates element
+//! counts, buffers hold uploaded literals, and `to_literal_sync` round-trips
+//! them. The two operations that need the native runtime — `compile` and
+//! `execute_b` — return a descriptive error instead. Code paths that gate on
+//! the presence of `artifacts/manifest.json` (tests, benches) therefore skip
+//! cleanly on machines without the real backend, and swapping this crate for
+//! the real `xla` dependency requires no source changes upstream.
+//!
+//! Errors are `String` so callers can `.map_err(anyhow::Error::msg)` exactly
+//! as with the real crate's error type.
+
+use std::borrow::Borrow;
+use std::path::Path;
+
+pub type Error = String;
+pub type Result<T> = std::result::Result<T, Error>;
+
+// ---------------------------------------------------------------------
+// Literals
+// ---------------------------------------------------------------------
+
+/// Element types the workspace uses. The sealed trait maps Rust scalars to
+/// typed storage, mirroring the real crate's `NativeType`.
+pub trait NativeType: Copy + Sized {
+    fn wrap(data: Vec<Self>) -> Storage;
+    fn unwrap(storage: &Storage) -> Option<&[Self]>;
+    const DTYPE: &'static str;
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+    Tuple(Vec<Literal>),
+}
+
+macro_rules! native {
+    ($ty:ty, $variant:ident, $name:literal) => {
+        impl NativeType for $ty {
+            fn wrap(data: Vec<Self>) -> Storage {
+                Storage::$variant(data)
+            }
+            fn unwrap(storage: &Storage) -> Option<&[Self]> {
+                match storage {
+                    Storage::$variant(v) => Some(v),
+                    _ => None,
+                }
+            }
+            const DTYPE: &'static str = $name;
+        }
+    };
+}
+
+native!(f32, F32, "f32");
+native!(i32, I32, "i32");
+native!(u32, U32, "u32");
+
+/// A host-side typed array (or tuple of arrays) with a shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    storage: Storage,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(xs: &[T]) -> Literal {
+        Literal {
+            storage: T::wrap(xs.to_vec()),
+            dims: vec![xs.len() as i64],
+        }
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar<T: NativeType>(x: T) -> Literal {
+        Literal {
+            storage: T::wrap(vec![x]),
+            dims: vec![],
+        }
+    }
+
+    /// Tuple literal (what jax entry points return).
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal {
+            storage: Storage::Tuple(elems),
+            dims: vec![],
+        }
+    }
+
+    /// Total element count (summed over tuple members).
+    pub fn element_count(&self) -> usize {
+        match &self.storage {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+            Storage::U32(v) => v.len(),
+            Storage::Tuple(t) => t.iter().map(Literal::element_count).sum(),
+        }
+    }
+
+    /// Reinterpret the shape; the element count must be preserved.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        if matches!(self.storage, Storage::Tuple(_)) {
+            return Err("reshape: cannot reshape a tuple literal".into());
+        }
+        let want: i64 = dims.iter().product();
+        if want as usize != self.element_count() {
+            return Err(format!(
+                "reshape: {:?} has {} elements, target shape {:?} wants {}",
+                self.dims,
+                self.element_count(),
+                dims,
+                want
+            ));
+        }
+        Ok(Literal {
+            storage: self.storage.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Copy out the data as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.storage)
+            .map(<[T]>::to_vec)
+            .ok_or_else(|| format!("to_vec: literal is not {}", T::DTYPE))
+    }
+
+    /// First element of a typed literal.
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::unwrap(&self.storage)
+            .and_then(|v| v.first().copied())
+            .ok_or_else(|| format!("get_first_element: empty or not {}", T::DTYPE))
+    }
+
+    /// Flatten a tuple literal into its members.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.storage {
+            Storage::Tuple(t) => Ok(t),
+            _ => Err("to_tuple: literal is not a tuple".into()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// HLO loading / compilation handles
+// ---------------------------------------------------------------------
+
+/// Parsed-HLO handle. The stub stores the text so load errors (missing
+/// artifact files) surface exactly like the real crate's.
+#[derive(Debug)]
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| format!("reading {}: {e}", path.as_ref().display()))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+// ---------------------------------------------------------------------
+// PJRT client / buffers / executables
+// ---------------------------------------------------------------------
+
+const BACKEND_UNAVAILABLE: &str = "xla stub backend: compilation/execution requires the native \
+     xla_extension library, which is not present in this build environment \
+     (swap rust/vendor/xla for the real `xla` crate to run on hardware)";
+
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// The stub "CPU client" always constructs; only compile/execute fail.
+    pub fn cpu() -> Result<Self> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(BACKEND_UNAVAILABLE.into())
+    }
+
+    /// Upload a literal to a device buffer. Host-side this is a real copy,
+    /// so upload accounting and buffer-reuse logic are fully exercisable
+    /// without the native backend.
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer {
+            literal: literal.clone(),
+        })
+    }
+}
+
+/// A device-resident buffer (stub: host copy of the uploaded literal).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.literal.element_count()
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with pre-uploaded buffers. Generic over `Borrow` so callers
+    /// can pass owned buffers or references (the device-cache path mixes
+    /// cached and freshly-uploaded inputs).
+    pub fn execute_b<B: Borrow<PjRtBuffer>>(&self, _args: &[B]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(BACKEND_UNAVAILABLE.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec1_reshape_roundtrip() {
+        let lit = Literal::vec1(&[1i32, 2, 3, 4, 5, 6]);
+        assert_eq!(lit.element_count(), 6);
+        let m = lit.reshape(&[2, 3]).unwrap();
+        assert_eq!(m.dims(), &[2, 3]);
+        assert_eq!(m.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+        assert!(lit.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_is_error() {
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.to_vec::<i32>().is_err());
+        assert_eq!(lit.get_first_element::<f32>().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn tuple_flatten() {
+        let t = Literal::tuple(vec![Literal::scalar(1.0f32), Literal::vec1(&[2u32, 3])]);
+        assert_eq!(t.element_count(), 3);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(Literal::scalar(0i32).to_tuple().is_err());
+    }
+
+    #[test]
+    fn buffers_roundtrip_through_client() {
+        let client = PjRtClient::cpu().unwrap();
+        let lit = Literal::vec1(&[9u32, 8, 7]);
+        let buf = client.buffer_from_host_literal(None, &lit).unwrap();
+        assert_eq!(buf.to_literal_sync().unwrap(), lit);
+        assert_eq!(buf.element_count(), 3);
+    }
+
+    #[test]
+    fn execution_reports_backend_unavailable() {
+        let client = PjRtClient::cpu().unwrap();
+        let comp = XlaComputation::from_proto(&HloModuleProto {
+            text: String::new(),
+        });
+        let err = client.compile(&comp).unwrap_err();
+        assert!(err.contains("xla stub backend"));
+    }
+}

@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# Tiny-budget perf smoke: runs the routing + train_step benches with
+# millisecond budgets and copies their JSON to BENCH_routing.json /
+# BENCH_train_step.json at the repo root, so every PR leaves a perf
+# trajectory point. Skips gracefully (with a marker file) when the AOT
+# artifacts or the native XLA backend are unavailable.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [ ! -f artifacts/manifest.json ] && [ ! -f rust/artifacts/manifest.json ] \
+    && [ -z "${SMALLTALK_ARTIFACTS:-}" ]; then
+  echo "bench_smoke: no artifacts/manifest.json — run 'make artifacts' first" >&2
+  printf '{\n  "skipped": "no artifacts/manifest.json; run make artifacts"\n}\n' \
+    > BENCH_routing.json
+  exit 0
+fi
+
+# shrink every BenchSuite budget (see util/bench.rs env override)
+export SMALLTALK_BENCH_WARMUP_MS="${SMALLTALK_BENCH_WARMUP_MS:-50}"
+export SMALLTALK_BENCH_TARGET_MS="${SMALLTALK_BENCH_TARGET_MS:-300}"
+
+if ! cargo bench --bench routing; then
+  echo "bench_smoke: routing bench failed (stub xla backend? see rust/vendor/xla)" >&2
+  printf '{\n  "skipped": "bench run failed; likely the stub xla backend (no native xla_extension)"\n}\n' \
+    > BENCH_routing.json
+  exit 0
+fi
+cargo bench --bench train_step
+
+# BenchSuite::write_json emits results/bench_<title>.json relative to the
+# bench's working directory (the invocation directory, i.e. repo root)
+cp results/bench_routing.json BENCH_routing.json
+[ -f results/bench_train_step.json ] && cp results/bench_train_step.json BENCH_train_step.json
+
+echo "bench_smoke: wrote BENCH_routing.json"
