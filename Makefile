@@ -1,17 +1,25 @@
 # SmallTalk LM — repo-root entry points (tier-1 verify runs from here).
 #
-#   make build        cargo build --release (workspace: rust/ + vendored deps)
-#   make test         cargo test -q  (XLA-backed tests self-skip without artifacts)
-#   make artifacts    AOT-lower every model variant to artifacts/ (needs jax)
-#   make bench-smoke  tiny-budget routing+train_step benches -> BENCH_routing.json
+#   make build             cargo build --release (workspace: rust/ + vendored deps)
+#   make test              cargo test -q  (XLA-backed tests self-skip without artifacts)
+#   make test-concurrency  the engine thread-safety suite, at 1 and 8 test threads
+#   make artifacts         AOT-lower every model variant to artifacts/ (needs jax)
+#   make bench-smoke       tiny-budget routing+train_step benches -> BENCH_routing.json
 
-.PHONY: build test artifacts bench-smoke clean
+.PHONY: build test test-concurrency artifacts bench-smoke clean
 
 build:
 	cargo build --release
 
 test:
 	cargo test -q
+
+# Run the concurrency & determinism suite under both serial and heavily
+# interleaved test scheduling (the suite itself also sweeps worker counts
+# internally).
+test-concurrency:
+	RUST_TEST_THREADS=1 cargo test -q --test concurrency
+	RUST_TEST_THREADS=8 cargo test -q --test concurrency
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts

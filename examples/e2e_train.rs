@@ -54,6 +54,7 @@ fn main() -> anyhow::Result<()> {
         expert_steps,
         prefix_len: 32,
         seed,
+        threads: 0,
     };
     let meta = engine.variant(expert_variant)?.clone();
     println!(

@@ -32,6 +32,7 @@ fn main() -> anyhow::Result<()> {
         expert_steps: 15,
         prefix_len: 32,
         seed: 7,
+        threads: 0,
     };
     println!("training a {}-expert mixture ...", cfg.n_experts);
     let result = run_pipeline(&engine, &bpe, &cfg)?;

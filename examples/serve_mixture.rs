@@ -40,6 +40,7 @@ fn main() -> anyhow::Result<()> {
         expert_steps: 30,
         prefix_len: 32,
         seed,
+        threads: 0,
     };
     eprintln!("[serve] training a {n_experts}-expert mixture to serve ...");
     let result = run_pipeline(&engine, &bpe, &cfg)?;

@@ -9,14 +9,14 @@
 
 use std::time::Duration;
 
-use smalltalk::coordinator::scoring::score_matrix;
-use smalltalk::coordinator::{argmin_assign, run_pipeline, serve, PipelineConfig, Request};
+use smalltalk::coordinator::scoring::score_matrix_threaded;
+use smalltalk::coordinator::{argmin_assign, run_pipeline, serve_threaded, PipelineConfig, Request};
 use smalltalk::data::corpus::Corpus;
 use smalltalk::data::SequenceGen;
 use smalltalk::runtime::engine::{f32_literal, tokens_literal};
-use smalltalk::runtime::{locate_artifacts, Engine};
+use smalltalk::runtime::{default_threads, locate_artifacts, Engine};
 use smalltalk::tokenizer::BpeTrainer;
-use smalltalk::util::bench::BenchSuite;
+use smalltalk::util::bench::{env_threads, BenchSuite};
 
 fn main() {
     let Some(artifacts) = locate_artifacts() else {
@@ -39,6 +39,7 @@ fn main() {
         expert_steps: 10,
         prefix_len: 32,
         seed: 3,
+        threads: 0,
     };
     eprintln!("[routing bench] preparing mixture ...");
     let result = run_pipeline(&engine, &bpe, &cfg).unwrap();
@@ -52,6 +53,12 @@ fn main() {
     let mut gen = SequenceGen::new(&bpe, mixture.expert_meta.seq_len, 17);
     let seqs = gen.batch(32);
     let m = 32usize;
+
+    // Worker count for every threaded row: the SMALLTALK_BENCH_THREADS
+    // pin (bench_smoke.sh exports it for cross-machine comparability),
+    // else the machine's parallelism. The seed-path row stays sequential
+    // by construction — it replicates the pre-cache implementation.
+    let bench_threads = env_threads().unwrap_or_else(default_threads);
 
     // ---- seed path: rebuild the token literal and re-upload parameters
     // for every router on every call (what the runtime did before the
@@ -105,16 +112,19 @@ fn main() {
         &format!("score_matrix 32 seqs x {n_routers} routers (device cache)"),
         || {
             std::hint::black_box(
-                score_matrix(&engine, &mixture.routers, &mixture.router_meta, &seqs, m).unwrap(),
+                score_matrix_threaded(&engine, &mixture.routers, &mixture.router_meta, &seqs, m, bench_threads)
+                .unwrap(),
             );
         },
     );
     println!("    -> {:.0} seqs/s", cached_r.throughput(32.0));
     let s0 = engine.stats();
     std::hint::black_box(
-        score_matrix(&engine, &mixture.routers, &mixture.router_meta, &seqs, m).unwrap(),
+        score_matrix_threaded(&engine, &mixture.routers, &mixture.router_meta, &seqs, m, bench_threads)
+                .unwrap(),
     );
     let d = engine.stats().since(&s0);
+    suite.annotate("threads", bench_threads as f64);
     suite.annotate("h2d_bytes_per_iter", d.h2d_bytes as f64);
     suite.annotate("h2d_bytes_avoided_per_iter", d.h2d_bytes_avoided as f64);
     suite.annotate("uploads_avoided_per_iter", d.uploads_avoided as f64);
@@ -131,11 +141,13 @@ fn main() {
     // consistency guard: both paths must produce identical scores
     assert_eq!(
         seed_path(&engine),
-        score_matrix(&engine, &mixture.routers, &mixture.router_meta, &seqs, m).unwrap(),
+        score_matrix_threaded(&engine, &mixture.routers, &mixture.router_meta, &seqs, m, bench_threads)
+                .unwrap(),
         "cached score_matrix diverged from the seed path"
     );
 
-    let nll = score_matrix(&engine, &mixture.routers, &mixture.router_meta, &seqs, m).unwrap();
+    let nll = score_matrix_threaded(&engine, &mixture.routers, &mixture.router_meta, &seqs, m, bench_threads)
+                .unwrap();
     suite.bench("argmin routing decision x 32", || {
         std::hint::black_box(argmin_assign(&nll));
     });
@@ -150,19 +162,45 @@ fn main() {
         })
         .collect();
     let r = suite.bench("serve 32 requests end-to-end", || {
-        std::hint::black_box(serve(&engine, &mixture, &requests, m).unwrap());
+        std::hint::black_box(serve_threaded(&engine, &mixture, &requests, m, bench_threads).unwrap());
     });
     println!("    -> {:.1} req/s", r.throughput(32.0));
     let s0 = engine.stats();
-    std::hint::black_box(serve(&engine, &mixture, &requests, m).unwrap());
+    std::hint::black_box(serve_threaded(&engine, &mixture, &requests, m, bench_threads).unwrap());
     let d = engine.stats().since(&s0);
+    suite.annotate("threads", bench_threads as f64);
     suite.annotate("h2d_bytes_per_iter", d.h2d_bytes as f64);
     suite.annotate("h2d_bytes_avoided_per_iter", d.h2d_bytes_avoided as f64);
+
+    // ---- thread sweep: sequential vs parallel expert-group execution.
+    // Expert groups are independent, so the wave fans across workers;
+    // the sweep records threads + per-thread seqs/s per row. A pinned
+    // SMALLTALK_BENCH_THREADS is honored as-is (pinning 1 collapses the
+    // sweep to the sequential row alone).
+    let sweep: Vec<usize> = if bench_threads > 1 { vec![1, bench_threads] } else { vec![1] };
+    let sequential = serve_threaded(&engine, &mixture, &requests, m, 1).unwrap();
+    for t in sweep {
+        let r = suite.bench(&format!("serve 32 requests (threads={t})"), || {
+            std::hint::black_box(serve_threaded(&engine, &mixture, &requests, m, t).unwrap());
+        });
+        suite.annotate("threads", t as f64);
+        suite.annotate("seqs_per_s", r.throughput(32.0));
+        suite.annotate("seqs_per_s_per_thread", r.throughput(32.0) / t as f64);
+        // determinism guard: parallel responses must be bit-identical to
+        // the sequential wave (ids, experts, NLLs, input order)
+        let parallel = serve_threaded(&engine, &mixture, &requests, m, t).unwrap();
+        assert_eq!(parallel.len(), sequential.len());
+        for (p, s) in parallel.iter().zip(&sequential) {
+            assert_eq!((p.id, p.expert, p.nll), (s.id, s.expert, s.nll),
+                "parallel serve (threads={t}) diverged from sequential");
+        }
+    }
 
     // routing overhead share of the serve path
     let score_only = suite.bench("routing-only share (score+argmin)", || {
         let nll =
-            score_matrix(&engine, &mixture.routers, &mixture.router_meta, &seqs, m).unwrap();
+            score_matrix_threaded(&engine, &mixture.routers, &mixture.router_meta, &seqs, m, bench_threads)
+                .unwrap();
         std::hint::black_box(argmin_assign(&nll));
     });
     println!(

@@ -6,6 +6,11 @@
 //! identical to a single expert's; training FLOPs match the mixture's
 //! expert stage (the router overhead is the paper's ≤4% delta, accounted
 //! in `flops/`).
+//!
+//! The baseline shares nothing with the mixture — its own `TrainState`,
+//! its own data stream — and the engine is `Sync`, so `smalltalk e2e`
+//! trains it concurrently with the mixture pipeline when more than one
+//! worker thread is configured (identical results, shorter wall clock).
 
 use anyhow::Result;
 

@@ -124,6 +124,9 @@ impl ExperimentConfig {
         if let Some(v) = u("prefix_len") {
             self.pipeline.prefix_len = v;
         }
+        if let Some(v) = u("threads") {
+            self.pipeline.threads = v;
+        }
     }
 
     /// Apply `--key value` CLI overrides (same keys as the JSON form).
@@ -149,6 +152,8 @@ impl ExperimentConfig {
             args.get_usize("shard-sequences", self.pipeline.shard_sequences)?;
         self.pipeline.expert_steps = args.get_usize("expert-steps", self.pipeline.expert_steps)?;
         self.pipeline.prefix_len = args.get_usize("prefix", self.pipeline.prefix_len)?;
+        // worker threads for expert/router group fan-out (0 = auto)
+        self.pipeline.threads = args.get_usize("threads", self.pipeline.threads)?;
         self.eval_sequences = args.get_usize("eval-sequences", self.eval_sequences)?;
         self.tasks_per_domain = args.get_usize("tasks-per-domain", self.tasks_per_domain)?;
         self.seed = args.get_u64("seed", self.seed)?;
@@ -191,6 +196,7 @@ impl ExperimentConfig {
             ),
             ("expert_steps", Json::num(self.pipeline.expert_steps as f64)),
             ("prefix_len", Json::num(self.pipeline.prefix_len as f64)),
+            ("threads", Json::num(self.pipeline.threads as f64)),
         ])
     }
 }
@@ -212,17 +218,19 @@ mod tests {
         c.pipeline.n_experts = 8;
         c.seed = 99;
         c.pipeline.seed = 99;
+        c.pipeline.threads = 6;
         let j = c.to_json();
         let mut c2 = ExperimentConfig::default();
         c2.apply_json(&j);
         assert_eq!(c2.pipeline.n_experts, 8);
         assert_eq!(c2.seed, 99);
         assert_eq!(c2.pipeline.seed, 99);
+        assert_eq!(c2.pipeline.threads, 6);
     }
 
     #[test]
     fn cli_overrides_apply() {
-        let raw: Vec<String> = ["--experts=6", "--expert-steps=10", "--seed=7"]
+        let raw: Vec<String> = ["--experts=6", "--expert-steps=10", "--seed=7", "--threads=3"]
             .iter()
             .map(|s| s.to_string())
             .collect();
@@ -232,6 +240,7 @@ mod tests {
         assert_eq!(c.pipeline.n_experts, 6);
         assert_eq!(c.pipeline.expert_steps, 10);
         assert_eq!(c.pipeline.seed, 7);
+        assert_eq!(c.pipeline.threads, 3);
     }
 
     #[test]

@@ -9,14 +9,21 @@
 //!
 //! Round 0 uses random assignments. Every router is a "node"; the only
 //! inter-node traffic is the score exchange.
+//!
+//! The M-step is embarrassingly parallel — each router trains on its own
+//! segment and never reads another's state — so the routers fan across
+//! `cfg.threads` workers (the E-step's score matrix parallelizes per
+//! router internally). Results are identical at any worker count: each
+//! router's trajectory depends only on its own init and segment.
 
 use anyhow::Result;
 
 use super::assignment::{balanced_assign, Assignment};
 use super::comm::CommLedger;
-use super::scoring::{routing_purity, score_matrix};
+use super::scoring::{routing_purity, score_matrix_threaded};
 use crate::data::{Sequence, SequenceGen};
 use crate::metrics::RunLog;
+use crate::runtime::parallel::run_fallible;
 use crate::runtime::{Engine, TrainState, VariantMeta};
 use crate::util::rng::Rng;
 
@@ -35,6 +42,9 @@ pub struct EmConfig {
     pub prefix_len: usize,
     /// Base RNG seed (router init + data order).
     pub seed: u64,
+    /// Worker threads for the M-step router fan-out (0 = auto, see
+    /// [`crate::runtime::parallel::resolve_threads`]).
+    pub threads: usize,
 }
 
 impl Default for EmConfig {
@@ -46,6 +56,7 @@ impl Default for EmConfig {
             steps_per_round: 24,
             prefix_len: 32,
             seed: 17,
+            threads: 0,
         }
     }
 }
@@ -80,6 +91,7 @@ pub fn train_routers(
 
     let mut purity_per_round = Vec::with_capacity(cfg.rounds);
     let mut mean_score_per_round = Vec::with_capacity(cfg.rounds);
+    let threads = crate::runtime::parallel::resolve_threads(cfg.threads);
 
     for round in 0..cfg.rounds {
         // ---- E-step: draw a fresh chunk and partition it ----
@@ -98,7 +110,7 @@ pub fn train_routers(
             }
             Assignment { expert_of, counts }
         } else {
-            let nll = score_matrix(engine, &routers, &meta, &chunk, cfg.prefix_len)?;
+            let nll = score_matrix_threaded(engine, &routers, &meta, &chunk, cfg.prefix_len, threads)?;
             // all-gather: each node contributes one score per sequence
             ledger.record_score_allgather(cfg.n_routers, chunk.len() as u64, round as u64);
             let a = balanced_assign(&nll, None);
@@ -109,29 +121,44 @@ pub fn train_routers(
         purity_per_round.push(purity);
         log.scalar("em/purity", round as f64, purity);
 
-        // ---- M-step: each router trains on its segment, independently ----
-        for (e, router) in routers.iter_mut().enumerate() {
-            let segment = assignment.segment(e);
-            if segment.is_empty() {
-                continue;
-            }
-            let mut cursor = 0usize;
-            let mut last_loss = 0.0f32;
-            for _ in 0..cfg.steps_per_round {
-                // batch by reference into the chunk — no token clones
-                let mut batch: Vec<&[u32]> = Vec::with_capacity(meta.train_batch);
-                for _ in 0..meta.train_batch {
-                    let s = segment[cursor % segment.len()];
-                    batch.push(chunk[s].tokens.as_slice());
-                    cursor += 1;
+        // ---- M-step: each router trains on its segment, independently
+        // ("no need to talk") — one task per router on the worker pool ----
+        let chunk_ref = &chunk;
+        let meta_ref = &meta;
+        let steps = cfg.steps_per_round;
+        let tasks: Vec<_> = routers
+            .iter_mut()
+            .enumerate()
+            .map(|(e, router)| {
+                let segment = assignment.segment(e);
+                move || -> Result<Option<f32>> {
+                    if segment.is_empty() {
+                        return Ok(None);
+                    }
+                    let mut cursor = 0usize;
+                    let mut last_loss = 0.0f32;
+                    for _ in 0..steps {
+                        // batch by reference into the chunk — no token clones
+                        let mut batch: Vec<&[u32]> = Vec::with_capacity(meta_ref.train_batch);
+                        for _ in 0..meta_ref.train_batch {
+                            let s = segment[cursor % segment.len()];
+                            batch.push(chunk_ref[s].tokens.as_slice());
+                            cursor += 1;
+                        }
+                        last_loss = router.train_step(engine, &batch, meta_ref)?;
+                    }
+                    Ok(Some(last_loss))
                 }
-                last_loss = router.train_step(engine, &batch, &meta)?;
+            })
+            .collect();
+        for (e, last_loss) in run_fallible(tasks, threads)?.into_iter().enumerate() {
+            if let Some(loss) = last_loss {
+                log.scalar(
+                    &format!("em/router{e}_loss"),
+                    (round * cfg.steps_per_round) as f64,
+                    loss as f64,
+                );
             }
-            log.scalar(
-                &format!("em/router{e}_loss"),
-                (round * cfg.steps_per_round) as f64,
-                last_loss as f64,
-            );
         }
     }
 

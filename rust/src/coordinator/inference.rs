@@ -10,14 +10,23 @@
 //! allocation-light: requests are batched by index over borrowed token
 //! rows (no `Sequence`/`Vec<u32>` clones), and router/expert parameters
 //! stay device-resident across waves via the engine's buffer cache.
+//!
+//! Expert groups never talk to each other (the paper's core property), so
+//! [`serve_threaded`] / [`Mixture::eval_routed_threaded`] execute them
+//! concurrently on a scoped worker pool; each group writes a disjoint set
+//! of response slots, so the parallel output is bit-identical to the
+//! sequential one at any worker count.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
 use super::assignment::argmin_assign;
-use super::scoring::{batch_spans, score_matrix, score_matrix_rows};
+use super::scoring::{
+    batch_spans, pad_batch, score_matrix_rows_threaded, score_matrix_threaded,
+};
 use crate::data::Sequence;
+use crate::runtime::parallel::{default_threads, run_fallible};
 use crate::runtime::{Engine, TrainState, VariantMeta};
 
 /// A trained mixture: E routers (tiny LMs) + E experts.
@@ -34,38 +43,103 @@ impl Mixture {
     }
 
     /// Route a batch of sequences: returns the chosen expert per sequence.
+    /// Router scoring fans across [`default_threads`] workers.
     pub fn route(&self, engine: &Engine, seqs: &[Sequence], m: usize) -> Result<Vec<usize>> {
-        let nll = score_matrix(engine, &self.routers, &self.router_meta, seqs, m)?;
+        self.route_threaded(engine, seqs, m, default_threads())
+    }
+
+    /// [`Mixture::route`] with an explicit worker count for the router
+    /// fan-out (`threads <= 1` scores sequentially).
+    pub fn route_threaded(
+        &self,
+        engine: &Engine,
+        seqs: &[Sequence],
+        m: usize,
+        threads: usize,
+    ) -> Result<Vec<usize>> {
+        let nll = score_matrix_threaded(engine, &self.routers, &self.router_meta, seqs, m, threads)?;
         Ok(argmin_assign(&nll).expert_of)
     }
 
     /// [`Mixture::route`] over borrowed token rows (full sequences; the
-    /// first `m` tokens of each row are scored).
+    /// first `m` tokens of each row are scored; rows shorter than `m` are
+    /// scored as padded prefixes — see
+    /// [`score_matrix_rows`](super::scoring::score_matrix_rows)).
     pub fn route_rows(&self, engine: &Engine, rows: &[&[u32]], m: usize) -> Result<Vec<usize>> {
+        self.route_rows_threaded(engine, rows, m, default_threads())
+    }
+
+    /// [`Mixture::route_rows`] with an explicit worker count for the
+    /// router fan-out.
+    pub fn route_rows_threaded(
+        &self,
+        engine: &Engine,
+        rows: &[&[u32]],
+        m: usize,
+        threads: usize,
+    ) -> Result<Vec<usize>> {
+        // truncate to the prefix by slicing (not via the scorer's padded
+        // copies): full-length rows would otherwise each pay an owned
+        // m-token copy in pad_prefix_row; a slice is free
         let prefixes: Vec<&[u32]> = rows.iter().map(|r| &r[..m.min(r.len())]).collect();
-        let nll = score_matrix_rows(engine, &self.routers, &self.router_meta, &prefixes, m)?;
+        let nll = score_matrix_rows_threaded(
+            engine,
+            &self.routers,
+            &self.router_meta,
+            &prefixes,
+            m,
+            threads,
+        )?;
         Ok(argmin_assign(&nll).expert_of)
     }
 
     /// Per-sequence full NLL under the routed expert, grouped per expert
-    /// for batching. Returns (nll, expert) per input sequence.
+    /// for batching. Returns (nll, expert) per input sequence. Expert
+    /// groups run on [`default_threads`] workers.
     pub fn eval_routed(
         &self,
         engine: &Engine,
         seqs: &[Sequence],
         m: usize,
     ) -> Result<Vec<(f32, usize)>> {
-        let routes = self.route(engine, seqs, m)?;
+        self.eval_routed_threaded(engine, seqs, m, default_threads())
+    }
+
+    /// [`Mixture::eval_routed`] with an explicit worker count covering
+    /// the whole wave (router scoring *and* the expert-group fan-out —
+    /// `threads = 1` is fully sequential). Bit-identical at any count.
+    pub fn eval_routed_threaded(
+        &self,
+        engine: &Engine,
+        seqs: &[Sequence],
+        m: usize,
+        threads: usize,
+    ) -> Result<Vec<(f32, usize)>> {
+        if seqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let routes = self.route_threaded(engine, seqs, m, threads)?;
+        let groups: Vec<Vec<usize>> = group_by_expert(&routes, self.n_experts());
+        // batch by index over borrowed rows — no token clones; every
+        // non-empty group is one independent task
+        let tasks: Vec<_> = groups
+            .iter()
+            .enumerate()
+            .filter(|(_, idx)| !idx.is_empty())
+            .map(|(e, idx)| {
+                let expert = &self.experts[e];
+                let meta = &self.expert_meta;
+                move || {
+                    let rows: Vec<&[u32]> =
+                        idx.iter().map(|&i| seqs[i].tokens.as_slice()).collect();
+                    let nll = eval_nll_all(engine, expert, meta, &rows)?;
+                    Ok((e, nll))
+                }
+            })
+            .collect();
         let mut out = vec![(0.0f32, 0usize); seqs.len()];
-        for e in 0..self.n_experts() {
-            let idx: Vec<usize> = (0..seqs.len()).filter(|&i| routes[i] == e).collect();
-            if idx.is_empty() {
-                continue;
-            }
-            // batch by index over borrowed rows — no token clones
-            let rows: Vec<&[u32]> = idx.iter().map(|&i| seqs[i].tokens.as_slice()).collect();
-            let nll = eval_nll_all(engine, &self.experts[e], &self.expert_meta, &rows)?;
-            for (k, &i) in idx.iter().enumerate() {
+        for (e, nll) in run_fallible(tasks, threads)? {
+            for (k, &i) in groups[e].iter().enumerate() {
                 out[i] = (nll[k], e);
             }
         }
@@ -73,8 +147,21 @@ impl Mixture {
     }
 
     /// Mixture perplexity on a held-out set (routing with prefix `m`).
+    /// Routing and expert groups fan across [`default_threads`] workers.
     pub fn perplexity(&self, engine: &Engine, seqs: &[Sequence], m: usize) -> Result<f64> {
-        let per_seq = self.eval_routed(engine, seqs, m)?;
+        self.perplexity_threaded(engine, seqs, m, default_threads())
+    }
+
+    /// [`Mixture::perplexity`] with an explicit worker count for the
+    /// whole wave (`threads <= 1` is fully sequential).
+    pub fn perplexity_threaded(
+        &self,
+        engine: &Engine,
+        seqs: &[Sequence],
+        m: usize,
+        threads: usize,
+    ) -> Result<f64> {
+        let per_seq = self.eval_routed_threaded(engine, seqs, m, threads)?;
         let total: f64 = per_seq.iter().map(|&(n, _)| n as f64).sum();
         let tokens = seqs.len() * (self.expert_meta.seq_len);
         Ok((total / tokens as f64).exp())
@@ -93,18 +180,24 @@ pub fn eval_nll_all<R: AsRef<[u32]>>(
     let bs = meta.eval_batch;
     let mut out = Vec::with_capacity(rows.len());
     for (start, real) in batch_spans(rows.len(), bs) {
-        let mut batch: Vec<&[u32]> = rows[start..start + real]
-            .iter()
-            .map(AsRef::as_ref)
-            .collect();
-        let pad = batch[real - 1];
-        while batch.len() < bs {
-            batch.push(pad);
-        }
+        let batch = pad_batch(
+            rows[start..start + real].iter().map(AsRef::as_ref).collect(),
+            bs,
+        );
         let nll = state.eval_nll(engine, &batch, meta)?;
         out.extend_from_slice(&nll[..real]);
     }
     Ok(out)
+}
+
+/// Group sequence indices by their routed expert: `groups[e]` holds the
+/// input indices assigned to expert `e`, in input order.
+fn group_by_expert(routes: &[usize], n_experts: usize) -> Vec<Vec<usize>> {
+    let mut groups: Vec<Vec<usize>> = vec![Vec::new(); n_experts];
+    for (i, &e) in routes.iter().enumerate() {
+        groups[e].push(i);
+    }
+    groups
 }
 
 /// Dense-baseline perplexity on the same sequences (comparator).
@@ -161,13 +254,37 @@ impl Response {
 
 /// Batched serving: route all queued requests, group by expert, execute.
 /// Returns responses in input order plus amortized per-request timings
-/// (see [`Response`] for the exact semantics).
+/// (see [`Response`] for the exact semantics). Expert groups execute on
+/// [`default_threads`] workers; see [`serve_threaded`].
 pub fn serve(engine: &Engine, mixture: &Mixture, requests: &[Request], m: usize) -> Result<Vec<Response>> {
+    serve_threaded(engine, mixture, requests, m, default_threads())
+}
+
+/// [`serve`] with an explicit worker count covering the whole wave:
+/// router scoring and the expert-group fan-out both run on `threads`
+/// workers, so `threads = 1` is the fully sequential reference path.
+///
+/// Groups are independent (no expert ever sees another's requests), so
+/// they run concurrently; each writes a disjoint slice of the response
+/// vector, keeping the output — ids, experts, NLLs, input order —
+/// bit-identical to the sequential `threads = 1` path. Only the timing
+/// fields vary run-to-run (they are wall-clock measurements).
+pub fn serve_threaded(
+    engine: &Engine,
+    mixture: &Mixture,
+    requests: &[Request],
+    m: usize,
+    threads: usize,
+) -> Result<Vec<Response>> {
+    if requests.is_empty() {
+        // nothing to route: never build a zero-row batch
+        return Ok(Vec::new());
+    }
     // borrow token rows straight out of the requests — no Sequence clones
     let rows: Vec<&[u32]> = requests.iter().map(|r| r.tokens.as_slice()).collect();
     let t0 = Instant::now();
-    let routes = mixture.route_rows(engine, &rows, m)?;
-    let route_us = t0.elapsed().as_micros() / requests.len().max(1) as u128;
+    let routes = mixture.route_rows_threaded(engine, &rows, m, threads)?;
+    let route_us = t0.elapsed().as_micros() / requests.len() as u128;
 
     let mut responses: Vec<Response> = requests
         .iter()
@@ -181,19 +298,64 @@ pub fn serve(engine: &Engine, mixture: &Mixture, requests: &[Request], m: usize)
         })
         .collect();
 
-    for e in 0..mixture.n_experts() {
-        let idx: Vec<usize> = (0..requests.len()).filter(|&i| routes[i] == e).collect();
-        if idx.is_empty() {
-            continue;
-        }
-        let group: Vec<&[u32]> = idx.iter().map(|&i| rows[i]).collect();
-        let t1 = Instant::now();
-        let nll = eval_nll_all(engine, &mixture.experts[e], &mixture.expert_meta, &group)?;
-        let exec_us = t1.elapsed().as_micros() / idx.len() as u128;
-        for (k, &i) in idx.iter().enumerate() {
+    let groups = group_by_expert(&routes, mixture.n_experts());
+    let tasks: Vec<_> = groups
+        .iter()
+        .enumerate()
+        .filter(|(_, idx)| !idx.is_empty())
+        .map(|(e, idx)| {
+            let expert = &mixture.experts[e];
+            let meta = &mixture.expert_meta;
+            let rows = &rows;
+            move || {
+                let group: Vec<&[u32]> = idx.iter().map(|&i| rows[i]).collect();
+                let t1 = Instant::now();
+                let nll = eval_nll_all(engine, expert, meta, &group)?;
+                let exec_us = t1.elapsed().as_micros() / idx.len() as u128;
+                Ok((e, nll, exec_us))
+            }
+        })
+        .collect();
+    for (e, nll, exec_us) in run_fallible(tasks, threads)? {
+        for (k, &i) in groups[e].iter().enumerate() {
             responses[i].nll = nll[k];
             responses[i].exec_micros = exec_us;
         }
     }
     Ok(responses)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_micros_sums_route_and_exec() {
+        let r = Response {
+            id: 9,
+            expert: 2,
+            nll: 1.5,
+            route_micros: 120,
+            exec_micros: 880,
+        };
+        assert_eq!(r.total_micros(), 1000);
+        let zero = Response {
+            id: 0,
+            expert: 0,
+            nll: 0.0,
+            route_micros: 0,
+            exec_micros: 0,
+        };
+        assert_eq!(zero.total_micros(), 0);
+    }
+
+    #[test]
+    fn group_by_expert_partitions_in_input_order() {
+        let groups = group_by_expert(&[1, 0, 1, 2, 0], 4);
+        assert_eq!(groups, vec![vec![1, 4], vec![0, 2], vec![3], vec![]]);
+        // every index appears exactly once
+        let mut all: Vec<usize> = groups.into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3, 4]);
+    }
 }

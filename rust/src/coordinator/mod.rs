@@ -22,7 +22,9 @@ pub use assignment::{argmin_assign, balanced_assign, sequential_assign, Assignme
 pub use comm::{CommKind, CommLedger};
 pub use em::{train_routers, EmConfig, TrainedRouters};
 pub use expert::{train_expert, ExpertConfig};
-pub use inference::{dense_perplexity, serve, Mixture, Request, Response};
+pub use inference::{dense_perplexity, serve, serve_threaded, Mixture, Request, Response};
 pub use pipeline::{run_pipeline, PipelineConfig, PipelineResult};
-pub use scoring::{score_matrix, score_matrix_rows};
+pub use scoring::{
+    score_matrix, score_matrix_rows, score_matrix_rows_threaded, score_matrix_threaded,
+};
 pub use sharding::{shard_corpus, Shards};

@@ -17,6 +17,7 @@ use super::inference::Mixture;
 use super::sharding::shard_corpus;
 use crate::data::SequenceGen;
 use crate::metrics::RunLog;
+use crate::runtime::parallel::{resolve_threads, run_fallible};
 use crate::runtime::Engine;
 use crate::tokenizer::Bpe;
 
@@ -39,6 +40,9 @@ pub struct PipelineConfig {
     /// Routing prefix length M (training-time).
     pub prefix_len: usize,
     pub seed: u64,
+    /// Worker threads for expert/router group fan-out (0 = auto: the
+    /// machine's available parallelism).
+    pub threads: usize,
 }
 
 impl Default for PipelineConfig {
@@ -54,6 +58,7 @@ impl Default for PipelineConfig {
             expert_steps: 60,
             prefix_len: 32,
             seed: 1234,
+            threads: 0,
         }
     }
 }
@@ -88,6 +93,7 @@ pub fn run_pipeline(engine: &Engine, bpe: &Bpe, cfg: &PipelineConfig) -> Result<
         steps_per_round: cfg.em_steps_per_round,
         prefix_len: cfg.prefix_len,
         seed: cfg.seed,
+        threads: cfg.threads,
     };
     let mut router_gen = SequenceGen::new(bpe, router_meta.seq_len, cfg.seed ^ 0x52_0000);
     let trained = train_routers(
@@ -104,6 +110,7 @@ pub fn run_pipeline(engine: &Engine, bpe: &Bpe, cfg: &PipelineConfig) -> Result<
     // every expert's step budget so no sequence repeats.
     let needed = cfg.n_experts * cfg.expert_steps * expert_meta.train_batch;
     let n_shard = cfg.shard_sequences.max(needed);
+    let threads = resolve_threads(cfg.threads);
     let mut shard_gen = SequenceGen::new(bpe, expert_meta.seq_len, cfg.seed ^ 0x5AD);
     let shards = shard_corpus(
         engine,
@@ -113,20 +120,36 @@ pub fn run_pipeline(engine: &Engine, bpe: &Bpe, cfg: &PipelineConfig) -> Result<
         n_shard,
         cfg.prefix_len,
         &mut ledger,
+        threads,
     )?;
     let segment_purity = shards.segment_purity();
     let segment_sizes: Vec<usize> = shards.segments.iter().map(Vec::len).collect();
 
-    // Stage 3: independent experts (lines 14-16).
+    // Stage 3: independent experts (lines 14-16). Each expert is its own
+    // node in the paper's topology — no communication — so the E training
+    // runs fan across the worker pool; per-expert trajectories depend
+    // only on their own seed and segment, so any worker count produces
+    // identical experts.
+    let tasks: Vec<_> = shards
+        .segments
+        .iter()
+        .enumerate()
+        .map(|(e, segment)| {
+            let ecfg = ExpertConfig {
+                steps: cfg.expert_steps,
+                seed: cfg.seed ^ (0xE0 + e as u64),
+                log_every: 10,
+            };
+            let variant = &cfg.expert_variant;
+            move || -> Result<(crate::runtime::TrainState, RunLog)> {
+                let mut elog = RunLog::new();
+                let state = train_expert(engine, variant, &ecfg, segment, &mut elog)?;
+                Ok((state, elog))
+            }
+        })
+        .collect();
     let mut experts = Vec::with_capacity(cfg.n_experts);
-    for (e, segment) in shards.segments.iter().enumerate() {
-        let ecfg = ExpertConfig {
-            steps: cfg.expert_steps,
-            seed: cfg.seed ^ (0xE0 + e as u64),
-            log_every: 10,
-        };
-        let mut elog = RunLog::new();
-        let state = train_expert(engine, &cfg.expert_variant, &ecfg, segment, &mut elog)?;
+    for (e, (state, elog)) in run_fallible(tasks, threads)?.into_iter().enumerate() {
         log.merge_prefixed(&format!("expert{e}"), &elog);
         experts.push(state);
     }

@@ -8,12 +8,22 @@
 //! the engine's `(state, version)` device cache — so a B-batch × E-router
 //! score matrix moves B token uploads instead of the seed path's B×E token
 //! + B×E parameter uploads.
+//!
+//! Concurrency: the E routers score independently (each touches only its
+//! own `TrainState` and the `Sync` engine), so
+//! [`score_matrix_rows_threaded`] uploads token batches in bounded
+//! windows and fans one task per router per window across a worker pool —
+//! the pool spawns once per window (not once per batch) and device
+//! residency stays bounded no matter how many rows are scored. Results
+//! are written back by router index, so the parallel path is
+//! bit-identical to the sequential one.
 
 use anyhow::Result;
 
 use crate::data::Sequence;
 use crate::runtime::engine::tokens_literal;
-use crate::runtime::{Engine, TrainState, VariantMeta};
+use crate::runtime::parallel::{default_threads, run_fallible};
+use crate::runtime::{DeviceBuffer, Engine, TrainState, VariantMeta};
 
 /// `(start, real_rows)` spans that tile `n` items into `bs`-sized batches;
 /// the final span may be short (the caller pads it to the compiled shape).
@@ -28,8 +38,36 @@ pub(crate) fn batch_spans(n: usize, bs: usize) -> Vec<(usize, usize)> {
     spans
 }
 
+/// Pad `batch` to `bs` rows by repeating the last row **by reference**
+/// (no token clones); the caller discards the padding rows' outputs.
+/// No-op on an empty batch or one already at/above `bs`.
+pub(crate) fn pad_batch<'a>(mut batch: Vec<&'a [u32]>, bs: usize) -> Vec<&'a [u32]> {
+    if let Some(&pad) = batch.last() {
+        while batch.len() < bs {
+            batch.push(pad);
+        }
+    }
+    batch
+}
+
+/// Owned `m`-token prefix of a row that is not already exactly `m` long:
+/// longer rows are truncated, shorter rows are right-padded by repeating
+/// their last token (an empty row pads with token 0). Short requests —
+/// rows with fewer than `m` tokens — therefore score under the compiled
+/// `prefix_nll_{m}` shape instead of erroring on the literal build.
+pub(crate) fn pad_prefix_row(row: &[u32], m: usize) -> Vec<u32> {
+    let take = m.min(row.len());
+    let mut out = Vec::with_capacity(m);
+    out.extend_from_slice(&row[..take]);
+    let fill = row.last().copied().unwrap_or(0);
+    out.resize(m, fill);
+    out
+}
+
 /// Score all sequences' `m`-token prefixes under every router.
 /// Returns `nll[seq][router]` (summed prefix NLL — lower is better).
+/// Routers fan across [`default_threads`] workers; use
+/// [`score_matrix_threaded`] for an explicit worker count.
 pub fn score_matrix(
     engine: &Engine,
     routers: &[TrainState],
@@ -37,13 +75,29 @@ pub fn score_matrix(
     seqs: &[Sequence],
     m: usize,
 ) -> Result<Vec<Vec<f32>>> {
+    score_matrix_threaded(engine, routers, meta, seqs, m, default_threads())
+}
+
+/// [`score_matrix`] with an explicit worker count for the per-batch
+/// router fan-out. `threads <= 1` is the sequential reference path.
+pub fn score_matrix_threaded(
+    engine: &Engine,
+    routers: &[TrainState],
+    meta: &VariantMeta,
+    seqs: &[Sequence],
+    m: usize,
+    threads: usize,
+) -> Result<Vec<Vec<f32>>> {
     let rows: Vec<&[u32]> = seqs.iter().map(|s| s.prefix(m)).collect();
-    score_matrix_rows(engine, routers, meta, &rows, m)
+    score_matrix_rows_threaded(engine, routers, meta, &rows, m, threads)
 }
 
 /// [`score_matrix`] over borrowed token rows (each row is the `m`-token
-/// prefix to score). This is the allocation-free entry the serving loop
-/// uses — requests never get wrapped into `Sequence` clones.
+/// prefix to score; rows of any other length are normalized via
+/// [`pad_prefix_row`]). This is the allocation-light entry the serving
+/// loop uses — requests never get wrapped into `Sequence` clones.
+/// Routers are fanned across [`default_threads`] workers; use
+/// [`score_matrix_rows_threaded`] for an explicit worker count.
 pub fn score_matrix_rows(
     engine: &Engine,
     routers: &[TrainState],
@@ -51,22 +105,68 @@ pub fn score_matrix_rows(
     rows: &[&[u32]],
     m: usize,
 ) -> Result<Vec<Vec<f32>>> {
-    let mut out = vec![vec![0.0f32; routers.len()]; rows.len()];
+    score_matrix_rows_threaded(engine, routers, meta, rows, m, default_threads())
+}
+
+/// [`score_matrix_rows`] with an explicit worker count for the per-batch
+/// router fan-out. `threads <= 1` is the sequential reference path;
+/// results are bit-identical at any worker count.
+pub fn score_matrix_rows_threaded(
+    engine: &Engine,
+    routers: &[TrainState],
+    meta: &VariantMeta,
+    rows: &[&[u32]],
+    m: usize,
+    threads: usize,
+) -> Result<Vec<Vec<f32>>> {
+    // normalize row lengths: owned padded/truncated copies only where a
+    // row is not already exactly m tokens
+    let normalized: Vec<Option<Vec<u32>>> = rows
+        .iter()
+        .map(|r| (r.len() != m).then(|| pad_prefix_row(r, m)))
+        .collect();
+    let rows: Vec<&[u32]> = rows
+        .iter()
+        .zip(&normalized)
+        .map(|(r, p)| p.as_deref().unwrap_or(r))
+        .collect();
+
+    // Spans are processed in fixed-size windows: a window's token batches
+    // upload once up front (each shared device-resident by all E routers)
+    // and are dropped before the next window starts, so peak device
+    // residency is bounded at SPAN_WINDOW * prefix_batch rows no matter
+    // how large the scored corpus is, while the worker pool spawns once
+    // per window — not once per span. Each router scores every span of
+    // the window against its own state, so results are bit-identical at
+    // any worker count.
+    const SPAN_WINDOW: usize = 16;
     let bs = meta.prefix_batch;
-    for (start, real) in batch_spans(rows.len(), bs) {
-        let mut batch: Vec<&[u32]> = rows[start..start + real].to_vec();
-        // pad to the compiled batch shape by repeating the last row (by
-        // reference; padding outputs are discarded below)
-        let pad = batch[real - 1];
-        while batch.len() < bs {
-            batch.push(pad);
-        }
-        // one token upload per batch, shared by every router
-        let tokens = engine.upload(&tokens_literal(&batch, m)?)?;
-        for (r, router) in routers.iter().enumerate() {
-            let scores = router.prefix_nll_device(engine, &tokens, meta, m)?;
-            for (i, &s) in scores.iter().take(real).enumerate() {
-                out[start + i][r] = s;
+    let mut out = vec![vec![0.0f32; routers.len()]; rows.len()];
+    for window in batch_spans(rows.len(), bs).chunks(SPAN_WINDOW) {
+        let uploads: Vec<DeviceBuffer> = window
+            .iter()
+            .map(|&(start, real)| {
+                let batch = pad_batch(rows[start..start + real].to_vec(), bs);
+                engine.upload(&tokens_literal(&batch, m)?)
+            })
+            .collect::<Result<_>>()?;
+        let tasks: Vec<_> = routers
+            .iter()
+            .map(|router| {
+                let uploads = &uploads;
+                move || -> Result<Vec<Vec<f32>>> {
+                    uploads
+                        .iter()
+                        .map(|tokens| router.prefix_nll_device(engine, tokens, meta, m))
+                        .collect()
+                }
+            })
+            .collect();
+        for (r, span_scores) in run_fallible(tasks, threads)?.into_iter().enumerate() {
+            for (&(start, real), scores) in window.iter().zip(span_scores) {
+                for (i, &s) in scores.iter().take(real).enumerate() {
+                    out[start + i][r] = s;
+                }
             }
         }
     }
@@ -151,6 +251,31 @@ mod tests {
         assert_eq!(batch_spans(3, 32), vec![(0, 3)]);
         // empty input -> no spans
         assert!(batch_spans(0, 4).is_empty());
+    }
+
+    #[test]
+    fn pad_prefix_row_handles_short_exact_long_and_empty() {
+        // len < m: right-padded with the last token
+        assert_eq!(pad_prefix_row(&[5, 6], 4), vec![5, 6, 6, 6]);
+        // len == m: identity copy
+        assert_eq!(pad_prefix_row(&[1, 2, 3], 3), vec![1, 2, 3]);
+        // len > m: truncated to the m-token prefix
+        assert_eq!(pad_prefix_row(&[1, 2, 3, 4, 5], 3), vec![1, 2, 3]);
+        // empty row: padded with token 0
+        assert_eq!(pad_prefix_row(&[], 2), vec![0, 0]);
+    }
+
+    #[test]
+    fn pad_batch_repeats_last_row_by_reference() {
+        let a: &[u32] = &[1, 2];
+        let b: &[u32] = &[3, 4];
+        let padded = pad_batch(vec![a, b], 5);
+        assert_eq!(padded, vec![a, b, b, b, b]);
+        // already full or over: untouched
+        assert_eq!(pad_batch(vec![a, b], 2), vec![a, b]);
+        assert_eq!(pad_batch(vec![a, b], 1), vec![a, b]);
+        // empty stays empty (nothing to repeat)
+        assert!(pad_batch(Vec::new(), 3).is_empty());
     }
 
     #[test]

@@ -10,7 +10,7 @@ use anyhow::Result;
 
 use super::assignment::balanced_assign;
 use super::comm::CommLedger;
-use super::scoring::score_matrix;
+use super::scoring::score_matrix_threaded;
 use crate::data::{Sequence, SequenceGen};
 use crate::runtime::{Engine, TrainState, VariantMeta};
 
@@ -22,7 +22,8 @@ pub struct Shards {
 }
 
 /// Shard `n_sequences` fresh sequences into `routers.len()` balanced
-/// segments using prefix scoring with prefix length `m`.
+/// segments using prefix scoring with prefix length `m`. Router scoring
+/// fans across `threads` workers (`<= 1` scores sequentially).
 pub fn shard_corpus(
     engine: &Engine,
     routers: &[TrainState],
@@ -31,9 +32,10 @@ pub fn shard_corpus(
     n_sequences: usize,
     m: usize,
     ledger: &mut CommLedger,
+    threads: usize,
 ) -> Result<Shards> {
     let seqs: Vec<Sequence> = gen.batch(n_sequences);
-    let nll = score_matrix(engine, routers, meta, &seqs, m)?;
+    let nll = score_matrix_threaded(engine, routers, meta, &seqs, m, threads)?;
     ledger.record_score_allgather(routers.len(), n_sequences as u64, u64::MAX);
     let assignment = balanced_assign(&nll, None);
 

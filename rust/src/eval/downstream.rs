@@ -15,8 +15,9 @@
 use anyhow::Result;
 
 use crate::coordinator::inference::Mixture;
-use crate::coordinator::scoring::score_matrix;
+use crate::coordinator::scoring::score_matrix_threaded;
 use crate::coordinator::assignment::argmin_assign;
+use crate::runtime::parallel::default_threads;
 use crate::data::corpus::{domain_name, generate_document, DOMAINS};
 use crate::data::Sequence;
 use crate::runtime::{Engine, TrainState, VariantMeta};
@@ -177,11 +178,25 @@ pub fn single_model_accuracy(
 
 /// Per-domain accuracy of the mixture: route each task on its question
 /// prefix (first `m` tokens), then score options with the routed expert.
+/// Router scoring fans across [`default_threads`] workers.
 pub fn mixture_accuracy(
     engine: &Engine,
     mixture: &Mixture,
     set: &TaskSet,
     m: usize,
+) -> Result<Vec<(String, f64)>> {
+    mixture_accuracy_threaded(engine, mixture, set, m, default_threads())
+}
+
+/// [`mixture_accuracy`] with an explicit worker count for the routing
+/// fan-out (`threads <= 1` scores sequentially; option scoring per
+/// routed expert group is sequential either way).
+pub fn mixture_accuracy_threaded(
+    engine: &Engine,
+    mixture: &Mixture,
+    set: &TaskSet,
+    m: usize,
+    threads: usize,
 ) -> Result<Vec<(String, f64)>> {
     // route on question prefixes
     let seqs: Vec<Sequence> = set
@@ -198,7 +213,7 @@ pub fn mixture_accuracy(
             }
         })
         .collect();
-    let nll = score_matrix(engine, &mixture.routers, &mixture.router_meta, &seqs, m)?;
+    let nll = score_matrix_threaded(engine, &mixture.routers, &mixture.router_meta, &seqs, m, threads)?;
     let routes = argmin_assign(&nll).expert_of;
 
     let mut preds = vec![0usize; set.tasks.len()];

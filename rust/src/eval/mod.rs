@@ -8,4 +8,6 @@
 
 pub mod downstream;
 
-pub use downstream::{build_tasks, mixture_accuracy, single_model_accuracy, Task, TaskSet};
+pub use downstream::{
+    build_tasks, mixture_accuracy, mixture_accuracy_threaded, single_model_accuracy, Task, TaskSet,
+};

@@ -81,6 +81,7 @@ impl Budget {
             expert_steps: self.expert_steps,
             prefix_len: self.prefix_len,
             seed: self.seed,
+            threads: 0,
         }
     }
 }

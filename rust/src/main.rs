@@ -15,15 +15,17 @@ use anyhow::{bail, Result};
 
 use smalltalk::baselines::train_dense;
 use smalltalk::config::ExperimentConfig;
-use smalltalk::coordinator::{comm, dense_perplexity, run_pipeline, serve, CommLedger, Request};
+use smalltalk::coordinator::{
+    comm, dense_perplexity, run_pipeline, serve_threaded, CommLedger, Request,
+};
 use smalltalk::data::corpus::Corpus;
 use smalltalk::data::SequenceGen;
 use smalltalk::eval::downstream::macro_accuracy;
-use smalltalk::eval::{build_tasks, mixture_accuracy, single_model_accuracy};
+use smalltalk::eval::{build_tasks, mixture_accuracy_threaded, single_model_accuracy};
 use smalltalk::flops;
 use smalltalk::metrics::{sparkline, RunLog};
 use smalltalk::model::{load_checkpoint, save_checkpoint};
-use smalltalk::runtime::Engine;
+use smalltalk::runtime::{resolve_threads, Engine};
 use smalltalk::tokenizer::{Bpe, BpeTrainer};
 use smalltalk::util::cli::Args;
 
@@ -31,7 +33,7 @@ const VALUE_OPTS: &[&str] = &[
     "config", "artifacts-dir", "results-dir", "router", "expert", "experts",
     "em-rounds", "em-chunk", "em-steps", "shard-sequences", "expert-steps",
     "prefix", "eval-sequences", "tasks-per-domain", "seed", "requests", "out",
-    "ckpt-dir", "steps",
+    "ckpt-dir", "steps", "threads",
 ];
 
 const EVAL_SEED: u64 = 0xE7A1;
@@ -47,6 +49,7 @@ fn main() {
 fn usage() -> &'static str {
     "usage: smalltalk <e2e|train-routers|train-dense|eval|serve|flops|comm|info> [options]\n\
      common options: --config f.json --experts N --expert-steps N --seed N\n\
+                     --threads N (worker threads for expert/router groups; 0 = auto)\n\
      see configs/ for examples and DESIGN.md for the experiment index"
 }
 
@@ -122,7 +125,42 @@ fn cmd_e2e(cfg: &ExperimentConfig) -> Result<()> {
         p.n_experts, p.expert_variant, p.router_variant, p.em_rounds, p.expert_steps
     );
 
-    let result = run_pipeline(&engine, &bpe, p)?;
+    // FLOPs-matched dense baseline: same total tokens. The paper pairing
+    // (same steps, E x batch) is used when that batch shape is compiled.
+    let meta0 = engine.variant(&p.expert_variant)?.clone();
+    let dense_batch = p.n_experts * meta0.train_batch;
+    let mut dense_log = RunLog::new();
+    let run_dense = |dense_log: &mut RunLog| {
+        if dense_batch == meta0.train_batch || meta0.dense_batches.contains(&dense_batch) {
+            eprintln!("[e2e] dense baseline: {} steps @ batch {dense_batch} ...", p.expert_steps);
+            smalltalk::baselines::train_dense_batched(
+                &engine, &bpe, &p.expert_variant, p.expert_steps, dense_batch,
+                cfg.seed ^ 0xD, dense_log,
+            )
+        } else {
+            let dense_steps = p.n_experts * p.expert_steps;
+            eprintln!("[e2e] dense baseline: {dense_steps} steps @ native batch ...");
+            train_dense(&engine, &bpe, &p.expert_variant, dense_steps, cfg.seed ^ 0xD, dense_log)
+        }
+    };
+
+    // The dense comparator shares no state with the mixture (separate
+    // TrainStates, separate data streams, engine is Sync), so with more
+    // than one worker it trains concurrently with the pipeline — results
+    // are identical either way, only the wall clock differs.
+    let threads = resolve_threads(p.threads);
+    let (result, dense) = if threads > 1 {
+        let (result, dense) = std::thread::scope(|s| {
+            let pipeline = s.spawn(|| run_pipeline(&engine, &bpe, p));
+            let dense = run_dense(&mut dense_log);
+            (pipeline.join().expect("pipeline thread panicked"), dense)
+        });
+        (result?, dense?)
+    } else {
+        // sequential: fail fast — don't train the baseline for a
+        // pipeline that has already errored
+        (run_pipeline(&engine, &bpe, p)?, run_dense(&mut dense_log)?)
+    };
     eprintln!(
         "[e2e] sharded segments: sizes {:?}, domain purity {:?}",
         result.segment_sizes,
@@ -133,33 +171,18 @@ fn cmd_e2e(cfg: &ExperimentConfig) -> Result<()> {
             .collect::<Vec<_>>()
     );
 
-    // FLOPs-matched dense baseline: same total tokens. The paper pairing
-    // (same steps, E x batch) is used when that batch shape is compiled.
-    let meta0 = engine.variant(&p.expert_variant)?.clone();
-    let dense_batch = p.n_experts * meta0.train_batch;
-    let mut dense_log = RunLog::new();
-    let dense = if dense_batch == meta0.train_batch || meta0.dense_batches.contains(&dense_batch) {
-        eprintln!("[e2e] dense baseline: {} steps @ batch {dense_batch} ...", p.expert_steps);
-        smalltalk::baselines::train_dense_batched(
-            &engine, &bpe, &p.expert_variant, p.expert_steps, dense_batch,
-            cfg.seed ^ 0xD, &mut dense_log,
-        )?
-    } else {
-        let dense_steps = p.n_experts * p.expert_steps;
-        eprintln!("[e2e] dense baseline: {dense_steps} steps @ native batch ...");
-        train_dense(&engine, &bpe, &p.expert_variant, dense_steps, cfg.seed ^ 0xD, &mut dense_log)?
-    };
-
     // Held-out eval.
     let meta = engine.variant(&p.expert_variant)?.clone();
     let mut eval_gen = SequenceGen::new(&bpe, meta.seq_len, cfg.seed ^ EVAL_SEED);
     let held_out = eval_gen.batch(cfg.eval_sequences);
-    let mix_ppl = result.mixture.perplexity(&engine, &held_out, p.prefix_len)?;
+    let mix_ppl = result
+        .mixture
+        .perplexity_threaded(&engine, &held_out, p.prefix_len, threads)?;
     let dense_ppl = dense_perplexity(&engine, &dense, &meta, &held_out)?;
 
     // Downstream.
     let tasks = build_tasks(&bpe, cfg.tasks_per_domain, cfg.task_options, 32, cfg.seed ^ 0x7A5);
-    let mix_acc = mixture_accuracy(&engine, &result.mixture, &tasks, p.prefix_len)?;
+    let mix_acc = mixture_accuracy_threaded(&engine, &result.mixture, &tasks, p.prefix_len, threads)?;
     let dense_acc = single_model_accuracy(&engine, &dense, &meta, &tasks)?;
 
     println!("\n=== e2e results ===");
@@ -209,6 +232,7 @@ fn cmd_train_routers(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
         steps_per_round: p.em_steps_per_round,
         prefix_len: p.prefix_len,
         seed: p.seed,
+        threads: p.threads,
     };
     let router_meta = engine.variant(&p.router_variant)?.clone();
     let mut gen = SequenceGen::new(&bpe, router_meta.seq_len, cfg.seed ^ 0x52_0000);
@@ -293,13 +317,14 @@ fn cmd_serve(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
             tokens: s.tokens,
         })
         .collect();
+    let threads = resolve_threads(p.threads);
     let t0 = std::time::Instant::now();
-    let responses = serve(&engine, &result.mixture, &requests, p.prefix_len)?;
+    let responses = serve_threaded(&engine, &result.mixture, &requests, p.prefix_len, threads)?;
     let elapsed = t0.elapsed();
     let mean_nll: f64 =
         responses.iter().map(|r| r.nll as f64).sum::<f64>() / responses.len() as f64;
     println!(
-        "served {} requests in {:.2?} ({:.1} req/s), mean seq NLL {:.2}",
+        "served {} requests in {:.2?} ({:.1} req/s, {threads} worker threads), mean seq NLL {:.2}",
         responses.len(),
         elapsed,
         responses.len() as f64 / elapsed.as_secs_f64(),

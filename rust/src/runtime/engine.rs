@@ -15,11 +15,42 @@
 //! its version whenever parameters change, so stale buffers are replaced
 //! automatically. [`EngineStats`] accounts every transferred byte so the
 //! benches can report the reduction.
+//!
+//! # Thread safety (`Send + Sync` contract)
+//!
+//! `Engine` is `Send + Sync`: expert/router groups in a serving wave are
+//! independent (the paper's "no need to talk"), so
+//! [`crate::runtime::parallel`] fans them across threads against one
+//! shared engine. The interior state is guarded by three locks:
+//!
+//! Both caches lock at two levels — a global slot map (`Mutex`, held only
+//! for slot lookup, never across real work) plus one `Mutex` slot per key
+//! — so racing threads build each key exactly once while other keys' hits
+//! and builds proceed in parallel:
+//!
+//! * `cache` — the compile cache, one slot per `(variant, entry)`. The
+//!   slot lock is held **across compilation**, so each entry compiles
+//!   exactly once no matter how many threads race (`stats.compiles` is
+//!   identical at any worker count) without stalling hits or compiles of
+//!   other entries.
+//! * `device_cache` — the `(state_id, version)` buffer cache, one slot
+//!   per owning state, held across the miss path (literal build + upload
+//!   + insert). Racing [`Engine::state_buffer`] calls for the same state
+//!   serialize — each `(state_id, version)` uploads exactly once — while
+//!   an E-expert wave uploads its E parameter vectors concurrently.
+//! * `stats` (`Mutex`) — transfer/time accounting. Always the innermost
+//!   lock.
+//!
+//! **Locking order:** map → slot → `stats` within each cache; the compile
+//! and device caches are never held together, and the map locks are never
+//! held across a compile, build, or upload. Counter updates are
+//! commutative, so [`EngineStats`] totals are deterministic across thread
+//! counts (only the `*_secs` wall-clock floats vary).
 
-use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -56,20 +87,24 @@ pub struct EngineStats {
 
 impl EngineStats {
     /// Stats accumulated since an earlier snapshot (for per-bench-row
-    /// transfer reporting).
+    /// transfer reporting). Saturating: a snapshot taken across a counter
+    /// reset (e.g. around [`Engine::clear_device_cache`] or against a
+    /// fresh engine) clamps to zero instead of panicking in debug builds.
     pub fn since(&self, earlier: &EngineStats) -> EngineStats {
         EngineStats {
-            compiles: self.compiles - earlier.compiles,
-            compile_secs: self.compile_secs - earlier.compile_secs,
-            executions: self.executions - earlier.executions,
-            execute_secs: self.execute_secs - earlier.execute_secs,
-            uploads: self.uploads - earlier.uploads,
-            h2d_bytes: self.h2d_bytes - earlier.h2d_bytes,
-            d2h_bytes: self.d2h_bytes - earlier.d2h_bytes,
-            uploads_avoided: self.uploads_avoided - earlier.uploads_avoided,
-            h2d_bytes_avoided: self.h2d_bytes_avoided - earlier.h2d_bytes_avoided,
-            param_uploads: self.param_uploads - earlier.param_uploads,
-            cache_evictions: self.cache_evictions - earlier.cache_evictions,
+            compiles: self.compiles.saturating_sub(earlier.compiles),
+            compile_secs: (self.compile_secs - earlier.compile_secs).max(0.0),
+            executions: self.executions.saturating_sub(earlier.executions),
+            execute_secs: (self.execute_secs - earlier.execute_secs).max(0.0),
+            uploads: self.uploads.saturating_sub(earlier.uploads),
+            h2d_bytes: self.h2d_bytes.saturating_sub(earlier.h2d_bytes),
+            d2h_bytes: self.d2h_bytes.saturating_sub(earlier.d2h_bytes),
+            uploads_avoided: self.uploads_avoided.saturating_sub(earlier.uploads_avoided),
+            h2d_bytes_avoided: self
+                .h2d_bytes_avoided
+                .saturating_sub(earlier.h2d_bytes_avoided),
+            param_uploads: self.param_uploads.saturating_sub(earlier.param_uploads),
+            cache_evictions: self.cache_evictions.saturating_sub(earlier.cache_evictions),
         }
     }
 }
@@ -78,11 +113,14 @@ impl EngineStats {
 ///
 /// The `fresh` flag marks a buffer whose upload was just paid for; its
 /// first consumption by [`Engine::run_buffers`] is not counted as an
-/// avoided upload, every later consumption is.
+/// avoided upload, every later consumption is. It is atomic so one
+/// buffer can be fanned across concurrent consumers (e.g. a token batch
+/// scored under E routers on E threads): exactly one consumer wins the
+/// fresh pass, so the avoided-upload total stays deterministic.
 pub struct DeviceBuffer {
-    buf: Rc<PjRtBuffer>,
+    buf: Arc<PjRtBuffer>,
     bytes: u64,
-    fresh: Cell<bool>,
+    fresh: AtomicBool,
 }
 
 impl DeviceBuffer {
@@ -106,44 +144,79 @@ pub enum Arg<'a> {
 /// `(owner_id → (version, payload))` cache with replace-on-version-bump
 /// eviction: at most one live entry per owner, and a lookup with a newer
 /// version replaces whatever was resident.
+///
+/// Two-level locking: a global map of per-owner slots (the map lock is
+/// held only for slot lookup, never across payload construction) plus a
+/// per-owner slot lock held across the miss path. Racing lookups for the
+/// same owner serialize — so each `(owner, version)` builds exactly once —
+/// while lookups and builds for *different* owners proceed in parallel.
 struct VersionedCache<V> {
-    map: HashMap<u64, (u64, V)>,
+    map: Mutex<HashMap<u64, Arc<Mutex<Option<(u64, V)>>>>>,
 }
 
-impl<V> VersionedCache<V> {
+impl<V: Clone> VersionedCache<V> {
     fn new() -> Self {
         VersionedCache {
-            map: HashMap::new(),
+            map: Mutex::new(HashMap::new()),
         }
     }
 
-    fn get(&self, id: u64, version: u64) -> Option<&V> {
-        match self.map.get(&id) {
-            Some((v, payload)) if *v == version => Some(payload),
-            _ => None,
+    /// Look up `(id, version)`, building + inserting via `make` on a
+    /// miss. Returns `(payload, hit, evicted)`: `hit` is true when the
+    /// payload was already resident (so `make` never ran), `evicted` is
+    /// true when the insert replaced an older-version entry. A failing
+    /// `make` leaves the slot untouched.
+    fn get_or_try_insert<E>(
+        &self,
+        id: u64,
+        version: u64,
+        make: impl FnOnce() -> std::result::Result<V, E>,
+    ) -> std::result::Result<(V, bool, bool), E> {
+        let slot = lock(&self.map)
+            .entry(id)
+            .or_insert_with(|| Arc::new(Mutex::new(None)))
+            .clone();
+        let mut entry = lock(&slot);
+        if let Some((v, payload)) = entry.as_ref() {
+            if *v == version {
+                return Ok((payload.clone(), true, false));
+            }
         }
+        let payload = make()?;
+        let evicted = entry.replace((version, payload.clone())).is_some();
+        Ok((payload, false, evicted))
     }
 
-    /// Insert; returns true when an older-version entry was evicted.
-    fn insert(&mut self, id: u64, version: u64, payload: V) -> bool {
-        self.map.insert(id, (version, payload)).is_some()
-    }
-
+    /// Owners with a resident payload. Slot handles are cloned out first
+    /// so the map lock is never held while waiting on a slot (an in-flight
+    /// upload must not stall other owners' lookups).
     fn len(&self) -> usize {
-        self.map.len()
+        let slots: Vec<_> = lock(&self.map).values().cloned().collect();
+        slots.iter().filter(|slot| lock(slot).is_some()).count()
     }
 
-    fn clear(&mut self) {
-        self.map.clear();
+    fn clear(&self) {
+        lock(&self.map).clear();
     }
 }
+
+/// Per-entry slot in the compile cache: the slot lock is held across
+/// compilation, so each `(variant, entry)` compiles exactly once under
+/// races while other entries' hits and compiles proceed in parallel.
+type CompileSlot = Arc<Mutex<Option<Arc<PjRtLoadedExecutable>>>>;
 
 pub struct Engine {
     client: PjRtClient,
     manifest: Manifest,
-    cache: RefCell<HashMap<(String, String), Rc<PjRtLoadedExecutable>>>,
-    device_cache: RefCell<VersionedCache<(Rc<PjRtBuffer>, u64)>>,
-    stats: RefCell<EngineStats>,
+    cache: Mutex<HashMap<(String, String), CompileSlot>>,
+    device_cache: VersionedCache<(Arc<PjRtBuffer>, u64)>,
+    stats: Mutex<EngineStats>,
+}
+
+/// Lock a mutex, recovering from poisoning (a panicked task must not wedge
+/// the engine's accounting for the surviving workers).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
 }
 
 /// Transfer size of a literal. Every dtype this repo moves (f32/i32/u32)
@@ -160,9 +233,9 @@ impl Engine {
         Ok(Engine {
             client,
             manifest,
-            cache: RefCell::new(HashMap::new()),
-            device_cache: RefCell::new(VersionedCache::new()),
-            stats: RefCell::new(EngineStats::default()),
+            cache: Mutex::new(HashMap::new()),
+            device_cache: VersionedCache::new(),
+            stats: Mutex::new(EngineStats::default()),
         })
     }
 
@@ -175,24 +248,29 @@ impl Engine {
     }
 
     pub fn stats(&self) -> EngineStats {
-        self.stats.borrow().clone()
+        lock(&self.stats).clone()
     }
 
     /// Live entries in the `(state, version)` device cache.
     pub fn device_cache_entries(&self) -> usize {
-        self.device_cache.borrow().len()
+        self.device_cache.len()
     }
 
     /// Drop every device-resident buffer (frees device memory; the next
     /// call per state re-uploads).
     pub fn clear_device_cache(&self) {
-        self.device_cache.borrow_mut().clear();
+        self.device_cache.clear();
     }
 
-    /// Load + compile an entry point (cached).
-    pub fn executable(&self, variant: &str, entry: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+    /// Load + compile an entry point (cached). A miss holds only this
+    /// entry's *per-key* slot lock across compilation, so racing threads
+    /// compile each `(variant, entry)` exactly once while hits and
+    /// compiles of other entries proceed in parallel.
+    pub fn executable(&self, variant: &str, entry: &str) -> Result<Arc<PjRtLoadedExecutable>> {
         let key = (variant.to_string(), entry.to_string());
-        if let Some(exe) = self.cache.borrow().get(&key) {
+        let slot: CompileSlot = lock(&self.cache).entry(key).or_default().clone();
+        let mut compiled = lock(&slot);
+        if let Some(exe) = compiled.as_ref() {
             return Ok(exe.clone());
         }
         let path = self.manifest.hlo_path(variant, entry);
@@ -206,27 +284,27 @@ impl Engine {
             .compile(&comp)
             .map_err(anyhow::Error::msg)
             .with_context(|| format!("compiling {variant}/{entry}"))?;
-        let exe = Rc::new(exe);
+        let exe = Arc::new(exe);
         {
-            let mut st = self.stats.borrow_mut();
+            let mut st = lock(&self.stats);
             st.compiles += 1;
             st.compile_secs += t0.elapsed().as_secs_f64();
         }
-        self.cache.borrow_mut().insert(key, exe.clone());
+        *compiled = Some(exe.clone());
         Ok(exe)
     }
 
     /// Raw host→device copy with transfer accounting.
-    fn upload_raw(&self, lit: &Literal) -> Result<(Rc<PjRtBuffer>, u64)> {
+    fn upload_raw(&self, lit: &Literal) -> Result<(Arc<PjRtBuffer>, u64)> {
         let bytes = literal_bytes(lit);
         let buf = self
             .client
             .buffer_from_host_literal(None, lit)
             .map_err(anyhow::Error::msg)?;
-        let mut st = self.stats.borrow_mut();
+        let mut st = lock(&self.stats);
         st.uploads += 1;
         st.h2d_bytes += bytes;
-        Ok((Rc::new(buf), bytes))
+        Ok((Arc::new(buf), bytes))
     }
 
     /// Upload a literal once and hold it device-resident; reuse the
@@ -239,7 +317,7 @@ impl Engine {
         Ok(DeviceBuffer {
             buf,
             bytes,
-            fresh: Cell::new(true),
+            fresh: AtomicBool::new(true),
         })
     }
 
@@ -248,27 +326,32 @@ impl Engine {
     /// without any host↔device traffic; on a miss `make` builds the
     /// literal, it is uploaded once, and any stale older-version buffer
     /// for the same owner is evicted.
+    ///
+    /// Only the owner's *per-state* slot lock is held across the miss
+    /// path, so concurrent calls for the same `(state_id, version)`
+    /// perform exactly one upload (the losers of the race are served the
+    /// winner's resident buffer) while lookups and uploads for other
+    /// states proceed in parallel — an E-expert wave uploads its E fresh
+    /// parameter vectors concurrently.
     pub fn state_buffer(
         &self,
         state_id: u64,
         version: u64,
         make: impl FnOnce() -> Literal,
     ) -> Result<DeviceBuffer> {
-        if let Some((buf, bytes)) = self.device_cache.borrow().get(state_id, version) {
+        let (payload, hit, evicted) = self
+            .device_cache
+            .get_or_try_insert(state_id, version, || self.upload_raw(&make()))?;
+        let (buf, bytes) = payload;
+        if hit {
             return Ok(DeviceBuffer {
-                buf: buf.clone(),
-                bytes: *bytes,
-                fresh: Cell::new(false),
+                buf,
+                bytes,
+                fresh: AtomicBool::new(false),
             });
         }
-        let lit = make();
-        let (buf, bytes) = self.upload_raw(&lit)?;
-        let evicted = self
-            .device_cache
-            .borrow_mut()
-            .insert(state_id, version, (buf.clone(), bytes));
         {
-            let mut st = self.stats.borrow_mut();
+            let mut st = lock(&self.stats);
             st.param_uploads += 1;
             if evicted {
                 st.cache_evictions += 1;
@@ -277,7 +360,7 @@ impl Engine {
         Ok(DeviceBuffer {
             buf,
             bytes,
-            fresh: Cell::new(true),
+            fresh: AtomicBool::new(true),
         })
     }
 
@@ -295,7 +378,7 @@ impl Engine {
         let exe = self.executable(variant, entry)?;
         let t0 = Instant::now();
         // Upload the literal inputs first so the borrow set below is stable.
-        let mut owned: Vec<Rc<PjRtBuffer>> = Vec::new();
+        let mut owned: Vec<Arc<PjRtBuffer>> = Vec::new();
         for a in args {
             if let Arg::Lit(lit) = a {
                 owned.push(self.upload_raw(lit)?.0);
@@ -310,8 +393,8 @@ impl Engine {
                     oi += 1;
                 }
                 Arg::Dev(d) => {
-                    if !d.fresh.replace(false) {
-                        let mut st = self.stats.borrow_mut();
+                    if !d.fresh.swap(false, Ordering::AcqRel) {
+                        let mut st = lock(&self.stats);
                         st.uploads_avoided += 1;
                         st.h2d_bytes_avoided += d.bytes;
                     }
@@ -332,7 +415,7 @@ impl Engine {
             .context("executable produced no output")?;
         let lit = first.to_literal_sync().map_err(anyhow::Error::msg)?;
         {
-            let mut st = self.stats.borrow_mut();
+            let mut st = lock(&self.stats);
             st.executions += 1;
             st.execute_secs += t0.elapsed().as_secs_f64();
             st.d2h_bytes += literal_bytes(&lit);
@@ -430,18 +513,24 @@ mod tests {
 
     #[test]
     fn versioned_cache_hits_and_evicts() {
-        let mut c: VersionedCache<u32> = VersionedCache::new();
-        assert!(c.get(1, 0).is_none());
-        assert!(!c.insert(1, 0, 10));
-        assert_eq!(c.get(1, 0), Some(&10));
-        // a different version misses but does not remove
-        assert!(c.get(1, 1).is_none());
+        let c: VersionedCache<u32> = VersionedCache::new();
+        // first lookup misses: the builder runs, nothing is evicted
+        let (v, hit, evicted) = c.get_or_try_insert::<()>(1, 0, || Ok(10)).unwrap();
+        assert_eq!((v, hit, evicted), (10, false, false));
+        // same version: served resident, the builder must not run
+        let (v, hit, _) = c.get_or_try_insert::<()>(1, 0, || unreachable!()).unwrap();
+        assert_eq!((v, hit), (10, true));
         // bumping the version replaces (evicts) the old entry
-        assert!(c.insert(1, 1, 11));
-        assert!(c.get(1, 0).is_none());
-        assert_eq!(c.get(1, 1), Some(&11));
+        let (v, hit, evicted) = c.get_or_try_insert::<()>(1, 1, || Ok(11)).unwrap();
+        assert_eq!((v, hit, evicted), (11, false, true));
+        // the old version is gone: asking for it again rebuilds
+        let (v, hit, evicted) = c.get_or_try_insert::<()>(1, 0, || Ok(100)).unwrap();
+        assert_eq!((v, hit, evicted), (100, false, true));
         // independent owners coexist
-        assert!(!c.insert(2, 0, 20));
+        c.get_or_try_insert::<()>(2, 0, || Ok(20)).unwrap();
+        assert_eq!(c.len(), 2);
+        // a failed build leaves the slot empty (not a live entry)
+        assert!(c.get_or_try_insert(3, 0, || Err("boom")).is_err());
         assert_eq!(c.len(), 2);
         c.clear();
         assert_eq!(c.len(), 0);
@@ -461,5 +550,32 @@ mod tests {
         assert_eq!(d.uploads, 4);
         assert_eq!(d.h2d_bytes, 400);
         assert_eq!(d.uploads_avoided, 5);
+    }
+
+    #[test]
+    fn stats_since_saturates_across_resets() {
+        // snapshot taken before a reset: "later" stats are smaller than
+        // the snapshot; the delta clamps to zero instead of panicking
+        let mut before = EngineStats::default();
+        before.uploads = 10;
+        before.h2d_bytes = 1000;
+        before.param_uploads = 4;
+        before.compile_secs = 2.0;
+        let mut after = EngineStats::default();
+        after.uploads = 3;
+        after.compile_secs = 0.5;
+        let d = after.since(&before);
+        assert_eq!(d.uploads, 0);
+        assert_eq!(d.h2d_bytes, 0);
+        assert_eq!(d.param_uploads, 0);
+        assert_eq!(d.compile_secs, 0.0);
+    }
+
+    #[test]
+    fn engine_types_are_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Engine>();
+        assert_send_sync::<DeviceBuffer>();
+        assert_send_sync::<EngineStats>();
     }
 }

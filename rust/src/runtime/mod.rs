@@ -7,14 +7,19 @@
 //!   emitted by `python/compile/aot.py`,
 //! * [`Engine`] — a PJRT CPU client plus a compile cache (one compiled
 //!   executable per `(variant, entry_point)`, shared by every expert of
-//!   that variant),
+//!   that variant); `Send + Sync`, so independent expert/router groups
+//!   can execute concurrently against one engine,
 //! * [`TrainState`] — host-resident flat parameter/optimizer vectors and
-//!   the fused `train_step` / `eval_nll` / `prefix_nll` call wrappers.
+//!   the fused `train_step` / `eval_nll` / `prefix_nll` call wrappers,
+//! * [`parallel`] — the scoped-thread dispatch layer that fans those
+//!   independent groups across a configurable worker count.
 
 pub mod artifacts;
 pub mod engine;
+pub mod parallel;
 pub mod state;
 
 pub use artifacts::{locate_artifacts, Manifest, VariantMeta};
 pub use engine::{Arg, DeviceBuffer, Engine, EngineStats};
+pub use parallel::{default_threads, resolve_threads, run_fallible, run_tasks};
 pub use state::TrainState;

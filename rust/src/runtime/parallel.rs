@@ -1,0 +1,227 @@
+//! Parallel dispatch for independent expert/router groups.
+//!
+//! The paper's serving-time property — experts never talk — makes a
+//! serving wave embarrassingly parallel: once routing has grouped the
+//! requests, each expert group touches only its own `TrainState` and the
+//! shared (now `Sync`) [`Engine`](super::Engine). This module is the one
+//! place that spawns threads: a scoped work-stealing pool over a vector of
+//! `FnOnce` tasks, with results returned **in input order** so parallel
+//! callers stay bit-identical to sequential ones.
+//!
+//! No external thread-pool crate: the build is offline, and
+//! `std::thread::scope` (Rust ≥1.63) lets tasks borrow the engine, the
+//! mixture, and request rows without `'static` bounds or clones.
+
+use std::num::NonZeroUsize;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+/// Worker count used when none is configured: the `SMALLTALK_THREADS`
+/// environment variable if set (> 0), else the machine's available
+/// parallelism, else 1.
+pub fn default_threads() -> usize {
+    std::env::var("SMALLTALK_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(NonZeroUsize::get)
+                .unwrap_or(1)
+        })
+}
+
+/// Resolve a configured worker count: `0` means "auto" (see
+/// [`default_threads`]); any other value is used as-is.
+pub fn resolve_threads(configured: usize) -> usize {
+    if configured == 0 {
+        default_threads()
+    } else {
+        configured
+    }
+}
+
+/// Run `tasks` across at most `threads` workers, returning each task's
+/// output at the task's input index. With `threads <= 1` (or a single
+/// task) everything runs on the caller's thread — the sequential and
+/// parallel paths execute the *same* closures in the same per-task order,
+/// so any scheduling is outcome-equivalent.
+///
+/// Workers pull task indices from a shared atomic counter (work stealing
+/// by index), so a slow group does not leave the other workers idle. A
+/// panicking task propagates the panic to the caller after the scope
+/// joins.
+pub fn run_tasks<T, F>(tasks: Vec<F>, threads: usize) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    let n = tasks.len();
+    let workers = threads.max(1).min(n);
+    if workers <= 1 {
+        return tasks.into_iter().map(|f| f()).collect();
+    }
+    let slots: Vec<Mutex<Option<F>>> = tasks.into_iter().map(|f| Mutex::new(Some(f))).collect();
+    let outputs: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let task = slots[i]
+                    .lock()
+                    .expect("task slot poisoned")
+                    .take()
+                    .expect("task taken twice");
+                let out = task();
+                *outputs[i].lock().expect("output slot poisoned") = Some(out);
+            });
+        }
+    });
+    outputs
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("output slot poisoned")
+                .expect("task produced no output")
+        })
+        .collect()
+}
+
+/// [`run_tasks`] for fallible tasks, failing fast: once a task errors,
+/// tasks that have not yet started are skipped (already-running siblings
+/// finish), and the first error in input-index order among the tasks
+/// that ran is returned. With `threads <= 1` tasks start in input order,
+/// so this matches a sequential `?` loop's short-circuit exactly; with
+/// more workers the skip set depends on timing, but the success path is
+/// unaffected (every task ran, outputs in input order).
+pub fn run_fallible<T, F>(tasks: Vec<F>, threads: usize) -> Result<Vec<T>>
+where
+    T: Send,
+    F: FnOnce() -> Result<T> + Send,
+{
+    let n = tasks.len();
+    let abort = std::sync::atomic::AtomicBool::new(false);
+    let wrapped: Vec<_> = tasks
+        .into_iter()
+        .map(|f| {
+            let abort = &abort;
+            move || {
+                if abort.load(Ordering::Relaxed) {
+                    return None; // a sibling already failed: don't start
+                }
+                let out = f();
+                if out.is_err() {
+                    abort.store(true, Ordering::Relaxed);
+                }
+                Some(out)
+            }
+        })
+        .collect();
+    let mut first_err = None;
+    let mut ok = Vec::with_capacity(n);
+    for out in run_tasks(wrapped, threads) {
+        match out {
+            Some(Ok(v)) => ok.push(v),
+            Some(Err(e)) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+            // skipped: the erroring sibling's slot holds the Err (it is
+            // written before the worker moves on), so first_err is set
+            None => {}
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => {
+            debug_assert_eq!(ok.len(), n, "task skipped without a recorded error");
+            Ok(ok)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_keep_input_order_across_thread_counts() {
+        for threads in [1usize, 2, 4, 9] {
+            let tasks: Vec<_> = (0..23usize).map(|i| move || i * i).collect();
+            let out = run_tasks(tasks, threads);
+            assert_eq!(out, (0..23usize).map(|i| i * i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn handles_empty_and_single_task() {
+        let none: Vec<fn() -> usize> = Vec::new();
+        assert!(run_tasks(none, 4).is_empty());
+        assert_eq!(run_tasks(vec![|| 7usize], 4), vec![7]);
+    }
+
+    #[test]
+    fn every_task_runs_exactly_once() {
+        let hits: Vec<AtomicUsize> = (0..50).map(|_| AtomicUsize::new(0)).collect();
+        let tasks: Vec<_> = (0..50usize)
+            .map(|i| {
+                let h = &hits[i];
+                move || h.fetch_add(1, Ordering::SeqCst)
+            })
+            .collect();
+        run_tasks(tasks, 8);
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "task {i} run count");
+        }
+    }
+
+    #[test]
+    fn fallible_returns_first_error_by_index() {
+        let tasks: Vec<_> = (0..8usize)
+            .map(|i| {
+                move || {
+                    if i == 3 || i == 6 {
+                        anyhow::bail!("task {i} failed")
+                    } else {
+                        Ok(i)
+                    }
+                }
+            })
+            .collect();
+        let err = run_fallible(tasks, 4).unwrap_err();
+        assert!(err.to_string().contains("task 3"), "{err}");
+    }
+
+    #[test]
+    fn fallible_fails_fast_on_one_worker() {
+        let ran = AtomicUsize::new(0);
+        let tasks: Vec<_> = (0..6usize)
+            .map(|i| {
+                let ran = &ran;
+                move || -> Result<usize> {
+                    ran.fetch_add(1, Ordering::SeqCst);
+                    if i == 1 {
+                        anyhow::bail!("task {i} failed")
+                    }
+                    Ok(i)
+                }
+            })
+            .collect();
+        assert!(run_fallible(tasks, 1).is_err());
+        // sequential short-circuit: tasks after the failure never start
+        assert_eq!(ran.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn resolve_treats_zero_as_auto() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+    }
+}

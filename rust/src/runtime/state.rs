@@ -9,6 +9,11 @@
 //! call — they are fresh data by definition — but batched callers upload
 //! them once per batch via [`Engine::upload`] and fan the buffer out
 //! across models.
+//!
+//! `TrainState` is plain host data (`Send + Sync`): scoring/eval take
+//! `&self`, so E states can be driven from E threads against the shared
+//! engine; training takes `&mut self`, so the borrow checker already
+//! guarantees a state is never trained from two threads at once.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -296,6 +301,12 @@ mod tests {
         assert_ne!(a.state_id(), b.state_id());
         assert_eq!(b.params, a.params);
         assert_eq!(b.version(), 0);
+    }
+
+    #[test]
+    fn train_state_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<TrainState>();
     }
 
     #[test]

@@ -68,6 +68,16 @@ fn env_ms(var: &str) -> Option<Duration> {
         .map(Duration::from_millis)
 }
 
+/// Worker-thread override for thread-sweep benches: `SMALLTALK_BENCH_THREADS`
+/// caps the "parallel" side of a 1-vs-N sweep (`scripts/bench_smoke.sh`
+/// exports it so the sweep is reproducible across machines).
+pub fn env_threads() -> Option<usize> {
+    std::env::var("SMALLTALK_BENCH_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+}
+
 impl BenchSuite {
     pub fn new(title: &str) -> Self {
         // Keep budgets modest: XLA-backed benches have multi-ms iterations.

@@ -1,0 +1,458 @@
+//! Concurrency & determinism suite for the thread-safe engine refactor.
+//!
+//! The paper's serving-time property — experts never talk — makes expert
+//! groups embarrassingly parallel, and this suite is the proof that the
+//! `Rc`→`Arc` engine refactor exploits that safely:
+//!
+//! * `Engine` (and everything a serving wave shares) is `Send + Sync`,
+//!   asserted at compile time;
+//! * parallel `serve` output is **bit-identical** to sequential across
+//!   thread counts {1, 2, E, E+3} — same ids, same experts, same NLL
+//!   bits, same input order, every request answered exactly once;
+//! * `EngineStats` totals are identical whether E groups run on 1 thread
+//!   or E threads (only wall-clock floats may differ);
+//! * the `(state_id, version)` device cache never double-uploads under
+//!   concurrent `state_buffer` calls from many threads.
+//!
+//! Two tiers of tests: the stub xla backend keeps host-side uploads real
+//! (only compile/execute need the native runtime), so the cache/stats
+//! contention tests build an `Engine` over a minimal handwritten manifest
+//! and run everywhere — including tier-1 with no artifacts. Tests that
+//! must *execute* models follow the standard self-skip pattern
+//! (`locate_artifacts()` → skip when absent).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Barrier, OnceLock};
+
+use smalltalk::coordinator::inference::eval_nll_all;
+use smalltalk::coordinator::{
+    run_pipeline, score_matrix, score_matrix_rows_threaded, serve, serve_threaded, Mixture,
+    PipelineConfig, Request, Response,
+};
+use smalltalk::data::corpus::Corpus;
+use smalltalk::data::{Sequence, SequenceGen};
+use smalltalk::runtime::engine::f32_literal;
+use smalltalk::runtime::{locate_artifacts, DeviceBuffer, Engine, EngineStats, TrainState};
+use smalltalk::tokenizer::{Bpe, BpeTrainer};
+
+// ---------------------------------------------------------------------
+// (a) compile-time thread-safety contract
+// ---------------------------------------------------------------------
+
+#[test]
+fn engine_and_serving_types_are_send_sync() {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Engine>();
+    assert_send_sync::<EngineStats>();
+    assert_send_sync::<DeviceBuffer>();
+    assert_send_sync::<TrainState>();
+    assert_send_sync::<Mixture>();
+    assert_send_sync::<Request>();
+    assert_send_sync::<Response>();
+}
+
+// ---------------------------------------------------------------------
+// stub-backend engine: real manifest parsing + real uploads, no execution
+// ---------------------------------------------------------------------
+
+/// A minimal one-variant manifest so `Engine::new` succeeds without
+/// compiled artifacts. Uploads and the device cache are fully functional
+/// on the stub backend; only compile/execute would fail.
+const STUB_MANIFEST: &str = r#"{
+  "fingerprint": "concurrency-test-stub",
+  "variants": [{
+    "name": "stub", "role": "router", "vocab": 512, "seq_len": 64,
+    "d_model": 8, "n_layers": 1, "n_heads": 1, "d_ffw": 16,
+    "param_count": 32, "train_batch": 4, "eval_batch": 4,
+    "prefix_batch": 4, "prefix_len": 8, "prefix_lens": [8],
+    "opt": {"peak_lr": 0.001, "warmup_steps": 10, "total_steps": 100,
+            "schedule": "constant", "weight_decay": 0.1, "clip_norm": 1.0},
+    "entry_points": ["init", "train_step", "eval_nll", "prefix_nll_8"]
+  }]
+}"#;
+
+/// Engine over a throwaway manifest dir (unique per call, so concurrent
+/// tests never share stats).
+fn stub_engine() -> Engine {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "smalltalk_concurrency_{}_{}",
+        std::process::id(),
+        NEXT.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&dir).expect("creating stub manifest dir");
+    std::fs::write(dir.join("manifest.json"), STUB_MANIFEST).expect("writing stub manifest");
+    Engine::new(&dir).expect("stub engine must construct without artifacts")
+}
+
+fn dummy_state() -> TrainState {
+    TrainState::from_params("stub", vec![0.0; 32], vec![0.0; 32], vec![0.0; 32], 0)
+}
+
+// ---------------------------------------------------------------------
+// (d) the versioned device cache under contention
+// ---------------------------------------------------------------------
+
+/// Many threads hammer `state_buffer` for the same `(state_id, version)`
+/// pairs behind a barrier: each pair must be built + uploaded exactly
+/// once, version bumps must evict exactly once, and the final totals must
+/// be deterministic — not "roughly one upload", exactly one.
+#[test]
+fn device_cache_never_double_uploads_under_contention() {
+    const THREADS: usize = 8;
+    const ROUNDS: u64 = 6;
+    const CALLS_PER_ROUND: usize = 4;
+    const IDS: [u64; 2] = [1, 2];
+    const FLOATS: usize = 16; // 64 bytes per parameter literal
+
+    let eng = stub_engine();
+    let made = AtomicUsize::new(0);
+    let barrier = Barrier::new(THREADS);
+    std::thread::scope(|s| {
+        for _ in 0..THREADS {
+            s.spawn(|| {
+                for version in 0..ROUNDS {
+                    // all threads enter the round together so every
+                    // (id, version) miss is genuinely contended
+                    barrier.wait();
+                    for _ in 0..CALLS_PER_ROUND {
+                        for id in IDS {
+                            let buf = eng
+                                .state_buffer(id, version, || {
+                                    made.fetch_add(1, Ordering::SeqCst);
+                                    f32_literal(&[id as f32; FLOATS])
+                                })
+                                .expect("stub uploads cannot fail");
+                            assert_eq!(buf.bytes(), (FLOATS * 4) as u64);
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    let pairs = IDS.len() * ROUNDS as usize;
+    let stats = eng.stats();
+    assert_eq!(
+        made.load(Ordering::SeqCst),
+        pairs,
+        "the literal builder must run exactly once per (state, version)"
+    );
+    assert_eq!(stats.param_uploads, pairs, "one upload per (state, version)");
+    assert_eq!(stats.uploads, pairs);
+    assert_eq!(stats.h2d_bytes, (pairs * FLOATS * 4) as u64);
+    // every version bump after the first evicts the previous entry, once
+    assert_eq!(stats.cache_evictions, IDS.len() * (ROUNDS as usize - 1));
+    // at most one live entry per owner
+    assert_eq!(eng.device_cache_entries(), IDS.len());
+}
+
+/// Transfer accounting is exact (not merely monotonic) when many threads
+/// upload concurrently — the stats mutex must not lose increments.
+#[test]
+fn upload_accounting_is_exact_under_concurrency() {
+    const THREADS: usize = 8;
+    const UPLOADS: usize = 25;
+
+    let eng = stub_engine();
+    let barrier = Barrier::new(THREADS);
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let barrier = &barrier;
+            let eng = &eng;
+            s.spawn(move || {
+                barrier.wait();
+                for k in 0..UPLOADS {
+                    let n = 8 + (k % 3); // vary sizes so byte totals are a real checksum
+                    let lit = f32_literal(&vec![t as f32; n]);
+                    let buf = eng.upload(&lit).expect("stub uploads cannot fail");
+                    assert_eq!(buf.bytes(), (n * 4) as u64);
+                }
+            });
+        }
+    });
+
+    let per_thread_bytes: u64 = (0..UPLOADS).map(|k| (8 + (k % 3)) as u64 * 4).sum();
+    let stats = eng.stats();
+    assert_eq!(stats.uploads, THREADS * UPLOADS);
+    assert_eq!(stats.h2d_bytes, THREADS as u64 * per_thread_bytes);
+    assert_eq!(stats.param_uploads, 0, "plain uploads bypass the device cache");
+}
+
+// ---------------------------------------------------------------------
+// satellite: the serve empty-request edge
+// ---------------------------------------------------------------------
+
+/// `serve` with no queued requests must return an empty wave without
+/// routing a zero-row batch — no uploads, no executions, at any worker
+/// count (and the same for `eval_routed` on an empty sequence set).
+#[test]
+fn serve_empty_requests_returns_empty_and_touches_nothing() {
+    let eng = stub_engine();
+    let meta = eng.variant("stub").unwrap().clone();
+    let mixture = Mixture {
+        routers: vec![dummy_state(), dummy_state()],
+        router_meta: meta.clone(),
+        experts: vec![dummy_state(), dummy_state()],
+        expert_meta: meta,
+    };
+
+    let before = eng.stats();
+    for threads in [1usize, 2, 4] {
+        let out = serve_threaded(&eng, &mixture, &[], 8, threads).unwrap();
+        assert!(out.is_empty(), "threads={threads}");
+    }
+    assert!(serve(&eng, &mixture, &[], 8).unwrap().is_empty());
+    assert!(mixture.eval_routed_threaded(&eng, &[], 8, 2).unwrap().is_empty());
+    let after = eng.stats();
+    assert_eq!(after.uploads, before.uploads, "empty wave must not upload");
+    assert_eq!(after.executions, before.executions, "empty wave must not execute");
+    assert_eq!(after.compiles, before.compiles, "empty wave must not compile");
+}
+
+// ---------------------------------------------------------------------
+// XLA-backed tests (self-skip without compiled artifacts)
+// ---------------------------------------------------------------------
+
+/// One trained mixture shared by the execution tests below (training it
+/// once keeps the suite's artifact-mode runtime close to the routing
+/// bench's). The engine here is shared too — tests that assert on stats
+/// construct their own private engine instead.
+struct Setup {
+    engine: Engine,
+    bpe: Bpe,
+    mixture: Mixture,
+}
+
+static SETUP: OnceLock<Option<Setup>> = OnceLock::new();
+
+fn setup() -> Option<&'static Setup> {
+    SETUP
+        .get_or_init(|| {
+            let dir = locate_artifacts()?;
+            let engine = Engine::new(dir).expect("loading artifacts");
+            let corpus = Corpus::generate(60, 400, 42, None);
+            let bpe = BpeTrainer::new(512).train(corpus.texts()).unwrap();
+            let cfg = PipelineConfig {
+                router_variant: "router_micro".into(),
+                expert_variant: "expert_sm".into(),
+                n_experts: 4,
+                em_rounds: 2,
+                em_chunk: 96,
+                em_steps_per_round: 8,
+                shard_sequences: 128,
+                expert_steps: 10,
+                prefix_len: 32,
+                seed: 3,
+                threads: 0,
+            };
+            let mixture = run_pipeline(&engine, &bpe, &cfg)
+                .expect("training the shared test mixture")
+                .mixture;
+            Some(Setup {
+                engine,
+                bpe,
+                mixture,
+            })
+        })
+        .as_ref()
+}
+
+fn requests_from(bpe: &Bpe, seq_len: usize, n: usize, seed: u64) -> Vec<Request> {
+    SequenceGen::new(bpe, seq_len, seed)
+        .batch(n)
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| Request {
+            id: 1000 + i as u64,
+            tokens: s.tokens,
+        })
+        .collect()
+}
+
+/// (b) Parallel `serve` is bit-identical to sequential across thread
+/// counts {1, 2, E, E+3}: same input order, every request answered
+/// exactly once, identical expert choices and NLL *bits*.
+#[test]
+fn parallel_serve_is_bit_identical_to_sequential() {
+    let Some(setup) = setup() else { return };
+    let eng = &setup.engine;
+    let mixture = &setup.mixture;
+    let e = mixture.n_experts();
+    let m = 32usize;
+    let requests = requests_from(&setup.bpe, mixture.expert_meta.seq_len, 26, 17);
+
+    let sequential = serve_threaded(eng, mixture, &requests, m, 1).unwrap();
+    assert_eq!(sequential.len(), requests.len());
+    for (req, resp) in requests.iter().zip(&sequential) {
+        assert_eq!(req.id, resp.id, "sequential serve must keep input order");
+    }
+
+    for threads in [2usize, e, e + 3] {
+        let parallel = serve_threaded(eng, mixture, &requests, m, threads).unwrap();
+        assert_eq!(
+            parallel.len(),
+            sequential.len(),
+            "threads={threads}: every request answered exactly once"
+        );
+        for (p, s) in parallel.iter().zip(&sequential) {
+            assert_eq!(p.id, s.id, "threads={threads}: input order broken");
+            assert_eq!(p.expert, s.expert, "threads={threads}: routing diverged");
+            assert_eq!(
+                p.nll.to_bits(),
+                s.nll.to_bits(),
+                "threads={threads}: NLL not bit-identical for request {}",
+                p.id
+            );
+        }
+    }
+
+    // the eval path fans the same expert groups — hold it to the same bar
+    let seqs = SequenceGen::new(&setup.bpe, mixture.expert_meta.seq_len, 19).batch(13);
+    let reference = mixture.eval_routed_threaded(eng, &seqs, m, 1).unwrap();
+    for threads in [2usize, e + 3] {
+        let got = mixture.eval_routed_threaded(eng, &seqs, m, threads).unwrap();
+        assert_eq!(got.len(), reference.len());
+        for (i, ((n1, e1), (n2, e2))) in got.iter().zip(&reference).enumerate() {
+            assert_eq!(e1, e2, "threads={threads}: eval routing diverged at {i}");
+            assert_eq!(
+                n1.to_bits(),
+                n2.to_bits(),
+                "threads={threads}: eval NLL not bit-identical at {i}"
+            );
+        }
+    }
+}
+
+/// (c) `EngineStats` totals are identical whether the E groups of a wave
+/// run on 1 thread or E threads. A private engine isolates the counters
+/// from concurrently running tests; the compile cache is warmed first so
+/// both measured waves start from the same resident state.
+#[test]
+fn engine_stats_totals_match_across_thread_counts() {
+    let Some(setup) = setup() else { return };
+    let Some(dir) = locate_artifacts() else { return };
+    let eng = Engine::new(dir).expect("loading artifacts");
+    let mixture = &setup.mixture;
+    let e = mixture.n_experts();
+    let m = 32usize;
+    let requests = requests_from(&setup.bpe, mixture.expert_meta.seq_len, 26, 29);
+
+    // warm the compile cache so neither measured wave pays compilation
+    serve_threaded(&eng, mixture, &requests, m, 1).unwrap();
+
+    let mut deltas: Vec<EngineStats> = Vec::new();
+    for threads in [1usize, e] {
+        eng.clear_device_cache(); // both waves re-upload params identically
+        let s0 = eng.stats();
+        serve_threaded(&eng, mixture, &requests, m, threads).unwrap();
+        deltas.push(eng.stats().since(&s0));
+    }
+    let (a, b) = (&deltas[0], &deltas[1]);
+    assert_eq!(a.compiles, b.compiles, "compiles");
+    assert_eq!(a.executions, b.executions, "executions");
+    assert_eq!(a.uploads, b.uploads, "uploads");
+    assert_eq!(a.param_uploads, b.param_uploads, "param_uploads");
+    assert_eq!(a.h2d_bytes, b.h2d_bytes, "h2d_bytes");
+    assert_eq!(a.d2h_bytes, b.d2h_bytes, "d2h_bytes");
+    assert_eq!(a.uploads_avoided, b.uploads_avoided, "uploads_avoided");
+    assert_eq!(a.h2d_bytes_avoided, b.h2d_bytes_avoided, "h2d_bytes_avoided");
+    assert_eq!(a.cache_evictions, b.cache_evictions, "cache_evictions");
+    // sanity: the wave did real work
+    assert!(a.executions > 0 && a.param_uploads > 0);
+}
+
+/// satellite: `route_rows` with rows shorter than `m` scores padded
+/// prefixes that agree with `route` on equivalent `Sequence`s — covering
+/// `len < m`, `len == m`, `len > m`, a single token, an empty row, and
+/// the mixed batch of all of them, at 1 and E worker threads.
+#[test]
+fn route_rows_short_prefixes_agree_with_route() {
+    let Some(setup) = setup() else { return };
+    let eng = &setup.engine;
+    let mixture = &setup.mixture;
+    let m = 32usize;
+    let pool: Vec<Vec<u32>> = SequenceGen::new(&setup.bpe, mixture.router_meta.seq_len, 31)
+        .batch(6)
+        .into_iter()
+        .map(|s| s.tokens)
+        .collect();
+    // mixed batch: every length class in one wave
+    let rows: Vec<&[u32]> = vec![
+        &pool[0][..m / 2], // len < m
+        &pool[1][..m],     // len == m
+        &pool[2][..],      // len > m (full sequence)
+        &pool[3][..1],     // single token
+        &pool[4][..0],     // empty request
+        &pool[5][..m - 1], // one short of the boundary
+    ];
+    // equivalent Sequences: the same prefix padded to m by repeating the
+    // last token (token 0 for an empty row) — the documented
+    // normalization route_rows applies internally
+    let seqs: Vec<Sequence> = rows
+        .iter()
+        .map(|r| {
+            let mut tokens = r.to_vec();
+            let fill = tokens.last().copied().unwrap_or(0);
+            tokens.resize(m.max(tokens.len()), fill);
+            Sequence { tokens, domain: 0 }
+        })
+        .collect();
+
+    let via_route = mixture.route(eng, &seqs, m).unwrap();
+    let via_rows = mixture.route_rows(eng, &rows, m).unwrap();
+    assert_eq!(via_route, via_rows, "route_rows diverged from route");
+
+    // the underlying score matrices agree bit-for-bit at any worker count
+    let reference = score_matrix(eng, &mixture.routers, &mixture.router_meta, &seqs, m).unwrap();
+    for threads in [1usize, mixture.routers.len()] {
+        let got = score_matrix_rows_threaded(
+            eng,
+            &mixture.routers,
+            &mixture.router_meta,
+            &rows,
+            m,
+            threads,
+        )
+        .unwrap();
+        assert_eq!(reference, got, "threads={threads}: score matrix skewed");
+    }
+}
+
+/// satellite: `eval_nll_all` over any `rows.len()` vs `eval_batch`
+/// evaluates every row exactly once and discards tail padding — each
+/// row's score in a multi-span call matches the row scored alone.
+#[test]
+fn eval_nll_all_covers_every_row_exactly_once_across_spans() {
+    let Some(setup) = setup() else { return };
+    let eng = &setup.engine;
+    let state = &setup.mixture.experts[0];
+    let meta = &setup.mixture.expert_meta;
+    let bs = meta.eval_batch;
+    let pool: Vec<Vec<u32>> = SequenceGen::new(&setup.bpe, meta.seq_len, 37)
+        .batch(2 * bs + 3)
+        .into_iter()
+        .map(|s| s.tokens)
+        .collect();
+
+    // per-row reference: each row scored alone (its batch is all padding)
+    let reference: Vec<f32> = pool
+        .iter()
+        .map(|r| eval_nll_all(eng, state, meta, std::slice::from_ref(r)).unwrap()[0])
+        .collect();
+
+    // aligned, misaligned, sub-batch, and multi-span row counts — plus
+    // the empty set, which must produce no spans at all
+    for n in [0usize, 1, bs - 1, bs, bs + 1, 2 * bs + 3] {
+        let rows = &pool[..n];
+        let got = eval_nll_all(eng, state, meta, rows).unwrap();
+        assert_eq!(got.len(), n, "n={n}: every row scored exactly once");
+        for i in 0..n {
+            assert_eq!(
+                got[i].to_bits(),
+                reference[i].to_bits(),
+                "n={n}: row {i} skewed by batching/padding"
+            );
+        }
+    }
+}

@@ -39,6 +39,7 @@ fn tiny_pipeline() -> PipelineConfig {
         expert_steps: 10,
         prefix_len: 32,
         seed: 7,
+        threads: 0,
     }
 }
 

@@ -19,6 +19,12 @@ fi
 export SMALLTALK_BENCH_WARMUP_MS="${SMALLTALK_BENCH_WARMUP_MS:-50}"
 export SMALLTALK_BENCH_TARGET_MS="${SMALLTALK_BENCH_TARGET_MS:-300}"
 
+# thread-count sweep for the serving rows: the routing bench times serve
+# at threads=1 and threads=N and records `threads` + per-thread seqs/s
+# into its JSON rows (and thus BENCH_routing.json). N defaults to the
+# machine's core count; pin it here for cross-machine comparability.
+export SMALLTALK_BENCH_THREADS="${SMALLTALK_BENCH_THREADS:-$(nproc 2>/dev/null || echo 4)}"
+
 if ! cargo bench --bench routing; then
   echo "bench_smoke: routing bench failed (stub xla backend? see rust/vendor/xla)" >&2
   printf '{\n  "skipped": "bench run failed; likely the stub xla backend (no native xla_extension)"\n}\n' \
