@@ -3,10 +3,12 @@
 #   make build             cargo build --release (workspace: rust/ + vendored deps)
 #   make test              cargo test -q  (XLA-backed tests self-skip without artifacts)
 #   make test-concurrency  the engine thread-safety suite, at 1 and 8 test threads
+#   make test-serve        the continuous-batching scheduler suite, serial + interleaved
 #   make artifacts         AOT-lower every model variant to artifacts/ (needs jax)
-#   make bench-smoke       tiny-budget routing+train_step benches -> BENCH_routing.json
+#   make bench-smoke       tiny-budget routing+serve+train_step benches
+#                          -> BENCH_routing.json + BENCH_serve.json
 
-.PHONY: build test test-concurrency artifacts bench-smoke clean
+.PHONY: build test test-concurrency test-serve artifacts bench-smoke clean
 
 build:
 	cargo build --release
@@ -21,6 +23,13 @@ test-concurrency:
 	RUST_TEST_THREADS=1 cargo test -q --test concurrency
 	RUST_TEST_THREADS=8 cargo test -q --test concurrency
 
+# Continuous-batching scheduler suite (queue accounting on the stub
+# backend runs everywhere; determinism vs closed-wave needs artifacts),
+# under both serial and heavily interleaved test scheduling.
+test-serve:
+	RUST_TEST_THREADS=1 cargo test -q --test server
+	RUST_TEST_THREADS=8 cargo test -q --test server
+
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
 
@@ -29,4 +38,4 @@ bench-smoke:
 
 clean:
 	cargo clean
-	rm -rf results BENCH_routing.json BENCH_train_step.json
+	rm -rf results BENCH_routing.json BENCH_serve.json BENCH_train_step.json

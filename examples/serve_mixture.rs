@@ -1,28 +1,40 @@
-//! Serving demo: batched request loop over a trained mixture.
+//! Serving demo: closed waves vs continuous batching over one mixture.
 //!
 //! Shows the inference-side economics of SmallTalk LM: every request is
 //! scored by E tiny routers (a few % of an expert forward), then exactly
 //! ONE expert runs — the "fraction of the parameters" claim. Reports
-//! per-request routing/execution latency and per-expert load.
+//! per-request routing/execution latency and per-expert load, first for
+//! the classic closed-wave loop, then for the continuous-batching server
+//! fed the same requests as a staggered stream (admission waves, partial
+//! dispatch on linger expiry, worker slots refilled as they free up).
 //!
 //! Run: `cargo run --release --example serve_mixture -- [--requests N]
-//!       [--experts N] [--waves N]`
+//!       [--experts N] [--waves N] [--batch-size N] [--max-wait-us N]
+//!       [--delay-us N]`
 
-use smalltalk::coordinator::{run_pipeline, serve, PipelineConfig, Request};
+use smalltalk::coordinator::{
+    run_pipeline, run_server, serve, MixtureBackend, PipelineConfig, Request, ServerConfig,
+};
 use smalltalk::data::corpus::Corpus;
 use smalltalk::data::SequenceGen;
 use smalltalk::flops::Arch;
+use smalltalk::metrics::percentile;
 use smalltalk::runtime::Engine;
 use smalltalk::tokenizer::BpeTrainer;
 use smalltalk::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&raw, &["requests", "experts", "waves", "seed"])?;
+    let args = Args::parse(
+        &raw,
+        &["requests", "experts", "waves", "seed", "batch-size", "max-wait-us", "delay-us"],
+    )?;
     let n_req = args.get_usize("requests", 64)?;
     let n_experts = args.get_usize("experts", 4)?;
     let waves = args.get_usize("waves", 3)?;
     let seed = args.get_u64("seed", 99)?;
+    let max_wait_us = args.get_u64("max-wait-us", 2000)?;
+    let delay_us = args.get_u64("delay-us", 100)?;
 
     let engine = Engine::new("artifacts")?;
     let corpus = Corpus::generate(80, 400, seed, None);
@@ -109,9 +121,71 @@ fn main() -> anyhow::Result<()> {
     }
     let dt = t0.elapsed();
     println!(
-        "\nserved {total} requests in {:.2?} — {:.1} req/s sustained",
+        "\nserved {total} requests in {:.2?} — {:.1} req/s sustained (closed waves)",
         dt,
         total as f64 / dt.as_secs_f64()
+    );
+
+    // ---- continuous batching: the same request volume as one staggered
+    // stream through the admission scheduler ----
+    // same semantics as `smalltalk serve`: 0 = the compiled eval batch
+    let batch_size = match args.get_usize("batch-size", meta.eval_batch)? {
+        0 => meta.eval_batch,
+        n => n,
+    };
+    let stream: Vec<Request> = gen
+        .batch(total)
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| Request {
+            id: 10_000 + i as u64,
+            tokens: s.tokens,
+        })
+        .collect();
+    let backend = MixtureBackend {
+        engine: &engine,
+        mixture: &result.mixture,
+        prefix_len: cfg.prefix_len,
+    };
+    let scfg = ServerConfig::continuous(batch_size, max_wait_us, cfg.threads);
+    let t0 = std::time::Instant::now();
+    let (responses, stats, ()) = run_server(&backend, &scfg, |client| {
+        for req in stream {
+            if delay_us > 0 {
+                std::thread::sleep(std::time::Duration::from_micros(delay_us));
+            }
+            if !client.submit(req) {
+                break; // server is failing: stop streaming doomed requests
+            }
+        }
+    })?;
+    let dt = t0.elapsed();
+    let queue_us: Vec<f64> = responses.iter().map(|r| r.queue_micros as f64).collect();
+    let total_us: Vec<f64> = responses.iter().map(|r| r.total_micros() as f64).collect();
+    println!(
+        "served {} requests in {:.2?} — {:.1} req/s continuous \
+         (batch-size {batch_size}, max-wait {max_wait_us} µs, arrivals every {delay_us} µs)",
+        responses.len(),
+        dt,
+        responses.len() as f64 / dt.as_secs_f64(),
+    );
+    println!(
+        "  latency µs: queue p50 {:.0} / p95 {:.0}, total p50 {:.0} / p95 {:.0}",
+        percentile(&queue_us, 50.0),
+        percentile(&queue_us, 95.0),
+        percentile(&total_us, 50.0),
+        percentile(&total_us, 95.0),
+    );
+    println!(
+        "  scheduler: {} admission waves, {} batches ({} full, {} linger, {} drain), \
+         {} slots refilled, mean queue depth {:.2}",
+        stats.admission_waves,
+        stats.batches_dispatched,
+        stats.full_batches,
+        stats.linger_batches,
+        stats.drain_batches,
+        stats.slots_refilled,
+        stats.mean_queue_depth(),
     );
     Ok(())
 }

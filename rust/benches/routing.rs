@@ -196,6 +196,38 @@ fn main() {
         }
     }
 
+    // ---- continuous-batching row: the same 32 requests as a burst
+    // through the admission scheduler (full sweep in benches/serve.rs) ----
+    {
+        use smalltalk::coordinator::{response_triples, run_server, MixtureBackend, ServerConfig};
+        let backend = MixtureBackend {
+            engine: &engine,
+            mixture: &mixture,
+            prefix_len: m,
+        };
+        let scfg = ServerConfig::continuous(mixture.expert_meta.eval_batch, 500, bench_threads);
+        let r = suite.bench("serve 32 requests (continuous, burst)", || {
+            std::hint::black_box(
+                run_server(&backend, &scfg, |client| {
+                    client.submit_wave(requests.clone());
+                })
+                .unwrap(),
+            );
+        });
+        suite.annotate("threads", bench_threads as f64);
+        suite.annotate("req_per_s", r.throughput(32.0));
+        // determinism guard: same (id, expert, nll) set as the closed wave
+        let (responses, _stats, ()) = run_server(&backend, &scfg, |client| {
+            client.submit_wave(requests.clone());
+        })
+        .unwrap();
+        assert_eq!(
+            response_triples(&responses),
+            response_triples(&sequential),
+            "continuous serve diverged from sequential"
+        );
+    }
+
     // routing overhead share of the serve path
     let score_only = suite.bench("routing-only share (score+argmin)", || {
         let nll =

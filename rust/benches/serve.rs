@@ -1,0 +1,131 @@
+//! Bench: closed-wave vs continuous-batching serve under staggered
+//! arrivals. Each continuous row streams the request set with a fixed
+//! inter-arrival gap through the admission scheduler and records
+//! steady-state req/s plus p50/p95 queue and total latency (and the
+//! scheduler counters), so `BENCH_serve.json` carries a closed-wave row
+//! and one continuous row per arrival rate for every PR.
+
+use std::time::Duration;
+
+use smalltalk::coordinator::{
+    response_triples, run_pipeline, run_server, serve_threaded, MixtureBackend, PipelineConfig,
+    Request, ServerConfig,
+};
+use smalltalk::data::corpus::Corpus;
+use smalltalk::data::SequenceGen;
+use smalltalk::metrics::percentile;
+use smalltalk::runtime::{default_threads, locate_artifacts, Engine};
+use smalltalk::tokenizer::BpeTrainer;
+use smalltalk::util::bench::{env_threads, BenchSuite};
+
+fn main() {
+    let Some(artifacts) = locate_artifacts() else {
+        eprintln!("[serve bench] no artifacts/manifest.json — run `make artifacts`; skipping");
+        return;
+    };
+    let engine = Engine::new(artifacts).expect("loading artifacts");
+    let corpus = Corpus::generate(60, 400, 42, None);
+    let bpe = BpeTrainer::new(512).train(corpus.texts()).unwrap();
+
+    let cfg = PipelineConfig {
+        router_variant: "router_micro".into(),
+        expert_variant: "expert_sm".into(),
+        n_experts: 4,
+        em_rounds: 2,
+        em_chunk: 96,
+        em_steps_per_round: 8,
+        shard_sequences: 128,
+        expert_steps: 10,
+        prefix_len: 32,
+        seed: 3,
+        threads: 0,
+    };
+    eprintln!("[serve bench] preparing mixture ...");
+    let result = run_pipeline(&engine, &bpe, &cfg).unwrap();
+    let mixture = result.mixture;
+    let m = cfg.prefix_len;
+    let threads = env_threads().unwrap_or_else(default_threads);
+    let batch_size = mixture.expert_meta.eval_batch;
+
+    let n_req = 64usize;
+    let requests: Vec<Request> = SequenceGen::new(&bpe, mixture.expert_meta.seq_len, 17)
+        .batch(n_req)
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| Request {
+            id: i as u64,
+            tokens: s.tokens,
+        })
+        .collect();
+
+    let mut suite =
+        BenchSuite::new("serve").with_budget(Duration::from_millis(300), Duration::from_secs(3));
+    suite.header();
+
+    // ---- closed-wave reference: the whole set as one wave ----
+    let reference = serve_threaded(&engine, &mixture, &requests, m, 1).unwrap();
+    let r = suite.bench(&format!("closed-wave serve {n_req} requests"), || {
+        std::hint::black_box(
+            serve_threaded(&engine, &mixture, &requests, m, threads).unwrap(),
+        );
+    });
+    suite.annotate("threads", threads as f64);
+    suite.annotate("req_per_s", r.throughput(n_req as f64));
+    suite.annotate("mode_closed_wave", 1.0);
+
+    // ---- continuous rows: one per arrival rate ----
+    let backend = MixtureBackend {
+        engine: &engine,
+        mixture: &mixture,
+        prefix_len: m,
+    };
+    let sorted_ref = response_triples(&reference);
+
+    for gap_us in [0u64, 200, 1000] {
+        let scfg = ServerConfig::continuous(batch_size, 500, threads);
+        let run_once = || {
+            run_server(&backend, &scfg, |client| {
+                for req in &requests {
+                    if gap_us > 0 {
+                        std::thread::sleep(Duration::from_micros(gap_us));
+                    }
+                    client.submit(req.clone());
+                }
+            })
+            .unwrap()
+        };
+        let r = suite.bench(
+            &format!("continuous serve {n_req} requests (arrival gap {gap_us} µs)"),
+            || {
+                std::hint::black_box(run_once());
+            },
+        );
+        // one instrumented run for the latency/scheduler annotations
+        let (responses, stats, ()) = run_once();
+        let queue_us: Vec<f64> = responses.iter().map(|x| x.queue_micros as f64).collect();
+        let total_us: Vec<f64> = responses.iter().map(|x| x.total_micros() as f64).collect();
+        suite.annotate("threads", threads as f64);
+        suite.annotate("arrival_gap_us", gap_us as f64);
+        suite.annotate("batch_size", batch_size as f64);
+        suite.annotate("max_wait_us", 500.0);
+        suite.annotate("req_per_s", r.throughput(n_req as f64));
+        suite.annotate("queue_p50_us", percentile(&queue_us, 50.0));
+        suite.annotate("queue_p95_us", percentile(&queue_us, 95.0));
+        suite.annotate("total_p50_us", percentile(&total_us, 50.0));
+        suite.annotate("total_p95_us", percentile(&total_us, 95.0));
+        suite.annotate("batches_dispatched", stats.batches_dispatched as f64);
+        suite.annotate("linger_batches", stats.linger_batches as f64);
+        suite.annotate("slots_refilled", stats.slots_refilled as f64);
+        suite.annotate("mean_queue_depth", stats.mean_queue_depth());
+
+        // determinism guard: same (id, expert, nll) set as the sequential
+        // closed-wave reference, at every arrival rate
+        assert_eq!(
+            response_triples(&responses),
+            sorted_ref,
+            "continuous serve (gap {gap_us} µs) diverged from the closed-wave reference"
+        );
+    }
+
+    suite.write_json().unwrap();
+}

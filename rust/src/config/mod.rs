@@ -36,6 +36,12 @@ pub struct ExperimentConfig {
     pub seed: u64,
     /// Output directory for results.
     pub results_dir: String,
+    /// Continuous serving: per-expert dispatch batch size (0 = the expert
+    /// variant's compiled `eval_batch`).
+    pub serve_batch_size: usize,
+    /// Continuous serving: linger before a partial expert batch is
+    /// dispatched anyway, in microseconds (`u64::MAX` disables).
+    pub serve_max_wait_us: u64,
 }
 
 impl Default for ExperimentConfig {
@@ -51,6 +57,8 @@ impl Default for ExperimentConfig {
             task_options: 4,
             seed: 1234,
             results_dir: "results".into(),
+            serve_batch_size: 0,
+            serve_max_wait_us: 2000,
         }
     }
 }
@@ -127,6 +135,14 @@ impl ExperimentConfig {
         if let Some(v) = u("threads") {
             self.pipeline.threads = v;
         }
+        if let Some(v) = u("serve_batch_size") {
+            self.serve_batch_size = v;
+        }
+        // as_usize (not as_i64): a negative value must be ignored, not
+        // wrapped into a near-MAX linger that silently disables the timer
+        if let Some(v) = u("serve_max_wait_us") {
+            self.serve_max_wait_us = v as u64;
+        }
     }
 
     /// Apply `--key value` CLI overrides (same keys as the JSON form).
@@ -154,6 +170,9 @@ impl ExperimentConfig {
         self.pipeline.prefix_len = args.get_usize("prefix", self.pipeline.prefix_len)?;
         // worker threads for expert/router group fan-out (0 = auto)
         self.pipeline.threads = args.get_usize("threads", self.pipeline.threads)?;
+        // continuous-serving knobs (also per-command `serve` overrides)
+        self.serve_batch_size = args.get_usize("batch-size", self.serve_batch_size)?;
+        self.serve_max_wait_us = args.get_u64("max-wait-us", self.serve_max_wait_us)?;
         self.eval_sequences = args.get_usize("eval-sequences", self.eval_sequences)?;
         self.tasks_per_domain = args.get_usize("tasks-per-domain", self.tasks_per_domain)?;
         self.seed = args.get_u64("seed", self.seed)?;
@@ -197,6 +216,8 @@ impl ExperimentConfig {
             ("expert_steps", Json::num(self.pipeline.expert_steps as f64)),
             ("prefix_len", Json::num(self.pipeline.prefix_len as f64)),
             ("threads", Json::num(self.pipeline.threads as f64)),
+            ("serve_batch_size", Json::num(self.serve_batch_size as f64)),
+            ("serve_max_wait_us", Json::num(self.serve_max_wait_us as f64)),
         ])
     }
 }
@@ -219,6 +240,8 @@ mod tests {
         c.seed = 99;
         c.pipeline.seed = 99;
         c.pipeline.threads = 6;
+        c.serve_batch_size = 16;
+        c.serve_max_wait_us = 750;
         let j = c.to_json();
         let mut c2 = ExperimentConfig::default();
         c2.apply_json(&j);
@@ -226,14 +249,23 @@ mod tests {
         assert_eq!(c2.seed, 99);
         assert_eq!(c2.pipeline.seed, 99);
         assert_eq!(c2.pipeline.threads, 6);
+        assert_eq!(c2.serve_batch_size, 16);
+        assert_eq!(c2.serve_max_wait_us, 750);
     }
 
     #[test]
     fn cli_overrides_apply() {
-        let raw: Vec<String> = ["--experts=6", "--expert-steps=10", "--seed=7", "--threads=3"]
-            .iter()
-            .map(|s| s.to_string())
-            .collect();
+        let raw: Vec<String> = [
+            "--experts=6",
+            "--expert-steps=10",
+            "--seed=7",
+            "--threads=3",
+            "--batch-size=8",
+            "--max-wait-us=1500",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
         let args = Args::parse(&raw, &[]).unwrap();
         let mut c = ExperimentConfig::default();
         c.apply_args(&args).unwrap();
@@ -241,6 +273,8 @@ mod tests {
         assert_eq!(c.pipeline.expert_steps, 10);
         assert_eq!(c.pipeline.seed, 7);
         assert_eq!(c.pipeline.threads, 3);
+        assert_eq!(c.serve_batch_size, 8);
+        assert_eq!(c.serve_max_wait_us, 1500);
     }
 
     #[test]

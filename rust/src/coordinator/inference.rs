@@ -7,19 +7,29 @@
 //! sequence. [`serve`] implements the batched request loop: requests are
 //! routed, grouped per expert, and executed in expert-batch-sized chunks
 //! — the dispatch pattern a vLLM-style front-end would use. The loop is
-//! allocation-light: requests are batched by index over borrowed token
-//! rows (no `Sequence`/`Vec<u32>` clones), and router/expert parameters
-//! stay device-resident across waves via the engine's buffer cache.
+//! allocation-light: the sequential reference path batches by index over
+//! borrowed token rows (no `Sequence`/`Vec<u32>` clones), and
+//! router/expert parameters stay device-resident across waves via the
+//! engine's buffer cache. The `threads > 1` path hands the scheduler one
+//! owned copy of the wave (the queue outlives the caller's borrow); that
+//! single memcpy is noise next to the batched model execution it feeds.
 //!
 //! Expert groups never talk to each other (the paper's core property), so
 //! [`serve_threaded`] / [`Mixture::eval_routed_threaded`] execute them
 //! concurrently on a scoped worker pool; each group writes a disjoint set
 //! of response slots, so the parallel output is bit-identical to the
 //! sequential one at any worker count.
+//!
+//! Closed waves are now the degenerate case of the continuous-batching
+//! scheduler in [`super::server`]: [`serve_threaded`] with `threads > 1`
+//! is a thin wrapper that submits the whole request slice as one atomic
+//! wave ([`crate::coordinator::server::ServerConfig::closed_wave`]),
+//! while `threads = 1` keeps the direct sequential loop as the bit-exact
+//! reference path the determinism suites compare against.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::assignment::argmin_assign;
 use super::scoring::{
@@ -119,7 +129,7 @@ impl Mixture {
             return Ok(Vec::new());
         }
         let routes = self.route_threaded(engine, seqs, m, threads)?;
-        let groups: Vec<Vec<usize>> = group_by_expert(&routes, self.n_experts());
+        let groups: Vec<Vec<usize>> = group_by_expert(&routes, self.n_experts())?;
         // batch by index over borrowed rows — no token clones; every
         // non-empty group is one independent task
         let tasks: Vec<_> = groups
@@ -192,12 +202,31 @@ pub fn eval_nll_all<R: AsRef<[u32]>>(
 
 /// Group sequence indices by their routed expert: `groups[e]` holds the
 /// input indices assigned to expert `e`, in input order.
-fn group_by_expert(routes: &[usize], n_experts: usize) -> Vec<Vec<usize>> {
+///
+/// A route index `>= n_experts` (a corrupt checkpoint, a buggy backend)
+/// is a structured error, not a slice-index panic.
+pub fn group_by_expert(routes: &[usize], n_experts: usize) -> Result<Vec<Vec<usize>>> {
     let mut groups: Vec<Vec<usize>> = vec![Vec::new(); n_experts];
     for (i, &e) in routes.iter().enumerate() {
+        if e >= n_experts {
+            bail!("route index {e} out of range for {n_experts} experts (sequence position {i})");
+        }
         groups[e].push(i);
     }
-    groups
+    Ok(groups)
+}
+
+/// Mean microseconds per request, rounded half-up from the total's
+/// nanosecond count — the shared amortization rule for every batched
+/// timing field (the old `total_micros / n` integer division silently
+/// dropped up to a microsecond per request). Returns 0 for an empty
+/// batch.
+pub fn amortized_micros(total: Duration, n: usize) -> u128 {
+    if n == 0 {
+        return 0;
+    }
+    let denom = n as u128 * 1000;
+    (total.as_nanos() + denom / 2) / denom
 }
 
 /// Dense-baseline perplexity on the same sequences (comparator).
@@ -226,30 +255,60 @@ pub struct Request {
 
 /// The server's answer.
 ///
-/// Timing semantics (unified): both latency fields are **mean microseconds
-/// per request** over the batch that processed this request. Routing is a
-/// single batched score-matrix over the whole wave, so `route_micros` is
-/// wave-total / wave-size and identical for every response in a wave;
-/// execution is batched per expert group, so `exec_micros` is group-total /
-/// group-size and identical within a group. Neither is an isolated
-/// single-request latency — that is the batched-serving cost model.
+/// Timing semantics (unified): `route_micros` and `exec_micros` are
+/// **mean microseconds per request** over the batch that processed this
+/// request, rounded half-up ([`amortized_micros`]). Routing is a batched
+/// score-matrix per **admission wave** (the whole wave in closed-wave
+/// serving), so `route_micros` is wave-total / wave-size and identical
+/// for every response admitted together; execution is batched per
+/// **dispatched expert batch** (the whole expert group in closed-wave
+/// serving), so `exec_micros` is batch-total / batch-size and identical
+/// within a batch. Neither is an isolated single-request latency — that
+/// is the batched-serving cost model.
+///
+/// `queue_micros` is different: it is this request's **true** queueing
+/// delay — the arrival-queue wait (submission → admission) plus the
+/// pending/linger and dispatch-queue wait (routing done → batch execution
+/// start). The routing span between those two windows is deliberately
+/// excluded: `route_micros` accounts for it, so [`Response::total_micros`]
+/// sums three disjoint components. The sequential closed-wave reference
+/// path has no queue and reports 0.
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
     pub expert: usize,
     pub nll: f32,
-    /// Mean routing microseconds per request (amortized over the wave).
+    /// True per-request queueing delay (arrival-queue + pending +
+    /// dispatch-queue wait, routing excluded; 0 on the sequential
+    /// closed-wave path).
+    pub queue_micros: u128,
+    /// Mean routing microseconds per request (amortized over the
+    /// admission wave).
     pub route_micros: u128,
     /// Mean expert-execution microseconds per request (amortized over the
-    /// request's expert group).
+    /// request's dispatched batch).
     pub exec_micros: u128,
 }
 
 impl Response {
-    /// Amortized end-to-end latency attributed to this request.
+    /// End-to-end latency attributed to this request: queueing delay plus
+    /// the amortized routing and execution shares.
     pub fn total_micros(&self) -> u128 {
-        self.route_micros + self.exec_micros
+        self.queue_micros + self.route_micros + self.exec_micros
     }
+}
+
+/// The determinism key of a response set: sorted `(id, expert, NLL bits)`
+/// triples. Two serving paths answered the same requests identically iff
+/// their keys are equal — the comparison every determinism guard (the
+/// serve benches, `rust/tests/server.rs`, `smalltalk serve`) performs.
+pub fn response_triples(responses: &[Response]) -> Vec<(u64, usize, u32)> {
+    let mut t: Vec<(u64, usize, u32)> = responses
+        .iter()
+        .map(|r| (r.id, r.expert, r.nll.to_bits()))
+        .collect();
+    t.sort_unstable();
+    t
 }
 
 /// Batched serving: route all queued requests, group by expert, execute.
@@ -264,11 +323,17 @@ pub fn serve(engine: &Engine, mixture: &Mixture, requests: &[Request], m: usize)
 /// router scoring and the expert-group fan-out both run on `threads`
 /// workers, so `threads = 1` is the fully sequential reference path.
 ///
-/// Groups are independent (no expert ever sees another's requests), so
-/// they run concurrently; each writes a disjoint slice of the response
-/// vector, keeping the output — ids, experts, NLLs, input order —
-/// bit-identical to the sequential `threads = 1` path. Only the timing
-/// fields vary run-to-run (they are wall-clock measurements).
+/// `threads = 1` runs the classic closed-wave loop inline — no threads
+/// spawned, groups executed in expert order: the bit-exact reference.
+/// `threads > 1` submits the slice as one atomic wave to the
+/// continuous-batching scheduler in [`super::server`] under its
+/// closed-wave configuration (one admission wave, each expert group
+/// dispatched whole at drain), so both paths score and batch identically.
+/// The wrapper clones the request slice once to hand the queue an owned
+/// wave — the only allocation difference from the sequential path.
+/// Either way the output — ids, experts, NLLs, input order — is
+/// bit-identical across worker counts; only the timing fields vary
+/// run-to-run (they are wall-clock measurements).
 pub fn serve_threaded(
     engine: &Engine,
     mixture: &Mixture,
@@ -280,11 +345,36 @@ pub fn serve_threaded(
         // nothing to route: never build a zero-row batch
         return Ok(Vec::new());
     }
+    if threads <= 1 {
+        return serve_closed_wave(engine, mixture, requests, m);
+    }
+    let backend = super::server::MixtureBackend {
+        engine,
+        mixture,
+        prefix_len: m,
+    };
+    let cfg = super::server::ServerConfig::closed_wave(threads);
+    let (responses, _stats, ()) = super::server::run_server(&backend, &cfg, |client| {
+        client.submit_wave(requests.to_vec());
+    })?;
+    Ok(responses)
+}
+
+/// The sequential closed-wave loop: route everything in one score-matrix
+/// wave, execute each expert group in expert order on the caller's
+/// thread. This is the reference implementation every scheduled path is
+/// measured against.
+fn serve_closed_wave(
+    engine: &Engine,
+    mixture: &Mixture,
+    requests: &[Request],
+    m: usize,
+) -> Result<Vec<Response>> {
     // borrow token rows straight out of the requests — no Sequence clones
     let rows: Vec<&[u32]> = requests.iter().map(|r| r.tokens.as_slice()).collect();
     let t0 = Instant::now();
-    let routes = mixture.route_rows_threaded(engine, &rows, m, threads)?;
-    let route_us = t0.elapsed().as_micros() / requests.len() as u128;
+    let routes = mixture.route_rows_threaded(engine, &rows, m, 1)?;
+    let route_us = amortized_micros(t0.elapsed(), requests.len());
 
     let mut responses: Vec<Response> = requests
         .iter()
@@ -293,31 +383,19 @@ pub fn serve_threaded(
             id: r.id,
             expert: e,
             nll: 0.0,
+            queue_micros: 0,
             route_micros: route_us,
             exec_micros: 0,
         })
         .collect();
 
-    let groups = group_by_expert(&routes, mixture.n_experts());
-    let tasks: Vec<_> = groups
-        .iter()
-        .enumerate()
-        .filter(|(_, idx)| !idx.is_empty())
-        .map(|(e, idx)| {
-            let expert = &mixture.experts[e];
-            let meta = &mixture.expert_meta;
-            let rows = &rows;
-            move || {
-                let group: Vec<&[u32]> = idx.iter().map(|&i| rows[i]).collect();
-                let t1 = Instant::now();
-                let nll = eval_nll_all(engine, expert, meta, &group)?;
-                let exec_us = t1.elapsed().as_micros() / idx.len() as u128;
-                Ok((e, nll, exec_us))
-            }
-        })
-        .collect();
-    for (e, nll, exec_us) in run_fallible(tasks, threads)? {
-        for (k, &i) in groups[e].iter().enumerate() {
+    let groups = group_by_expert(&routes, mixture.n_experts())?;
+    for (e, idx) in groups.iter().enumerate().filter(|(_, idx)| !idx.is_empty()) {
+        let group: Vec<&[u32]> = idx.iter().map(|&i| rows[i]).collect();
+        let t1 = Instant::now();
+        let nll = eval_nll_all(engine, &mixture.experts[e], &mixture.expert_meta, &group)?;
+        let exec_us = amortized_micros(t1.elapsed(), idx.len());
+        for (k, &i) in idx.iter().enumerate() {
             responses[i].nll = nll[k];
             responses[i].exec_micros = exec_us;
         }
@@ -330,19 +408,21 @@ mod tests {
     use super::*;
 
     #[test]
-    fn total_micros_sums_route_and_exec() {
+    fn total_micros_sums_queue_route_and_exec() {
         let r = Response {
             id: 9,
             expert: 2,
             nll: 1.5,
+            queue_micros: 40,
             route_micros: 120,
-            exec_micros: 880,
+            exec_micros: 840,
         };
         assert_eq!(r.total_micros(), 1000);
         let zero = Response {
             id: 0,
             expert: 0,
             nll: 0.0,
+            queue_micros: 0,
             route_micros: 0,
             exec_micros: 0,
         };
@@ -351,11 +431,40 @@ mod tests {
 
     #[test]
     fn group_by_expert_partitions_in_input_order() {
-        let groups = group_by_expert(&[1, 0, 1, 2, 0], 4);
+        let groups = group_by_expert(&[1, 0, 1, 2, 0], 4).unwrap();
         assert_eq!(groups, vec![vec![1, 4], vec![0, 2], vec![3], vec![]]);
         // every index appears exactly once
         let mut all: Vec<usize> = groups.into_iter().flatten().collect();
         all.sort_unstable();
         assert_eq!(all, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn group_by_expert_rejects_out_of_range_routes() {
+        // boundary: n_experts itself is already out of range
+        let err = group_by_expert(&[0, 3, 1], 3).unwrap_err().to_string();
+        assert!(err.contains("route index 3"), "{err}");
+        assert!(err.contains("3 experts"), "{err}");
+        assert!(err.contains("position 1"), "{err}");
+        assert!(group_by_expert(&[9], 0).is_err());
+        // in-range max is fine
+        assert!(group_by_expert(&[2], 3).is_ok());
+    }
+
+    #[test]
+    fn amortized_micros_rounds_half_up() {
+        // exact division: unchanged
+        assert_eq!(amortized_micros(Duration::from_micros(100), 4), 25);
+        // 1.5 µs/request rounds up (integer division would truncate to 1)
+        assert_eq!(amortized_micros(Duration::from_nanos(3000), 2), 2);
+        // just below the half-way point rounds down
+        assert_eq!(amortized_micros(Duration::from_nanos(2999), 2), 1);
+        // sub-microsecond totals no longer vanish: 0.6 µs/request -> 1
+        assert_eq!(amortized_micros(Duration::from_nanos(600), 1), 1);
+        assert_eq!(amortized_micros(Duration::from_nanos(499), 1), 0);
+        // 10 µs over 3 requests = 3.33 -> 3
+        assert_eq!(amortized_micros(Duration::from_micros(10), 3), 3);
+        // empty batch is defined, not a division by zero
+        assert_eq!(amortized_micros(Duration::from_micros(10), 0), 0);
     }
 }

@@ -6,6 +6,8 @@
 //! * [`sharding`] — corpus segmentation by trained routers (lines 12–13)
 //! * [`expert`] — independent expert training (lines 14–16)
 //! * [`inference`] — argmin routing + batched serving loop
+//! * [`server`] — continuous-batching serve: cross-wave request queue
+//!   with admission scheduling
 //! * [`comm`] — communication ledger and §A.4 closed forms
 //! * [`pipeline`] — end-to-end orchestration (routers → shard → experts)
 
@@ -16,14 +18,21 @@ pub mod expert;
 pub mod inference;
 pub mod pipeline;
 pub mod scoring;
+pub mod server;
 pub mod sharding;
 
 pub use assignment::{argmin_assign, balanced_assign, sequential_assign, Assignment};
 pub use comm::{CommKind, CommLedger};
 pub use em::{train_routers, EmConfig, TrainedRouters};
 pub use expert::{train_expert, ExpertConfig};
-pub use inference::{dense_perplexity, serve, serve_threaded, Mixture, Request, Response};
+pub use inference::{
+    amortized_micros, dense_perplexity, group_by_expert, response_triples, serve, serve_threaded,
+    Mixture, Request, Response,
+};
 pub use pipeline::{run_pipeline, PipelineConfig, PipelineResult};
+pub use server::{
+    run_server, MixtureBackend, SchedStats, ServeBackend, ServerClient, ServerConfig,
+};
 pub use scoring::{
     score_matrix, score_matrix_rows, score_matrix_rows_threaded, score_matrix_threaded,
 };

@@ -1,0 +1,761 @@
+//! Continuous-batching serve: a cross-wave request queue with admission
+//! scheduling (the ROADMAP's "vLLM-style" open item).
+//!
+//! The closed-wave loop in [`super::inference`] realizes the paper's
+//! serving economy — one tiny-router score, one expert forward — only one
+//! batch at a time: requests arriving mid-wave wait for the next call,
+//! and a wave's slowest expert group idles every worker. This module
+//! inverts that control flow: a [`run_server`] scheduler owns the
+//! batches, and callers merely submit requests as they arrive.
+//!
+//! # Admission / dispatch state machine
+//!
+//! A request moves through four states, each owned by exactly one queue
+//! or thread:
+//!
+//! ```text
+//!  submitted ──▶ arrivals (WorkQueue)        client threads push
+//!      │
+//!      ▼  scheduler thread: pops arrivals, routes them in small
+//!  admitted     admission waves (one batched router score per wave),
+//!      │        appends each request to its expert's pending batch
+//!      ▼
+//!  dispatched ─▶ dispatch (WorkQueue)        pending batch leaves when
+//!      │            • it reaches `batch_size`          (full)
+//!      │            • its oldest member waited `max_wait` (linger)
+//!      │            • the server is draining at shutdown  (drain)
+//!      ▼
+//!  completed    worker threads pop batches, run the expert forward,
+//!               write each response into its submission-order slot
+//! ```
+//!
+//! Workers pull from the dispatch queue the moment they free up
+//! ([`SchedStats::slots_refilled`] counts pulls that never blocked), so a
+//! straggling expert batch delays only its own worker — the property the
+//! closed-wave path lacks.
+//!
+//! # Determinism contract
+//!
+//! A response's `(id, expert, nll)` triple is a pure function of the
+//! request's tokens: per-row router scores and per-row expert NLLs are
+//! independent of how rows are batched (asserted by the tail-padding and
+//! batching identity tests of PR 1/2). Therefore **any** arrival order,
+//! worker count, `batch_size`, or `max_wait` yields the same triple per
+//! request as the sequential closed-wave reference — only the timing
+//! fields and the batch boundaries vary. `rust/tests/server.rs` asserts
+//! this against [`super::serve_threaded`] at `threads = 1`.
+//!
+//! # Locking order (matching the `runtime/engine.rs` convention)
+//!
+//! * `arrivals` / `dispatch` — each a [`WorkQueue`] whose internal lock
+//!   is never held across routing, execution, or the other queue's lock.
+//! * `responses` (`Mutex`) — completion slots; taken by workers after
+//!   execution, never while holding a queue lock.
+//! * `stats` (`Mutex`) — counter updates; always the innermost lock.
+//! * `error` — first-failure slot (`AtomicBool` + `Mutex`); the flag is
+//!   checked lock-free, the slot lock is only taken to record or take
+//!   the error, never nested under anything else.
+//!
+//! Pending per-expert batches and their linger deadlines live entirely on
+//! the scheduler thread and need no lock at all.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::inference::{amortized_micros, eval_nll_all, Mixture, Request, Response};
+use crate::runtime::parallel::{resolve_threads, Pop, WorkQueue};
+use crate::runtime::Engine;
+
+/// What the scheduler needs from the model side. The production
+/// implementation is [`MixtureBackend`]; tests substitute deterministic
+/// stubs so the queue/admission mechanics are testable without compiled
+/// artifacts (tier-1).
+pub trait ServeBackend: Sync {
+    fn n_experts(&self) -> usize;
+    /// Route a batch of token rows to expert indices (one admission wave).
+    fn route(&self, rows: &[&[u32]], threads: usize) -> Result<Vec<usize>>;
+    /// Full-sequence NLL of `rows` under expert `expert` (one dispatched
+    /// batch).
+    fn exec_nll(&self, expert: usize, rows: &[&[u32]]) -> Result<Vec<f32>>;
+}
+
+/// The real backend: router scoring + expert execution over a trained
+/// [`Mixture`].
+pub struct MixtureBackend<'a> {
+    pub engine: &'a Engine,
+    pub mixture: &'a Mixture,
+    /// Routing prefix length (the paper's `m`).
+    pub prefix_len: usize,
+}
+
+impl ServeBackend for MixtureBackend<'_> {
+    fn n_experts(&self) -> usize {
+        self.mixture.n_experts()
+    }
+
+    fn route(&self, rows: &[&[u32]], threads: usize) -> Result<Vec<usize>> {
+        self.mixture
+            .route_rows_threaded(self.engine, rows, self.prefix_len, threads)
+    }
+
+    fn exec_nll(&self, expert: usize, rows: &[&[u32]]) -> Result<Vec<f32>> {
+        eval_nll_all(
+            self.engine,
+            &self.mixture.experts[expert],
+            &self.mixture.expert_meta,
+            rows,
+        )
+    }
+}
+
+/// Scheduler knobs.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Per-expert dispatch threshold: a pending batch is dispatched the
+    /// moment it holds this many requests. `0` means unbounded — batches
+    /// leave only on linger expiry or drain.
+    pub batch_size: usize,
+    /// Linger: a *partial* pending batch is dispatched once its oldest
+    /// member has waited this long. `u64::MAX` disables the timer
+    /// (partial batches then wait for fill or drain).
+    pub max_wait_us: u64,
+    /// Max requests routed per admission wave (`0` = unbounded: each wave
+    /// takes every arrival queued at that moment).
+    pub admission_max: usize,
+    /// Worker threads executing dispatched batches (also the router
+    /// fan-out width inside an admission wave); `0` = auto.
+    pub threads: usize,
+}
+
+impl ServerConfig {
+    /// Continuous-batching defaults: dispatch at `batch_size`, linger
+    /// `max_wait_us`, admission waves capped at `batch_size` (or 32 when
+    /// unbounded).
+    pub fn continuous(batch_size: usize, max_wait_us: u64, threads: usize) -> Self {
+        ServerConfig {
+            batch_size,
+            max_wait_us,
+            admission_max: if batch_size == 0 { 32 } else { batch_size },
+            threads,
+        }
+    }
+
+    /// The closed-wave configuration [`super::serve_threaded`] wraps: one
+    /// admission wave over everything submitted, no size/linger dispatch
+    /// — every expert group leaves as a single batch at drain, exactly
+    /// like the classic wave loop.
+    pub fn closed_wave(threads: usize) -> Self {
+        ServerConfig {
+            batch_size: 0,
+            max_wait_us: u64::MAX,
+            admission_max: 0,
+            threads,
+        }
+    }
+}
+
+/// Scheduler counters (the serving analogue of
+/// [`EngineStats`](crate::runtime::EngineStats)).
+#[derive(Clone, Debug, Default)]
+pub struct SchedStats {
+    /// Requests handed to [`ServerClient::submit`] / `submit_wave`.
+    pub submitted: usize,
+    /// Requests routed (equals `submitted` on a clean run).
+    pub admitted: usize,
+    /// Batched router-scoring calls (one per admission wave).
+    pub admission_waves: usize,
+    /// Expert batches pushed to the dispatch queue, by trigger.
+    pub batches_dispatched: usize,
+    pub full_batches: usize,
+    pub linger_batches: usize,
+    pub drain_batches: usize,
+    /// Worker pulls that found a batch already waiting (the freed slot
+    /// was refilled without blocking).
+    pub slots_refilled: usize,
+    /// Requests answered.
+    pub completed: usize,
+    /// Dispatch-queue depth summed at each dispatch (for
+    /// [`SchedStats::mean_queue_depth`]).
+    pub depth_sum: usize,
+    pub depth_samples: usize,
+}
+
+impl SchedStats {
+    /// Mean dispatch-queue depth observed at dispatch time: how much work
+    /// was waiting for a free worker slot, on average.
+    pub fn mean_queue_depth(&self) -> f64 {
+        if self.depth_samples == 0 {
+            0.0
+        } else {
+            self.depth_sum as f64 / self.depth_samples as f64
+        }
+    }
+}
+
+/// A submitted request waiting for admission.
+struct Arrival {
+    seq: usize,
+    submit_t: Instant,
+    req: Request,
+}
+
+/// An admitted (routed) request waiting in its expert's pending batch.
+struct Admitted {
+    seq: usize,
+    /// Arrival-queue wait: submission → admission (routing start).
+    pre_route_wait: Duration,
+    /// When this request's admission wave finished routing — the pending
+    /// + dispatch-queue wait is measured from here, so `queue_micros`
+    /// never double-counts the routing span `route_us` covers.
+    routed_t: Instant,
+    route_us: u128,
+    req: Request,
+}
+
+/// One dispatched expert batch.
+struct Batch {
+    expert: usize,
+    items: Vec<Admitted>,
+}
+
+/// First-failure slot: the flag is checked lock-free on hot paths.
+#[derive(Default)]
+struct ErrSlot {
+    set: AtomicBool,
+    err: Mutex<Option<anyhow::Error>>,
+}
+
+impl ErrSlot {
+    fn is_set(&self) -> bool {
+        self.set.load(Ordering::Relaxed)
+    }
+
+    fn record(&self, e: anyhow::Error) {
+        let mut slot = self.err.lock().expect("error slot poisoned");
+        if slot.is_none() {
+            *slot = Some(e);
+        }
+        self.set.store(true, Ordering::Relaxed);
+    }
+
+    fn take(&self) -> Option<anyhow::Error> {
+        self.err.lock().expect("error slot poisoned").take()
+    }
+}
+
+/// The handle a [`run_server`] driver submits requests through.
+pub struct ServerClient<'q> {
+    arrivals: &'q WorkQueue<Arrival>,
+    next_seq: AtomicUsize,
+}
+
+impl ServerClient<'_> {
+    /// Submit one request. Returns `false` if the server is already
+    /// shutting down (the request is dropped).
+    pub fn submit(&self, req: Request) -> bool {
+        self.submit_wave(vec![req])
+    }
+
+    /// Submit a batch atomically: the scheduler admits all of it in one
+    /// wave (given capacity) — this is what keeps the closed-wave wrapper
+    /// a single score-matrix call.
+    pub fn submit_wave(&self, reqs: Vec<Request>) -> bool {
+        let now = Instant::now();
+        let items: Vec<Arrival> = reqs
+            .into_iter()
+            .map(|req| Arrival {
+                seq: self.next_seq.fetch_add(1, Ordering::Relaxed),
+                submit_t: now,
+                req,
+            })
+            .collect();
+        self.arrivals.push_all(items)
+    }
+
+    /// Requests submitted so far.
+    pub fn submitted(&self) -> usize {
+        self.next_seq.load(Ordering::Relaxed)
+    }
+}
+
+/// Closes a queue when dropped, so a panicking thread cannot strand its
+/// consumers in a blocking `pop`.
+struct CloseOnDrop<'q, T>(&'q WorkQueue<T>);
+
+impl<T> Drop for CloseOnDrop<'_, T> {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+/// Run the continuous-batching server over `backend` for the lifetime of
+/// `driver`: the driver submits requests through the [`ServerClient`]
+/// (streaming them in, sleeping between waves, whatever the workload
+/// demands); when it returns, the server drains — every pending batch is
+/// dispatched, every response collected — and the call returns the
+/// responses **in submission order** plus the scheduler counters and the
+/// driver's own result.
+///
+/// Internally: `threads` workers pull from the dispatch queue, one
+/// scheduler thread owns admission and dispatch, and the driver runs on
+/// the calling thread. Any routing/execution error shuts the server down
+/// and is returned after the scope joins (first failure wins).
+pub fn run_server<B, R, F>(
+    backend: &B,
+    cfg: &ServerConfig,
+    driver: F,
+) -> Result<(Vec<Response>, SchedStats, R)>
+where
+    B: ServeBackend,
+    R: Send,
+    F: FnOnce(&ServerClient) -> R + Send,
+{
+    let threads = resolve_threads(cfg.threads).max(1);
+    let arrivals: WorkQueue<Arrival> = WorkQueue::new();
+    let dispatch: WorkQueue<Batch> = WorkQueue::new();
+    let responses: Mutex<Vec<Option<Response>>> = Mutex::new(Vec::new());
+    let stats: Mutex<SchedStats> = Mutex::new(SchedStats::default());
+    let error = ErrSlot::default();
+    let client = ServerClient {
+        arrivals: &arrivals,
+        next_seq: AtomicUsize::new(0),
+    };
+
+    let driver_out = std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| worker_loop(backend, &arrivals, &dispatch, &responses, &stats, &error));
+        }
+        s.spawn(|| scheduler_loop(backend, cfg, threads, &arrivals, &dispatch, &stats, &error));
+        // the driver runs on the calling thread; closing `arrivals` (on
+        // return *or* unwind) is what lets the scheduler drain and exit
+        let _close = CloseOnDrop(&arrivals);
+        driver(&client)
+    });
+
+    if let Some(e) = error.take() {
+        return Err(e);
+    }
+    let mut stats = stats.into_inner().expect("stats poisoned");
+    stats.submitted = client.submitted();
+    let slots = responses.into_inner().expect("responses poisoned");
+    let mut out = Vec::with_capacity(stats.submitted);
+    for (seq, slot) in slots.into_iter().enumerate() {
+        out.push(slot.ok_or_else(|| anyhow!("request at submission index {seq} was never answered"))?);
+    }
+    if out.len() != stats.submitted {
+        bail!(
+            "{} of {} submitted requests were never answered",
+            stats.submitted - out.len(),
+            stats.submitted
+        );
+    }
+    Ok((out, stats, driver_out))
+}
+
+/// The admission/dispatch loop (one thread). Pending per-expert batches
+/// and their linger deadlines are plain locals — only this thread touches
+/// them.
+fn scheduler_loop<B: ServeBackend>(
+    backend: &B,
+    cfg: &ServerConfig,
+    threads: usize,
+    arrivals: &WorkQueue<Arrival>,
+    dispatch: &WorkQueue<Batch>,
+    stats: &Mutex<SchedStats>,
+    error: &ErrSlot,
+) {
+    // a panicking or erroring scheduler must still release the workers
+    let _close = CloseOnDrop(dispatch);
+    let ne = backend.n_experts();
+    let batch_size = if cfg.batch_size == 0 {
+        usize::MAX
+    } else {
+        cfg.batch_size
+    };
+    let admission_max = if cfg.admission_max == 0 {
+        usize::MAX
+    } else {
+        cfg.admission_max
+    };
+    let linger = if cfg.max_wait_us == u64::MAX {
+        None
+    } else {
+        Some(Duration::from_micros(cfg.max_wait_us))
+    };
+    let mut pending: Vec<Vec<Admitted>> = (0..ne).map(|_| Vec::new()).collect();
+    // linger deadline of the oldest member of each non-empty pending batch
+    let mut deadline: Vec<Option<Instant>> = vec![None; ne];
+
+    loop {
+        if error.is_set() {
+            return; // _close releases the workers; run_server reports
+        }
+        let next_deadline = deadline.iter().flatten().min().copied();
+        let first = match next_deadline {
+            None => match arrivals.pop() {
+                Some(a) => Some(a),
+                None => break, // closed + drained: final flush below
+            },
+            Some(d) => {
+                let now = Instant::now();
+                if d <= now {
+                    None // expired: flush without waiting for arrivals
+                } else {
+                    match arrivals.pop_timeout(d - now) {
+                        Pop::Item(a) => Some(a),
+                        Pop::TimedOut => None,
+                        Pop::Closed => break,
+                    }
+                }
+            }
+        };
+
+        if let Some(first) = first {
+            // admission wave: the woken arrival plus whatever else is
+            // already queued, up to the admission cap
+            let mut wave = vec![first];
+            wave.extend(arrivals.drain_up_to(admission_max.saturating_sub(1)));
+            if let Err(e) = admit(
+                backend,
+                wave,
+                threads,
+                batch_size,
+                linger,
+                &mut pending,
+                &mut deadline,
+                dispatch,
+                stats,
+            ) {
+                error.record(e);
+                // fail fast: refuse further submissions so a streaming
+                // driver sees `submit` return false instead of feeding a
+                // dead server until its stream runs out
+                arrivals.close();
+                return;
+            }
+        }
+        flush_expired(&mut pending, &mut deadline, dispatch, stats);
+    }
+
+    // drain: everything still pending leaves as partial batches
+    for e in 0..ne {
+        if !pending[e].is_empty() {
+            deadline[e] = None;
+            let items = std::mem::take(&mut pending[e]);
+            dispatch_batch(e, items, DispatchKind::Drain, dispatch, stats);
+        }
+    }
+}
+
+#[derive(Clone, Copy)]
+enum DispatchKind {
+    Full,
+    Linger,
+    Drain,
+}
+
+/// Route one admission wave and file each request into its expert's
+/// pending batch, dispatching any batch that reaches `batch_size`.
+#[allow(clippy::too_many_arguments)]
+fn admit<B: ServeBackend>(
+    backend: &B,
+    wave: Vec<Arrival>,
+    threads: usize,
+    batch_size: usize,
+    linger: Option<Duration>,
+    pending: &mut [Vec<Admitted>],
+    deadline: &mut [Option<Instant>],
+    dispatch: &WorkQueue<Batch>,
+    stats: &Mutex<SchedStats>,
+) -> Result<()> {
+    let ne = pending.len();
+    let rows: Vec<&[u32]> = wave.iter().map(|a| a.req.tokens.as_slice()).collect();
+    let t0 = Instant::now();
+    let routes = backend.route(&rows, threads)?;
+    let routed_t = Instant::now();
+    let route_us = amortized_micros(routed_t - t0, wave.len());
+    if routes.len() != wave.len() {
+        bail!(
+            "backend routed {} of {} admitted requests",
+            routes.len(),
+            wave.len()
+        );
+    }
+    {
+        let mut st = stats.lock().expect("stats poisoned");
+        st.admission_waves += 1;
+        st.admitted += wave.len();
+    }
+    for (a, e) in wave.into_iter().zip(routes) {
+        if e >= ne {
+            bail!(
+                "route index {e} out of range for {ne} experts (request id {})",
+                a.req.id
+            );
+        }
+        if pending[e].is_empty() {
+            // checked_add: an absurdly large (but non-MAX) linger degrades
+            // to "no timer" instead of panicking on Instant overflow
+            deadline[e] = linger.and_then(|l| Instant::now().checked_add(l));
+        }
+        pending[e].push(Admitted {
+            seq: a.seq,
+            pre_route_wait: t0.saturating_duration_since(a.submit_t),
+            routed_t,
+            route_us,
+            req: a.req,
+        });
+        while pending[e].len() >= batch_size {
+            let items: Vec<Admitted> = pending[e].drain(..batch_size).collect();
+            dispatch_batch(e, items, DispatchKind::Full, dispatch, stats);
+            // survivors arrived after the dispatched ones: restart their
+            // linger window from now
+            deadline[e] = if pending[e].is_empty() {
+                None
+            } else {
+                linger.and_then(|l| Instant::now().checked_add(l))
+            };
+        }
+    }
+    Ok(())
+}
+
+/// Dispatch every pending batch whose linger deadline has passed.
+fn flush_expired(
+    pending: &mut [Vec<Admitted>],
+    deadline: &mut [Option<Instant>],
+    dispatch: &WorkQueue<Batch>,
+    stats: &Mutex<SchedStats>,
+) {
+    let now = Instant::now();
+    for e in 0..pending.len() {
+        if matches!(deadline[e], Some(d) if d <= now) {
+            deadline[e] = None;
+            let items = std::mem::take(&mut pending[e]);
+            if !items.is_empty() {
+                dispatch_batch(e, items, DispatchKind::Linger, dispatch, stats);
+            }
+        }
+    }
+}
+
+fn dispatch_batch(
+    expert: usize,
+    items: Vec<Admitted>,
+    kind: DispatchKind,
+    dispatch: &WorkQueue<Batch>,
+    stats: &Mutex<SchedStats>,
+) {
+    // sample the backlog BEFORE pushing: an idle pool reads 0, not a
+    // self-inflicted 1
+    let depth = dispatch.len();
+    dispatch.push(Batch { expert, items });
+    let mut st = stats.lock().expect("stats poisoned");
+    st.batches_dispatched += 1;
+    match kind {
+        DispatchKind::Full => st.full_batches += 1,
+        DispatchKind::Linger => st.linger_batches += 1,
+        DispatchKind::Drain => st.drain_batches += 1,
+    }
+    st.depth_sum += depth;
+    st.depth_samples += 1;
+}
+
+/// One worker: pull dispatched batches until the queue closes, execute
+/// them, write responses into their submission-order slots. On a backend
+/// failure the worker records the first error and closes `arrivals`, so
+/// a streaming driver fails fast (its next `submit` returns false)
+/// instead of feeding a server that will drop everything.
+fn worker_loop<B: ServeBackend>(
+    backend: &B,
+    arrivals: &WorkQueue<Arrival>,
+    dispatch: &WorkQueue<Batch>,
+    responses: &Mutex<Vec<Option<Response>>>,
+    stats: &Mutex<SchedStats>,
+    error: &ErrSlot,
+) {
+    let mut finished_one = false;
+    loop {
+        let batch = match dispatch.try_pop() {
+            Some(b) => {
+                if finished_one {
+                    // the freed slot was refilled without blocking
+                    stats.lock().expect("stats poisoned").slots_refilled += 1;
+                }
+                b
+            }
+            None => match dispatch.pop() {
+                Some(b) => b,
+                None => return,
+            },
+        };
+        if error.is_set() {
+            finished_one = true;
+            continue; // shutting down: drop the batch, keep draining
+        }
+        let rows: Vec<&[u32]> = batch.items.iter().map(|a| a.req.tokens.as_slice()).collect();
+        let t0 = Instant::now();
+        match backend.exec_nll(batch.expert, &rows) {
+            Err(e) => {
+                error.record(e);
+                arrivals.close();
+            }
+            Ok(nll) if nll.len() != rows.len() => {
+                error.record(anyhow!(
+                    "backend returned {} NLLs for a {}-row batch",
+                    nll.len(),
+                    rows.len()
+                ));
+                arrivals.close();
+            }
+            Ok(nll) => {
+                let exec_us = amortized_micros(t0.elapsed(), rows.len());
+                let mut out = responses.lock().expect("responses poisoned");
+                for (item, &v) in batch.items.iter().zip(&nll) {
+                    if out.len() <= item.seq {
+                        out.resize_with(item.seq + 1, || None);
+                    }
+                    // queue time = arrival-queue wait + pending/dispatch
+                    // wait; the routing span in between belongs to
+                    // route_micros, so total_micros never double-counts
+                    let queued = item.pre_route_wait
+                        + t0.saturating_duration_since(item.routed_t);
+                    out[item.seq] = Some(Response {
+                        id: item.req.id,
+                        expert: batch.expert,
+                        nll: v,
+                        queue_micros: queued.as_micros(),
+                        route_micros: item.route_us,
+                        exec_micros: exec_us,
+                    });
+                }
+                drop(out);
+                stats.lock().expect("stats poisoned").completed += batch.items.len();
+            }
+        }
+        finished_one = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic model-free backend: route by first token, NLL is a
+    /// pure function of (expert, tokens) — so triples are comparable
+    /// across any batching.
+    struct StubBackend {
+        n: usize,
+    }
+
+    impl ServeBackend for StubBackend {
+        fn n_experts(&self) -> usize {
+            self.n
+        }
+        fn route(&self, rows: &[&[u32]], _threads: usize) -> Result<Vec<usize>> {
+            Ok(rows
+                .iter()
+                .map(|r| r.first().copied().unwrap_or(0) as usize % self.n)
+                .collect())
+        }
+        fn exec_nll(&self, expert: usize, rows: &[&[u32]]) -> Result<Vec<f32>> {
+            Ok(rows
+                .iter()
+                .map(|r| expert as f32 * 1000.0 + r.iter().sum::<u32>() as f32)
+                .collect())
+        }
+    }
+
+    fn req(id: u64, tokens: Vec<u32>) -> Request {
+        Request { id, tokens }
+    }
+
+    #[test]
+    fn responses_come_back_in_submission_order() {
+        let backend = StubBackend { n: 3 };
+        let cfg = ServerConfig::continuous(2, 1000, 2);
+        let reqs: Vec<Request> = (0..7).map(|i| req(100 + i, vec![i as u32, 5])).collect();
+        let (out, stats, ()) = run_server(&backend, &cfg, |c| {
+            for r in &reqs {
+                c.submit(r.clone());
+            }
+        })
+        .unwrap();
+        assert_eq!(out.len(), 7);
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(r.id, 100 + i as u64, "submission order broken at {i}");
+            assert_eq!(r.expert, i % 3);
+            assert_eq!(r.nll, (i % 3) as f32 * 1000.0 + (i as u32 + 5) as f32);
+        }
+        assert_eq!(stats.submitted, 7);
+        assert_eq!(stats.admitted, 7);
+        assert_eq!(stats.completed, 7);
+    }
+
+    #[test]
+    fn closed_wave_config_admits_one_wave_and_drains_groups() {
+        let backend = StubBackend { n: 2 };
+        let cfg = ServerConfig::closed_wave(2);
+        let reqs: Vec<Request> = (0..6).map(|i| req(i, vec![i as u32; 3])).collect();
+        let (out, stats, ()) = run_server(&backend, &cfg, |c| {
+            c.submit_wave(reqs.clone());
+        })
+        .unwrap();
+        assert_eq!(out.len(), 6);
+        assert_eq!(stats.admission_waves, 1, "one atomic wave = one score call");
+        // 2 experts, both non-empty: each leaves as a single drain batch
+        assert_eq!(stats.batches_dispatched, 2);
+        assert_eq!(stats.drain_batches, 2);
+        assert_eq!(stats.full_batches + stats.linger_batches, 0);
+    }
+
+    #[test]
+    fn route_out_of_range_is_a_structured_error() {
+        struct BadRouter;
+        impl ServeBackend for BadRouter {
+            fn n_experts(&self) -> usize {
+                2
+            }
+            fn route(&self, rows: &[&[u32]], _t: usize) -> Result<Vec<usize>> {
+                Ok(vec![9; rows.len()])
+            }
+            fn exec_nll(&self, _e: usize, rows: &[&[u32]]) -> Result<Vec<f32>> {
+                Ok(vec![0.0; rows.len()])
+            }
+        }
+        let err = run_server(&BadRouter, &ServerConfig::continuous(2, 100, 1), |c| {
+            c.submit(req(42, vec![1, 2]));
+        })
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("route index 9"), "{msg}");
+        assert!(msg.contains("2 experts"), "{msg}");
+        assert!(msg.contains("request id 42"), "{msg}");
+    }
+
+    #[test]
+    fn exec_error_shuts_down_and_propagates() {
+        struct FailingExec;
+        impl ServeBackend for FailingExec {
+            fn n_experts(&self) -> usize {
+                2
+            }
+            fn route(&self, rows: &[&[u32]], _t: usize) -> Result<Vec<usize>> {
+                Ok(vec![0; rows.len()])
+            }
+            fn exec_nll(&self, _e: usize, _rows: &[&[u32]]) -> Result<Vec<f32>> {
+                bail!("device lost")
+            }
+        }
+        let err = run_server(&FailingExec, &ServerConfig::continuous(1, 100, 2), |c| {
+            for i in 0..4 {
+                c.submit(req(i, vec![0, 1]));
+            }
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("device lost"), "{err}");
+    }
+}

@@ -11,29 +11,32 @@
 //!   comm           print the §A.4 communication comparison
 //!   info           artifact/manifest summary
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use smalltalk::baselines::train_dense;
 use smalltalk::config::ExperimentConfig;
 use smalltalk::coordinator::{
-    comm, dense_perplexity, run_pipeline, serve_threaded, CommLedger, Request,
+    comm, dense_perplexity, response_triples, run_pipeline, run_server, serve_threaded, CommLedger,
+    MixtureBackend, Request, ServerConfig,
 };
 use smalltalk::data::corpus::Corpus;
 use smalltalk::data::SequenceGen;
 use smalltalk::eval::downstream::macro_accuracy;
 use smalltalk::eval::{build_tasks, mixture_accuracy_threaded, single_model_accuracy};
 use smalltalk::flops;
-use smalltalk::metrics::{sparkline, RunLog};
+use smalltalk::metrics::{percentile, sparkline, RunLog};
 use smalltalk::model::{load_checkpoint, save_checkpoint};
 use smalltalk::runtime::{resolve_threads, Engine};
 use smalltalk::tokenizer::{Bpe, BpeTrainer};
 use smalltalk::util::cli::Args;
+use smalltalk::util::json::Json;
 
 const VALUE_OPTS: &[&str] = &[
     "config", "artifacts-dir", "results-dir", "router", "expert", "experts",
     "em-rounds", "em-chunk", "em-steps", "shard-sequences", "expert-steps",
     "prefix", "eval-sequences", "tasks-per-domain", "seed", "requests", "out",
-    "ckpt-dir", "steps", "threads",
+    "ckpt-dir", "steps", "threads", "batch-size", "max-wait-us", "stream",
+    "delay-us",
 ];
 
 const EVAL_SEED: u64 = 0xE7A1;
@@ -50,6 +53,11 @@ fn usage() -> &'static str {
     "usage: smalltalk <e2e|train-routers|train-dense|eval|serve|flops|comm|info> [options]\n\
      common options: --config f.json --experts N --expert-steps N --seed N\n\
                      --threads N (worker threads for expert/router groups; 0 = auto)\n\
+     serve options:  --requests N --batch-size N (per-expert dispatch batch; 0 = eval batch)\n\
+                     --max-wait-us N (linger before dispatching a partial batch)\n\
+                     --stream f.jsonl (one request per line: {\"id\",\"tokens\",[\"delay_us\"]};\n\
+                                      tokens must be exactly seq_len + 1 long)\n\
+                     --delay-us N (synthetic inter-arrival gap for generated requests)\n\
      see configs/ for examples and DESIGN.md for the experiment index"
 }
 
@@ -297,6 +305,48 @@ fn cmd_eval(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// One request per JSONL line: `{"id": N, "tokens": [..], "delay_us": N}`.
+/// `id` defaults to the line number, `delay_us` (the gap slept before
+/// submitting this request, i.e. its arrival stagger) to 0.
+fn load_jsonl_requests(path: &str) -> Result<Vec<(Request, u64)>> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading request file {path}"))?;
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).with_context(|| format!("parsing {path}:{}", lineno + 1))?;
+        let non_negative = |key: &str, default: u64| -> Result<u64> {
+            match j.get(key).and_then(Json::as_i64) {
+                None => Ok(default),
+                // reject instead of wrapping: -100 as u64 would otherwise
+                // become a ~584k-year sleep (delay_us) or a bogus huge id
+                Some(v) if v < 0 => bail!("{path}:{}: negative \"{key}\" ({v})", lineno + 1),
+                Some(v) => Ok(v as u64),
+            }
+        };
+        let id = non_negative("id", lineno as u64)?;
+        let tokens = j
+            .get("tokens")
+            .and_then(Json::as_arr)
+            .with_context(|| format!("{path}:{}: missing \"tokens\" array", lineno + 1))?
+            .iter()
+            .map(|t| {
+                t.as_usize()
+                    .and_then(|v| u32::try_from(v).ok())
+                    .with_context(|| {
+                        format!("{path}:{}: token out of u32 range or non-integer", lineno + 1)
+                    })
+            })
+            .collect::<Result<Vec<u32>>>()?;
+        let delay_us = non_negative("delay_us", 0)?;
+        out.push((Request { id, tokens }, delay_us));
+    }
+    Ok(out)
+}
+
 fn cmd_serve(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
     let engine = Engine::new(&cfg.artifacts_dir)?;
     let bpe = load_or_train_bpe(cfg)?;
@@ -305,31 +355,125 @@ fn cmd_serve(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
     let mut p = cfg.pipeline.clone();
     p.em_rounds = p.em_rounds.min(2);
     let result = run_pipeline(&engine, &bpe, &p)?;
-    let n_req = args.get_usize("requests", 32)?;
     let meta = engine.variant(&p.expert_variant)?.clone();
-    let mut gen = SequenceGen::new(&bpe, meta.seq_len, cfg.seed ^ 0x5EB);
-    let requests: Vec<Request> = gen
-        .batch(n_req)
-        .into_iter()
-        .enumerate()
-        .map(|(i, s)| Request {
-            id: i as u64,
-            tokens: s.tokens,
-        })
-        .collect();
+
+    // request stream: --stream file.jsonl, else generated (staggered by
+    // --delay-us between arrivals)
+    let arrivals: Vec<(Request, u64)> = match args.get("stream") {
+        Some(path) => load_jsonl_requests(path)?,
+        None => {
+            let n_req = args.get_usize("requests", 32)?;
+            let delay_us = args.get_u64("delay-us", 0)?;
+            let mut gen = SequenceGen::new(&bpe, meta.seq_len, cfg.seed ^ 0x5EB);
+            gen.batch(n_req)
+                .into_iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    (
+                        Request {
+                            id: i as u64,
+                            tokens: s.tokens,
+                        },
+                        delay_us,
+                    )
+                })
+                .collect()
+        }
+    };
+    if arrivals.is_empty() {
+        println!("no requests to serve");
+        return Ok(());
+    }
+    // validate up front: the compiled eval batch takes exactly seq_len + 1
+    // tokens per row, and one malformed streamed request would otherwise
+    // abort the whole serve run mid-flight
+    let want_len = meta.seq_len + 1;
+    for (i, (r, _)) in arrivals.iter().enumerate() {
+        if r.tokens.len() != want_len {
+            bail!(
+                "request {} (id {}) has {} tokens; the {} variant serves exactly \
+                 seq_len + 1 = {want_len} tokens per request",
+                i,
+                r.id,
+                r.tokens.len(),
+                p.expert_variant
+            );
+        }
+    }
     let threads = resolve_threads(p.threads);
+    // cfg.serve_* already carry the --batch-size / --max-wait-us overrides
+    let batch_size = if cfg.serve_batch_size == 0 {
+        meta.eval_batch
+    } else {
+        cfg.serve_batch_size
+    };
+
+    // closed-wave baseline: everything as one wave
+    let requests: Vec<Request> = arrivals.iter().map(|(r, _)| r.clone()).collect();
     let t0 = std::time::Instant::now();
-    let responses = serve_threaded(&engine, &result.mixture, &requests, p.prefix_len, threads)?;
-    let elapsed = t0.elapsed();
-    let mean_nll: f64 =
-        responses.iter().map(|r| r.nll as f64).sum::<f64>() / responses.len() as f64;
+    let closed = serve_threaded(&engine, &result.mixture, &requests, p.prefix_len, threads)?;
+    let closed_dt = t0.elapsed();
+    let mean_nll: f64 = closed.iter().map(|r| r.nll as f64).sum::<f64>() / closed.len() as f64;
     println!(
-        "served {} requests in {:.2?} ({:.1} req/s, {threads} worker threads), mean seq NLL {:.2}",
-        responses.len(),
-        elapsed,
-        responses.len() as f64 / elapsed.as_secs_f64(),
+        "closed-wave:  {} requests in {:.2?} ({:.1} req/s, {threads} worker threads), mean seq NLL {:.2}",
+        closed.len(),
+        closed_dt,
+        closed.len() as f64 / closed_dt.as_secs_f64(),
         mean_nll
     );
+
+    // continuous: stream the same requests through the admission scheduler
+    let backend = MixtureBackend {
+        engine: &engine,
+        mixture: &result.mixture,
+        prefix_len: p.prefix_len,
+    };
+    let scfg = ServerConfig::continuous(batch_size, cfg.serve_max_wait_us, threads);
+    let t0 = std::time::Instant::now();
+    let (responses, stats, ()) = run_server(&backend, &scfg, |client| {
+        for (req, delay_us) in &arrivals {
+            if *delay_us > 0 {
+                std::thread::sleep(std::time::Duration::from_micros(*delay_us));
+            }
+            if !client.submit(req.clone()) {
+                break; // server is failing: stop streaming doomed requests
+            }
+        }
+    })?;
+    let dt = t0.elapsed();
+    let queue_us: Vec<f64> = responses.iter().map(|r| r.queue_micros as f64).collect();
+    let total_us: Vec<f64> = responses.iter().map(|r| r.total_micros() as f64).collect();
+    println!(
+        "continuous:   {} requests in {:.2?} ({:.1} req/s; batch-size {batch_size}, max-wait {} µs)",
+        responses.len(),
+        dt,
+        responses.len() as f64 / dt.as_secs_f64(),
+        cfg.serve_max_wait_us,
+    );
+    println!(
+        "  latency µs: queue p50 {:.0} / p95 {:.0}, total p50 {:.0} / p95 {:.0}",
+        percentile(&queue_us, 50.0),
+        percentile(&queue_us, 95.0),
+        percentile(&total_us, 50.0),
+        percentile(&total_us, 95.0),
+    );
+    println!(
+        "  scheduler:  {} admission waves, {} batches dispatched ({} full, {} linger, {} drain), \
+         {} slots refilled, mean queue depth {:.2}",
+        stats.admission_waves,
+        stats.batches_dispatched,
+        stats.full_batches,
+        stats.linger_batches,
+        stats.drain_batches,
+        stats.slots_refilled,
+        stats.mean_queue_depth(),
+    );
+
+    // the continuous server must answer every request identically
+    if response_triples(&closed) != response_triples(&responses) {
+        bail!("continuous serve diverged from the closed-wave reference");
+    }
+
     let mut by_expert = vec![0usize; result.mixture.n_experts()];
     for r in &responses {
         by_expert[r.expert] += 1;

@@ -103,6 +103,22 @@ impl RunLog {
     }
 }
 
+/// Nearest-rank percentile of a sample (`p` in `[0, 100]`): the smallest
+/// value such that at least `p`% of the sample is `<=` it. Used for the
+/// serve-path latency reporting (p50/p95 queue + total micros). Returns
+/// 0.0 on an empty sample; ordering is IEEE total order, so any NaNs
+/// sort after +inf deterministically.
+pub fn percentile(values: &[f64], p: f64) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = values.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let n = sorted.len();
+    let rank = ((p / 100.0) * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
+
 /// Render a crude ASCII sparkline of a series (terminal loss curves).
 pub fn sparkline(points: &[Point], width: usize) -> String {
     if points.is_empty() || width == 0 {
@@ -181,5 +197,21 @@ mod tests {
     #[test]
     fn sparkline_empty_safe() {
         assert_eq!(sparkline(&[], 10), "");
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 50.0), 50.0);
+        assert_eq!(percentile(&v, 95.0), 95.0);
+        assert_eq!(percentile(&v, 100.0), 100.0);
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        // unsorted input is handled
+        assert_eq!(percentile(&[9.0, 1.0, 5.0], 50.0), 5.0);
+        // small samples: nearest rank, not interpolation
+        assert_eq!(percentile(&[10.0, 20.0], 50.0), 10.0);
+        assert_eq!(percentile(&[10.0, 20.0], 95.0), 20.0);
+        assert_eq!(percentile(&[7.0], 50.0), 7.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
     }
 }

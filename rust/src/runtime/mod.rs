@@ -21,5 +21,5 @@ pub mod state;
 
 pub use artifacts::{locate_artifacts, Manifest, VariantMeta};
 pub use engine::{Arg, DeviceBuffer, Engine, EngineStats};
-pub use parallel::{default_threads, resolve_threads, run_fallible, run_tasks};
+pub use parallel::{default_threads, resolve_threads, run_fallible, run_tasks, Pop, WorkQueue};
 pub use state::TrainState;

@@ -4,17 +4,29 @@
 //! serving wave embarrassingly parallel: once routing has grouped the
 //! requests, each expert group touches only its own `TrainState` and the
 //! shared (now `Sync`) [`Engine`](super::Engine). This module is the one
-//! place that spawns threads: a scoped work-stealing pool over a vector of
-//! `FnOnce` tasks, with results returned **in input order** so parallel
-//! callers stay bit-identical to sequential ones.
+//! place that owns thread-dispatch machinery, in two modes:
+//!
+//! * **Fixed task list** ([`run_tasks`] / [`run_fallible`]): a scoped
+//!   work-stealing pool over a vector of `FnOnce` tasks, with results
+//!   returned **in input order** so parallel callers stay bit-identical
+//!   to sequential ones. This is the closed-wave mode — the caller owns
+//!   the batch.
+//! * **Long-lived worker pool** ([`WorkQueue`]): a closeable blocking
+//!   FIFO that workers *pull* dispatched batches from until the producer
+//!   closes it. This is the continuous-batching mode — the scheduler in
+//!   [`crate::coordinator::server`] owns the batches, and a freed worker
+//!   immediately pulls the next one instead of waiting for a wave
+//!   barrier.
 //!
 //! No external thread-pool crate: the build is offline, and
 //! `std::thread::scope` (Rust ≥1.63) lets tasks borrow the engine, the
 //! mixture, and request rows without `'static` bounds or clones.
 
+use std::collections::VecDeque;
 use std::num::NonZeroUsize;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
 
 use anyhow::Result;
 
@@ -147,6 +159,153 @@ where
     }
 }
 
+// ----------------------------------------------------------------------
+// Long-lived worker-pool mode: a closeable blocking FIFO
+// ----------------------------------------------------------------------
+
+/// Outcome of a bounded wait on a [`WorkQueue`].
+#[derive(Debug)]
+pub enum Pop<T> {
+    /// An item was available (possibly after blocking).
+    Item(T),
+    /// The timeout elapsed with the queue open but empty.
+    TimedOut,
+    /// The queue is closed and fully drained — the worker should exit.
+    Closed,
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A closeable blocking FIFO for long-lived worker pools: producers
+/// [`push`](WorkQueue::push) batches, workers [`pop`](WorkQueue::pop) them
+/// until [`close`](WorkQueue::close) + drain. Unlike [`run_tasks`], the
+/// task set is open-ended — work arrives while workers run, which is the
+/// substrate continuous batching needs.
+///
+/// One `Mutex` around `(items, closed)` plus one `Condvar`; the lock is
+/// never held across user work, only across queue mutation. Pushes via
+/// [`push_all`](WorkQueue::push_all) are atomic: consumers observe all of
+/// a batch or none of it.
+pub struct WorkQueue<T> {
+    state: Mutex<QueueState<T>>,
+    cv: Condvar,
+}
+
+impl<T> Default for WorkQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> WorkQueue<T> {
+    pub fn new() -> Self {
+        WorkQueue {
+            state: Mutex::new(QueueState {
+                items: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, QueueState<T>> {
+        self.state.lock().expect("work queue poisoned")
+    }
+
+    /// Enqueue one item. Returns `false` (dropping the item) if the queue
+    /// is already closed.
+    pub fn push(&self, item: T) -> bool {
+        self.push_all(std::iter::once(item))
+    }
+
+    /// Enqueue a batch atomically: consumers never observe a partial
+    /// batch. Returns `false` (dropping the items) if already closed.
+    pub fn push_all(&self, items: impl IntoIterator<Item = T>) -> bool {
+        let mut st = self.lock();
+        if st.closed {
+            return false;
+        }
+        st.items.extend(items);
+        drop(st);
+        // wake everyone: a batch may satisfy several blocked workers
+        self.cv.notify_all();
+        true
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        self.lock().items.pop_front()
+    }
+
+    /// Blocking pop: waits until an item arrives or the queue is closed
+    /// *and* drained (then `None` — the worker-exit signal).
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.lock();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).expect("work queue poisoned");
+        }
+    }
+
+    /// [`pop`](WorkQueue::pop) with a deadline, for schedulers that must
+    /// wake to flush lingering partial batches.
+    pub fn pop_timeout(&self, timeout: Duration) -> Pop<T> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut st = self.lock();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                return Pop::Item(item);
+            }
+            if st.closed {
+                return Pop::Closed;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Pop::TimedOut;
+            }
+            let (g, _) = self
+                .cv
+                .wait_timeout(st, deadline - now)
+                .expect("work queue poisoned");
+            st = g;
+        }
+    }
+
+    /// Take up to `max` immediately-available items (no blocking).
+    pub fn drain_up_to(&self, max: usize) -> Vec<T> {
+        let mut st = self.lock();
+        let n = st.items.len().min(max);
+        st.items.drain(..n).collect()
+    }
+
+    /// Close the queue: further pushes are refused, blocked workers drain
+    /// the remaining items and then receive the exit signal.
+    pub fn close(&self) {
+        self.lock().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.lock().closed
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -223,5 +382,83 @@ mod tests {
     fn resolve_treats_zero_as_auto() {
         assert!(resolve_threads(0) >= 1);
         assert_eq!(resolve_threads(3), 3);
+    }
+
+    #[test]
+    fn work_queue_is_fifo_and_drains_after_close() {
+        let q = WorkQueue::new();
+        assert!(q.push_all([1, 2, 3]));
+        q.close();
+        assert!(!q.push(4), "push after close must be refused");
+        // closed but not drained: pops still yield the queued items
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), None, "drained + closed is the exit signal");
+    }
+
+    #[test]
+    fn work_queue_pop_timeout_variants() {
+        let q: WorkQueue<u32> = WorkQueue::new();
+        assert!(matches!(
+            q.pop_timeout(Duration::from_millis(5)),
+            Pop::TimedOut
+        ));
+        q.push(7);
+        assert!(matches!(
+            q.pop_timeout(Duration::from_millis(5)),
+            Pop::Item(7)
+        ));
+        q.close();
+        assert!(matches!(q.pop_timeout(Duration::from_millis(5)), Pop::Closed));
+    }
+
+    #[test]
+    fn work_queue_close_wakes_blocked_workers() {
+        let q: WorkQueue<u32> = WorkQueue::new();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..3).map(|_| s.spawn(|| q.pop())).collect();
+            std::thread::sleep(Duration::from_millis(10));
+            q.push(1); // exactly one worker gets an item
+            q.close(); // the rest must wake and exit
+            let got: Vec<Option<u32>> =
+                handles.into_iter().map(|h| h.join().unwrap()).collect();
+            assert_eq!(got.iter().filter(|g| g.is_some()).count(), 1);
+            assert_eq!(got.iter().filter(|g| g.is_none()).count(), 2);
+        });
+    }
+
+    #[test]
+    fn work_queue_drain_up_to_is_bounded() {
+        let q = WorkQueue::new();
+        q.push_all(0..10usize);
+        assert_eq!(q.drain_up_to(4), vec![0, 1, 2, 3]);
+        assert_eq!(q.len(), 6);
+        assert_eq!(q.drain_up_to(usize::MAX), (4..10).collect::<Vec<_>>());
+        assert!(q.is_empty());
+        assert!(q.drain_up_to(5).is_empty());
+    }
+
+    #[test]
+    fn work_queue_every_item_popped_exactly_once_under_contention() {
+        const ITEMS: usize = 200;
+        let q = WorkQueue::new();
+        let seen: Vec<AtomicUsize> = (0..ITEMS).map(|_| AtomicUsize::new(0)).collect();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    while let Some(i) = q.pop() {
+                        seen[i].fetch_add(1, Ordering::SeqCst);
+                    }
+                });
+            }
+            for i in 0..ITEMS {
+                q.push(i);
+            }
+            q.close();
+        });
+        for (i, c) in seen.iter().enumerate() {
+            assert_eq!(c.load(Ordering::SeqCst), 1, "item {i} pop count");
+        }
     }
 }

@@ -1,0 +1,537 @@
+//! Continuous-batching server suite: queue accounting and scheduler edge
+//! cases on a deterministic stub backend (tier-1, no artifacts needed),
+//! plus artifacts-gated determinism tests proving the continuous server
+//! answers every request identically to the closed-wave reference for any
+//! arrival order, worker count, batch size, and linger setting.
+//!
+//! Two tiers, following `rust/tests/concurrency.rs`:
+//! * the stub tests exercise [`run_server`]'s admission/dispatch state
+//!   machine through the public [`ServeBackend`] trait — routing and NLL
+//!   are pure functions of the tokens, so `(id, expert, nll)` triples are
+//!   comparable across any batching without compiled artifacts;
+//! * the XLA-backed tests train a small mixture and hold the real
+//!   [`MixtureBackend`] to the same bar (standard self-skip without
+//!   `artifacts/manifest.json`).
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+use smalltalk::coordinator::{
+    response_triples as triples, run_pipeline, run_server, serve_threaded, MixtureBackend,
+    PipelineConfig, Request, ServeBackend, ServerConfig,
+};
+use smalltalk::data::corpus::Corpus;
+use smalltalk::data::SequenceGen;
+use smalltalk::runtime::{locate_artifacts, Engine};
+use smalltalk::tokenizer::BpeTrainer;
+
+// ---------------------------------------------------------------------
+// deterministic stub backend (tier-1)
+// ---------------------------------------------------------------------
+
+/// Routing and NLL are pure functions of the tokens: route by first
+/// token, NLL = expert * 1000 + token sum. Any batching of any arrival
+/// order must therefore produce the same `(id, expert, nll)` triples.
+struct StubBackend {
+    n: usize,
+    /// Per-expert execution delay (straggler simulation).
+    delay: Vec<Duration>,
+    /// Log of dispatched batch sizes per expert, for batching assertions.
+    batches: Mutex<Vec<(usize, usize)>>,
+}
+
+impl StubBackend {
+    fn new(n: usize) -> Self {
+        StubBackend {
+            n,
+            delay: vec![Duration::ZERO; n],
+            batches: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn with_delay(mut self, expert: usize, delay: Duration) -> Self {
+        self.delay[expert] = delay;
+        self
+    }
+
+    fn expected(&self, req: &Request) -> (u64, usize, u32) {
+        let e = req.tokens.first().copied().unwrap_or(0) as usize % self.n;
+        let nll = e as f32 * 1000.0 + req.tokens.iter().sum::<u32>() as f32;
+        (req.id, e, nll.to_bits())
+    }
+}
+
+impl ServeBackend for StubBackend {
+    fn n_experts(&self) -> usize {
+        self.n
+    }
+
+    fn route(&self, rows: &[&[u32]], _threads: usize) -> Result<Vec<usize>> {
+        Ok(rows
+            .iter()
+            .map(|r| r.first().copied().unwrap_or(0) as usize % self.n)
+            .collect())
+    }
+
+    fn exec_nll(&self, expert: usize, rows: &[&[u32]]) -> Result<Vec<f32>> {
+        self.batches.lock().unwrap().push((expert, rows.len()));
+        if !self.delay[expert].is_zero() {
+            std::thread::sleep(self.delay[expert]);
+        }
+        Ok(rows
+            .iter()
+            .map(|r| expert as f32 * 1000.0 + r.iter().sum::<u32>() as f32)
+            .collect())
+    }
+}
+
+fn req(id: u64, first_token: u32) -> Request {
+    // three tokens so the NLL separates requests with the same route
+    Request {
+        id,
+        tokens: vec![first_token, id as u32, 7],
+    }
+}
+
+// ---------------------------------------------------------------------
+// scheduler edge cases (tier-1)
+// ---------------------------------------------------------------------
+
+/// Empty queue: a driver that submits nothing gets an empty response set
+/// and an untouched scheduler.
+#[test]
+fn empty_queue_serves_nothing() {
+    let backend = StubBackend::new(3);
+    let (out, stats, ()) = run_server(&backend, &ServerConfig::continuous(4, 1000, 2), |_c| {})
+        .unwrap();
+    assert!(out.is_empty());
+    assert_eq!(stats.submitted, 0);
+    assert_eq!(stats.admitted, 0);
+    assert_eq!(stats.admission_waves, 0);
+    assert_eq!(stats.batches_dispatched, 0);
+    assert_eq!(stats.completed, 0);
+    assert!(backend.batches.lock().unwrap().is_empty(), "no batch may execute");
+}
+
+/// A single request flows through admission, linger/drain dispatch, and
+/// completion — one wave, one batch.
+#[test]
+fn single_request_single_batch() {
+    let backend = StubBackend::new(3);
+    let r = req(5, 1);
+    let want = backend.expected(&r);
+    let (out, stats, ()) = run_server(&backend, &ServerConfig::continuous(8, 1000, 1), |c| {
+        assert!(c.submit(r.clone()));
+    })
+    .unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(triples(&out), vec![want]);
+    assert_eq!(stats.submitted, 1);
+    assert_eq!(stats.admitted, 1);
+    assert_eq!(stats.admission_waves, 1);
+    assert_eq!(stats.batches_dispatched, 1);
+    assert_eq!(stats.completed, 1);
+}
+
+/// Duplicate request ids are independent requests: both are answered,
+/// each with its own tokens' NLL.
+#[test]
+fn duplicate_request_ids_both_answered() {
+    let backend = StubBackend::new(2);
+    let a = Request { id: 9, tokens: vec![0, 1, 1] };
+    let b = Request { id: 9, tokens: vec![1, 2, 2] };
+    let mut want = vec![backend.expected(&a), backend.expected(&b)];
+    want.sort_unstable();
+    let (out, stats, ()) = run_server(&backend, &ServerConfig::continuous(4, 500, 2), |c| {
+        c.submit(a.clone());
+        c.submit(b.clone());
+    })
+    .unwrap();
+    assert_eq!(out.len(), 2, "both duplicates answered");
+    assert_eq!(triples(&out), want);
+    assert_eq!(stats.completed, 2);
+}
+
+/// Everything routes to one expert: batches fill and dispatch at exactly
+/// `batch_size`, the remainder leaves at drain, nothing touches the other
+/// experts.
+#[test]
+fn all_requests_to_one_expert_batches_exactly() {
+    let backend = StubBackend::new(4);
+    // first token 0 mod 4 -> expert 0, for all ten requests
+    let reqs: Vec<Request> = (0..10).map(|i| req(i, 0)).collect();
+    let cfg = ServerConfig {
+        batch_size: 4,
+        max_wait_us: u64::MAX, // no linger: dispatch boundaries are exact
+        admission_max: 0,
+        threads: 2,
+    };
+    let (out, stats, ()) = run_server(&backend, &cfg, |c| {
+        c.submit_wave(reqs.clone());
+    })
+    .unwrap();
+    assert_eq!(out.len(), 10);
+    for r in &out {
+        assert_eq!(r.expert, 0);
+    }
+    assert_eq!(stats.batches_dispatched, 3, "4 + 4 + drain(2)");
+    assert_eq!(stats.full_batches, 2);
+    assert_eq!(stats.linger_batches, 0);
+    assert_eq!(stats.drain_batches, 1);
+    let mut batches = backend.batches.lock().unwrap().clone();
+    batches.sort_unstable();
+    assert_eq!(batches, vec![(0, 2), (0, 4), (0, 4)]);
+}
+
+/// Arrival-order permutations produce identical `(id, expert, nll)`
+/// triples across worker counts, batch sizes, and linger settings —
+/// and responses always come back in submission order.
+#[test]
+fn arrival_permutations_yield_identical_triples() {
+    let backend = StubBackend::new(3);
+    let base: Vec<Request> = (0..12).map(|i| req(i, i as u32)).collect();
+    let mut want: Vec<(u64, usize, u32)> = base.iter().map(|r| backend.expected(r)).collect();
+    want.sort_unstable();
+
+    let mut orders: Vec<Vec<Request>> = vec![base.clone()];
+    let mut rev = base.clone();
+    rev.reverse();
+    orders.push(rev);
+    // interleave: evens then odds
+    let mut inter: Vec<Request> = base.iter().step_by(2).cloned().collect();
+    inter.extend(base.iter().skip(1).step_by(2).cloned());
+    orders.push(inter);
+
+    for (threads, batch_size, max_wait_us) in
+        [(1, 1, 0), (2, 3, 200), (4, 5, u64::MAX), (2, 0, 100)]
+    {
+        for (o, order) in orders.iter().enumerate() {
+            let cfg = ServerConfig::continuous(batch_size, max_wait_us, threads);
+            // submit one by one (individual admission races) and as one
+            // atomic wave — both must agree
+            let (out, stats, ()) = run_server(&backend, &cfg, |c| {
+                for r in order {
+                    c.submit(r.clone());
+                }
+            })
+            .unwrap();
+            assert_eq!(
+                triples(&out),
+                want,
+                "order {o}, threads {threads}, batch {batch_size}, wait {max_wait_us}"
+            );
+            // submission order is preserved slot-for-slot
+            for (slot, r) in order.iter().zip(&out) {
+                assert_eq!(slot.id, r.id, "order {o}: submission slot broken");
+            }
+            assert_eq!(stats.submitted, 12);
+            assert_eq!(stats.completed, 12);
+
+            let (out2, _, ()) = run_server(&backend, &cfg, |c| {
+                c.submit_wave(order.clone());
+            })
+            .unwrap();
+            assert_eq!(triples(&out2), want, "order {o} (atomic wave)");
+        }
+    }
+}
+
+/// A partial batch must not wait forever: once its oldest member has
+/// lingered past `max_wait`, it is dispatched even though the batch never
+/// filled (the driver is still alive and submitting afterwards, so this
+/// is not drain).
+#[test]
+fn linger_expiry_dispatches_partial_batches() {
+    let backend = StubBackend::new(2);
+    let cfg = ServerConfig::continuous(100, 5_000, 2); // fill is unreachable
+    let (out, stats, ()) = run_server(&backend, &cfg, |c| {
+        for i in 0..3 {
+            c.submit(req(i, 0));
+        }
+        // far longer than max_wait: the scheduler must flush without us
+        std::thread::sleep(Duration::from_millis(120));
+        for i in 3..6 {
+            c.submit(req(i, 0));
+        }
+    })
+    .unwrap();
+    assert_eq!(out.len(), 6);
+    assert!(
+        stats.linger_batches >= 1,
+        "first batch must leave on linger expiry, not drain: {stats:?}"
+    );
+    assert_eq!(stats.completed, 6);
+    // the lingered requests really waited: their queue time is >= max_wait
+    let lingered = out.iter().filter(|r| r.queue_micros >= 5_000).count();
+    assert!(lingered >= 1, "queue_micros must record the linger wait");
+}
+
+/// Freed worker slots are refilled from the dispatch queue without
+/// blocking: with more batches than workers, at least one pull must find
+/// work already waiting.
+#[test]
+fn freed_slots_are_refilled_under_backlog() {
+    let backend = StubBackend::new(2)
+        .with_delay(0, Duration::from_millis(2))
+        .with_delay(1, Duration::from_millis(2));
+    let cfg = ServerConfig::continuous(1, u64::MAX, 2); // every request = one batch
+    let reqs: Vec<Request> = (0..16).map(|i| req(i, i as u32)).collect();
+    let (out, stats, ()) = run_server(&backend, &cfg, |c| {
+        c.submit_wave(reqs.clone());
+    })
+    .unwrap();
+    assert_eq!(out.len(), 16);
+    assert_eq!(stats.batches_dispatched, 16);
+    assert!(
+        stats.slots_refilled >= 1,
+        "a backlog of 16 single-request batches over 2 workers must refill \
+         freed slots without blocking: {stats:?}"
+    );
+    assert!(stats.mean_queue_depth() > 0.0, "dispatch queue was never observed non-empty");
+}
+
+/// The straggler property the closed wave lacks: one slow expert batch
+/// delays only its own worker — the fast expert's batches keep flowing
+/// through the freed slots, so total wall time stays near the single
+/// straggler's cost, not the sum.
+#[test]
+fn straggler_batch_does_not_stall_other_experts() {
+    let slow = Duration::from_millis(60);
+    let backend = StubBackend::new(2).with_delay(1, slow);
+    let cfg = ServerConfig::continuous(2, u64::MAX, 2);
+    // 2 slow-expert requests (one batch) + 6 fast ones (three batches)
+    let mut reqs: Vec<Request> = (0..2).map(|i| req(i, 1)).collect();
+    reqs.extend((2..8).map(|i| req(i, 0)));
+    let t0 = Instant::now();
+    let (out, stats, ()) = run_server(&backend, &cfg, |c| {
+        c.submit_wave(reqs.clone());
+    })
+    .unwrap();
+    let elapsed = t0.elapsed();
+    assert_eq!(out.len(), 8);
+    assert_eq!(stats.batches_dispatched, 4);
+    // the sharp per-request property: no fast-expert request queued for
+    // the straggler's full duration — its batches ran on the free worker
+    // while the slow batch was still executing
+    let stalled = out
+        .iter()
+        .filter(|r| r.expert == 0 && r.queue_micros >= slow.as_micros())
+        .count();
+    assert_eq!(
+        stalled, 0,
+        "fast batches queued behind the straggler (queue times: {:?})",
+        out.iter().map(|r| (r.expert, r.queue_micros)).collect::<Vec<_>>()
+    );
+    // wall clock reflects the overlap; generous 3x margin because the
+    // suite also runs under RUST_TEST_THREADS=8 on small machines
+    assert!(
+        elapsed < slow * 3,
+        "serving took {elapsed:?} against a single {slow:?} straggler"
+    );
+}
+
+/// Structured error (not a panic) when the router emits an out-of-range
+/// expert index, and clean propagation of execution failures.
+#[test]
+fn backend_failures_propagate_as_errors() {
+    struct BadRoute;
+    impl ServeBackend for BadRoute {
+        fn n_experts(&self) -> usize {
+            3
+        }
+        fn route(&self, rows: &[&[u32]], _t: usize) -> Result<Vec<usize>> {
+            Ok(vec![3; rows.len()]) // == n_experts: first invalid index
+        }
+        fn exec_nll(&self, _e: usize, rows: &[&[u32]]) -> Result<Vec<f32>> {
+            Ok(vec![0.0; rows.len()])
+        }
+    }
+    let err = run_server(&BadRoute, &ServerConfig::continuous(2, 100, 2), |c| {
+        c.submit(req(1, 0));
+    })
+    .unwrap_err();
+    assert!(err.to_string().contains("route index 3"), "{err}");
+
+    struct BrokenExec;
+    impl ServeBackend for BrokenExec {
+        fn n_experts(&self) -> usize {
+            2
+        }
+        fn route(&self, rows: &[&[u32]], _t: usize) -> Result<Vec<usize>> {
+            Ok(vec![0; rows.len()])
+        }
+        fn exec_nll(&self, _e: usize, _rows: &[&[u32]]) -> Result<Vec<f32>> {
+            bail!("executor exploded")
+        }
+    }
+    let err = run_server(&BrokenExec, &ServerConfig::continuous(1, 100, 3), |c| {
+        for i in 0..5 {
+            c.submit(req(i, 0));
+        }
+    })
+    .unwrap_err();
+    assert!(err.to_string().contains("executor exploded"), "{err}");
+}
+
+/// Queue accounting is exact on a clean run: submitted == admitted ==
+/// completed == responses, and dispatch-kind counters partition
+/// batches_dispatched.
+#[test]
+fn queue_accounting_is_exact() {
+    let backend = StubBackend::new(3);
+    let reqs: Vec<Request> = (0..23).map(|i| req(i, i as u32)).collect();
+    let cfg = ServerConfig::continuous(4, 300, 3);
+    let (out, stats, ()) = run_server(&backend, &cfg, |c| {
+        for chunk in reqs.chunks(5) {
+            c.submit_wave(chunk.to_vec());
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    })
+    .unwrap();
+    assert_eq!(out.len(), 23);
+    assert_eq!(stats.submitted, 23);
+    assert_eq!(stats.admitted, 23);
+    assert_eq!(stats.completed, 23);
+    assert_eq!(
+        stats.full_batches + stats.linger_batches + stats.drain_batches,
+        stats.batches_dispatched,
+        "dispatch kinds must partition the total: {stats:?}"
+    );
+    let executed: usize = backend.batches.lock().unwrap().iter().map(|&(_, n)| n).sum();
+    assert_eq!(executed, 23, "every request executes exactly once");
+    assert!(stats.admission_waves >= 1 && stats.admission_waves <= 23);
+}
+
+// ---------------------------------------------------------------------
+// XLA-backed determinism tests (self-skip without compiled artifacts)
+// ---------------------------------------------------------------------
+
+fn setup() -> Option<(Engine, smalltalk::coordinator::Mixture, Vec<Request>)> {
+    let dir = locate_artifacts()?;
+    let engine = Engine::new(dir).expect("loading artifacts");
+    let corpus = Corpus::generate(60, 400, 42, None);
+    let bpe = BpeTrainer::new(512).train(corpus.texts()).unwrap();
+    let cfg = PipelineConfig {
+        router_variant: "router_micro".into(),
+        expert_variant: "expert_sm".into(),
+        n_experts: 4,
+        em_rounds: 2,
+        em_chunk: 96,
+        em_steps_per_round: 8,
+        shard_sequences: 128,
+        expert_steps: 10,
+        prefix_len: 32,
+        seed: 3,
+        threads: 0,
+    };
+    let mixture = run_pipeline(&engine, &bpe, &cfg)
+        .expect("training the test mixture")
+        .mixture;
+    let requests: Vec<Request> = SequenceGen::new(&bpe, mixture.expert_meta.seq_len, 23)
+        .batch(26)
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| Request {
+            id: 500 + i as u64,
+            tokens: s.tokens,
+        })
+        .collect();
+    Some((engine, mixture, requests))
+}
+
+/// For any arrival order and any `threads`/`batch-size`/`max-wait`
+/// setting, the continuous server returns the same `(id, expert, nll)`
+/// set as closed-wave `serve_threaded` on the same requests.
+#[test]
+fn continuous_matches_closed_wave_for_any_arrival_order_and_config() {
+    let Some((engine, mixture, requests)) = setup() else { return };
+    let m = 32usize;
+    let e = mixture.n_experts();
+    let reference = serve_threaded(&engine, &mixture, &requests, m, 1).unwrap();
+    let want = triples(&reference);
+    let backend = MixtureBackend {
+        engine: &engine,
+        mixture: &mixture,
+        prefix_len: m,
+    };
+
+    let mut orders: Vec<Vec<Request>> = vec![requests.clone()];
+    let mut rev = requests.clone();
+    rev.reverse();
+    orders.push(rev);
+    let mut inter: Vec<Request> = requests.iter().step_by(2).cloned().collect();
+    inter.extend(requests.iter().skip(1).step_by(2).cloned());
+    orders.push(inter);
+
+    let eval_batch = mixture.expert_meta.eval_batch;
+    for (threads, batch_size, max_wait_us) in [
+        (1usize, 1usize, u64::MAX),
+        (2, 3, 200),
+        (e, eval_batch, 500),
+        (e + 3, 0, 0),
+    ] {
+        for (o, order) in orders.iter().enumerate() {
+            let cfg = ServerConfig::continuous(batch_size, max_wait_us, threads);
+            let (out, stats, ()) = run_server(&backend, &cfg, |c| {
+                for r in order {
+                    c.submit(r.clone());
+                }
+            })
+            .unwrap();
+            assert_eq!(
+                triples(&out),
+                want,
+                "order {o}, threads {threads}, batch {batch_size}, wait {max_wait_us}: \
+                 continuous diverged from closed-wave serve_threaded"
+            );
+            assert_eq!(stats.completed, requests.len());
+        }
+    }
+
+    // and the closed-wave wrapper itself (threads > 1 now runs through
+    // the scheduler) stays bit-identical to sequential, order included
+    for threads in [2usize, e, e + 3] {
+        let parallel = serve_threaded(&engine, &mixture, &requests, m, threads).unwrap();
+        assert_eq!(parallel.len(), reference.len());
+        for (p, s) in parallel.iter().zip(&reference) {
+            assert_eq!(
+                (p.id, p.expert, p.nll.to_bits()),
+                (s.id, s.expert, s.nll.to_bits()),
+                "threads={threads}: closed-wave wrapper diverged"
+            );
+        }
+    }
+}
+
+/// Staggered arrivals: requests injected mid-flight are admitted into
+/// later waves, partial expert batches leave on `max_wait` expiry, and
+/// the answer set still matches the closed-wave reference.
+#[test]
+fn staggered_arrivals_dispatch_on_linger_and_match_reference() {
+    let Some((engine, mixture, requests)) = setup() else { return };
+    let m = 32usize;
+    let reference = serve_threaded(&engine, &mixture, &requests, m, 1).unwrap();
+    let want = triples(&reference);
+    let backend = MixtureBackend {
+        engine: &engine,
+        mixture: &mixture,
+        prefix_len: m,
+    };
+    // tiny linger, big batch: with arrivals trickling in, partial batches
+    // must leave on expiry
+    let cfg = ServerConfig::continuous(1000, 300, 2);
+    let (out, stats, ()) = run_server(&backend, &cfg, |c| {
+        for chunk in requests.chunks(4) {
+            c.submit_wave(chunk.to_vec());
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    })
+    .unwrap();
+    assert_eq!(triples(&out), want, "staggered arrivals diverged");
+    assert!(
+        stats.linger_batches >= 1,
+        "a 300 µs linger under 2 ms arrival gaps must dispatch partial batches: {stats:?}"
+    );
+    assert!(stats.admission_waves > 1, "mid-flight arrivals must form later admission waves");
+}

@@ -1,9 +1,9 @@
 #!/usr/bin/env bash
-# Tiny-budget perf smoke: runs the routing + train_step benches with
-# millisecond budgets and copies their JSON to BENCH_routing.json /
-# BENCH_train_step.json at the repo root, so every PR leaves a perf
-# trajectory point. Skips gracefully (with a marker file) when the AOT
-# artifacts or the native XLA backend are unavailable.
+# Tiny-budget perf smoke: runs the routing + serve + train_step benches
+# with millisecond budgets and copies their JSON to BENCH_routing.json /
+# BENCH_serve.json / BENCH_train_step.json at the repo root, so every PR
+# leaves a perf trajectory point. Skips gracefully (with a marker file)
+# when the AOT artifacts or the native XLA backend are unavailable.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -12,6 +12,8 @@ if [ ! -f artifacts/manifest.json ] && [ ! -f rust/artifacts/manifest.json ] \
   echo "bench_smoke: no artifacts/manifest.json — run 'make artifacts' first" >&2
   printf '{\n  "skipped": "no artifacts/manifest.json; run make artifacts"\n}\n' \
     > BENCH_routing.json
+  printf '{\n  "skipped": "no artifacts/manifest.json; run make artifacts"\n}\n' \
+    > BENCH_serve.json
   exit 0
 fi
 
@@ -21,7 +23,8 @@ export SMALLTALK_BENCH_TARGET_MS="${SMALLTALK_BENCH_TARGET_MS:-300}"
 
 # thread-count sweep for the serving rows: the routing bench times serve
 # at threads=1 and threads=N and records `threads` + per-thread seqs/s
-# into its JSON rows (and thus BENCH_routing.json). N defaults to the
+# into its JSON rows (and thus BENCH_routing.json); the serve bench uses
+# the same pin for its closed-wave vs continuous rows. N defaults to the
 # machine's core count; pin it here for cross-machine comparability.
 export SMALLTALK_BENCH_THREADS="${SMALLTALK_BENCH_THREADS:-$(nproc 2>/dev/null || echo 4)}"
 
@@ -29,13 +32,26 @@ if ! cargo bench --bench routing; then
   echo "bench_smoke: routing bench failed (stub xla backend? see rust/vendor/xla)" >&2
   printf '{\n  "skipped": "bench run failed; likely the stub xla backend (no native xla_extension)"\n}\n' \
     > BENCH_routing.json
+  printf '{\n  "skipped": "bench run failed; likely the stub xla backend (no native xla_extension)"\n}\n' \
+    > BENCH_serve.json
   exit 0
+fi
+# serve bench: steady-state req/s + p50/p95 queue/total latency at several
+# arrival rates, closed-wave vs continuous rows (see benches/serve.rs).
+# Same graceful-skip contract as the routing bench: a failure leaves a
+# marker file and the remaining benches still run.
+if ! cargo bench --bench serve; then
+  echo "bench_smoke: serve bench failed" >&2
+  printf '{\n  "skipped": "serve bench run failed"\n}\n' > BENCH_serve.json
+  # a stale results/ copy from an earlier run must not clobber the marker
+  rm -f results/bench_serve.json
 fi
 cargo bench --bench train_step
 
 # BenchSuite::write_json emits results/bench_<title>.json relative to the
 # bench's working directory (the invocation directory, i.e. repo root)
 cp results/bench_routing.json BENCH_routing.json
+[ -f results/bench_serve.json ] && cp results/bench_serve.json BENCH_serve.json
 [ -f results/bench_train_step.json ] && cp results/bench_train_step.json BENCH_train_step.json
 
-echo "bench_smoke: wrote BENCH_routing.json"
+echo "bench_smoke: wrote BENCH_routing.json + BENCH_serve.json"
