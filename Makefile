@@ -4,11 +4,14 @@
 #   make test              cargo test -q  (XLA-backed tests self-skip without artifacts)
 #   make test-concurrency  the engine thread-safety suite, at 1 and 8 test threads
 #   make test-serve        the continuous-batching scheduler suite, serial + interleaved
-#   make artifacts         AOT-lower every model variant to artifacts/ (needs jax)
+#   make test-fused        the fused all-routers scoring + stacked-cache suite,
+#                          serial + interleaved
+#   make artifacts         AOT-lower every model variant to artifacts/ (needs jax;
+#                          exports the fused prefix_nll_all entries at width 4)
 #   make bench-smoke       tiny-budget routing+serve+train_step benches
 #                          -> BENCH_routing.json + BENCH_serve.json
 
-.PHONY: build test test-concurrency test-serve artifacts bench-smoke clean
+.PHONY: build test test-concurrency test-serve test-fused artifacts bench-smoke clean
 
 build:
 	cargo build --release
@@ -30,8 +33,18 @@ test-serve:
 	RUST_TEST_THREADS=1 cargo test -q --test server
 	RUST_TEST_THREADS=8 cargo test -q --test server
 
+# Fused all-routers scoring + stacked-parameter cache suite (stacked-cache
+# accounting on the stub backend runs everywhere; fused-vs-fanout
+# bit-equality needs fused artifacts), under both serial and heavily
+# interleaved test scheduling.
+test-fused:
+	RUST_TEST_THREADS=1 cargo test -q --test fused_scoring
+	RUST_TEST_THREADS=8 cargo test -q --test fused_scoring
+
+# --fused 4 matches the routing-bench/e2e expert count E=4; omit it to
+# reproduce a pre-fused manifest (the runtime then fans out per router).
 artifacts:
-	cd python && python -m compile.aot --out-dir ../artifacts
+	cd python && python -m compile.aot --out-dir ../artifacts --fused 4
 
 bench-smoke:
 	scripts/bench_smoke.sh

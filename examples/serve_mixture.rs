@@ -178,13 +178,14 @@ fn main() -> anyhow::Result<()> {
     );
     println!(
         "  scheduler: {} admission waves, {} batches ({} full, {} linger, {} drain), \
-         {} slots refilled, mean queue depth {:.2}",
+         {} slots refilled, {} route-memo hits, mean queue depth {:.2}",
         stats.admission_waves,
         stats.batches_dispatched,
         stats.full_batches,
         stats.linger_batches,
         stats.drain_batches,
         stats.slots_refilled,
+        stats.route_cache_hits,
         stats.mean_queue_depth(),
     );
     Ok(())

@@ -20,6 +20,7 @@ compile inputs, so `make artifacts` is a cheap no-op when nothing moved.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import hashlib
 import json
 import os
@@ -59,6 +60,12 @@ def entry_specs(v: V.Variant):
     }
     for m in v.prefix_lens:
         specs[f"prefix_nll_{m}"] = (flat, _spec((v.prefix_batch, m), jnp.int32))
+        if v.fused_experts > 0:
+            # fused all-routers scoring: stacked [E, P] params, one launch
+            specs[f"prefix_nll_all_{m}"] = (
+                _spec((v.fused_experts, n)),
+                _spec((v.prefix_batch, m), jnp.int32),
+            )
     for b in v.dense_batches:
         specs[f"train_step_b{b}"] = (
             flat, flat, flat, _spec(()), _spec((b, S + 1), jnp.int32))
@@ -75,6 +82,8 @@ def entry_fn(v: V.Variant, name: str):
         return lambda flat, m, mv, step, tokens: tuple(fn(flat, m, mv, step, tokens))
     if name == "eval_nll":
         return M.make_eval_nll(cfg)
+    if name.startswith("prefix_nll_all"):
+        return M.make_prefix_nll_all(cfg)
     if name.startswith("prefix_nll"):
         return M.make_prefix_nll(cfg)
     if name == "last_logits":
@@ -119,6 +128,11 @@ def main(argv=None) -> None:
     ap.add_argument("--variants", default="",
                     help="comma-separated subset (default: all `default` variants)")
     ap.add_argument("--all", action="store_true", help="include non-default variants")
+    ap.add_argument("--fused", type=int, default=0, metavar="E",
+                    help="also emit fused all-routers scoring entries "
+                         "`prefix_nll_all_{m}` over a stacked [E, P] parameter "
+                         "tensor (0 = omit; the Rust runtime then falls back "
+                         "to the per-router fan-out)")
     ap.add_argument("--force", action="store_true")
     # Back-compat with the scaffold Makefile (`--out path/model.hlo.txt`).
     ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
@@ -133,6 +147,10 @@ def main(argv=None) -> None:
         selected = [V.by_name(n) for n in args.variants.split(",")]
     else:
         selected = [v for v in V.VARIANTS if v.default or args.all]
+    if args.fused > 0:
+        selected = [
+            dataclasses.replace(v, fused_experts=args.fused) for v in selected
+        ]
 
     fp = _input_fingerprint()
     manifest = {"fingerprint": fp, "variants": []}

@@ -287,6 +287,27 @@ def make_prefix_nll(cfg: ModelCfg, *, use_kernel: bool = True):
     return prefix_nll
 
 
+def make_prefix_nll_all(cfg: ModelCfg, *, use_kernel: bool = True):
+    """Fused all-routers scoring: one launch scores a token batch under a
+    whole stacked router ensemble instead of one launch per router.
+
+    ``stacked`` is ``f32[E, P]`` — every router's flat parameter vector —
+    and the result is the full ``f32[B, E]`` NLL slab (row-major: request
+    ``i``'s score under router ``j`` at ``[i, j]``).  ``vmap`` over the
+    parameter axis reuses the exact per-router computation of
+    :func:`make_prefix_nll`, so each column is bit-identical to the
+    corresponding single-router entry point.
+    """
+
+    def prefix_nll_all(stacked, tokens):
+        nll = jax.vmap(
+            lambda flat: sequence_nll(cfg, flat, tokens, use_kernel=use_kernel)
+        )(stacked)  # [E, B]
+        return (nll.T,)  # [B, E]
+
+    return prefix_nll_all
+
+
 def make_last_logits(cfg: ModelCfg, *, use_kernel: bool = True):
     """Greedy-decode helper: logits of the final position."""
 

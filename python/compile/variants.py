@@ -40,12 +40,21 @@ class Variant:
     # batch E x the expert batch so both train the SAME number of steps on
     # the same total tokens). Each emits `train_step_b{B}`.
     dense_batches: tuple = ()
+    # Fused all-routers scoring width: when > 0, each prefix length also
+    # emits `prefix_nll_all_{m}` taking a stacked `[E, P]` parameter tensor
+    # and returning the `[prefix_batch, E]` NLL slab in one execution (one
+    # launch per token batch instead of E). 0 = not emitted; the Rust
+    # runtime falls back to the per-router fan-out. Set at compile time by
+    # `aot.py --fused E` so old manifests stay valid.
+    fused_experts: int = 0
     emit_last_logits: bool = False
     default: bool = True  # emitted by plain `make artifacts`
 
     def entry_points(self) -> List[str]:
         eps = ["init", "train_step", "eval_nll"]
         eps += [f"prefix_nll_{m}" for m in self.prefix_lens]
+        if self.fused_experts > 0:
+            eps += [f"prefix_nll_all_{m}" for m in self.prefix_lens]
         eps += [f"train_step_b{b}" for b in self.dense_batches]
         if self.emit_last_logits:
             eps.append("last_logits")
@@ -124,6 +133,7 @@ def manifest_entry(v: Variant, param_count: int) -> Dict:
         "prefix_len": v.prefix_len,
         "prefix_lens": list(v.prefix_lens),
         "dense_batches": list(v.dense_batches),
+        "fused_experts": v.fused_experts,
         "opt": dataclasses.asdict(v.opt),
         "entry_points": v.entry_points(),
     }

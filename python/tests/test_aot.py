@@ -102,3 +102,82 @@ def test_init_is_deterministic_in_seed():
     f3 = M.init_params(v.model, jnp.array([0, 8], jnp.uint32))
     np.testing.assert_array_equal(f1, f2)
     assert not np.array_equal(np.asarray(f1), np.asarray(f3))
+
+
+# --------------------------------------------------------------------------
+# Fused all-routers scoring export (`--fused E` -> `prefix_nll_all_{m}`)
+# --------------------------------------------------------------------------
+
+
+def _fused(v, e=4):
+    import dataclasses
+    return dataclasses.replace(v, fused_experts=e)
+
+
+def test_fused_manifest_lists_all_entry_for_every_prefix_len():
+    """With --fused, every compiled prefix length gets a fused entry whose
+    spec takes the stacked [E, P] parameter tensor."""
+    for base in V.VARIANTS:
+        v = _fused(base)
+        entry = V.manifest_entry(v, M.param_count(v.model))
+        assert entry["fused_experts"] == 4
+        specs = aot.entry_specs(v)
+        n = M.param_count(v.model)
+        for m in v.prefix_lens:
+            name = f"prefix_nll_all_{m}"
+            assert name in entry["entry_points"]
+            stacked, tokens = specs[name]
+            assert stacked.shape == (4, n)
+            assert tokens.shape == (v.prefix_batch, m)
+            assert tokens.dtype == jnp.int32
+
+
+def test_unfused_manifest_has_no_all_entries():
+    """Omitting --fused keeps the manifest exactly fallback-shaped: the
+    fused field reads 0 and no prefix_nll_all entry is listed (the Rust
+    runtime treats that as 'fan out per router')."""
+    for v in V.VARIANTS:
+        entry = V.manifest_entry(v, M.param_count(v.model))
+        assert entry["fused_experts"] == 0
+        assert not any(
+            e.startswith("prefix_nll_all") for e in entry["entry_points"]
+        )
+        # the fused specs are not even generated
+        specs = aot.entry_specs(v)
+        assert not any(k.startswith("prefix_nll_all") for k in specs)
+
+
+def test_fused_cli_flag_applies_to_selected_variants(tmp_path, monkeypatch):
+    """`--fused E` rewrites the selected variants' manifest entries without
+    touching the registry defaults (old manifests stay valid)."""
+    assert all(v.fused_experts == 0 for v in V.VARIANTS)
+    import dataclasses
+    v = dataclasses.replace(V.by_name("router_micro"), fused_experts=3)
+    assert f"prefix_nll_all_{v.prefix_lens[0]}" in v.entry_points()
+    # the registry object itself is untouched (frozen dataclass, replaced)
+    assert V.by_name("router_micro").fused_experts == 0
+
+
+def test_fused_entry_lowers_and_matches_fanout():
+    """The fused entry lowers to parseable HLO and its [B, E] slab equals
+    the per-router fan-out column-for-column (bit-identical)."""
+    v = _fused(V.by_name("router_micro"), e=3)
+    m = min(v.prefix_lens)
+    name = f"prefix_nll_all_{m}"
+    specs = aot.entry_specs(v)
+    fn = aot.entry_fn(v, name)
+    text = aot.to_hlo_text(jax.jit(fn).lower(*specs[name]))
+    assert text.startswith("HloModule")
+
+    n = M.param_count(v.model)
+    key = jax.random.PRNGKey(5)
+    stacked = jax.random.normal(key, (3, n), jnp.float32) * 0.02
+    tokens = jax.random.randint(
+        jax.random.PRNGKey(6), (v.prefix_batch, m), 0, v.model.vocab, jnp.int32
+    )
+    fused = np.asarray(jax.jit(fn)(stacked, tokens)[0])
+    assert fused.shape == (v.prefix_batch, 3)
+    single = aot.entry_fn(v, f"prefix_nll_{m}")
+    for e in range(3):
+        col = np.asarray(jax.jit(single)(stacked[e], tokens)[0])
+        np.testing.assert_array_equal(fused[:, e], col)

@@ -146,6 +146,73 @@ fn main() {
         "cached score_matrix diverged from the seed path"
     );
 
+    // ---- fused all-routers path vs per-router fan-out: one kernel launch
+    // per token batch instead of E (needs a manifest exported with
+    // `aot.py --fused`; pre-fused manifests skip these rows) ----
+    if mixture.router_meta.fused_prefix_entry(m).is_some() {
+        use smalltalk::coordinator::{score_matrix_rows_fanout, score_matrix_rows_fused};
+        let rows: Vec<&[u32]> = seqs.iter().map(|s| s.prefix(m)).collect();
+        let rmeta = &mixture.router_meta;
+
+        let fan_r = suite.bench(
+            &format!("score_matrix 32 seqs x {n_routers} routers (fan-out)"),
+            || {
+                std::hint::black_box(
+                    score_matrix_rows_fanout(&engine, &mixture.routers, rmeta, &rows, m, bench_threads)
+                        .unwrap(),
+                );
+            },
+        );
+        println!("    -> {:.0} seqs/s", fan_r.throughput(32.0));
+        let s0 = engine.stats();
+        let fan_scores =
+            score_matrix_rows_fanout(&engine, &mixture.routers, rmeta, &rows, m, bench_threads)
+                .unwrap();
+        let d = engine.stats().since(&s0);
+        suite.annotate("threads", bench_threads as f64);
+        suite.annotate("executions_per_request", d.executions as f64 / 32.0);
+        suite.annotate("h2d_bytes_per_iter", d.h2d_bytes as f64);
+
+        let fused_r = suite.bench(
+            &format!("score_matrix 32 seqs x {n_routers} routers (fused all-routers)"),
+            || {
+                std::hint::black_box(
+                    score_matrix_rows_fused(&engine, &mixture.routers, rmeta, &rows, m, bench_threads)
+                        .unwrap(),
+                );
+            },
+        );
+        println!("    -> {:.0} seqs/s", fused_r.throughput(32.0));
+        let s0 = engine.stats();
+        let fused_scores =
+            score_matrix_rows_fused(&engine, &mixture.routers, rmeta, &rows, m, bench_threads)
+                .unwrap();
+        let d = engine.stats().since(&s0);
+        suite.annotate("threads", bench_threads as f64);
+        suite.annotate("executions_per_request", d.executions as f64 / 32.0);
+        suite.annotate("fused_executions_per_iter", d.fused_executions as f64);
+        suite.annotate("router_execs_avoided_per_iter", d.router_execs_avoided as f64);
+        suite.annotate("h2d_bytes_per_iter", d.h2d_bytes as f64);
+        println!(
+            "    -> fused vs fan-out: {:.2}x seqs/s, {} launches per matrix (vs {}), \
+             {} per-router dispatch/readback round-trips avoided",
+            fan_r.mean_ns / fused_r.mean_ns,
+            d.fused_executions,
+            d.fused_executions * n_routers,
+            d.router_execs_avoided,
+        );
+        // score-equality guard: fused must be bit-identical to the fan-out
+        assert_eq!(
+            fan_scores, fused_scores,
+            "fused score matrix diverged from the per-router fan-out"
+        );
+    } else {
+        eprintln!(
+            "[routing bench] manifest has no prefix_nll_all_{m} entry \
+             (re-run `make artifacts` with the fused exporter); skipping fused rows"
+        );
+    }
+
     let nll = score_matrix_threaded(&engine, &mixture.routers, &mixture.router_meta, &seqs, m, bench_threads)
                 .unwrap();
     suite.bench("argmin routing decision x 32", || {

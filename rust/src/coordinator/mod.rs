@@ -34,6 +34,7 @@ pub use server::{
     run_server, MixtureBackend, SchedStats, ServeBackend, ServerClient, ServerConfig,
 };
 pub use scoring::{
-    score_matrix, score_matrix_rows, score_matrix_rows_threaded, score_matrix_threaded,
+    score_matrix, score_matrix_rows, score_matrix_rows_fanout, score_matrix_rows_fused,
+    score_matrix_rows_threaded, score_matrix_threaded,
 };
 pub use sharding::{shard_corpus, Shards};

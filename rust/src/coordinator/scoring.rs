@@ -9,26 +9,45 @@
 //! score matrix moves B token uploads instead of the seed path's B×E token
 //! + B×E parameter uploads.
 //!
+//! Launch discipline: when the manifest carries a fused
+//! `prefix_nll_all_{m}` entry ([`VariantMeta::fused_prefix_entry`], from
+//! `aot.py --fused`), [`score_matrix_rows_threaded`] dispatches to
+//! [`score_matrix_rows_fused`]: the routers' parameters are stacked into
+//! one device-resident `[E, P]` tensor (re-uploaded only when some
+//! router's version bumps) and each token batch is scored under the whole
+//! set in **one** execution returning the `[prefix_batch, E]` slab — so a
+//! B-sequence matrix costs `ceil(B / prefix_batch)` launches instead of
+//! `E × ceil(B / prefix_batch)`, and the per-batch dispatch/readback
+//! overhead no longer grows with E. Router sets wider than the compiled
+//! width score in fused chunks; the last chunk pads by repeating its
+//! final router and the dead columns are discarded like token-padding
+//! rows. [`score_matrix_rows_fanout`] remains the per-router reference
+//! path (and the automatic fallback for pre-fused manifests) and is
+//! bit-identical to the fused path.
+//!
 //! Concurrency: the E routers score independently (each touches only its
-//! own `TrainState` and the `Sync` engine), so
-//! [`score_matrix_rows_threaded`] uploads token batches in bounded
-//! windows and fans one task per router per window across a worker pool —
-//! the pool spawns once per window (not once per batch) and device
-//! residency stays bounded no matter how many rows are scored. Results
-//! are written back by router index, so the parallel path is
-//! bit-identical to the sequential one.
+//! own `TrainState` and the `Sync` engine), so the fan-out path uploads
+//! token batches in bounded windows and fans one task per router per
+//! window across a worker pool — the pool spawns once per window (not
+//! once per batch) and device residency stays bounded no matter how many
+//! rows are scored; the fused path fans one task per (router-chunk ×
+//! batch) instead. Either way results are written back to disjoint
+//! regions by index, so parallel output is bit-identical to sequential.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::data::Sequence;
-use crate::runtime::engine::tokens_literal;
+use crate::runtime::engine::{tokens_literal, to_f32_vec, Arg};
 use crate::runtime::parallel::{default_threads, run_fallible};
-use crate::runtime::{DeviceBuffer, Engine, TrainState, VariantMeta};
+use crate::runtime::{stacked_params_buffer, DeviceBuffer, Engine, TrainState, VariantMeta};
 
 /// `(start, real_rows)` spans that tile `n` items into `bs`-sized batches;
 /// the final span may be short (the caller pads it to the compiled shape).
+/// A degenerate `bs == 0` (a corrupt manifest's batch shape) is treated
+/// as 1 — the loop below would otherwise produce zero-width spans forever.
 pub(crate) fn batch_spans(n: usize, bs: usize) -> Vec<(usize, usize)> {
-    let mut spans = Vec::with_capacity(n.div_ceil(bs.max(1)));
+    let bs = bs.max(1);
+    let mut spans = Vec::with_capacity(n.div_ceil(bs));
     let mut start = 0;
     while start < n {
         let real = (n - start).min(bs);
@@ -108,9 +127,17 @@ pub fn score_matrix_rows(
     score_matrix_rows_threaded(engine, routers, meta, rows, m, default_threads())
 }
 
-/// [`score_matrix_rows`] with an explicit worker count for the per-batch
-/// router fan-out. `threads <= 1` is the sequential reference path;
-/// results are bit-identical at any worker count.
+/// [`score_matrix_rows`] with an explicit worker count. `threads <= 1`
+/// is the sequential reference path; results are bit-identical at any
+/// worker count.
+///
+/// Dispatch: when the manifest carries a fused `prefix_nll_all_{m}`
+/// entry, scoring runs through [`score_matrix_rows_fused`] — one kernel
+/// launch per token batch instead of one per (router, batch); otherwise
+/// (pre-fused manifests) it falls back to the bit-identical per-router
+/// [`score_matrix_rows_fanout`]. Every caller — serve waves, the
+/// continuous-batching scheduler's admission waves, EM E-steps, routed
+/// eval — picks the fused path up automatically through here.
 pub fn score_matrix_rows_threaded(
     engine: &Engine,
     routers: &[TrainState],
@@ -119,37 +146,74 @@ pub fn score_matrix_rows_threaded(
     m: usize,
     threads: usize,
 ) -> Result<Vec<Vec<f32>>> {
-    // normalize row lengths: owned padded/truncated copies only where a
-    // row is not already exactly m tokens
-    let normalized: Vec<Option<Vec<u32>>> = rows
-        .iter()
+    if meta.fused_prefix_entry(m).is_some() && !routers.is_empty() {
+        score_matrix_rows_fused(engine, routers, meta, rows, m, threads)
+    } else {
+        score_matrix_rows_fanout(engine, routers, meta, rows, m, threads)
+    }
+}
+
+/// Normalize row lengths: owned padded/truncated copies only where a row
+/// is not already exactly `m` tokens. The returned backing storage must
+/// outlive the borrowed row slice built from it.
+fn normalize_rows(rows: &[&[u32]], m: usize) -> Vec<Option<Vec<u32>>> {
+    rows.iter()
         .map(|r| (r.len() != m).then(|| pad_prefix_row(r, m)))
-        .collect();
+        .collect()
+}
+
+/// Token batches of a span window, each uploaded to the device once.
+fn upload_window(
+    engine: &Engine,
+    rows: &[&[u32]],
+    window: &[(usize, usize)],
+    bs: usize,
+    m: usize,
+) -> Result<Vec<DeviceBuffer>> {
+    window
+        .iter()
+        .map(|&(start, real)| {
+            let batch = pad_batch(rows[start..start + real].to_vec(), bs);
+            engine.upload(&tokens_literal(&batch, m)?)
+        })
+        .collect()
+}
+
+/// Spans are processed in fixed-size windows: a window's token batches
+/// upload once up front (each shared device-resident by every execution
+/// that scores it) and are dropped before the next window starts, so peak
+/// device residency is bounded at `SPAN_WINDOW * prefix_batch` rows no
+/// matter how large the scored corpus is, while the worker pool spawns
+/// once per window — not once per span.
+const SPAN_WINDOW: usize = 16;
+
+/// The per-router reference path: each router scores every token batch in
+/// its own execution (`E × ceil(rows / prefix_batch)` launches). This is
+/// the bit-exact fallback for manifests without fused entries and the
+/// reference the fused path is verified against.
+pub fn score_matrix_rows_fanout(
+    engine: &Engine,
+    routers: &[TrainState],
+    meta: &VariantMeta,
+    rows: &[&[u32]],
+    m: usize,
+    threads: usize,
+) -> Result<Vec<Vec<f32>>> {
+    let normalized = normalize_rows(rows, m);
     let rows: Vec<&[u32]> = rows
         .iter()
         .zip(&normalized)
         .map(|(r, p)| p.as_deref().unwrap_or(r))
         .collect();
 
-    // Spans are processed in fixed-size windows: a window's token batches
-    // upload once up front (each shared device-resident by all E routers)
-    // and are dropped before the next window starts, so peak device
-    // residency is bounded at SPAN_WINDOW * prefix_batch rows no matter
-    // how large the scored corpus is, while the worker pool spawns once
-    // per window — not once per span. Each router scores every span of
-    // the window against its own state, so results are bit-identical at
-    // any worker count.
-    const SPAN_WINDOW: usize = 16;
-    let bs = meta.prefix_batch;
+    // Each router scores every span of the window against its own state,
+    // so results are bit-identical at any worker count. The bs clamp
+    // matches batch_spans' degenerate-manifest guard, so spans, padding,
+    // and batch shapes stay consistent even at prefix_batch == 0.
+    let bs = meta.prefix_batch.max(1);
     let mut out = vec![vec![0.0f32; routers.len()]; rows.len()];
     for window in batch_spans(rows.len(), bs).chunks(SPAN_WINDOW) {
-        let uploads: Vec<DeviceBuffer> = window
-            .iter()
-            .map(|&(start, real)| {
-                let batch = pad_batch(rows[start..start + real].to_vec(), bs);
-                engine.upload(&tokens_literal(&batch, m)?)
-            })
-            .collect::<Result<_>>()?;
+        let uploads = upload_window(engine, &rows, window, bs, m)?;
         let tasks: Vec<_> = routers
             .iter()
             .map(|router| {
@@ -166,6 +230,110 @@ pub fn score_matrix_rows_threaded(
             for (&(start, real), scores) in window.iter().zip(span_scores) {
                 for (i, &s) in scores.iter().take(real).enumerate() {
                     out[start + i][r] = s;
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// The fused all-routers path: the router set is stacked into one
+/// device-resident `[E, P]` tensor ([`stacked_params_buffer`] — uploaded
+/// once per router-set version) and each token batch is scored under the
+/// whole stack by a single `prefix_nll_all_{m}` execution returning the
+/// `[prefix_batch, E]` NLL slab. Launches per score matrix:
+/// `ceil(routers / fused_width) × ceil(rows / prefix_batch)` — with the
+/// router count at or under the compiled width, exactly one per token
+/// batch.
+///
+/// Router sets wider than the compiled `fused_experts` score in chunks;
+/// a short final chunk pads by repeating its last router (the stacked
+/// tensor must fill the compiled `[E, P]` shape) and the dead columns
+/// are discarded exactly like token-padding rows. Each (chunk, batch)
+/// task writes a disjoint block of the matrix, so the parallel output is
+/// bit-identical to sequential — and to [`score_matrix_rows_fanout`],
+/// column for column.
+pub fn score_matrix_rows_fused(
+    engine: &Engine,
+    routers: &[TrainState],
+    meta: &VariantMeta,
+    rows: &[&[u32]],
+    m: usize,
+    threads: usize,
+) -> Result<Vec<Vec<f32>>> {
+    let entry = meta.fused_prefix_entry(m).with_context(|| {
+        format!(
+            "no fused prefix_nll_all_{m} entry compiled for {} — \
+             re-run `make artifacts` (aot.py --fused) or use the fan-out path",
+            meta.name
+        )
+    })?;
+    let width = meta.fused_experts;
+    let mut out = vec![vec![0.0f32; routers.len()]; rows.len()];
+    if routers.is_empty() || rows.is_empty() {
+        return Ok(out);
+    }
+
+    let normalized = normalize_rows(rows, m);
+    let rows: Vec<&[u32]> = rows
+        .iter()
+        .zip(&normalized)
+        .map(|(r, p)| p.as_deref().unwrap_or(r))
+        .collect();
+
+    // (column offset, real width, stacked [width, P] params) per chunk;
+    // the stack is cached per ordered (state_id, version) list, so this
+    // re-uploads only when some member's parameters changed
+    let chunks: Vec<(usize, usize, DeviceBuffer)> = routers
+        .chunks(width)
+        .enumerate()
+        .map(|(c, members)| -> Result<(usize, usize, DeviceBuffer)> {
+            let mut padded: Vec<&TrainState> = members.iter().collect();
+            let last = *padded.last().expect("chunks are non-empty");
+            padded.resize(width, last);
+            let stack = stacked_params_buffer(engine, &padded)?;
+            Ok((c * width, members.len(), stack))
+        })
+        .collect::<Result<_>>()?;
+
+    // clamp as in the fan-out path: spans, padding, and the slab-size
+    // check below must all agree on the effective batch shape
+    let bs = meta.prefix_batch.max(1);
+    let entry = entry.as_str();
+    for window in batch_spans(rows.len(), bs).chunks(SPAN_WINDOW) {
+        let uploads = upload_window(engine, &rows, window, bs, m)?;
+        // one task per (router chunk × token batch): every task is one
+        // fused execution writing a disjoint block of the matrix
+        let mut tasks = Vec::with_capacity(chunks.len() * uploads.len());
+        let mut blocks = Vec::with_capacity(tasks.capacity());
+        for (c, (_, real_e, stack)) in chunks.iter().enumerate() {
+            for (w, tokens) in uploads.iter().enumerate() {
+                tasks.push(move || -> Result<Vec<f32>> {
+                    let slab = engine.run_buffers_fused(
+                        &meta.name,
+                        entry,
+                        &[Arg::Dev(stack), Arg::Dev(tokens)],
+                        *real_e,
+                    )?;
+                    to_f32_vec(slab.first().context("prefix_nll_all empty")?)
+                });
+                blocks.push((c, w));
+            }
+        }
+        for ((c, w), slab) in blocks.into_iter().zip(run_fallible(tasks, threads)?) {
+            let (col0, real_e, _) = &chunks[c];
+            let (col0, real_e) = (*col0, *real_e);
+            let (start, real) = window[w];
+            anyhow::ensure!(
+                slab.len() == bs * width,
+                "fused entry returned {} scores for a [{bs}, {width}] slab",
+                slab.len()
+            );
+            // slab is the row-major [prefix_batch, width] matrix: request
+            // i's score under chunk-member j at [i * width + j]
+            for i in 0..real {
+                for j in 0..real_e {
+                    out[start + i][col0 + j] = slab[i * width + j];
                 }
             }
         }
@@ -251,6 +419,16 @@ mod tests {
         assert_eq!(batch_spans(3, 32), vec![(0, 3)]);
         // empty input -> no spans
         assert!(batch_spans(0, 4).is_empty());
+    }
+
+    #[test]
+    fn batch_spans_zero_batch_size_terminates() {
+        // bs = 0 used to yield zero-width spans forever (start never
+        // advanced); it now degrades to one-row spans and still covers
+        // every index exactly once
+        assert_eq!(batch_spans(3, 0), vec![(0, 1), (1, 1), (2, 1)]);
+        assert!(batch_spans(0, 0).is_empty());
+        assert_eq!(batch_spans(1, 0), vec![(0, 1)]);
     }
 
     #[test]

@@ -57,8 +57,16 @@
 //!   the error, never nested under anything else.
 //!
 //! Pending per-expert batches and their linger deadlines live entirely on
-//! the scheduler thread and need no lock at all.
+//! the scheduler thread and need no lock at all — and so does the
+//! prefix-routing memo: the scheduler memoizes normalized-prefix → expert
+//! per admission (keyed by the padded prefix row the router actually
+//! scores, so repeat prefixes skip the batched router score entirely —
+//! [`SchedStats::route_cache_hits`]), and drops the memo whenever the
+//! backend's router fingerprint moves (any router version bump). Routing
+//! is a pure function of the normalized prefix and the router parameters,
+//! so replaying a memoized expert is bit-identical to re-scoring.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -66,6 +74,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use super::inference::{amortized_micros, eval_nll_all, Mixture, Request, Response};
+use super::scoring::pad_prefix_row;
 use crate::runtime::parallel::{resolve_threads, Pop, WorkQueue};
 use crate::runtime::Engine;
 
@@ -80,6 +89,24 @@ pub trait ServeBackend: Sync {
     /// Full-sequence NLL of `rows` under expert `expert` (one dispatched
     /// batch).
     fn exec_nll(&self, expert: usize, rows: &[&[u32]]) -> Result<Vec<f32>>;
+
+    /// Memoization key of a request's routing decision: the **normalized**
+    /// prefix row [`route`](ServeBackend::route) actually scores, or
+    /// `None` (the default) to disable memoization for this backend. Two
+    /// token rows with the same key MUST route identically — routing is a
+    /// pure function of the normalized prefix — so the scheduler may
+    /// replay a memoized expert instead of scoring the prefix again.
+    fn route_memo_key(&self, _row: &[u32]) -> Option<Vec<u32>> {
+        None
+    }
+
+    /// Fingerprint of the parameters behind
+    /// [`route`](ServeBackend::route): the scheduler drops every memoized
+    /// route whenever this value changes (e.g. any router's version
+    /// bumps). Only consulted when `route_memo_key` returns keys.
+    fn router_fingerprint(&self) -> u64 {
+        0
+    }
 }
 
 /// The real backend: router scoring + expert execution over a trained
@@ -108,6 +135,24 @@ impl ServeBackend for MixtureBackend<'_> {
             &self.mixture.expert_meta,
             rows,
         )
+    }
+
+    /// The padded `prefix_len`-token prefix row — exactly what
+    /// [`Mixture::route_rows_threaded`] hands the scorer, so equal keys
+    /// imply equal score-matrix rows and therefore equal routes.
+    fn route_memo_key(&self, row: &[u32]) -> Option<Vec<u32>> {
+        Some(pad_prefix_row(row, self.prefix_len))
+    }
+
+    /// Hash of the routers' ordered `(state_id, version)` pairs: any
+    /// router training step / checkpoint load / clone swap changes it.
+    fn router_fingerprint(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        for r in &self.mixture.routers {
+            (r.state_id(), r.version()).hash(&mut h);
+        }
+        h.finish()
     }
 }
 
@@ -165,8 +210,13 @@ pub struct SchedStats {
     pub submitted: usize,
     /// Requests routed (equals `submitted` on a clean run).
     pub admitted: usize,
-    /// Batched router-scoring calls (one per admission wave).
+    /// Admission waves processed — at most one batched router-scoring
+    /// call each (a fully-memoized wave skips the call entirely).
     pub admission_waves: usize,
+    /// Requests whose route was replayed from the prefix-routing memo
+    /// instead of scored: each hit removes the request's rows from the
+    /// wave's batched router score.
+    pub route_cache_hits: usize,
     /// Expert batches pushed to the dispatch queue, by trigger.
     pub batches_dispatched: usize,
     pub full_batches: usize,
@@ -220,6 +270,20 @@ struct Batch {
     expert: usize,
     items: Vec<Admitted>,
 }
+
+/// Scheduler-thread-local prefix-routing memo: normalized prefix row →
+/// routed expert, valid for one router fingerprint. Bounded by
+/// [`ROUTE_MEMO_CAP`] entries — at the cap the whole memo is dropped
+/// (steady-state serving re-warms it within a wave or two, and a plain
+/// clear keeps the replay path allocation- and bookkeeping-free).
+struct RouteMemo {
+    fingerprint: u64,
+    map: HashMap<Vec<u32>, usize>,
+}
+
+/// Memo capacity: at the routing-bench shape (m = 32, 4-byte tokens) this
+/// bounds the memo at ~8 MiB of key data.
+const ROUTE_MEMO_CAP: usize = 1 << 16;
 
 /// First-failure slot: the flag is checked lock-free on hot paths.
 #[derive(Default)]
@@ -388,6 +452,11 @@ fn scheduler_loop<B: ServeBackend>(
     let mut pending: Vec<Vec<Admitted>> = (0..ne).map(|_| Vec::new()).collect();
     // linger deadline of the oldest member of each non-empty pending batch
     let mut deadline: Vec<Option<Instant>> = vec![None; ne];
+    // prefix-routing memo: scheduler-local, revalidated per wave
+    let mut memo = RouteMemo {
+        fingerprint: backend.router_fingerprint(),
+        map: HashMap::new(),
+    };
 
     loop {
         if error.is_set() {
@@ -424,6 +493,7 @@ fn scheduler_loop<B: ServeBackend>(
                 threads,
                 batch_size,
                 linger,
+                &mut memo,
                 &mut pending,
                 &mut deadline,
                 dispatch,
@@ -457,7 +527,8 @@ enum DispatchKind {
     Drain,
 }
 
-/// Route one admission wave and file each request into its expert's
+/// Route one admission wave — replaying memoized prefixes and batch-
+/// scoring only the misses — and file each request into its expert's
 /// pending batch, dispatching any batch that reaches `batch_size`.
 #[allow(clippy::too_many_arguments)]
 fn admit<B: ServeBackend>(
@@ -466,30 +537,63 @@ fn admit<B: ServeBackend>(
     threads: usize,
     batch_size: usize,
     linger: Option<Duration>,
+    memo: &mut RouteMemo,
     pending: &mut [Vec<Admitted>],
     deadline: &mut [Option<Instant>],
     dispatch: &WorkQueue<Batch>,
     stats: &Mutex<SchedStats>,
 ) -> Result<()> {
     let ne = pending.len();
-    let rows: Vec<&[u32]> = wave.iter().map(|a| a.req.tokens.as_slice()).collect();
+    // any router version bump invalidates every memoized route
+    let fp = backend.router_fingerprint();
+    if fp != memo.fingerprint {
+        memo.map.clear();
+        memo.fingerprint = fp;
+    }
+    let mut keys: Vec<Option<Vec<u32>>> = wave
+        .iter()
+        .map(|a| backend.route_memo_key(&a.req.tokens))
+        .collect();
+    let mut routes: Vec<Option<usize>> = keys
+        .iter()
+        .map(|k| k.as_ref().and_then(|k| memo.map.get(k).copied()))
+        .collect();
+    let hits = routes.iter().flatten().count();
+    let misses: Vec<usize> = (0..wave.len()).filter(|&i| routes[i].is_none()).collect();
     let t0 = Instant::now();
-    let routes = backend.route(&rows, threads)?;
+    if !misses.is_empty() {
+        let rows: Vec<&[u32]> = misses
+            .iter()
+            .map(|&i| wave[i].req.tokens.as_slice())
+            .collect();
+        let scored = backend.route(&rows, threads)?;
+        if scored.len() != rows.len() {
+            bail!(
+                "backend routed {} of {} admitted requests",
+                scored.len(),
+                rows.len()
+            );
+        }
+        for (&i, &e) in misses.iter().zip(&scored) {
+            routes[i] = Some(e);
+            if let Some(k) = keys[i].take() {
+                if memo.map.len() >= ROUTE_MEMO_CAP {
+                    memo.map.clear();
+                }
+                memo.map.insert(k, e);
+            }
+        }
+    }
     let routed_t = Instant::now();
     let route_us = amortized_micros(routed_t - t0, wave.len());
-    if routes.len() != wave.len() {
-        bail!(
-            "backend routed {} of {} admitted requests",
-            routes.len(),
-            wave.len()
-        );
-    }
     {
         let mut st = stats.lock().expect("stats poisoned");
         st.admission_waves += 1;
         st.admitted += wave.len();
+        st.route_cache_hits += hits;
     }
     for (a, e) in wave.into_iter().zip(routes) {
+        let e = e.expect("every admission route resolved above");
         if e >= ne {
             bail!(
                 "route index {e} out of range for {ne} experts (request id {})",

@@ -459,13 +459,14 @@ fn cmd_serve(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
     );
     println!(
         "  scheduler:  {} admission waves, {} batches dispatched ({} full, {} linger, {} drain), \
-         {} slots refilled, mean queue depth {:.2}",
+         {} slots refilled, {} route-memo hits, mean queue depth {:.2}",
         stats.admission_waves,
         stats.batches_dispatched,
         stats.full_batches,
         stats.linger_batches,
         stats.drain_batches,
         stats.slots_refilled,
+        stats.route_cache_hits,
         stats.mean_queue_depth(),
     );
 

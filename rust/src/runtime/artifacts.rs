@@ -44,6 +44,13 @@ pub struct VariantMeta {
     /// Dense-comparator batch sizes (entry `train_step_b{B}`, paper
     /// Table 2: dense trains the same steps at E x the expert batch).
     pub dense_batches: Vec<usize>,
+    /// Fused all-routers scoring width: when > 0, each compiled prefix
+    /// length also has a `prefix_nll_all_{m}` entry taking a stacked
+    /// `[fused_experts, P]` parameter tensor and returning the full
+    /// `[prefix_batch, fused_experts]` NLL slab in one execution. 0 when
+    /// the manifest predates (or was exported without) `aot.py --fused` —
+    /// the runtime then fans out per router.
+    pub fused_experts: usize,
     pub opt: OptMeta,
     pub entry_points: Vec<String>,
 }
@@ -56,6 +63,18 @@ impl VariantMeta {
     /// Token count of one training batch (S predicted positions per row).
     pub fn tokens_per_step(&self) -> usize {
         self.train_batch * self.seq_len
+    }
+
+    /// The fused all-routers scoring entry for prefix length `m`, when
+    /// this variant was exported with one (`aot.py --fused`). `None` —
+    /// old manifests, unfused exports, or an `m` outside the compiled
+    /// sweep — means the caller must fan out per router.
+    pub fn fused_prefix_entry(&self, m: usize) -> Option<String> {
+        if self.fused_experts == 0 {
+            return None;
+        }
+        let entry = format!("prefix_nll_all_{m}");
+        self.entry_points.contains(&entry).then_some(entry)
     }
 
     fn from_json(j: &Json) -> Result<Self> {
@@ -100,6 +119,11 @@ impl VariantMeta {
                 .and_then(Json::as_arr)
                 .map(|a| a.iter().filter_map(Json::as_usize).collect())
                 .unwrap_or_default(),
+            // absent in pre-fused manifests: fall back to per-router fan-out
+            fused_experts: j
+                .get("fused_experts")
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
             opt: OptMeta {
                 peak_lr: of("peak_lr")?,
                 warmup_steps: of("warmup_steps")? as usize,
@@ -230,6 +254,30 @@ mod tests {
         assert!(v.is_router());
         assert_eq!(v.tokens_per_step(), 16 * 128);
         assert_eq!(v.opt.schedule, "constant");
+        // pre-fused manifest: no fused field -> fan-out fallback
+        assert_eq!(v.fused_experts, 0);
+        assert_eq!(v.fused_prefix_entry(32), None);
+    }
+
+    #[test]
+    fn fused_entry_requires_field_and_entry_point() {
+        let base = r#"{"name":"x","role":"router","vocab":512,"seq_len":128,
+            "d_model":32,"n_layers":2,"n_heads":2,"d_ffw":128,
+            "param_count":100,"train_batch":16,"eval_batch":32,
+            "prefix_batch":32,"prefix_len":32,"prefix_lens":[8,32],
+            "fused_experts":4,
+            "opt":{"peak_lr":0.0001,"warmup_steps":20,"total_steps":2000,
+                   "weight_decay":0.1,"clip_norm":0.1},
+            "entry_points":["init","prefix_nll_8","prefix_nll_32",
+                            "prefix_nll_all_32"]}"#;
+        let v = VariantMeta::from_json(&Json::parse(base).unwrap()).unwrap();
+        assert_eq!(v.fused_experts, 4);
+        // fused entry exists for m=32 ...
+        assert_eq!(v.fused_prefix_entry(32).as_deref(), Some("prefix_nll_all_32"));
+        // ... but m=8 was compiled without one: per-m fallback
+        assert_eq!(v.fused_prefix_entry(8), None);
+        // a fused_experts field without the entry point never dispatches
+        assert_eq!(v.fused_prefix_entry(64), None);
     }
 
     #[test]

@@ -38,14 +38,25 @@
 //!   + insert). Racing [`Engine::state_buffer`] calls for the same state
 //!   serialize — each `(state_id, version)` uploads exactly once — while
 //!   an E-expert wave uploads its E parameter vectors concurrently.
+//! * `stacked_cache` — the fused-scoring stack cache, one slot per
+//!   **ordered member-id list**: [`Engine::stacked_buffer`] keeps one
+//!   `[E, P]` stacked parameter tensor resident per router set, keyed by
+//!   the ordered `(state_id, version)` pairs of its members. The slot
+//!   lock is held across the miss path exactly like a device-cache slot,
+//!   so a router set re-stacks + re-uploads exactly once per version set
+//!   under races — and only when some member's version bumped
+//!   ([`EngineStats::stack_rebuilds`]); different router sets (including
+//!   permutations and padded chunks, which are distinct ordered lists)
+//!   build concurrently.
 //! * `stats` (`Mutex`) — transfer/time accounting. Always the innermost
 //!   lock.
 //!
-//! **Locking order:** map → slot → `stats` within each cache; the compile
-//! and device caches are never held together, and the map locks are never
-//! held across a compile, build, or upload. Counter updates are
-//! commutative, so [`EngineStats`] totals are deterministic across thread
-//! counts (only the `*_secs` wall-clock floats vary).
+//! **Locking order:** map → slot → `stats` within each cache; no two of
+//! the compile, device, and stacked caches are ever held together, and
+//! the map locks are never held across a compile, build, or upload.
+//! Counter updates are commutative, so [`EngineStats`] totals are
+//! deterministic across thread counts (only the `*_secs` wall-clock
+//! floats vary).
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -81,8 +92,19 @@ pub struct EngineStats {
     /// Uploads that went through the `(state_id, version)` device cache
     /// (i.e. parameter uploads). One per version, not one per call.
     pub param_uploads: usize,
-    /// Cache entries replaced because the state's version moved on.
+    /// Cache entries replaced because the state's version moved on (device
+    /// and stacked caches alike).
     pub cache_evictions: usize,
+    /// Executions that went through a fused all-routers entry — one kernel
+    /// launch scoring a token batch under the whole stacked router set.
+    pub fused_executions: usize,
+    /// Per-router executions the fan-out path would have performed
+    /// instead: each fused execution over `e` real routers replaces `e`
+    /// launches with one, avoiding `e - 1` dispatch/readback round-trips.
+    pub router_execs_avoided: usize,
+    /// Times a stacked `[E, P]` parameter tensor was (re)built and
+    /// uploaded — once per distinct router-set version, not per call.
+    pub stack_rebuilds: usize,
 }
 
 impl EngineStats {
@@ -105,6 +127,11 @@ impl EngineStats {
                 .saturating_sub(earlier.h2d_bytes_avoided),
             param_uploads: self.param_uploads.saturating_sub(earlier.param_uploads),
             cache_evictions: self.cache_evictions.saturating_sub(earlier.cache_evictions),
+            fused_executions: self.fused_executions.saturating_sub(earlier.fused_executions),
+            router_execs_avoided: self
+                .router_execs_avoided
+                .saturating_sub(earlier.router_execs_avoided),
+            stack_rebuilds: self.stack_rebuilds.saturating_sub(earlier.stack_rebuilds),
         }
     }
 }
@@ -141,20 +168,26 @@ pub enum Arg<'a> {
     Dev(&'a DeviceBuffer),
 }
 
-/// `(owner_id → (version, payload))` cache with replace-on-version-bump
+/// `(owner → (version, payload))` cache with replace-on-version-bump
 /// eviction: at most one live entry per owner, and a lookup with a newer
 /// version replaces whatever was resident.
+///
+/// Generic over the owner key `K` and version `Ver` so one implementation
+/// backs both the per-state device cache (`u64` id, `u64` version) and
+/// the fused-scoring stacked cache (ordered `Vec<u64>` member ids,
+/// `Vec<u64>` member versions — any single member bumping makes the
+/// version vector unequal, which is exactly the eviction rule).
 ///
 /// Two-level locking: a global map of per-owner slots (the map lock is
 /// held only for slot lookup, never across payload construction) plus a
 /// per-owner slot lock held across the miss path. Racing lookups for the
 /// same owner serialize — so each `(owner, version)` builds exactly once —
 /// while lookups and builds for *different* owners proceed in parallel.
-struct VersionedCache<V> {
-    map: Mutex<HashMap<u64, Arc<Mutex<Option<(u64, V)>>>>>,
+struct VersionedCache<K, Ver, V> {
+    map: Mutex<HashMap<K, Arc<Mutex<Option<(Ver, V)>>>>>,
 }
 
-impl<V: Clone> VersionedCache<V> {
+impl<K: Eq + std::hash::Hash, Ver: PartialEq, V: Clone> VersionedCache<K, Ver, V> {
     fn new() -> Self {
         VersionedCache {
             map: Mutex::new(HashMap::new()),
@@ -168,8 +201,8 @@ impl<V: Clone> VersionedCache<V> {
     /// `make` leaves the slot untouched.
     fn get_or_try_insert<E>(
         &self,
-        id: u64,
-        version: u64,
+        id: K,
+        version: Ver,
         make: impl FnOnce() -> std::result::Result<V, E>,
     ) -> std::result::Result<(V, bool, bool), E> {
         let slot = lock(&self.map)
@@ -205,11 +238,18 @@ impl<V: Clone> VersionedCache<V> {
 /// races while other entries' hits and compiles proceed in parallel.
 type CompileSlot = Arc<Mutex<Option<Arc<PjRtLoadedExecutable>>>>;
 
+/// Cached buffer payload: the device-resident buffer plus its byte size.
+type CachedBuf = (Arc<PjRtBuffer>, u64);
+
 pub struct Engine {
     client: PjRtClient,
     manifest: Manifest,
     cache: Mutex<HashMap<(String, String), CompileSlot>>,
-    device_cache: VersionedCache<(Arc<PjRtBuffer>, u64)>,
+    device_cache: VersionedCache<u64, u64, CachedBuf>,
+    /// Stacked `[E, P]` parameter tensors for fused all-routers scoring,
+    /// keyed by the ordered member-id list and versioned by the matching
+    /// member-version list (see [`Engine::stacked_buffer`]).
+    stacked_cache: VersionedCache<Vec<u64>, Vec<u64>, CachedBuf>,
     stats: Mutex<EngineStats>,
 }
 
@@ -235,6 +275,7 @@ impl Engine {
             manifest,
             cache: Mutex::new(HashMap::new()),
             device_cache: VersionedCache::new(),
+            stacked_cache: VersionedCache::new(),
             stats: Mutex::new(EngineStats::default()),
         })
     }
@@ -256,10 +297,18 @@ impl Engine {
         self.device_cache.len()
     }
 
-    /// Drop every device-resident buffer (frees device memory; the next
-    /// call per state re-uploads).
+    /// Live entries in the stacked-parameter cache (one per resident
+    /// router set).
+    pub fn stacked_cache_entries(&self) -> usize {
+        self.stacked_cache.len()
+    }
+
+    /// Drop every device-resident buffer — per-state and stacked alike
+    /// (frees device memory; the next call per state or router set
+    /// re-uploads).
     pub fn clear_device_cache(&self) {
         self.device_cache.clear();
+        self.stacked_cache.clear();
     }
 
     /// Load + compile an entry point (cached). A miss holds only this
@@ -364,6 +413,50 @@ impl Engine {
         })
     }
 
+    /// Device-resident stacked buffer for an **ordered set** of versioned
+    /// owners — the `[E, P]` parameter tensor a fused all-routers scoring
+    /// entry consumes. The cache key is the ordered member-id list; the
+    /// resident entry is served while every member's version matches, and
+    /// any single member bumping its version re-runs `make` (one
+    /// re-stack + re-upload per router-set version, counted by
+    /// [`EngineStats::stack_rebuilds`]) and evicts the stale stack.
+    ///
+    /// Locking mirrors [`Engine::state_buffer`]: only the member-list's
+    /// per-set slot lock is held across the miss path, so racing calls
+    /// for the same router set build exactly once while other sets' hits
+    /// and builds proceed in parallel.
+    pub fn stacked_buffer(
+        &self,
+        members: &[(u64, u64)],
+        make: impl FnOnce() -> Result<Literal>,
+    ) -> Result<DeviceBuffer> {
+        let ids: Vec<u64> = members.iter().map(|&(id, _)| id).collect();
+        let versions: Vec<u64> = members.iter().map(|&(_, v)| v).collect();
+        let (payload, hit, evicted) = self
+            .stacked_cache
+            .get_or_try_insert(ids, versions, || self.upload_raw(&make()?))?;
+        let (buf, bytes) = payload;
+        if hit {
+            return Ok(DeviceBuffer {
+                buf,
+                bytes,
+                fresh: AtomicBool::new(false),
+            });
+        }
+        {
+            let mut st = lock(&self.stats);
+            st.stack_rebuilds += 1;
+            if evicted {
+                st.cache_evictions += 1;
+            }
+        }
+        Ok(DeviceBuffer {
+            buf,
+            bytes,
+            fresh: AtomicBool::new(true),
+        })
+    }
+
     /// Execute an entry point over a mix of device-resident buffers and
     /// fresh literals, returning the flattened tuple elements (jax entry
     /// points always return a tuple).
@@ -423,6 +516,28 @@ impl Engine {
         // Entry points are lowered with return_tuple=True: the root is a
         // tuple even for single outputs. PJRT hands it back as one buffer.
         lit.to_tuple().map_err(anyhow::Error::msg)
+    }
+
+    /// [`run_buffers`](Engine::run_buffers) for a fused all-routers entry:
+    /// identical execution, plus fused-path accounting — the launch counts
+    /// once in [`EngineStats::fused_executions`], and the `routers_fused`
+    /// per-router launches the fan-out path would have performed instead
+    /// are credited to [`EngineStats::router_execs_avoided`] (`e` launches
+    /// replaced by 1 avoids `e - 1`). `routers_fused` is the *real* member
+    /// count — padding rows of a short chunk score dead columns, not
+    /// avoided launches.
+    pub fn run_buffers_fused(
+        &self,
+        variant: &str,
+        entry: &str,
+        args: &[Arg],
+        routers_fused: usize,
+    ) -> Result<Vec<Literal>> {
+        let out = self.run_buffers(variant, entry, args)?;
+        let mut st = lock(&self.stats);
+        st.fused_executions += 1;
+        st.router_execs_avoided += routers_fused.saturating_sub(1);
+        Ok(out)
     }
 
     /// Execute an entry point with literal inputs — the upload-per-call
@@ -513,7 +628,7 @@ mod tests {
 
     #[test]
     fn versioned_cache_hits_and_evicts() {
-        let c: VersionedCache<u32> = VersionedCache::new();
+        let c: VersionedCache<u64, u64, u32> = VersionedCache::new();
         // first lookup misses: the builder runs, nothing is evicted
         let (v, hit, evicted) = c.get_or_try_insert::<()>(1, 0, || Ok(10)).unwrap();
         assert_eq!((v, hit, evicted), (10, false, false));
@@ -534,6 +649,33 @@ mod tests {
         assert_eq!(c.len(), 2);
         c.clear();
         assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn versioned_cache_vec_keys_evict_on_any_member_bump() {
+        // the stacked-cache instantiation: ordered id list + version list
+        let c: VersionedCache<Vec<u64>, Vec<u64>, u32> = VersionedCache::new();
+        let ids = vec![1u64, 2, 3];
+        let (v, hit, evicted) = c
+            .get_or_try_insert::<()>(ids.clone(), vec![0, 0, 0], || Ok(10))
+            .unwrap();
+        assert_eq!((v, hit, evicted), (10, false, false));
+        // same members, same versions: resident
+        let (v, hit, _) = c
+            .get_or_try_insert::<()>(ids.clone(), vec![0, 0, 0], || unreachable!())
+            .unwrap();
+        assert_eq!((v, hit), (10, true));
+        // ONE member's version bumps: the whole stack rebuilds + evicts
+        let (v, hit, evicted) = c
+            .get_or_try_insert::<()>(ids.clone(), vec![0, 1, 0], || Ok(11))
+            .unwrap();
+        assert_eq!((v, hit, evicted), (11, false, true));
+        // a permutation of the members is a *different* ordered set
+        let (_, hit, evicted) = c
+            .get_or_try_insert::<()>(vec![3, 2, 1], vec![0, 1, 0], || Ok(12))
+            .unwrap();
+        assert!(!hit && !evicted);
+        assert_eq!(c.len(), 2);
     }
 
     #[test]
@@ -569,6 +711,27 @@ mod tests {
         assert_eq!(d.h2d_bytes, 0);
         assert_eq!(d.param_uploads, 0);
         assert_eq!(d.compile_secs, 0.0);
+    }
+
+    #[test]
+    fn stats_since_covers_fused_counters() {
+        let mut a = EngineStats::default();
+        a.fused_executions = 2;
+        a.router_execs_avoided = 6;
+        a.stack_rebuilds = 1;
+        let mut b = a.clone();
+        b.fused_executions = 5;
+        b.router_execs_avoided = 15;
+        b.stack_rebuilds = 3;
+        let d = b.since(&a);
+        assert_eq!(d.fused_executions, 3);
+        assert_eq!(d.router_execs_avoided, 9);
+        assert_eq!(d.stack_rebuilds, 2);
+        // saturating across a reset, like every other counter
+        let z = a.since(&b);
+        assert_eq!(z.fused_executions, 0);
+        assert_eq!(z.router_execs_avoided, 0);
+        assert_eq!(z.stack_rebuilds, 0);
     }
 
     #[test]

@@ -7,8 +7,11 @@
 //!   emitted by `python/compile/aot.py`,
 //! * [`Engine`] — a PJRT CPU client plus a compile cache (one compiled
 //!   executable per `(variant, entry_point)`, shared by every expert of
-//!   that variant); `Send + Sync`, so independent expert/router groups
-//!   can execute concurrently against one engine,
+//!   that variant) and two device-resident parameter caches: per-state
+//!   (`(state_id, version)`) and stacked per router set (ordered
+//!   `(state_id, version)` pairs, feeding the fused `prefix_nll_all`
+//!   scoring entries); `Send + Sync`, so independent expert/router
+//!   groups can execute concurrently against one engine,
 //! * [`TrainState`] — host-resident flat parameter/optimizer vectors and
 //!   the fused `train_step` / `eval_nll` / `prefix_nll` call wrappers,
 //! * [`parallel`] — the scoped-thread dispatch layer that fans those
@@ -22,4 +25,4 @@ pub mod state;
 pub use artifacts::{locate_artifacts, Manifest, VariantMeta};
 pub use engine::{Arg, DeviceBuffer, Engine, EngineStats};
 pub use parallel::{default_threads, resolve_threads, run_fallible, run_tasks, Pop, WorkQueue};
-pub use state::TrainState;
+pub use state::{stacked_params_buffer, TrainState};

@@ -279,6 +279,35 @@ impl TrainState {
     }
 }
 
+/// The device-resident stacked `[E, P]` parameter tensor of an ordered
+/// router set — the first input of a fused `prefix_nll_all_{m}` entry.
+/// Served from the engine's stacked cache keyed by the members' ordered
+/// `(state_id, version)` pairs: the flat parameter vectors are
+/// concatenated and uploaded once per router-set version, and any single
+/// member's version bump (training, checkpoint load) re-stacks and
+/// re-uploads automatically. A padded set (the last fused chunk repeats
+/// its final router) is simply an ordered list with repeated members —
+/// its own cache entry, resident like any other.
+pub fn stacked_params_buffer(engine: &Engine, states: &[&TrainState]) -> Result<DeviceBuffer> {
+    ensure!(!states.is_empty(), "cannot stack an empty router set");
+    let p = states[0].param_count();
+    let members: Vec<(u64, u64)> = states.iter().map(|s| (s.id, s.version)).collect();
+    engine.stacked_buffer(&members, || {
+        let mut flat: Vec<f32> = Vec::with_capacity(states.len() * p);
+        for s in states {
+            ensure!(
+                s.param_count() == p,
+                "cannot stack mismatched parameter vectors ({} vs {p} params)",
+                s.param_count()
+            );
+            flat.extend_from_slice(&s.params);
+        }
+        f32_literal(&flat)
+            .reshape(&[states.len() as i64, p as i64])
+            .map_err(anyhow::Error::msg)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

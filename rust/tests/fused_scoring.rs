@@ -1,0 +1,414 @@
+//! Fused all-routers scoring suite: the stacked-parameter device cache
+//! and the `prefix_nll_all_{m}` scoring path.
+//!
+//! Two tiers, following `rust/tests/concurrency.rs`:
+//!
+//! * **Stub backend (tier-1, no artifacts):** the vendored xla stub keeps
+//!   host-side uploads real, so a handwritten temp-dir manifest gives a
+//!   live [`Engine`] whose stacked cache is fully exercisable — exactly
+//!   one stack build + upload per router-set version under an 8-thread
+//!   race, eviction when any *single* member's version bumps, and exact
+//!   byte accounting.
+//! * **Artifacts-gated (standard self-skip):** with compiled artifacts
+//!   that carry fused entries (`aot.py --fused`), the fused score matrix
+//!   is bit-identical to the per-router fan-out at worker counts {1, E},
+//!   executes exactly `ceil(B / prefix_batch)` kernels per B-sequence
+//!   matrix (vs `E ×` that on the fan-out path, asserted via
+//!   [`EngineStats`]), and re-stacks parameters only when a router's
+//!   version bumps.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Barrier;
+
+use smalltalk::coordinator::scoring::{
+    score_matrix_rows_fanout, score_matrix_rows_fused, score_matrix_rows_threaded,
+};
+use smalltalk::coordinator::{run_pipeline, PipelineConfig};
+use smalltalk::data::SequenceGen;
+use smalltalk::runtime::engine::f32_literal;
+use smalltalk::runtime::{locate_artifacts, stacked_params_buffer, Engine, TrainState};
+use smalltalk::tokenizer::{Bpe, BpeTrainer};
+
+// ---------------------------------------------------------------------
+// stub-backend engine (tier-1): real uploads, no execution
+// ---------------------------------------------------------------------
+
+const STUB_MANIFEST: &str = r#"{
+  "fingerprint": "fused-scoring-test-stub",
+  "variants": [{
+    "name": "stub", "role": "router", "vocab": 512, "seq_len": 64,
+    "d_model": 8, "n_layers": 1, "n_heads": 1, "d_ffw": 16,
+    "param_count": 32, "train_batch": 4, "eval_batch": 4,
+    "prefix_batch": 4, "prefix_len": 8, "prefix_lens": [8],
+    "fused_experts": 4,
+    "opt": {"peak_lr": 0.001, "warmup_steps": 10, "total_steps": 100,
+            "schedule": "constant", "weight_decay": 0.1, "clip_norm": 1.0},
+    "entry_points": ["init", "train_step", "eval_nll", "prefix_nll_8",
+                     "prefix_nll_all_8"]
+  }]
+}"#;
+
+fn stub_engine() -> Engine {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "smalltalk_fused_{}_{}",
+        std::process::id(),
+        NEXT.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&dir).expect("creating stub manifest dir");
+    std::fs::write(dir.join("manifest.json"), STUB_MANIFEST).expect("writing stub manifest");
+    Engine::new(&dir).expect("stub engine must construct without artifacts")
+}
+
+/// Stub router with `n` distinguishable parameters.
+fn stub_state(fill: f32, n: usize) -> TrainState {
+    TrainState::from_params("stub", vec![fill; n], vec![0.0; n], vec![0.0; n], 0)
+}
+
+// ---------------------------------------------------------------------
+// the stacked cache under contention (tier-1)
+// ---------------------------------------------------------------------
+
+/// Many threads hammer `stacked_buffer` for the same ordered member list
+/// behind a barrier, across several version rounds: the stack literal
+/// must be built + uploaded exactly once per router-set version — not
+/// "roughly once" — with every byte accounted for, and each later round
+/// must evict the previous stack exactly once.
+#[test]
+fn stacked_cache_builds_once_per_version_under_contention() {
+    const THREADS: usize = 8;
+    const ROUNDS: u64 = 5;
+    const CALLS_PER_ROUND: usize = 4;
+    const E: usize = 3;
+    const FLOATS: usize = 16; // per-member literal share: 64 B
+
+    let eng = stub_engine();
+    let made = AtomicUsize::new(0);
+    let barrier = Barrier::new(THREADS);
+    std::thread::scope(|s| {
+        for _ in 0..THREADS {
+            s.spawn(|| {
+                for version in 0..ROUNDS {
+                    // enter the round together: every miss is contended
+                    barrier.wait();
+                    for _ in 0..CALLS_PER_ROUND {
+                        let members: Vec<(u64, u64)> =
+                            (1..=E as u64).map(|id| (id, version)).collect();
+                        let buf = eng
+                            .stacked_buffer(&members, || {
+                                made.fetch_add(1, Ordering::SeqCst);
+                                Ok(f32_literal(&[version as f32; E * FLOATS]))
+                            })
+                            .expect("stub uploads cannot fail");
+                        assert_eq!(buf.bytes(), (E * FLOATS * 4) as u64);
+                    }
+                }
+            });
+        }
+    });
+
+    let stats = eng.stats();
+    assert_eq!(
+        made.load(Ordering::SeqCst),
+        ROUNDS as usize,
+        "the stack builder must run exactly once per router-set version"
+    );
+    assert_eq!(stats.stack_rebuilds, ROUNDS as usize);
+    assert_eq!(stats.uploads, ROUNDS as usize);
+    assert_eq!(stats.h2d_bytes, ROUNDS * (E * FLOATS * 4) as u64);
+    // every version round after the first replaces the resident stack
+    assert_eq!(stats.cache_evictions, ROUNDS as usize - 1);
+    // one ordered member list -> one live entry
+    assert_eq!(eng.stacked_cache_entries(), 1);
+    assert_eq!(stats.param_uploads, 0, "stacked uploads are not per-state uploads");
+}
+
+/// Any single member's version bump evicts the stack; member order is
+/// part of the identity (a permutation is a different stack).
+#[test]
+fn single_member_version_bump_evicts_the_stack() {
+    let eng = stub_engine();
+    let build = |eng: &Engine, members: &[(u64, u64)]| {
+        eng.stacked_buffer(members, || Ok(f32_literal(&[1.0; 8])))
+            .unwrap()
+    };
+
+    build(&eng, &[(1, 0), (2, 0), (3, 0)]);
+    assert_eq!(eng.stats().stack_rebuilds, 1);
+
+    // same members, same versions: resident, nothing rebuilt
+    build(&eng, &[(1, 0), (2, 0), (3, 0)]);
+    assert_eq!(eng.stats().stack_rebuilds, 1);
+    assert_eq!(eng.stats().cache_evictions, 0);
+
+    // ONE member bumps: rebuild + evict exactly once
+    build(&eng, &[(1, 0), (2, 1), (3, 0)]);
+    assert_eq!(eng.stats().stack_rebuilds, 2);
+    assert_eq!(eng.stats().cache_evictions, 1);
+
+    // a permutation is its own ordered set (fresh entry, no eviction)
+    build(&eng, &[(3, 0), (2, 1), (1, 0)]);
+    assert_eq!(eng.stats().stack_rebuilds, 3);
+    assert_eq!(eng.stats().cache_evictions, 1);
+    assert_eq!(eng.stacked_cache_entries(), 2);
+
+    // clear_device_cache drops stacked buffers too
+    eng.clear_device_cache();
+    assert_eq!(eng.stacked_cache_entries(), 0);
+    build(&eng, &[(1, 0), (2, 1), (3, 0)]);
+    assert_eq!(eng.stats().stack_rebuilds, 4);
+}
+
+/// `stacked_params_buffer` stacks real `TrainState`s: the upload is the
+/// concatenated `[E, P]` tensor (bytes exact), repeat calls are free, and
+/// a member's parameter change (version bump) re-stacks automatically.
+#[test]
+fn stacked_params_buffer_tracks_member_versions() {
+    let eng = stub_engine();
+    const P: usize = 32;
+    let mut states = vec![stub_state(1.0, P), stub_state(2.0, P), stub_state(3.0, P)];
+
+    {
+        let refs: Vec<&TrainState> = states.iter().collect();
+        let buf = stacked_params_buffer(&eng, &refs).unwrap();
+        assert_eq!(buf.bytes(), (3 * P * 4) as u64, "stack is the full [E, P] tensor");
+    }
+    let s = eng.stats();
+    assert_eq!((s.stack_rebuilds, s.uploads), (1, 1));
+    assert_eq!(s.h2d_bytes, (3 * P * 4) as u64);
+
+    // unchanged members: served resident
+    {
+        let refs: Vec<&TrainState> = states.iter().collect();
+        stacked_params_buffer(&eng, &refs).unwrap();
+    }
+    assert_eq!(eng.stats().stack_rebuilds, 1);
+
+    // one member's params change out-of-band -> version bump -> re-stack
+    states[1].params[0] = 99.0;
+    states[1].invalidate_device_cache();
+    {
+        let refs: Vec<&TrainState> = states.iter().collect();
+        stacked_params_buffer(&eng, &refs).unwrap();
+    }
+    let s = eng.stats();
+    assert_eq!(s.stack_rebuilds, 2);
+    assert_eq!(s.cache_evictions, 1);
+    assert_eq!(s.h2d_bytes, 2 * (3 * P * 4) as u64);
+
+    // a padded chunk (repeated member) is a distinct, valid ordered set
+    {
+        let refs: Vec<&TrainState> = vec![&states[0], &states[1], &states[1], &states[1]];
+        let buf = stacked_params_buffer(&eng, &refs).unwrap();
+        assert_eq!(buf.bytes(), (4 * P * 4) as u64);
+    }
+    assert_eq!(eng.stats().stack_rebuilds, 3);
+    assert_eq!(eng.stacked_cache_entries(), 2);
+}
+
+/// Stacking mismatched parameter vectors (or nothing) is a structured
+/// error, not a bad reshape or a panic.
+#[test]
+fn stacked_params_buffer_rejects_bad_sets() {
+    let eng = stub_engine();
+    let a = stub_state(1.0, 32);
+    let b = stub_state(2.0, 16);
+    let err = stacked_params_buffer(&eng, &[&a, &b]).unwrap_err().to_string();
+    assert!(err.contains("mismatched parameter vectors"), "{err}");
+    assert!(stacked_params_buffer(&eng, &[]).is_err());
+    // the failed builds left no live entry and no accounting residue
+    assert_eq!(eng.stacked_cache_entries(), 0);
+    assert_eq!(eng.stats().stack_rebuilds, 0);
+    assert_eq!(eng.stats().uploads, 0);
+}
+
+// ---------------------------------------------------------------------
+// XLA-backed tests (self-skip without artifacts; the fused tests also
+// self-skip on pre-fused manifests, which lack prefix_nll_all entries)
+// ---------------------------------------------------------------------
+
+struct Setup {
+    engine: Engine,
+    bpe: Bpe,
+    mixture: smalltalk::coordinator::Mixture,
+}
+
+static SETUP: std::sync::OnceLock<Option<Setup>> = std::sync::OnceLock::new();
+
+/// One trained E=4 mixture shared by the execution tests (the pattern of
+/// `rust/tests/concurrency.rs`). Tests that assert on engine stats build
+/// their own private engine instead of touching this shared one.
+fn setup() -> Option<&'static Setup> {
+    SETUP
+        .get_or_init(|| {
+            let dir = locate_artifacts()?;
+            let engine = Engine::new(dir).expect("loading artifacts");
+            let corpus = smalltalk::data::corpus::Corpus::generate(60, 400, 42, None);
+            let bpe = BpeTrainer::new(512).train(corpus.texts()).unwrap();
+            let cfg = PipelineConfig {
+                router_variant: "router_micro".into(),
+                expert_variant: "expert_sm".into(),
+                n_experts: 4,
+                em_rounds: 2,
+                em_chunk: 96,
+                em_steps_per_round: 8,
+                shard_sequences: 128,
+                expert_steps: 10,
+                prefix_len: 32,
+                seed: 3,
+                threads: 0,
+            };
+            let mixture = run_pipeline(&engine, &bpe, &cfg)
+                .expect("training the shared test mixture")
+                .mixture;
+            Some(Setup { engine, bpe, mixture })
+        })
+        .as_ref()
+}
+
+/// Fused and fan-out score matrices are bit-identical — misaligned tail
+/// batch included — at worker counts {1, E}, and the auto-dispatch entry
+/// agrees with both.
+#[test]
+fn fused_matches_fanout_bit_for_bit() {
+    let Some(setup) = setup() else { return };
+    let meta = &setup.mixture.router_meta;
+    let m = 32usize;
+    if meta.fused_prefix_entry(m).is_none() {
+        eprintln!("[fused_scoring] manifest has no prefix_nll_all_{m} — re-run `make artifacts`; skipping");
+        return;
+    }
+    let routers = &setup.mixture.routers;
+    let e = routers.len();
+    let pool: Vec<Vec<u32>> = SequenceGen::new(&setup.bpe, meta.seq_len, 23)
+        .batch(meta.prefix_batch + 3) // misaligned: full batch + short tail
+        .into_iter()
+        .map(|s| s.tokens)
+        .collect();
+    let rows: Vec<&[u32]> = pool.iter().map(|r| &r[..m]).collect();
+
+    let reference =
+        score_matrix_rows_fanout(&setup.engine, routers, meta, &rows, m, 1).unwrap();
+    assert_eq!(reference.len(), rows.len());
+    for threads in [1usize, e] {
+        let fused =
+            score_matrix_rows_fused(&setup.engine, routers, meta, &rows, m, threads).unwrap();
+        let auto =
+            score_matrix_rows_threaded(&setup.engine, routers, meta, &rows, m, threads).unwrap();
+        for (i, (f, r)) in fused.iter().zip(&reference).enumerate() {
+            assert_eq!(f.len(), r.len());
+            for j in 0..e {
+                assert_eq!(
+                    f[j].to_bits(),
+                    r[j].to_bits(),
+                    "threads={threads}: fused [{i}][{j}] diverged from fan-out"
+                );
+            }
+        }
+        assert_eq!(auto, fused, "threads={threads}: auto-dispatch must take the fused path");
+    }
+}
+
+/// Launch accounting (the acceptance criterion): a B-sequence matrix
+/// costs `ceil(B / prefix_batch)` fused executions — vs `E ×` that many
+/// on the fan-out path — and the stacked parameters upload exactly once
+/// per router-set version across repeated calls.
+#[test]
+fn fused_launch_and_stack_accounting() {
+    let Some(setup) = setup() else { return };
+    let Some(dir) = locate_artifacts() else { return };
+    let meta = &setup.mixture.router_meta;
+    let m = 32usize;
+    if meta.fused_prefix_entry(m).is_none() {
+        eprintln!("[fused_scoring] manifest has no prefix_nll_all_{m} — re-run `make artifacts`; skipping");
+        return;
+    }
+    // private engine: isolate counters from concurrently running tests
+    let eng = Engine::new(dir).expect("loading artifacts");
+    let mut routers = setup.mixture.routers.clone();
+    let e = routers.len();
+    let bs = meta.prefix_batch;
+    let b = 2 * bs + 3; // 3 spans
+    let spans = b.div_ceil(bs);
+    let pool: Vec<Vec<u32>> = SequenceGen::new(&setup.bpe, meta.seq_len, 29)
+        .batch(b)
+        .into_iter()
+        .map(|s| s.tokens)
+        .collect();
+    let rows: Vec<&[u32]> = pool.iter().map(|r| &r[..m]).collect();
+
+    // warm the compile cache so executions, not compiles, are measured
+    score_matrix_rows_fanout(&eng, &routers, meta, &rows, m, 1).unwrap();
+    score_matrix_rows_fused(&eng, &routers, meta, &rows, m, 1).unwrap();
+
+    let s0 = eng.stats();
+    score_matrix_rows_fanout(&eng, &routers, meta, &rows, m, 1).unwrap();
+    let fanout = eng.stats().since(&s0);
+    assert_eq!(fanout.executions, e * spans, "fan-out: one launch per (router, batch)");
+    assert_eq!(fanout.fused_executions, 0);
+
+    let s0 = eng.stats();
+    score_matrix_rows_fused(&eng, &routers, meta, &rows, m, 1).unwrap();
+    let fused = eng.stats().since(&s0);
+    assert_eq!(fused.executions, spans, "fused: one launch per batch, not per router");
+    assert_eq!(fused.fused_executions, spans);
+    assert_eq!(
+        fused.router_execs_avoided,
+        (e - 1) * spans,
+        "each fused launch replaces E per-router launches"
+    );
+    assert_eq!(fused.stack_rebuilds, 0, "the warm-up call already stacked this version");
+
+    // stacked params upload once per router-set version: a member's bump
+    // re-stacks exactly once, then stays resident again
+    routers[1].invalidate_device_cache();
+    let s0 = eng.stats();
+    score_matrix_rows_fused(&eng, &routers, meta, &rows, m, 1).unwrap();
+    score_matrix_rows_fused(&eng, &routers, meta, &rows, m, 1).unwrap();
+    let d = eng.stats().since(&s0);
+    assert_eq!(d.stack_rebuilds, 1, "one re-stack per router-set version, not per call");
+}
+
+/// Router sets away from the compiled fused width still score correctly:
+/// a narrower set pads its only chunk, a wider set scores in fused
+/// chunks — both bit-identical to the fan-out columns.
+#[test]
+fn fused_pads_and_chunks_off_width_router_sets() {
+    let Some(setup) = setup() else { return };
+    let meta = &setup.mixture.router_meta;
+    let m = 32usize;
+    if meta.fused_prefix_entry(m).is_none() {
+        eprintln!("[fused_scoring] manifest has no prefix_nll_all_{m} — re-run `make artifacts`; skipping");
+        return;
+    }
+    let pool: Vec<Vec<u32>> = SequenceGen::new(&setup.bpe, meta.seq_len, 31)
+        .batch(meta.prefix_batch + 1)
+        .into_iter()
+        .map(|s| s.tokens)
+        .collect();
+    let rows: Vec<&[u32]> = pool.iter().map(|r| &r[..m]).collect();
+
+    // narrower than the compiled width (padded chunk) and wider (2 chunks)
+    let narrow: Vec<TrainState> = setup.mixture.routers[..2].to_vec();
+    let mut wide: Vec<TrainState> = setup.mixture.routers.clone();
+    wide.push(setup.mixture.routers[0].clone());
+
+    for (label, set) in [("narrow", &narrow), ("wide", &wide)] {
+        let reference = score_matrix_rows_fanout(&setup.engine, set, meta, &rows, m, 1).unwrap();
+        for threads in [1usize, set.len()] {
+            let fused =
+                score_matrix_rows_fused(&setup.engine, set, meta, &rows, m, threads).unwrap();
+            assert_eq!(fused.len(), reference.len(), "{label}");
+            for (i, (f, r)) in fused.iter().zip(&reference).enumerate() {
+                assert_eq!(f.len(), set.len(), "{label} row {i} width");
+                for j in 0..set.len() {
+                    assert_eq!(
+                        f[j].to_bits(),
+                        r[j].to_bits(),
+                        "{label} threads={threads}: [{i}][{j}] diverged"
+                    );
+                }
+            }
+        }
+    }
+}

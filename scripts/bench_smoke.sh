@@ -2,8 +2,12 @@
 # Tiny-budget perf smoke: runs the routing + serve + train_step benches
 # with millisecond budgets and copies their JSON to BENCH_routing.json /
 # BENCH_serve.json / BENCH_train_step.json at the repo root, so every PR
-# leaves a perf trajectory point. Skips gracefully (with a marker file)
-# when the AOT artifacts or the native XLA backend are unavailable.
+# leaves a perf trajectory point. The routing bench's fused-vs-fan-out
+# rows (seqs/s, executions-per-request, h2d bytes) land in
+# BENCH_routing.json when the artifacts carry `prefix_nll_all` entries
+# (the default `make artifacts` exports them via `aot.py --fused 4`).
+# Skips gracefully (with a marker file) when the AOT artifacts or the
+# native XLA backend are unavailable.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
