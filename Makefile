@@ -6,12 +6,14 @@
 #   make test-serve        the continuous-batching scheduler suite, serial + interleaved
 #   make test-fused        the fused all-routers scoring + stacked-cache suite,
 #                          serial + interleaved
+#   make test-async        the trainer-orchestrator suite (staged bit-identity,
+#                          kill-and-resume, stale snapshots), serial + interleaved
 #   make artifacts         AOT-lower every model variant to artifacts/ (needs jax;
 #                          exports the fused prefix_nll_all entries at width 4)
-#   make bench-smoke       tiny-budget routing+serve+train_step benches
-#                          -> BENCH_routing.json + BENCH_serve.json
+#   make bench-smoke       tiny-budget routing+serve+train_step+trainer benches
+#                          -> BENCH_routing.json + BENCH_serve.json + BENCH_train.json
 
-.PHONY: build test test-concurrency test-serve test-fused artifacts bench-smoke clean
+.PHONY: build test test-concurrency test-serve test-fused test-async artifacts bench-smoke clean
 
 build:
 	cargo build --release
@@ -41,6 +43,14 @@ test-fused:
 	RUST_TEST_THREADS=1 cargo test -q --test fused_scoring
 	RUST_TEST_THREADS=8 cargo test -q --test fused_scoring
 
+# Trainer-orchestrator suite (node machinery, checkpoint/resume, and the
+# snapshot store run tier-1 on a stub backend; the staged-vs-classic
+# bit-identity and engine-backed async smoke need artifacts), under both
+# serial and heavily interleaved test scheduling.
+test-async:
+	RUST_TEST_THREADS=1 cargo test -q --test async_train
+	RUST_TEST_THREADS=8 cargo test -q --test async_train
+
 # --fused 4 matches the routing-bench/e2e expert count E=4; omit it to
 # reproduce a pre-fused manifest (the runtime then fans out per router).
 artifacts:
@@ -51,4 +61,4 @@ bench-smoke:
 
 clean:
 	cargo clean
-	rm -rf results BENCH_routing.json BENCH_serve.json BENCH_train_step.json
+	rm -rf results BENCH_routing.json BENCH_serve.json BENCH_train_step.json BENCH_train.json

@@ -1,0 +1,133 @@
+//! Bench: staged vs async trainer orchestration — trained sequences per
+//! second plus the communication ledger each mode actually generates
+//! (score all-gathers for the staged barrier pipeline, snapshot
+//! broadcasts for the async node pool). Lands in BENCH_train.json via
+//! scripts/bench_smoke.sh for the per-PR perf trajectory.
+
+use std::time::Duration;
+
+use smalltalk::coordinator::{
+    run_pipeline_reference, run_trainer, CommKind, PipelineConfig, TrainerConfig,
+};
+use smalltalk::data::corpus::Corpus;
+use smalltalk::runtime::{locate_artifacts, Engine};
+use smalltalk::tokenizer::BpeTrainer;
+use smalltalk::util::bench::{env_threads, BenchSuite};
+
+fn bench_cfg(threads: usize) -> PipelineConfig {
+    PipelineConfig {
+        router_variant: "router_micro".into(),
+        expert_variant: "router_micro".into(), // tiny expert: bench the orchestration
+        n_experts: 2,
+        em_rounds: 2,
+        em_chunk: 48,
+        em_steps_per_round: 4,
+        shard_sequences: 64,
+        expert_steps: 6,
+        prefix_len: 32,
+        seed: 2024,
+        threads,
+    }
+}
+
+fn main() {
+    let Some(artifacts) = locate_artifacts() else {
+        eprintln!("[train bench] no artifacts/manifest.json — run `make artifacts`; skipping");
+        return;
+    };
+    let engine = Engine::new(artifacts).expect("loading artifacts");
+    let corpus = Corpus::generate(60, 400, 42, None);
+    let bpe = BpeTrainer::new(512).train(corpus.texts()).unwrap();
+    let threads = env_threads().unwrap_or(2);
+    let cfg = bench_cfg(threads);
+
+    let mut suite = BenchSuite::new("train")
+        .with_budget(Duration::from_millis(200), Duration::from_secs(4));
+    suite.header();
+
+    // determinism guard: the staged orchestrator must reproduce the
+    // classic pipeline bit-for-bit before its numbers mean anything
+    let reference = run_pipeline_reference(&engine, &bpe, &cfg).expect("reference pipeline");
+    let staged_once = run_trainer(&engine, &bpe, &cfg, &TrainerConfig::staged())
+        .expect("staged trainer");
+    for (a, b) in reference
+        .mixture
+        .experts
+        .iter()
+        .zip(&staged_once.mixture.experts)
+    {
+        assert_eq!(
+            a.params, b.params,
+            "staged orchestrator diverged from the classic pipeline"
+        );
+    }
+
+    let meta = engine.variant(&cfg.expert_variant).unwrap().clone();
+    let staged_seqs = (cfg.n_experts * cfg.expert_steps * meta.train_batch) as f64;
+
+    let r = suite.bench(&format!("staged trainer (t={threads})"), || {
+        std::hint::black_box(
+            run_trainer(&engine, &bpe, &cfg, &TrainerConfig::staged())
+                .expect("staged trainer")
+                .mixture
+                .experts
+                .len(),
+        );
+    });
+    println!("    -> {:.1} trained seqs/s", r.throughput(staged_seqs));
+    suite.annotate("threads", threads as f64);
+    suite.annotate("trained_seqs_per_run", staged_seqs);
+    suite.annotate(
+        "ledger_total_bytes",
+        staged_once.ledger.total_bytes() as f64,
+    );
+    suite.annotate(
+        "ledger_peak_node_bytes",
+        staged_once.ledger.peak_node_bytes() as f64,
+    );
+    suite.annotate(
+        "score_allgather_rounds",
+        staged_once.ledger.rounds(CommKind::ScoreAllGather) as f64,
+    );
+
+    let async_once = run_trainer(&engine, &bpe, &cfg, &TrainerConfig::asynchronous())
+        .expect("async trainer");
+    let async_seqs: f64 = async_once.segment_sizes.iter().sum::<usize>() as f64;
+    let r = suite.bench(&format!("async trainer (t={threads})"), || {
+        std::hint::black_box(
+            run_trainer(&engine, &bpe, &cfg, &TrainerConfig::asynchronous())
+                .expect("async trainer")
+                .mixture
+                .experts
+                .len(),
+        );
+    });
+    println!(
+        "    -> {:.1} trained seqs/s ({} seqs/run)",
+        r.throughput(async_seqs),
+        async_seqs
+    );
+    suite.annotate("threads", threads as f64);
+    suite.annotate("trained_seqs_per_run", async_seqs);
+    suite.annotate("ledger_total_bytes", async_once.ledger.total_bytes() as f64);
+    suite.annotate(
+        "ledger_peak_node_bytes",
+        async_once.ledger.peak_node_bytes() as f64,
+    );
+    suite.annotate(
+        "snapshot_broadcast_rounds",
+        async_once.ledger.rounds(CommKind::SnapshotBroadcast) as f64,
+    );
+
+    println!(
+        "\nledger: staged moved {} B (peak node {} B, {} all-gathers); \
+         async moved {} B (peak node {} B, {} snapshot broadcasts)",
+        staged_once.ledger.total_bytes(),
+        staged_once.ledger.peak_node_bytes(),
+        staged_once.ledger.rounds(CommKind::ScoreAllGather),
+        async_once.ledger.total_bytes(),
+        async_once.ledger.peak_node_bytes(),
+        async_once.ledger.rounds(CommKind::SnapshotBroadcast),
+    );
+    suite.write_json().unwrap();
+}

@@ -42,6 +42,18 @@ pub struct ExperimentConfig {
     /// Continuous serving: linger before a partial expert batch is
     /// dispatched anyway, in microseconds (`u64::MAX` disables).
     pub serve_max_wait_us: u64,
+    /// Train with the asynchronous (barrier-free, snapshot-routed)
+    /// orchestrator instead of the staged pipeline (`--async`).
+    pub train_async: bool,
+    /// Trainer-node checkpoint directory (empty = checkpointing off).
+    pub checkpoint_dir: String,
+    /// Checkpoint every N expert steps (0 = final checkpoint only).
+    pub checkpoint_every: usize,
+    /// Resume trainer nodes from their checkpoints (`--resume`).
+    pub resume: bool,
+    /// Async: broadcast a router snapshot every N EM rounds (the final
+    /// round always broadcasts).
+    pub snapshot_every: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -59,6 +71,11 @@ impl Default for ExperimentConfig {
             results_dir: "results".into(),
             serve_batch_size: 0,
             serve_max_wait_us: 2000,
+            train_async: false,
+            checkpoint_dir: String::new(),
+            checkpoint_every: 0,
+            resume: false,
+            snapshot_every: 1,
         }
     }
 }
@@ -143,6 +160,21 @@ impl ExperimentConfig {
         if let Some(v) = u("serve_max_wait_us") {
             self.serve_max_wait_us = v as u64;
         }
+        if let Some(v) = j.get("train_async").and_then(Json::as_bool) {
+            self.train_async = v;
+        }
+        if let Some(v) = s("checkpoint_dir") {
+            self.checkpoint_dir = v;
+        }
+        if let Some(v) = u("checkpoint_every") {
+            self.checkpoint_every = v;
+        }
+        if let Some(v) = j.get("resume").and_then(Json::as_bool) {
+            self.resume = v;
+        }
+        if let Some(v) = u("snapshot_every") {
+            self.snapshot_every = v;
+        }
     }
 
     /// Apply `--key value` CLI overrides (same keys as the JSON form).
@@ -177,6 +209,20 @@ impl ExperimentConfig {
         self.tasks_per_domain = args.get_usize("tasks-per-domain", self.tasks_per_domain)?;
         self.seed = args.get_u64("seed", self.seed)?;
         self.pipeline.seed = self.seed;
+        // async-trainer knobs: --async / --resume are flags, the rest
+        // take values (flags only switch ON — a config file's setting is
+        // not silently reverted by their absence on the command line)
+        if args.flag("async") {
+            self.train_async = true;
+        }
+        if args.flag("resume") {
+            self.resume = true;
+        }
+        if let Some(v) = args.get("checkpoint-dir") {
+            self.checkpoint_dir = v.to_string();
+        }
+        self.checkpoint_every = args.get_usize("checkpoint-every", self.checkpoint_every)?;
+        self.snapshot_every = args.get_usize("snapshot-every", self.snapshot_every)?;
         Ok(())
     }
 
@@ -218,6 +264,11 @@ impl ExperimentConfig {
             ("threads", Json::num(self.pipeline.threads as f64)),
             ("serve_batch_size", Json::num(self.serve_batch_size as f64)),
             ("serve_max_wait_us", Json::num(self.serve_max_wait_us as f64)),
+            ("train_async", Json::Bool(self.train_async)),
+            ("checkpoint_dir", Json::str(self.checkpoint_dir.clone())),
+            ("checkpoint_every", Json::num(self.checkpoint_every as f64)),
+            ("resume", Json::Bool(self.resume)),
+            ("snapshot_every", Json::num(self.snapshot_every as f64)),
         ])
     }
 }
@@ -242,6 +293,11 @@ mod tests {
         c.pipeline.threads = 6;
         c.serve_batch_size = 16;
         c.serve_max_wait_us = 750;
+        c.train_async = true;
+        c.checkpoint_dir = "ckpts".into();
+        c.checkpoint_every = 25;
+        c.resume = true;
+        c.snapshot_every = 2;
         let j = c.to_json();
         let mut c2 = ExperimentConfig::default();
         c2.apply_json(&j);
@@ -251,6 +307,11 @@ mod tests {
         assert_eq!(c2.pipeline.threads, 6);
         assert_eq!(c2.serve_batch_size, 16);
         assert_eq!(c2.serve_max_wait_us, 750);
+        assert!(c2.train_async);
+        assert_eq!(c2.checkpoint_dir, "ckpts");
+        assert_eq!(c2.checkpoint_every, 25);
+        assert!(c2.resume);
+        assert_eq!(c2.snapshot_every, 2);
     }
 
     #[test]
@@ -262,6 +323,11 @@ mod tests {
             "--threads=3",
             "--batch-size=8",
             "--max-wait-us=1500",
+            "--async",
+            "--resume",
+            "--checkpoint-dir=ck",
+            "--checkpoint-every=5",
+            "--snapshot-every=2",
         ]
         .iter()
         .map(|s| s.to_string())
@@ -275,6 +341,11 @@ mod tests {
         assert_eq!(c.pipeline.threads, 3);
         assert_eq!(c.serve_batch_size, 8);
         assert_eq!(c.serve_max_wait_us, 1500);
+        assert!(c.train_async);
+        assert!(c.resume);
+        assert_eq!(c.checkpoint_dir, "ck");
+        assert_eq!(c.checkpoint_every, 5);
+        assert_eq!(c.snapshot_every, 2);
     }
 
     #[test]

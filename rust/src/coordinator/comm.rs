@@ -19,6 +19,11 @@ pub enum CommKind {
     AssignmentBroadcast,
     /// Checkpoint/weight movement (once per training, not per step).
     WeightTransfer,
+    /// Router-snapshot broadcast: the async trainer's only inter-node
+    /// traffic. The router leader pushes the full (tiny) router parameter
+    /// set to every expert node; nodes route locally against whatever
+    /// snapshot they hold, so no per-chunk score exchange ever happens.
+    SnapshotBroadcast,
     /// DDP gradient all-reduce (baseline comparator only).
     GradAllReduce,
 }
@@ -64,6 +69,31 @@ impl CommLedger {
                 bytes_sent: own,
                 bytes_received: own * (nodes as u64 - 1),
                 step,
+            });
+        }
+    }
+
+    /// Record one router-snapshot broadcast: the publisher (node index
+    /// `nodes` — the router leader sits outside the expert-node range)
+    /// sends the full `snapshot_bytes` router parameter set to each of
+    /// `nodes` expert nodes; each node receives one copy. `version` is
+    /// the snapshot version, which doubles as the collective-round id
+    /// for [`CommLedger::rounds`].
+    pub fn record_snapshot_broadcast(&mut self, nodes: usize, snapshot_bytes: u64, version: u64) {
+        self.record(CommEvent {
+            node: nodes,
+            kind: CommKind::SnapshotBroadcast,
+            bytes_sent: snapshot_bytes * nodes as u64,
+            bytes_received: 0,
+            step: version,
+        });
+        for node in 0..nodes {
+            self.record(CommEvent {
+                node,
+                kind: CommKind::SnapshotBroadcast,
+                bytes_sent: 0,
+                bytes_received: snapshot_bytes,
+                step: version,
             });
         }
     }
@@ -182,6 +212,26 @@ mod tests {
             assert_eq!(v.bytes_received, 6000);
         }
         assert_eq!(l.rounds(CommKind::ScoreAllGather), 1);
+    }
+
+    #[test]
+    fn snapshot_broadcast_totals_exact() {
+        let mut l = CommLedger::default();
+        // two publishes of a 64-byte snapshot to 3 expert nodes
+        l.record_snapshot_broadcast(3, 64, 1);
+        l.record_snapshot_broadcast(3, 64, 2);
+        assert_eq!(l.events.len(), 2 * (3 + 1));
+        assert_eq!(l.rounds(CommKind::SnapshotBroadcast), 2);
+        let t = l.totals_per_node();
+        // publisher (node 3) sends nodes x bytes per publish, receives 0
+        assert_eq!(t[&3].bytes_sent, 2 * 3 * 64);
+        assert_eq!(t[&3].bytes_received, 0);
+        for node in 0..3 {
+            assert_eq!(t[&node].bytes_sent, 0);
+            assert_eq!(t[&node].bytes_received, 2 * 64);
+        }
+        assert_eq!(l.total_bytes(), 2 * 3 * 64);
+        assert_eq!(l.peak_node_bytes(), 2 * 3 * 64);
     }
 
     #[test]

@@ -81,6 +81,23 @@ pub fn train_routers(
     ledger: &mut CommLedger,
     log: &mut RunLog,
 ) -> Result<TrainedRouters> {
+    train_routers_hooked(engine, variant, cfg, gen, ledger, log, |_, _| Ok(()))
+}
+
+/// [`train_routers`] with a per-round observation hook: `on_round(round,
+/// routers)` runs after round `round`'s M-step (0-based), with the
+/// routers in their post-round state. The async trainer publishes router
+/// snapshots from here; the no-op hook reproduces [`train_routers`]
+/// bit-exactly. A hook error aborts training.
+pub fn train_routers_hooked(
+    engine: &Engine,
+    variant: &str,
+    cfg: &EmConfig,
+    gen: &mut SequenceGen,
+    ledger: &mut CommLedger,
+    log: &mut RunLog,
+    mut on_round: impl FnMut(usize, &[TrainState]) -> Result<()>,
+) -> Result<TrainedRouters> {
     let meta = engine.variant(variant)?.clone();
     let mut rng = Rng::new(cfg.seed);
 
@@ -160,6 +177,7 @@ pub fn train_routers(
                 );
             }
         }
+        on_round(round, &routers)?;
     }
 
     Ok(TrainedRouters {

@@ -48,6 +48,26 @@ pub fn train_expert(
     Ok(state)
 }
 
+/// Assemble the next `rows`-row training batch by cycling `cursor`
+/// through `segment` **by reference** (no token clones) — the batch
+/// discipline shared by the pipeline's expert loop and the trainer
+/// nodes' staged mode (whose resumable cursor is a `u64` so it
+/// serializes into node checkpoints).
+///
+/// `segment` must be non-empty (asserted with a clear message; both
+/// callers surface the structured "cannot train on an empty segment"
+/// error before ever reaching this).
+pub fn segment_batch<'a>(segment: &'a [Sequence], cursor: &mut u64, rows: usize) -> Vec<&'a [u32]> {
+    assert!(!segment.is_empty(), "segment_batch requires a non-empty segment");
+    let mut batch = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        let i = (*cursor % segment.len() as u64) as usize;
+        batch.push(segment[i].tokens.as_slice());
+        *cursor += 1;
+    }
+    batch
+}
+
 /// Continue training an existing state (used by FLOPs-matched baselines
 /// and the perf bench).
 pub fn train_expert_continue(
@@ -59,15 +79,10 @@ pub fn train_expert_continue(
     log: &mut RunLog,
 ) -> Result<f32> {
     anyhow::ensure!(!segment.is_empty(), "cannot train on an empty segment");
-    let mut cursor = 0usize;
+    let mut cursor = 0u64;
     let mut last = 0.0f32;
     for step in 0..cfg.steps {
-        // batch by reference into the segment — no token clones
-        let mut batch: Vec<&[u32]> = Vec::with_capacity(meta.train_batch);
-        for _ in 0..meta.train_batch {
-            batch.push(segment[cursor % segment.len()].tokens.as_slice());
-            cursor += 1;
-        }
+        let batch = segment_batch(segment, &mut cursor, meta.train_batch);
         last = state.train_step(engine, &batch, meta)?;
         if step % cfg.log_every == 0 || step + 1 == cfg.steps {
             log.scalar("loss", state.step as f64, last as f64);

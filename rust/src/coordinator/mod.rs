@@ -10,6 +10,8 @@
 //!   with admission scheduling
 //! * [`comm`] — communication ledger and §A.4 closed forms
 //! * [`pipeline`] — end-to-end orchestration (routers → shard → experts)
+//! * [`trainer`] — event-driven trainer nodes: staged (bit-exact classic
+//!   pipeline) and async (checkpointed, stale-router-snapshot) modes
 
 pub mod assignment;
 pub mod comm;
@@ -20,16 +22,22 @@ pub mod pipeline;
 pub mod scoring;
 pub mod server;
 pub mod sharding;
+pub mod trainer;
 
 pub use assignment::{argmin_assign, balanced_assign, sequential_assign, Assignment};
 pub use comm::{CommKind, CommLedger};
-pub use em::{train_routers, EmConfig, TrainedRouters};
+pub use em::{train_routers, train_routers_hooked, EmConfig, TrainedRouters};
 pub use expert::{train_expert, ExpertConfig};
 pub use inference::{
     amortized_micros, dense_perplexity, group_by_expert, response_triples, serve, serve_threaded,
     Mixture, Request, Response,
 };
-pub use pipeline::{run_pipeline, PipelineConfig, PipelineResult};
+pub use pipeline::{run_pipeline, run_pipeline_reference, PipelineConfig, PipelineResult};
+pub use trainer::{
+    run_async_nodes, run_staged_nodes, run_trainer, EngineBackend, NodeOutcome, NodeProgress,
+    NodeRunConfig, RouterSnapshot, SnapshotStore, TrainBackend, TrainMode, TrainerConfig,
+    TrainerHandle,
+};
 pub use server::{
     run_server, MixtureBackend, SchedStats, ServeBackend, ServerClient, ServerConfig,
 };

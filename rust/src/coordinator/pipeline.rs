@@ -7,6 +7,14 @@
 //! returning the [`Mixture`], the communication ledger, and the full
 //! metric log. This is what `smalltalk e2e`, the examples, and the Fig. 2
 //! benches drive.
+//!
+//! Since the async-trainer refactor, [`run_pipeline`] is a thin staged-
+//! mode wrapper over [`super::trainer::run_trainer`]: the expert stage
+//! runs as trainer nodes on the shared worker pool (gaining checkpoint/
+//! resume for free) while producing bit-identical outputs to the classic
+//! loop. The classic loop is preserved verbatim as
+//! [`run_pipeline_reference`] — the equality oracle
+//! `rust/tests/async_train.rs` asserts against.
 
 use anyhow::Result;
 
@@ -15,6 +23,7 @@ use super::em::{train_routers, EmConfig};
 use super::expert::{train_expert, ExpertConfig};
 use super::inference::Mixture;
 use super::sharding::shard_corpus;
+use super::trainer::{run_trainer, TrainerConfig};
 use crate::data::SequenceGen;
 use crate::metrics::RunLog;
 use crate::runtime::parallel::{resolve_threads, run_fallible};
@@ -69,13 +78,27 @@ pub struct PipelineResult {
     pub ledger: CommLedger,
     pub log: RunLog,
     /// Plurality-domain fraction per expert segment (specialization).
+    /// In async mode this is computed from what each node actually
+    /// trained on rather than from a leader-sharded corpus.
     pub segment_purity: Vec<f64>,
-    /// Segment sizes after sharding.
+    /// Segment sizes after sharding (async: sequences trained per node).
     pub segment_sizes: Vec<usize>,
 }
 
-/// Run Algorithm 1 end to end.
+/// Run Algorithm 1 end to end (staged orchestration, bit-identical to
+/// [`run_pipeline_reference`]).
 pub fn run_pipeline(engine: &Engine, bpe: &Bpe, cfg: &PipelineConfig) -> Result<PipelineResult> {
+    run_trainer(engine, bpe, cfg, &TrainerConfig::staged())
+}
+
+/// The classic barrier pipeline, preserved verbatim as the bit-exact
+/// reference for the staged orchestrator (see `rust/tests/async_train.rs`).
+/// New callers should use [`run_pipeline`].
+pub fn run_pipeline_reference(
+    engine: &Engine,
+    bpe: &Bpe,
+    cfg: &PipelineConfig,
+) -> Result<PipelineResult> {
     let mut ledger = CommLedger::default();
     let mut log = RunLog::new();
     let router_meta = engine.variant(&cfg.router_variant)?.clone();

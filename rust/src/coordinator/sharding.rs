@@ -5,6 +5,12 @@
 //! the mixture's only pre-expert-training collective and is recorded in
 //! the comm ledger (chunked the way §A.4 describes: scores for ~T tokens
 //! of data per exchange).
+//!
+//! This leader-side sharding is the *staged* (barrier) path. The async
+//! trainer ([`super::trainer`]) replaces it with node-local routing
+//! against broadcast router snapshots — each node keeps what routes to
+//! itself from its own stream, and no corpus-wide score all-gather ever
+//! happens.
 
 use anyhow::Result;
 

@@ -1,0 +1,1330 @@
+//! Event-driven trainer-node orchestration: the paper's "no need to
+//! talk" property applied to *training*, not just serving.
+//!
+//! The classic [`run_pipeline`](super::pipeline::run_pipeline) is three
+//! global barriers: EM finishes → a leader shards the whole expert corpus
+//! → experts start in lockstep. This module replaces that with a set of
+//! independent trainer nodes:
+//!
+//! * every expert node runs on a long-lived worker (a
+//!   [`WorkQueue`]-backed pool — the same substrate the continuous-
+//!   batching server uses), executing bounded **slices** of work and
+//!   re-queueing itself, so a straggler node delays nobody;
+//! * each node pulls fresh sequences from its **own** deterministic
+//!   [`SequenceGen`] stream and routes them **locally** against a
+//!   versioned router snapshot from the [`SnapshotStore`] — keeping the
+//!   sequences whose argmin router is itself, discarding the rest. Nodes
+//!   tolerate stale snapshots and pick refreshes up at their next
+//!   routing call, without blocking; the broadcast of a snapshot is the
+//!   mixture's *only* inter-node traffic
+//!   ([`CommKind::SnapshotBroadcast`](super::comm::CommKind));
+//! * nodes checkpoint periodically through
+//!   [`model::checkpoint`](crate::model::checkpoint): a killed node
+//!   resumes from its last checkpoint with a bit-identical continuation
+//!   (same stream position via [`StreamPos`], same optimizer state, same
+//!   not-yet-trained routed pool).
+//!
+//! **Staged mode** runs the *same* node machinery over pre-sharded
+//! segments with the routers trained up front — reproducing the classic
+//! pipeline's outputs bit-identically (it is the reference
+//! `run_pipeline` now wraps). **Async mode** overlaps router EM with
+//! expert training: the router leader (the orchestrator thread) trains
+//! routers and publishes snapshots at EM-round boundaries
+//! (`snapshot_every`), while expert nodes train continuously against
+//! whatever snapshot they last saw.
+//!
+//! # Locking order (extends the table in `runtime/engine.rs`)
+//!
+//! * `SnapshotStore.inner` (Mutex + Condvar) — held only to swap/clone
+//!   the `Arc` snapshot or to wait for the first publish; never held
+//!   across routing, training, or any other lock.
+//! * `SnapshotStore.ledger` (Mutex) — broadcast accounting; taken after
+//!   `inner` is *released* during a publish, never nested.
+//! * `WorkQueue` internals — queue mutation only (see
+//!   `runtime/parallel.rs`); never held across a node slice.
+//! * `outcomes` (Mutex) — completion slots, taken by a worker after a
+//!   node finishes, never while holding anything else.
+//! * `ErrSlot` — first-failure slot; flag checked lock-free, the slot
+//!   lock never nested under anything else.
+//!
+//! Per-node state (stream, pool, cursor, counters, log) is owned by the
+//! node object itself, which moves through the queue — exactly one
+//! worker touches it at a time, so it needs no lock at all.
+
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::comm::CommLedger;
+use super::em::{train_routers, train_routers_hooked, EmConfig};
+use super::expert::segment_batch;
+use super::inference::Mixture;
+use super::pipeline::{PipelineConfig, PipelineResult};
+use super::scoring::score_matrix_rows_threaded;
+use super::sharding::shard_corpus;
+use crate::data::{Sequence, SequenceGen, DOMAINS};
+use crate::metrics::RunLog;
+use crate::model::checkpoint::{
+    load_node_checkpoint, save_node_checkpoint, NodeCheckpoint, NodeCheckpointView,
+    NODE_MODE_ASYNC, NODE_MODE_STAGED,
+};
+use crate::runtime::parallel::{resolve_threads, WorkQueue};
+use crate::runtime::{Engine, TrainState, VariantMeta};
+use crate::tokenizer::Bpe;
+
+// -------------------------------------------------------------------------
+// router snapshots
+// -------------------------------------------------------------------------
+
+/// One immutable, versioned copy of the router set — what an expert node
+/// routes against. Nodes hold whatever version they last fetched; routing
+/// under an older version than the store's latest is *expected* (that is
+/// the "almost asynchronous" relaxation) and converges as nodes pick up
+/// refreshes at their next routing call.
+pub struct RouterSnapshot {
+    /// Monotonic publish counter (1-based).
+    pub version: u64,
+    /// EM rounds completed when this snapshot was taken.
+    pub em_round: usize,
+    pub routers: Vec<TrainState>,
+}
+
+struct StoreInner {
+    snap: Option<Arc<RouterSnapshot>>,
+    closed: bool,
+}
+
+/// `Arc`-swapped registry of the latest router snapshot plus the comm
+/// ledger of its broadcasts. Readers clone the `Arc` under a
+/// momentarily-held lock (no blocking on publishers mid-routing);
+/// [`SnapshotStore::wait_current`] blocks only before the *first*
+/// publish. Closing the store (automatic when the orchestrator's router
+/// driver returns) wakes any first-publish waiters; an already-published
+/// snapshot keeps serving after close.
+pub struct SnapshotStore {
+    subscribers: usize,
+    inner: Mutex<StoreInner>,
+    cv: Condvar,
+    ledger: Mutex<CommLedger>,
+}
+
+impl SnapshotStore {
+    /// A store broadcasting to `subscribers` expert nodes.
+    pub fn new(subscribers: usize) -> Self {
+        SnapshotStore {
+            subscribers,
+            inner: Mutex::new(StoreInner {
+                snap: None,
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            ledger: Mutex::new(CommLedger::default()),
+        }
+    }
+
+    pub fn subscribers(&self) -> usize {
+        self.subscribers
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, StoreInner> {
+        self.inner.lock().expect("snapshot store poisoned")
+    }
+
+    /// Publish a new snapshot, returning its version. Records one
+    /// [`SnapshotBroadcast`](super::comm::CommKind::SnapshotBroadcast):
+    /// the full router parameter set (f32) to every subscriber.
+    pub fn publish(&self, routers: Vec<TrainState>, em_round: usize) -> u64 {
+        let bytes: u64 = routers.iter().map(|r| r.params.len() as u64 * 4).sum();
+        let mut g = self.lock();
+        let version = g.snap.as_ref().map(|s| s.version).unwrap_or(0) + 1;
+        g.snap = Some(Arc::new(RouterSnapshot {
+            version,
+            em_round,
+            routers,
+        }));
+        drop(g);
+        self.cv.notify_all();
+        self.ledger
+            .lock()
+            .expect("snapshot ledger poisoned")
+            .record_snapshot_broadcast(self.subscribers, bytes, version);
+        version
+    }
+
+    /// The latest snapshot, if any was ever published. Never blocks.
+    pub fn current(&self) -> Option<Arc<RouterSnapshot>> {
+        self.lock().snap.clone()
+    }
+
+    /// Latest published version (0 before the first publish).
+    pub fn version(&self) -> u64 {
+        self.lock().snap.as_ref().map(|s| s.version).unwrap_or(0)
+    }
+
+    /// The latest snapshot, blocking until the first publish. Errors if
+    /// the store is closed while still empty (the router driver exited
+    /// without ever publishing).
+    pub fn wait_current(&self) -> Result<Arc<RouterSnapshot>> {
+        let mut g = self.lock();
+        loop {
+            if let Some(s) = &g.snap {
+                return Ok(s.clone());
+            }
+            if g.closed {
+                bail!("snapshot store closed before any router snapshot was published");
+            }
+            g = self.cv.wait(g).expect("snapshot store poisoned");
+        }
+    }
+
+    /// Close the store: wakes first-publish waiters. An existing snapshot
+    /// keeps serving; only an empty closed store makes
+    /// [`wait_current`](SnapshotStore::wait_current) fail.
+    pub fn close(&self) {
+        self.lock().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Drain the broadcast ledger (the async run's full inter-node
+    /// communication record).
+    pub fn take_ledger(&self) -> CommLedger {
+        std::mem::take(&mut *self.ledger.lock().expect("snapshot ledger poisoned"))
+    }
+}
+
+struct CloseStoreOnDrop<'a>(&'a SnapshotStore);
+
+impl Drop for CloseStoreOnDrop<'_> {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+// -------------------------------------------------------------------------
+// the model side, abstracted (testable without compiled artifacts)
+// -------------------------------------------------------------------------
+
+/// What a trainer node needs from the model side. The production
+/// implementation is [`EngineBackend`]; tier-1 tests substitute
+/// deterministic stubs so the orchestration (slicing, local routing,
+/// checkpoint/resume, comm accounting) is testable without compiled
+/// artifacts — the same pattern as the server's `ServeBackend`.
+pub trait TrainBackend: Sync {
+    /// Rows per training batch.
+    fn train_batch_rows(&self) -> usize;
+    /// Tokens consumed per training step (the `tokens` log series x-axis).
+    fn tokens_per_step(&self) -> usize;
+    /// Fresh expert state for `node` (deterministic per seed).
+    fn init_expert(&self, node: usize, seed: u64) -> Result<TrainState>;
+    /// One SGD step of `state` on `batch`; returns the batch loss.
+    fn train_step(&self, node: usize, state: &mut TrainState, batch: &[&[u32]]) -> Result<f32>;
+    /// Local routing: the winning expert index per row under `snap`'s
+    /// routers. Runs *inside* one node's worker — implementations should
+    /// not fan out across threads of their own.
+    fn route_local(&self, snap: &RouterSnapshot, rows: &[&[u32]]) -> Result<Vec<usize>>;
+}
+
+/// The real backend: engine-executed training steps and argmin
+/// prefix-NLL routing (Eq. 4) under the snapshot's routers.
+pub struct EngineBackend<'a> {
+    pub engine: &'a Engine,
+    pub router_meta: VariantMeta,
+    pub expert_meta: VariantMeta,
+    pub expert_variant: String,
+    /// Routing prefix length M (training-time).
+    pub prefix_len: usize,
+}
+
+impl TrainBackend for EngineBackend<'_> {
+    fn train_batch_rows(&self) -> usize {
+        self.expert_meta.train_batch
+    }
+
+    fn tokens_per_step(&self) -> usize {
+        self.expert_meta.tokens_per_step()
+    }
+
+    fn init_expert(&self, _node: usize, seed: u64) -> Result<TrainState> {
+        TrainState::init(self.engine, &self.expert_variant, seed)
+    }
+
+    fn train_step(&self, _node: usize, state: &mut TrainState, batch: &[&[u32]]) -> Result<f32> {
+        state.train_step(self.engine, batch, &self.expert_meta)
+    }
+
+    fn route_local(&self, snap: &RouterSnapshot, rows: &[&[u32]]) -> Result<Vec<usize>> {
+        // one thread: the node *is* the unit of parallelism
+        let nll = score_matrix_rows_threaded(
+            self.engine,
+            &snap.routers,
+            &self.router_meta,
+            rows,
+            self.prefix_len,
+            1,
+        )?;
+        Ok(nll
+            .iter()
+            .map(|row| {
+                let mut best = 0usize;
+                for (e, &v) in row.iter().enumerate() {
+                    if v < row[best] {
+                        best = e;
+                    }
+                }
+                best
+            })
+            .collect())
+    }
+}
+
+// -------------------------------------------------------------------------
+// node run configuration / progress / outcomes
+// -------------------------------------------------------------------------
+
+/// Knobs shared by both orchestration modes (async-only fields are
+/// ignored by staged runs).
+#[derive(Clone, Debug)]
+pub struct NodeRunConfig {
+    /// SGD steps per node.
+    pub steps_per_node: usize,
+    /// Log the loss every `log_every` steps (and on the final step).
+    pub log_every: usize,
+    /// Checkpoint every `checkpoint_every` steps (0 = only the final
+    /// checkpoint, which is always written when a directory is set).
+    pub checkpoint_every: usize,
+    /// Where node checkpoints live (`node{e}.ckpt`); `None` disables
+    /// checkpointing entirely.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Resume each node from its checkpoint if one exists.
+    pub resume: bool,
+    /// Worker threads (0 = auto); nodes multiplex over fewer workers.
+    pub threads: usize,
+    /// Async: sequences drawn + locally routed per routing call
+    /// (0 = the training batch size).
+    pub route_chunk: usize,
+    /// Async: max sequences a node may draw from its stream — the
+    /// starvation valve for routers that assign a node (almost) nothing.
+    /// 0 = auto: `2 × steps × batch × n_nodes` (twice the expected need
+    /// at a uniform 1/E keep rate). Deterministic, so resume-exactness
+    /// is unaffected.
+    pub draw_budget: u64,
+}
+
+impl Default for NodeRunConfig {
+    fn default() -> Self {
+        NodeRunConfig {
+            steps_per_node: 0,
+            log_every: 10,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            resume: false,
+            threads: 0,
+            route_chunk: 0,
+            draw_budget: 0,
+        }
+    }
+}
+
+/// Lock-free per-node progress counters, readable by the router driver
+/// through [`TrainerHandle`] while nodes run.
+#[derive(Default)]
+pub struct NodeProgress {
+    steps: AtomicUsize,
+    drawn: AtomicU64,
+    kept: AtomicU64,
+    snapshot_version: AtomicU64,
+}
+
+impl NodeProgress {
+    pub fn steps(&self) -> usize {
+        self.steps.load(Ordering::Relaxed)
+    }
+    pub fn drawn(&self) -> u64 {
+        self.drawn.load(Ordering::Relaxed)
+    }
+    pub fn kept(&self) -> u64 {
+        self.kept.load(Ordering::Relaxed)
+    }
+    pub fn snapshot_version(&self) -> u64 {
+        self.snapshot_version.load(Ordering::Relaxed)
+    }
+}
+
+/// What the orchestration driver (the router trainer) can observe while
+/// expert nodes run: the snapshot store, live per-node progress, and
+/// whether the run has already failed (so a polling driver can stop
+/// waiting for progress that will never come).
+pub struct TrainerHandle<'a> {
+    store: Option<&'a SnapshotStore>,
+    progress: &'a [NodeProgress],
+    failed: &'a AtomicBool,
+}
+
+impl TrainerHandle<'_> {
+    pub fn n_nodes(&self) -> usize {
+        self.progress.len()
+    }
+
+    pub fn store(&self) -> Option<&SnapshotStore> {
+        self.store
+    }
+
+    pub fn node(&self, node: usize) -> &NodeProgress {
+        &self.progress[node]
+    }
+
+    /// Training steps completed across all nodes so far.
+    pub fn total_steps_done(&self) -> usize {
+        self.progress.iter().map(NodeProgress::steps).sum()
+    }
+
+    /// A node (or the driver itself, on a previous poll) already failed;
+    /// the run will return that error once the pool drains.
+    pub fn failed(&self) -> bool {
+        self.failed.load(Ordering::Relaxed)
+    }
+}
+
+/// Everything one finished node produced.
+pub struct NodeOutcome {
+    pub node: usize,
+    pub state: TrainState,
+    pub log: RunLog,
+    pub steps_done: usize,
+    /// Sequences drawn from the node's stream (0 in staged mode).
+    pub drawn: u64,
+    /// Sequences the node routed to itself (0 in staged mode).
+    pub kept: u64,
+    /// Ground-truth domain histogram of the sequences actually trained
+    /// on (async mode; empty-equivalent zeros in staged mode).
+    pub domain_counts: Vec<u64>,
+    /// Last snapshot version the node routed under.
+    pub snapshot_version: u64,
+    /// The node stopped early because its draw budget ran dry before the
+    /// step budget was met.
+    pub exhausted: bool,
+}
+
+impl NodeOutcome {
+    /// Sequences this node trained on.
+    pub fn trained_sequences(&self) -> u64 {
+        self.domain_counts.iter().sum()
+    }
+
+    /// Plurality-domain fraction of the trained-on sequences (the async
+    /// analogue of the staged segments' purity diagnostic).
+    pub fn purity(&self) -> f64 {
+        let total: u64 = self.domain_counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let max = self.domain_counts.iter().copied().max().unwrap_or(0);
+        max as f64 / total as f64
+    }
+}
+
+// -------------------------------------------------------------------------
+// the node itself
+// -------------------------------------------------------------------------
+
+/// Steps per scheduling slice: a node yields its worker after at most
+/// this many training steps so siblings multiplex fairly over a smaller
+/// worker pool. Pure scheduling granularity — results are identical at
+/// any value.
+const SLICE_STEPS: usize = 8;
+
+enum Source<'env> {
+    /// Staged mode: a pre-sharded segment, cycled by cursor (the classic
+    /// pipeline's batch discipline — bit-identical to `train_expert`).
+    Segment { seqs: Vec<Sequence>, cursor: u64 },
+    /// Async mode: the node's own fresh-sequence stream plus the pool of
+    /// sequences already routed to this node but not yet trained on.
+    Stream {
+        gen: SequenceGen<'env>,
+        pool: VecDeque<Sequence>,
+        route_chunk: usize,
+        draw_budget: u64,
+    },
+}
+
+struct Node<'env> {
+    idx: usize,
+    seed: u64,
+    state: Option<TrainState>,
+    source: Source<'env>,
+    steps_done: usize,
+    drawn: u64,
+    kept: u64,
+    domain_counts: Vec<u64>,
+    snapshot_version: u64,
+    log: RunLog,
+    log_every: usize,
+    finished: bool,
+    exhausted: bool,
+    last_saved: Option<usize>,
+}
+
+fn ckpt_path(dir: &Path, idx: usize) -> PathBuf {
+    dir.join(format!("node{idx}.ckpt"))
+}
+
+impl<'env> Node<'env> {
+    fn staged(idx: usize, seed: u64, segment: Vec<Sequence>, cfg: &NodeRunConfig) -> Self {
+        Node {
+            idx,
+            seed,
+            state: None,
+            source: Source::Segment {
+                seqs: segment,
+                cursor: 0,
+            },
+            steps_done: 0,
+            drawn: 0,
+            kept: 0,
+            domain_counts: vec![0; DOMAINS],
+            snapshot_version: 0,
+            log: RunLog::new(),
+            log_every: cfg.log_every.max(1),
+            finished: false,
+            exhausted: false,
+            last_saved: None,
+        }
+    }
+
+    fn stream(
+        idx: usize,
+        seed: u64,
+        gen: SequenceGen<'env>,
+        route_chunk: usize,
+        draw_budget: u64,
+        cfg: &NodeRunConfig,
+    ) -> Self {
+        Node {
+            idx,
+            seed,
+            state: None,
+            source: Source::Stream {
+                gen,
+                pool: VecDeque::new(),
+                route_chunk: route_chunk.max(1),
+                draw_budget,
+            },
+            steps_done: 0,
+            drawn: 0,
+            kept: 0,
+            domain_counts: vec![0; DOMAINS],
+            snapshot_version: 0,
+            log: RunLog::new(),
+            log_every: cfg.log_every.max(1),
+            finished: false,
+            exhausted: false,
+            last_saved: None,
+        }
+    }
+
+    fn publish_progress(&self, p: &NodeProgress) {
+        p.steps.store(self.steps_done, Ordering::Relaxed);
+        p.drawn.store(self.drawn, Ordering::Relaxed);
+        p.kept.store(self.kept, Ordering::Relaxed);
+        p.snapshot_version
+            .store(self.snapshot_version, Ordering::Relaxed);
+    }
+
+    fn try_resume(&mut self, cfg: &NodeRunConfig) -> Result<()> {
+        let Some(dir) = &cfg.checkpoint_dir else {
+            return Ok(());
+        };
+        let path = ckpt_path(dir, self.idx);
+        if !path.exists() {
+            return Ok(());
+        }
+        let ck = load_node_checkpoint(&path)
+            .with_context(|| format!("resuming node {} from {}", self.idx, path.display()))?;
+        let NodeCheckpoint {
+            node,
+            mode,
+            steps_done,
+            cursor,
+            stream,
+            pool,
+            domain_counts,
+            drawn,
+            kept,
+            snapshot_version,
+            state,
+        } = ck;
+        ensure!(
+            node as usize == self.idx,
+            "checkpoint {} belongs to node {node}, not node {}",
+            path.display(),
+            self.idx
+        );
+        let expect_mode = match self.source {
+            Source::Segment { .. } => NODE_MODE_STAGED,
+            Source::Stream { .. } => NODE_MODE_ASYNC,
+        };
+        ensure!(
+            mode == expect_mode,
+            "checkpoint {} was written in mode {mode}, run is mode {expect_mode} \
+             (staged=0, async=1)",
+            path.display()
+        );
+        match &mut self.source {
+            Source::Segment { cursor: c, .. } => *c = cursor,
+            Source::Stream { gen, pool: p, .. } => {
+                let pos = stream.with_context(|| {
+                    format!("async checkpoint {} missing its stream position", path.display())
+                })?;
+                gen.seek(&pos);
+                *p = pool.into_iter().collect();
+            }
+        }
+        ensure!(
+            domain_counts.len() == self.domain_counts.len(),
+            "checkpoint domain histogram has {} buckets, corpus has {}",
+            domain_counts.len(),
+            self.domain_counts.len()
+        );
+        self.steps_done = steps_done as usize;
+        self.drawn = drawn;
+        self.kept = kept;
+        self.snapshot_version = snapshot_version;
+        self.domain_counts = domain_counts;
+        self.state = Some(state);
+        self.last_saved = Some(self.steps_done);
+        Ok(())
+    }
+
+    fn save_checkpoint(&mut self, cfg: &NodeRunConfig) -> Result<()> {
+        let Some(dir) = &cfg.checkpoint_dir else {
+            return Ok(());
+        };
+        let state = self
+            .state
+            .as_ref()
+            .expect("state initialized before any checkpoint");
+        let (mode, cursor, stream, pool): (u8, u64, _, &[Sequence]) = match &mut self.source {
+            Source::Segment { cursor, .. } => (NODE_MODE_STAGED, *cursor, None, &[]),
+            Source::Stream { gen, pool, .. } => {
+                // make_contiguous: a borrowed view of the pool, no token
+                // clones per checkpoint
+                (NODE_MODE_ASYNC, 0, Some(gen.pos()), &*pool.make_contiguous())
+            }
+        };
+        let view = NodeCheckpointView {
+            node: self.idx as u32,
+            mode,
+            steps_done: self.steps_done as u64,
+            cursor,
+            stream,
+            pool,
+            domain_counts: &self.domain_counts,
+            drawn: self.drawn,
+            kept: self.kept,
+            snapshot_version: self.snapshot_version,
+            state,
+        };
+        save_node_checkpoint(&view, ckpt_path(dir, self.idx))
+            .with_context(|| format!("checkpointing node {}", self.idx))?;
+        self.last_saved = Some(self.steps_done);
+        Ok(())
+    }
+
+    /// Run up to [`SLICE_STEPS`] training steps, then yield the worker.
+    fn run_slice<B: TrainBackend>(
+        &mut self,
+        backend: &B,
+        store: Option<&SnapshotStore>,
+        cfg: &NodeRunConfig,
+        n_nodes: usize,
+        progress: &NodeProgress,
+    ) -> Result<()> {
+        if let Source::Segment { seqs, .. } = &self.source {
+            // same contract (and message) as the classic expert trainer
+            ensure!(!seqs.is_empty(), "cannot train on an empty segment");
+        }
+        if self.state.is_none() {
+            self.state = Some(backend.init_expert(self.idx, self.seed)?);
+        }
+        let bs = backend.train_batch_rows().max(1);
+        let mut slice = 0usize;
+        while !self.finished && self.steps_done < cfg.steps_per_node && slice < SLICE_STEPS {
+            let loss = match &mut self.source {
+                Source::Segment { seqs, cursor } => {
+                    let batch = segment_batch(seqs, cursor, bs);
+                    let state = self.state.as_mut().expect("initialized above");
+                    backend.train_step(self.idx, state, &batch)?
+                }
+                Source::Stream {
+                    gen,
+                    pool,
+                    route_chunk,
+                    draw_budget,
+                } => {
+                    // fill the pool to one batch by drawing + locally
+                    // routing chunks of the node's own stream
+                    while pool.len() < bs && self.drawn < *draw_budget {
+                        let want = (*route_chunk).min((*draw_budget - self.drawn) as usize).max(1);
+                        let chunk = gen.batch(want);
+                        self.drawn += chunk.len() as u64;
+                        let snap = store
+                            .expect("stream nodes always run with a snapshot store")
+                            .wait_current()?;
+                        if snap.version != self.snapshot_version {
+                            self.snapshot_version = snap.version;
+                            self.log.scalar(
+                                "snapshot_version",
+                                self.steps_done as f64,
+                                snap.version as f64,
+                            );
+                        }
+                        let rows: Vec<&[u32]> =
+                            chunk.iter().map(|s| s.tokens.as_slice()).collect();
+                        let routes = backend.route_local(&snap, &rows)?;
+                        ensure!(
+                            routes.len() == rows.len(),
+                            "backend routed {} of {} rows",
+                            routes.len(),
+                            rows.len()
+                        );
+                        drop(rows);
+                        for (seq, &e) in chunk.into_iter().zip(&routes) {
+                            ensure!(
+                                e < n_nodes,
+                                "route index {e} out of range for {n_nodes} expert nodes"
+                            );
+                            if e == self.idx {
+                                pool.push_back(seq);
+                                self.kept += 1;
+                            }
+                        }
+                        progress.drawn.store(self.drawn, Ordering::Relaxed);
+                        progress.kept.store(self.kept, Ordering::Relaxed);
+                        progress
+                            .snapshot_version
+                            .store(self.snapshot_version, Ordering::Relaxed);
+                    }
+                    if pool.len() < bs {
+                        // draw budget dry before the step budget: finish
+                        // early (deterministically — the budget is a
+                        // draw count, not a clock)
+                        self.exhausted = true;
+                        break;
+                    }
+                    let batch_seqs: Vec<Sequence> = pool.drain(..bs).collect();
+                    let rows: Vec<&[u32]> =
+                        batch_seqs.iter().map(|s| s.tokens.as_slice()).collect();
+                    let state = self.state.as_mut().expect("initialized above");
+                    let loss = backend.train_step(self.idx, state, &rows)?;
+                    drop(rows);
+                    for s in &batch_seqs {
+                        if let Some(c) = self.domain_counts.get_mut(s.domain) {
+                            *c += 1;
+                        }
+                    }
+                    loss
+                }
+            };
+            self.steps_done += 1;
+            progress.steps.store(self.steps_done, Ordering::Relaxed);
+            let step0 = self.steps_done - 1;
+            if step0 % self.log_every == 0 || self.steps_done == cfg.steps_per_node {
+                let st = self.state.as_ref().expect("initialized above");
+                self.log.scalar("loss", st.step as f64, loss as f64);
+                self.log.scalar(
+                    "tokens",
+                    (st.step as usize * backend.tokens_per_step()) as f64,
+                    loss as f64,
+                );
+            }
+            if cfg.checkpoint_every > 0 && self.steps_done % cfg.checkpoint_every == 0 {
+                self.save_checkpoint(cfg)?;
+            }
+            slice += 1;
+        }
+        if self.steps_done >= cfg.steps_per_node || self.exhausted {
+            if self.exhausted && !self.finished {
+                self.log
+                    .scalar("stream_exhausted", self.steps_done as f64, 1.0);
+            }
+            self.finished = true;
+            if cfg.checkpoint_dir.is_some() && self.last_saved != Some(self.steps_done) {
+                self.save_checkpoint(cfg)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn into_outcome(self) -> NodeOutcome {
+        NodeOutcome {
+            node: self.idx,
+            state: self.state.expect("finished nodes are initialized"),
+            log: self.log,
+            steps_done: self.steps_done,
+            drawn: self.drawn,
+            kept: self.kept,
+            domain_counts: self.domain_counts,
+            snapshot_version: self.snapshot_version,
+            exhausted: self.exhausted,
+        }
+    }
+}
+
+// -------------------------------------------------------------------------
+// the worker pool
+// -------------------------------------------------------------------------
+
+/// First-failure slot (flag checked lock-free on hot paths).
+#[derive(Default)]
+struct ErrSlot {
+    set: AtomicBool,
+    err: Mutex<Option<anyhow::Error>>,
+}
+
+impl ErrSlot {
+    fn is_set(&self) -> bool {
+        self.set.load(Ordering::Relaxed)
+    }
+
+    fn record(&self, e: anyhow::Error) {
+        let mut slot = self.err.lock().expect("error slot poisoned");
+        if slot.is_none() {
+            *slot = Some(e);
+        }
+        self.set.store(true, Ordering::Relaxed);
+    }
+
+    fn take(&self) -> Option<anyhow::Error> {
+        self.err.lock().expect("error slot poisoned").take()
+    }
+}
+
+/// A node leaves the run (finished, errored, or aborted): close the
+/// queue once the last one is accounted for, releasing the workers.
+fn retire_node(remaining: &AtomicUsize, queue: &WorkQueue<Node<'_>>) {
+    if remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+        queue.close();
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn node_worker<'env, B: TrainBackend>(
+    backend: &B,
+    store: Option<&SnapshotStore>,
+    cfg: &NodeRunConfig,
+    queue: &WorkQueue<Node<'env>>,
+    outcomes: &Mutex<Vec<Option<NodeOutcome>>>,
+    progress: &[NodeProgress],
+    error: &ErrSlot,
+    remaining: &AtomicUsize,
+) {
+    while let Some(mut node) = queue.pop() {
+        if error.is_set() {
+            // shutting down: the node keeps its last checkpoint
+            retire_node(remaining, queue);
+            continue;
+        }
+        let idx = node.idx;
+        match node.run_slice(backend, store, cfg, progress.len(), &progress[idx]) {
+            Err(e) => {
+                error.record(e.context(format!("trainer node {idx}")));
+                if let Some(st) = store {
+                    st.close(); // wake any first-publish waiter
+                }
+                retire_node(remaining, queue);
+            }
+            Ok(()) => {
+                if node.finished {
+                    outcomes.lock().expect("outcomes poisoned")[idx] = Some(node.into_outcome());
+                    retire_node(remaining, queue);
+                } else if error.is_set() || !queue.push(node) {
+                    retire_node(remaining, queue);
+                }
+            }
+        }
+    }
+}
+
+fn run_nodes_inner<'env, B, R, F>(
+    backend: &B,
+    store: Option<&SnapshotStore>,
+    mut nodes: Vec<Node<'env>>,
+    cfg: &NodeRunConfig,
+    driver: F,
+) -> Result<(Vec<NodeOutcome>, R)>
+where
+    B: TrainBackend,
+    F: FnOnce(&TrainerHandle<'_>) -> Result<R>,
+{
+    let n = nodes.len();
+    if cfg.resume {
+        for node in &mut nodes {
+            node.try_resume(cfg)?;
+        }
+    }
+    let progress: Vec<NodeProgress> = (0..n).map(|_| NodeProgress::default()).collect();
+    for node in &nodes {
+        node.publish_progress(&progress[node.idx]);
+    }
+    let queue: WorkQueue<Node<'env>> = WorkQueue::new();
+    let outcomes: Mutex<Vec<Option<NodeOutcome>>> = Mutex::new((0..n).map(|_| None).collect());
+    let error = ErrSlot::default();
+    let remaining = AtomicUsize::new(n);
+    let workers = resolve_threads(cfg.threads).max(1).min(n.max(1));
+    if n == 0 {
+        queue.close();
+    }
+
+    let driver_out = std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| {
+                node_worker(
+                    backend, store, cfg, &queue, &outcomes, &progress, &error, &remaining,
+                )
+            });
+        }
+        queue.push_all(nodes);
+        // the store must not outlive the router driver un-closed: a node
+        // waiting for a first publish that will never come has to wake
+        let _close_store = store.map(CloseStoreOnDrop);
+        let handle = TrainerHandle {
+            store,
+            progress: &progress,
+            failed: &error.set,
+        };
+        match driver(&handle) {
+            Ok(r) => Some(r),
+            Err(e) => {
+                error.record(e.context("router driver"));
+                None
+            }
+        }
+    });
+
+    if let Some(e) = error.take() {
+        return Err(e);
+    }
+    let driver_out = driver_out.expect("driver result present when no error was recorded");
+    let slots = outcomes.into_inner().expect("outcomes poisoned");
+    let mut out = Vec::with_capacity(n);
+    for (i, slot) in slots.into_iter().enumerate() {
+        out.push(slot.ok_or_else(|| anyhow!("node {i} finished without an outcome"))?);
+    }
+    Ok((out, driver_out))
+}
+
+/// Staged mode: run each `(seed, segment)` job as a node over the worker
+/// pool. Per-node trajectories depend only on their own seed + segment,
+/// so outcomes are bit-identical at any worker count — and identical to
+/// the classic sequential expert loop.
+pub fn run_staged_nodes<B: TrainBackend>(
+    backend: &B,
+    jobs: Vec<(u64, Vec<Sequence>)>,
+    cfg: &NodeRunConfig,
+) -> Result<Vec<NodeOutcome>> {
+    let nodes: Vec<Node<'static>> = jobs
+        .into_iter()
+        .enumerate()
+        .map(|(e, (seed, segment))| Node::staged(e, seed, segment, cfg))
+        .collect();
+    let (outcomes, ()) = run_nodes_inner(backend, None, nodes, cfg, |_| Ok(()))?;
+    Ok(outcomes)
+}
+
+/// Async mode: every `(seed, stream)` job becomes an independent trainer
+/// node that draws from its own stream and routes locally against
+/// `store`'s latest snapshot; `driver` runs on the calling thread (the
+/// router leader) and publishes snapshots while nodes train. Returns the
+/// node outcomes plus the driver's result.
+pub fn run_async_nodes<'env, B, R, F>(
+    backend: &B,
+    store: &SnapshotStore,
+    jobs: Vec<(u64, SequenceGen<'env>)>,
+    cfg: &NodeRunConfig,
+    driver: F,
+) -> Result<(Vec<NodeOutcome>, R)>
+where
+    B: TrainBackend,
+    F: FnOnce(&TrainerHandle<'_>) -> Result<R>,
+{
+    let n = jobs.len();
+    let bs = backend.train_batch_rows().max(1);
+    let auto = (cfg.steps_per_node as u64)
+        .saturating_mul(bs as u64)
+        .saturating_mul(n.max(1) as u64)
+        .saturating_mul(2);
+    let draw_budget = if cfg.draw_budget > 0 {
+        cfg.draw_budget
+    } else {
+        auto.max(1)
+    };
+    let route_chunk = if cfg.route_chunk > 0 { cfg.route_chunk } else { bs };
+    let nodes: Vec<Node<'env>> = jobs
+        .into_iter()
+        .enumerate()
+        .map(|(e, (seed, gen))| Node::stream(e, seed, gen, route_chunk, draw_budget, cfg))
+        .collect();
+    run_nodes_inner(backend, Some(store), nodes, cfg, driver)
+}
+
+// -------------------------------------------------------------------------
+// production orchestration
+// -------------------------------------------------------------------------
+
+/// Which orchestration the trainer runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainMode {
+    /// Router EM → leader-sharded corpus → node-pool expert training.
+    /// Bit-identical to the classic `run_pipeline` (it is its
+    /// implementation now); snapshots refresh only at the EM/shard
+    /// boundary, i.e. never during expert training.
+    Staged,
+    /// Expert nodes start immediately and train continuously against
+    /// versioned router snapshots published at EM-round boundaries; no
+    /// global barrier, no corpus-wide score all-gather — snapshot
+    /// broadcasts are the only inter-node traffic.
+    Async,
+}
+
+/// Orchestrator configuration on top of a [`PipelineConfig`].
+#[derive(Clone, Debug)]
+pub struct TrainerConfig {
+    pub mode: TrainMode,
+    /// Node-checkpoint directory (`node{e}.ckpt`); `None` disables.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Checkpoint every N steps (0 = final checkpoint only).
+    pub checkpoint_every: usize,
+    /// Resume nodes from existing checkpoints. Router EM and (in staged
+    /// mode) the sharding are deterministically re-derived; only the
+    /// expensive expert training resumes mid-run.
+    pub resume: bool,
+    /// Async: publish a router snapshot every N EM rounds (the final
+    /// round always publishes; 0 behaves as 1).
+    pub snapshot_every: usize,
+    /// Async: sequences per local routing call (0 = router prefix batch).
+    pub route_chunk: usize,
+    /// Async: per-node stream draw cap (0 = auto; see
+    /// [`NodeRunConfig::draw_budget`]).
+    pub draw_budget: u64,
+}
+
+impl TrainerConfig {
+    pub fn staged() -> Self {
+        TrainerConfig {
+            mode: TrainMode::Staged,
+            checkpoint_dir: None,
+            checkpoint_every: 0,
+            resume: false,
+            snapshot_every: 1,
+            route_chunk: 0,
+            draw_budget: 0,
+        }
+    }
+
+    pub fn asynchronous() -> Self {
+        TrainerConfig {
+            mode: TrainMode::Async,
+            ..TrainerConfig::staged()
+        }
+    }
+}
+
+/// Run mixture training under either orchestration mode. Staged mode
+/// reproduces the classic `run_pipeline` outputs bit-identically; async
+/// mode returns the same [`PipelineResult`] shape with the ledger
+/// holding snapshot broadcasts instead of score all-gathers, and the
+/// segment size/purity diagnostics computed from what each node actually
+/// trained on.
+pub fn run_trainer(
+    engine: &Engine,
+    bpe: &Bpe,
+    p: &PipelineConfig,
+    t: &TrainerConfig,
+) -> Result<PipelineResult> {
+    let router_meta = engine.variant(&p.router_variant)?.clone();
+    let expert_meta = engine.variant(&p.expert_variant)?.clone();
+    ensure!(
+        router_meta.seq_len == expert_meta.seq_len,
+        "router/expert seq_len mismatch"
+    );
+    let backend = EngineBackend {
+        engine,
+        router_meta: router_meta.clone(),
+        expert_meta: expert_meta.clone(),
+        expert_variant: p.expert_variant.clone(),
+        prefix_len: p.prefix_len,
+    };
+    let em = EmConfig {
+        n_routers: p.n_experts,
+        rounds: p.em_rounds,
+        chunk_size: p.em_chunk,
+        steps_per_round: p.em_steps_per_round,
+        prefix_len: p.prefix_len,
+        seed: p.seed,
+        threads: p.threads,
+    };
+    let run_cfg = NodeRunConfig {
+        steps_per_node: p.expert_steps,
+        log_every: 10,
+        checkpoint_every: t.checkpoint_every,
+        checkpoint_dir: t.checkpoint_dir.clone(),
+        resume: t.resume,
+        threads: p.threads,
+        route_chunk: if t.route_chunk > 0 {
+            t.route_chunk
+        } else {
+            router_meta.prefix_batch.max(1)
+        },
+        draw_budget: t.draw_budget,
+    };
+    match t.mode {
+        TrainMode::Staged => {
+            run_trainer_staged(engine, bpe, p, &em, &run_cfg, &backend, expert_meta)
+        }
+        TrainMode::Async => run_trainer_async(
+            engine,
+            bpe,
+            p,
+            t,
+            &em,
+            &run_cfg,
+            &backend,
+            router_meta,
+            expert_meta,
+        ),
+    }
+}
+
+fn engine_transfer_scalars(engine: &Engine, log: &mut RunLog) {
+    // Transfer accounting: engine-lifetime totals at completion, so run
+    // records show what the device-resident buffer cache saved.
+    let stats = engine.stats();
+    log.scalar("engine/h2d_bytes", 0.0, stats.h2d_bytes as f64);
+    log.scalar("engine/d2h_bytes", 0.0, stats.d2h_bytes as f64);
+    log.scalar("engine/h2d_bytes_avoided", 0.0, stats.h2d_bytes_avoided as f64);
+    log.scalar("engine/uploads_avoided", 0.0, stats.uploads_avoided as f64);
+    log.scalar("engine/param_uploads", 0.0, stats.param_uploads as f64);
+}
+
+fn run_trainer_staged(
+    engine: &Engine,
+    bpe: &Bpe,
+    p: &PipelineConfig,
+    em: &EmConfig,
+    run_cfg: &NodeRunConfig,
+    backend: &EngineBackend,
+    expert_meta: VariantMeta,
+) -> Result<PipelineResult> {
+    let mut ledger = CommLedger::default();
+    let mut log = RunLog::new();
+
+    // Stage 1: routers (Alg. 1 lines 1-10).
+    let mut router_gen = SequenceGen::new(bpe, backend.router_meta.seq_len, p.seed ^ 0x52_0000);
+    let trained = train_routers(
+        engine,
+        &p.router_variant,
+        em,
+        &mut router_gen,
+        &mut ledger,
+        &mut log,
+    )?;
+
+    // Stage 2: shard the expert corpus (lines 12-13); single-epoch data,
+    // so the corpus at least covers every expert's step budget.
+    let needed = p.n_experts * p.expert_steps * expert_meta.train_batch;
+    let n_shard = p.shard_sequences.max(needed);
+    let threads = resolve_threads(p.threads);
+    let mut shard_gen = SequenceGen::new(bpe, expert_meta.seq_len, p.seed ^ 0x5AD);
+    let shards = shard_corpus(
+        engine,
+        &trained.routers,
+        &trained.meta,
+        &mut shard_gen,
+        n_shard,
+        p.prefix_len,
+        &mut ledger,
+        threads,
+    )?;
+    let segment_purity = shards.segment_purity();
+    let segment_sizes: Vec<usize> = shards.segments.iter().map(Vec::len).collect();
+
+    // Stage 3: independent experts (lines 14-16) as staged nodes on the
+    // worker pool — same seeds, same segments, same batch discipline as
+    // the classic loop, so outputs are bit-identical at any worker count.
+    let jobs: Vec<(u64, Vec<Sequence>)> = shards
+        .segments
+        .into_iter()
+        .enumerate()
+        .map(|(e, segment)| (p.seed ^ (0xE0 + e as u64), segment))
+        .collect();
+    let outcomes = run_staged_nodes(backend, jobs, run_cfg)?;
+    let mut experts = Vec::with_capacity(outcomes.len());
+    for o in outcomes {
+        log.merge_prefixed(&format!("expert{}", o.node), &o.log);
+        experts.push(o.state);
+    }
+
+    engine_transfer_scalars(engine, &mut log);
+    Ok(PipelineResult {
+        mixture: Mixture {
+            routers: trained.routers,
+            router_meta: trained.meta,
+            experts,
+            expert_meta,
+        },
+        ledger,
+        log,
+        segment_purity,
+        segment_sizes,
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_trainer_async(
+    engine: &Engine,
+    bpe: &Bpe,
+    p: &PipelineConfig,
+    t: &TrainerConfig,
+    em: &EmConfig,
+    run_cfg: &NodeRunConfig,
+    backend: &EngineBackend,
+    router_meta: VariantMeta,
+    expert_meta: VariantMeta,
+) -> Result<PipelineResult> {
+    ensure!(
+        p.em_rounds > 0,
+        "async training needs at least one EM round to publish a router snapshot"
+    );
+    let mut log = RunLog::new();
+    let store = SnapshotStore::new(p.n_experts);
+    let every = t.snapshot_every.max(1);
+    let rounds = em.rounds;
+
+    // One independent fresh-data stream per node; the router leader keeps
+    // the same stream it uses in staged mode.
+    let jobs: Vec<_> = (0..p.n_experts)
+        .map(|e| {
+            (
+                p.seed ^ (0xE0 + e as u64),
+                SequenceGen::new(bpe, expert_meta.seq_len, p.seed ^ (0xA5_0000 + e as u64)),
+            )
+        })
+        .collect();
+
+    let em_cfg = em.clone();
+    let (outcomes, trained) = {
+        let log = &mut log;
+        let store_ref = &store;
+        run_async_nodes(backend, store_ref, jobs, run_cfg, move |_handle| {
+            // Router EM runs on this (leader) thread while nodes train.
+            // Its score exchanges are leader-local (all routers live
+            // here), so they cost the cluster nothing — the broadcasts
+            // recorded by the store are the only inter-node traffic.
+            let mut local_ledger = CommLedger::default();
+            let mut router_gen =
+                SequenceGen::new(bpe, router_meta.seq_len, p.seed ^ 0x52_0000);
+            train_routers_hooked(
+                engine,
+                &p.router_variant,
+                &em_cfg,
+                &mut router_gen,
+                &mut local_ledger,
+                log,
+                |round, routers| {
+                    if (round + 1) % every == 0 || round + 1 == rounds {
+                        store_ref.publish(routers.to_vec(), round + 1);
+                    }
+                    Ok(())
+                },
+            )
+        })?
+    };
+
+    let ledger = store.take_ledger();
+    let mut experts = Vec::with_capacity(outcomes.len());
+    let mut segment_purity = Vec::with_capacity(outcomes.len());
+    let mut segment_sizes = Vec::with_capacity(outcomes.len());
+    for o in outcomes {
+        log.merge_prefixed(&format!("expert{}", o.node), &o.log);
+        log.scalar(&format!("async/node{}_drawn", o.node), 0.0, o.drawn as f64);
+        log.scalar(&format!("async/node{}_kept", o.node), 0.0, o.kept as f64);
+        log.scalar(
+            &format!("async/node{}_steps", o.node),
+            0.0,
+            o.steps_done as f64,
+        );
+        segment_purity.push(o.purity());
+        segment_sizes.push(o.trained_sequences() as usize);
+        experts.push(o.state);
+    }
+
+    engine_transfer_scalars(engine, &mut log);
+    Ok(PipelineResult {
+        mixture: Mixture {
+            routers: trained.routers,
+            router_meta: trained.meta,
+            experts,
+            expert_meta,
+        },
+        ledger,
+        log,
+        segment_purity,
+        segment_sizes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_publishes_versions_and_records_broadcasts() {
+        let store = SnapshotStore::new(4);
+        assert_eq!(store.version(), 0);
+        assert!(store.current().is_none());
+        let r = TrainState::from_params("r", vec![0.0; 8], vec![0.0; 8], vec![0.0; 8], 0);
+        assert_eq!(store.publish(vec![r.clone(), r.clone()], 1), 1);
+        assert_eq!(store.publish(vec![r], 2), 2);
+        assert_eq!(store.version(), 2);
+        let snap = store.current().unwrap();
+        assert_eq!(snap.version, 2);
+        assert_eq!(snap.em_round, 2);
+        let ledger = store.take_ledger();
+        // publish 1: two 8-param routers = 64 B/subscriber; publish 2: 32 B
+        assert_eq!(
+            ledger.rounds(crate::coordinator::comm::CommKind::SnapshotBroadcast),
+            2
+        );
+        assert_eq!(ledger.total_bytes(), 4 * 64 + 4 * 32);
+    }
+
+    #[test]
+    fn closed_empty_store_fails_waiters() {
+        let store = SnapshotStore::new(1);
+        store.close();
+        let err = store.wait_current().unwrap_err().to_string();
+        assert!(err.contains("closed before any"), "{err}");
+    }
+
+    #[test]
+    fn closed_store_with_snapshot_keeps_serving() {
+        let store = SnapshotStore::new(1);
+        let r = TrainState::from_params("r", vec![1.0], vec![0.0], vec![0.0], 0);
+        store.publish(vec![r], 1);
+        store.close();
+        assert_eq!(store.wait_current().unwrap().version, 1);
+        assert_eq!(store.current().unwrap().version, 1);
+    }
+
+    #[test]
+    fn trainer_types_are_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<SnapshotStore>();
+        assert_send_sync::<RouterSnapshot>();
+        assert_send_sync::<NodeProgress>();
+        assert_send_sync::<NodeOutcome>();
+    }
+}

@@ -13,4 +13,4 @@ pub mod corpus;
 pub mod stream;
 
 pub use corpus::{Corpus, Document, DOMAINS};
-pub use stream::{Sequence, SequenceGen};
+pub use stream::{Sequence, SequenceGen, StreamPos};

@@ -1,6 +1,6 @@
 //! One driver per paper table/figure (DESIGN.md §4 experiment index).
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::baselines::kmeans::nearest_centroid;
 use crate::baselines::{balanced_kmeans, truncated_svd, TfIdf};
@@ -70,6 +70,16 @@ impl<'a> Suite<'a> {
     }
 }
 
+/// Largest expert count in the sweep — a structured error (not an
+/// `unwrap` panic) when a driver is handed an empty `experts_sweep`.
+fn sweep_max(b: &Budget) -> Result<usize> {
+    b.experts_sweep
+        .iter()
+        .max()
+        .copied()
+        .context("experiments budget has an empty experts_sweep — nothing to run")
+}
+
 /// Artifacts of a Fig.2 sweep that downstream figures reuse.
 pub struct Fig2Artifacts {
     pub largest_mixture: Mixture,
@@ -84,7 +94,7 @@ pub fn fig2(suite: &Suite) -> Result<Fig2Artifacts> {
     let b = &suite.budget;
     let meta = suite.expert_meta()?;
     let held_out = suite.held_out(&meta, b.eval_sequences);
-    let max_e = *b.experts_sweep.iter().max().unwrap();
+    let max_e = sweep_max(b)?;
 
     // Per-E dense comparator, exactly the paper's Table 2 pairing: the
     // dense model trains the SAME number of steps as each expert at
@@ -141,7 +151,11 @@ pub fn fig2(suite: &Suite) -> Result<Fig2Artifacts> {
 
         // Fig. 5 data: per-expert ppl on its routed held-out segment vs
         // the E-matched dense on the same segment.
-        let dense_e = &dense_by_e.iter().find(|(x, _, _)| *x == e).unwrap().1;
+        let dense_e = &dense_by_e
+            .iter()
+            .find(|(x, _, _)| *x == e)
+            .with_context(|| format!("no dense comparator was trained for E={e}"))?
+            .1;
         let routed = result.mixture.eval_routed(suite.engine, &held_out, b.prefix_len)?;
         let dense_rows: Vec<Vec<u32>> = held_out.iter().map(|s| s.tokens.clone()).collect();
         let dense_nll = eval_nll_all(suite.engine, dense_e, &meta, &dense_rows)?;
@@ -196,7 +210,8 @@ pub fn fig2(suite: &Suite) -> Result<Fig2Artifacts> {
         }
     }
 
-    let (mixture, ledger) = largest.unwrap();
+    let (mixture, ledger) =
+        largest.context("experts_sweep produced no runs (empty sweep?)")?;
     let json = Json::obj(vec![
         ("figure", Json::str("fig2_fig5")),
         ("rows", Json::Arr(rows)),
@@ -220,7 +235,10 @@ pub fn fig2(suite: &Suite) -> Result<Fig2Artifacts> {
         ),
         ("comm_peak_node_bytes", Json::num(ledger.peak_node_bytes() as f64)),
     ]);
-    let dense_final = dense_by_e.pop().unwrap().1;
+    let dense_final = dense_by_e
+        .pop()
+        .context("no dense comparator was trained (empty sweep?)")?
+        .1;
     Ok(Fig2Artifacts {
         largest_mixture: mixture,
         dense_final,
@@ -236,7 +254,7 @@ pub fn fig3_tables45(suite: &Suite, reuse: Option<&Fig2Artifacts>) -> Result<Jso
     let (mixture, dense) = match reuse {
         Some(a) => (&a.largest_mixture, &a.dense_final),
         None => {
-            let e = *b.experts_sweep.iter().max().unwrap();
+            let e = sweep_max(b)?;
             let result = run_pipeline(suite.engine, suite.bpe, &b.pipeline(e))?;
             let mut log = RunLog::new();
             // paper pairing: same steps, E x batch
@@ -341,7 +359,7 @@ pub fn fig4b(suite: &Suite, reuse: Option<&Fig2Artifacts>) -> Result<Json> {
     let (mixture, dense) = match reuse {
         Some(a) => (&a.largest_mixture, Some(&a.dense_final)),
         None => {
-            let e = *b.experts_sweep.iter().max().unwrap();
+            let e = sweep_max(b)?;
             let result = run_pipeline(suite.engine, suite.bpe, &b.pipeline(e))?;
             owned = result.mixture;
             (&owned, None)
@@ -531,7 +549,7 @@ pub fn table3(_suite: &Suite, fig2_json: Option<&Json>) -> Result<Json> {
 pub fn comm_overhead(suite: &Suite) -> Result<Json> {
     let b = &suite.budget;
     let meta = suite.expert_meta()?;
-    let e = *b.experts_sweep.iter().max().unwrap();
+    let e = sweep_max(b)?;
     let result = run_pipeline(suite.engine, suite.bpe, &b.pipeline(e))?;
     let ledger = &result.ledger;
 

@@ -16,8 +16,8 @@ use anyhow::{bail, Context, Result};
 use smalltalk::baselines::train_dense;
 use smalltalk::config::ExperimentConfig;
 use smalltalk::coordinator::{
-    comm, dense_perplexity, response_triples, run_pipeline, run_server, serve_threaded, CommLedger,
-    MixtureBackend, Request, ServerConfig,
+    comm, dense_perplexity, response_triples, run_pipeline, run_server, run_trainer,
+    serve_threaded, CommLedger, MixtureBackend, Request, ServerConfig, TrainMode, TrainerConfig,
 };
 use smalltalk::data::corpus::Corpus;
 use smalltalk::data::SequenceGen;
@@ -36,7 +36,7 @@ const VALUE_OPTS: &[&str] = &[
     "em-rounds", "em-chunk", "em-steps", "shard-sequences", "expert-steps",
     "prefix", "eval-sequences", "tasks-per-domain", "seed", "requests", "out",
     "ckpt-dir", "steps", "threads", "batch-size", "max-wait-us", "stream",
-    "delay-us",
+    "delay-us", "checkpoint-dir", "checkpoint-every", "snapshot-every",
 ];
 
 const EVAL_SEED: u64 = 0xE7A1;
@@ -50,9 +50,16 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: smalltalk <e2e|train-routers|train-dense|eval|serve|flops|comm|info> [options]\n\
+    "usage: smalltalk <e2e|train|train-routers|train-dense|eval|serve|flops|comm|info> [options]\n\
      common options: --config f.json --experts N --expert-steps N --seed N\n\
                      --threads N (worker threads for expert/router groups; 0 = auto)\n\
+     train options:  --async (barrier-free trainer nodes routing against router\n\
+                              snapshots; default is the staged bit-exact pipeline)\n\
+                     --checkpoint-dir d (write node{e}.ckpt; enables crash recovery)\n\
+                     --checkpoint-every N (steps between node checkpoints; 0 = final only)\n\
+                     --resume (continue each node from its last checkpoint)\n\
+                     --snapshot-every N (async: EM rounds between router broadcasts)\n\
+                     (e2e accepts the same training flags)\n\
      serve options:  --requests N --batch-size N (per-expert dispatch batch; 0 = eval batch)\n\
                      --max-wait-us N (linger before dispatching a partial batch)\n\
                      --stream f.jsonl (one request per line: {\"id\",\"tokens\",[\"delay_us\"]};\n\
@@ -76,6 +83,7 @@ fn run(raw: &[String]) -> Result<()> {
 
     match cmd {
         "e2e" => cmd_e2e(&cfg),
+        "train" => cmd_train(&cfg, &args),
         "train-routers" => cmd_train_routers(&cfg, &args),
         "train-dense" => cmd_train_dense(&cfg, &args),
         "eval" => cmd_eval(&cfg, &args),
@@ -100,6 +108,29 @@ fn load_or_train_bpe(cfg: &ExperimentConfig) -> Result<Bpe> {
     std::fs::create_dir_all(&cfg.results_dir).ok();
     bpe.save(&cache).ok();
     Ok(bpe)
+}
+
+/// Trainer-orchestration settings from the config's `--async` /
+/// `--checkpoint-dir` / `--checkpoint-every` / `--resume` /
+/// `--snapshot-every` knobs.
+fn trainer_config(cfg: &ExperimentConfig) -> TrainerConfig {
+    TrainerConfig {
+        mode: if cfg.train_async {
+            TrainMode::Async
+        } else {
+            TrainMode::Staged
+        },
+        checkpoint_dir: if cfg.checkpoint_dir.is_empty() {
+            None
+        } else {
+            Some(cfg.checkpoint_dir.clone().into())
+        },
+        checkpoint_every: cfg.checkpoint_every,
+        resume: cfg.resume,
+        snapshot_every: cfg.snapshot_every,
+        route_chunk: 0,
+        draw_budget: 0,
+    }
 }
 
 fn cmd_info(cfg: &ExperimentConfig) -> Result<()> {
@@ -128,9 +159,15 @@ fn cmd_e2e(cfg: &ExperimentConfig) -> Result<()> {
     let engine = Engine::new(&cfg.artifacts_dir)?;
     let bpe = load_or_train_bpe(cfg)?;
     let p = &cfg.pipeline;
+    let tcfg = trainer_config(cfg);
     eprintln!(
-        "[e2e] mixture: {} x {} (router {}), {} EM rounds, {} expert steps",
-        p.n_experts, p.expert_variant, p.router_variant, p.em_rounds, p.expert_steps
+        "[e2e] mixture: {} x {} (router {}), {} EM rounds, {} expert steps ({} orchestration)",
+        p.n_experts,
+        p.expert_variant,
+        p.router_variant,
+        p.em_rounds,
+        p.expert_steps,
+        if cfg.train_async { "async" } else { "staged" }
     );
 
     // FLOPs-matched dense baseline: same total tokens. The paper pairing
@@ -159,7 +196,7 @@ fn cmd_e2e(cfg: &ExperimentConfig) -> Result<()> {
     let threads = resolve_threads(p.threads);
     let (result, dense) = if threads > 1 {
         let (result, dense) = std::thread::scope(|s| {
-            let pipeline = s.spawn(|| run_pipeline(&engine, &bpe, p));
+            let pipeline = s.spawn(|| run_trainer(&engine, &bpe, p, &tcfg));
             let dense = run_dense(&mut dense_log);
             (pipeline.join().expect("pipeline thread panicked"), dense)
         });
@@ -167,7 +204,10 @@ fn cmd_e2e(cfg: &ExperimentConfig) -> Result<()> {
     } else {
         // sequential: fail fast — don't train the baseline for a
         // pipeline that has already errored
-        (run_pipeline(&engine, &bpe, p)?, run_dense(&mut dense_log)?)
+        (
+            run_trainer(&engine, &bpe, p, &tcfg)?,
+            run_dense(&mut dense_log)?,
+        )
     };
     eprintln!(
         "[e2e] sharded segments: sizes {:?}, domain purity {:?}",
@@ -226,6 +266,76 @@ fn cmd_e2e(cfg: &ExperimentConfig) -> Result<()> {
     log.scalar("final/dense_ppl", 0.0, dense_ppl);
     log.save(format!("{}/e2e_run.json", cfg.results_dir))?;
     eprintln!("[e2e] wrote {}/e2e_run.json", cfg.results_dir);
+    Ok(())
+}
+
+/// Full mixture training (no dense comparator, no eval): routers +
+/// experts under the staged or `--async` orchestrator, writing router/
+/// expert checkpoints to `--ckpt-dir`. With `--checkpoint-dir` the
+/// trainer also writes per-node checkpoints mid-run, and `--resume`
+/// continues a killed run from them.
+fn cmd_train(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
+    let engine = Engine::new(&cfg.artifacts_dir)?;
+    let bpe = load_or_train_bpe(cfg)?;
+    let p = &cfg.pipeline;
+    let tcfg = trainer_config(cfg);
+    eprintln!(
+        "[train] {} x {} (router {}), {} orchestration{}{}",
+        p.n_experts,
+        p.expert_variant,
+        p.router_variant,
+        if cfg.train_async { "async" } else { "staged" },
+        if cfg.checkpoint_dir.is_empty() {
+            String::new()
+        } else {
+            format!(", node checkpoints in {}", cfg.checkpoint_dir)
+        },
+        if cfg.resume { ", resuming" } else { "" },
+    );
+    let result = run_trainer(&engine, &bpe, p, &tcfg)?;
+
+    println!(
+        "segments: sizes {:?}, domain purity {:?}",
+        result.segment_sizes,
+        result
+            .segment_purity
+            .iter()
+            .map(|x| (x * 100.0).round() / 100.0)
+            .collect::<Vec<_>>()
+    );
+    for e in 0..p.n_experts {
+        if let Some(curve) = result.log.get(&format!("expert{e}/loss")) {
+            println!("expert{e} loss: {}", sparkline(curve, 40));
+        }
+    }
+    let kinds: [(&str, comm::CommKind); 2] = [
+        ("score all-gathers", comm::CommKind::ScoreAllGather),
+        ("snapshot broadcasts", comm::CommKind::SnapshotBroadcast),
+    ];
+    for (label, kind) in kinds {
+        let rounds = result.ledger.rounds(kind);
+        if rounds > 0 {
+            println!("comm: {rounds} {label}");
+        }
+    }
+    println!(
+        "comm: {} total bytes, peak node traffic {} bytes",
+        result.ledger.total_bytes(),
+        result.ledger.peak_node_bytes()
+    );
+
+    let dir = args.get_or("ckpt-dir", "checkpoints");
+    for (e, r) in result.mixture.routers.iter().enumerate() {
+        save_checkpoint(r, format!("{dir}/router{e}.ckpt"))?;
+    }
+    for (e, x) in result.mixture.experts.iter().enumerate() {
+        save_checkpoint(x, format!("{dir}/expert{e}.ckpt"))?;
+    }
+    println!(
+        "wrote {} router + {} expert checkpoints to {dir}/",
+        result.mixture.routers.len(),
+        result.mixture.experts.len()
+    );
     Ok(())
 }
 

@@ -1,14 +1,33 @@
-//! Binary checkpoint serialization for [`TrainState`].
+//! Binary checkpoint serialization for [`TrainState`] and for trainer
+//! *node* checkpoints (state + exact data-stream position + routed-pool
+//! leftovers), the unit of crash recovery in
+//! [`coordinator::trainer`](crate::coordinator::trainer).
+//!
+//! Model checkpoints ("STLK"): version 2 checksums **all three** arrays
+//! (params and both Adam moments) — version 1 covered only `params`, so
+//! a corrupt `m`/`v` loaded silently. Version-1 files remain readable.
+//!
+//! Node checkpoints ("STLN") additionally carry everything a killed
+//! trainer node needs to continue bit-identically: the stream position
+//! ([`StreamPos`]), the segment cursor, the pool of sequences already
+//! routed to the node but not yet trained on, and the node counters. The
+//! whole file is integrity-checked by a trailing FNV-64 over every byte,
+//! and writes go through a temp file + rename so a crash mid-write never
+//! leaves a truncated checkpoint under the real name.
 
-use std::io::{Read, Write};
+use std::io::Write;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
+use crate::data::{Sequence, StreamPos};
 use crate::runtime::TrainState;
 
 const MAGIC: &[u8; 4] = b"STLK";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
+
+const NODE_MAGIC: &[u8; 4] = b"STLN";
+const NODE_VERSION: u32 = 1;
 
 fn checksum(xs: &[f32]) -> u64 {
     // order-dependent FNV-style fold over bit patterns
@@ -20,83 +39,345 @@ fn checksum(xs: &[f32]) -> u64 {
     h
 }
 
-/// Write a checkpoint.
-pub fn save_checkpoint(state: &TrainState, path: impl AsRef<Path>) -> Result<()> {
-    if let Some(parent) = path.as_ref().parent() {
+fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+// -------------------------------------------------------------------------
+// little-endian byte-buffer helpers
+// -------------------------------------------------------------------------
+
+fn push_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    buf.reserve(xs.len() * 4);
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+struct Reader<'a> {
+    bytes: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(bytes: &'a [u8]) -> Self {
+        Reader { bytes, off: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.off + n <= self.bytes.len(),
+            "checkpoint truncated (wanted {n} bytes at offset {}, file has {})",
+            self.off,
+            self.bytes.len()
+        );
+        let s = &self.bytes[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let b = self.take(n * 4)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Write `bytes` to `path` atomically: temp file in the same directory,
+/// then rename — a crash mid-write never corrupts an existing checkpoint.
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
     }
-    let mut f = std::io::BufWriter::new(
-        std::fs::File::create(path.as_ref())
-            .with_context(|| format!("creating {}", path.as_ref().display()))?,
-    );
-    f.write_all(MAGIC)?;
-    f.write_all(&VERSION.to_le_bytes())?;
-    let name = state.variant.as_bytes();
-    f.write_all(&(name.len() as u32).to_le_bytes())?;
-    f.write_all(name)?;
-    f.write_all(&state.step.to_le_bytes())?;
-    f.write_all(&(state.params.len() as u64).to_le_bytes())?;
-    for arr in [&state.params, &state.m, &state.v] {
-        // bulk write the raw f32 bytes
-        let bytes: &[u8] = unsafe {
-            std::slice::from_raw_parts(arr.as_ptr() as *const u8, arr.len() * 4)
-        };
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
         f.write_all(bytes)?;
+        // sync before rename: on power loss the rename must not become
+        // durable ahead of the data blocks, or it would replace the
+        // previous good checkpoint with garbage — the exact failure
+        // resume exists to survive
+        f.sync_all()?;
     }
-    f.write_all(&checksum(&state.params).to_le_bytes())?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
     Ok(())
 }
 
-/// Read a checkpoint.
-pub fn load_checkpoint(path: impl AsRef<Path>) -> Result<TrainState> {
-    let mut f = std::io::BufReader::new(
-        std::fs::File::open(path.as_ref())
-            .with_context(|| format!("opening {}", path.as_ref().display()))?,
-    );
-    let mut magic = [0u8; 4];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("not a smalltalk checkpoint (bad magic)");
+// -------------------------------------------------------------------------
+// model state section (shared by model + node checkpoints)
+// -------------------------------------------------------------------------
+
+fn write_state_section(buf: &mut Vec<u8>, state: &TrainState) {
+    let name = state.variant.as_bytes();
+    push_u32(buf, name.len() as u32);
+    buf.extend_from_slice(name);
+    push_u64(buf, state.step);
+    push_u64(buf, state.params.len() as u64);
+    for arr in [&state.params, &state.m, &state.v] {
+        push_f32s(buf, arr);
     }
-    let mut u32b = [0u8; 4];
-    f.read_exact(&mut u32b)?;
-    let version = u32::from_le_bytes(u32b);
-    if version != VERSION {
-        bail!("unsupported checkpoint version {version}");
-    }
-    f.read_exact(&mut u32b)?;
-    let name_len = u32::from_le_bytes(u32b) as usize;
+    // v2 integrity: every array is covered, not just params (a flipped
+    // bit in the Adam moments used to load silently)
+    push_u64(buf, checksum(&state.params));
+    push_u64(buf, checksum(&state.m));
+    push_u64(buf, checksum(&state.v));
+}
+
+/// `checksums`: 3 for the v2 layout, 1 for legacy v1 (params only).
+fn read_state_section(r: &mut Reader, checksums: usize) -> Result<TrainState> {
+    let name_len = r.u32()? as usize;
     if name_len > 4096 {
         bail!("implausible variant name length {name_len}");
     }
-    let mut name = vec![0u8; name_len];
-    f.read_exact(&mut name)?;
-    let variant = String::from_utf8(name).context("variant name not utf8")?;
-    let mut u64b = [0u8; 8];
-    f.read_exact(&mut u64b)?;
-    let step = u64::from_le_bytes(u64b);
-    f.read_exact(&mut u64b)?;
-    let n = u64::from_le_bytes(u64b) as usize;
+    let variant = String::from_utf8(r.take(name_len)?.to_vec())
+        .context("variant name not utf8")?;
+    let step = r.u64()?;
+    let n = r.u64()? as usize;
     if n > (1 << 31) {
         bail!("implausible parameter count {n}");
     }
-    let read_arr = |f: &mut dyn Read| -> Result<Vec<f32>> {
-        let mut bytes = vec![0u8; n * 4];
-        f.read_exact(&mut bytes)?;
-        Ok(bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect())
-    };
-    let params = read_arr(&mut f)?;
-    let m = read_arr(&mut f)?;
-    let v = read_arr(&mut f)?;
-    f.read_exact(&mut u64b)?;
-    let expect = u64::from_le_bytes(u64b);
-    if checksum(&params) != expect {
-        bail!("checkpoint checksum mismatch — file corrupt");
+    let params = r.f32s(n)?;
+    let m = r.f32s(n)?;
+    let v = r.f32s(n)?;
+    let arrays: [(&str, &[f32]); 3] = [("params", &params), ("m", &m), ("v", &v)];
+    for (name, arr) in arrays.iter().take(checksums) {
+        let expect = r.u64()?;
+        if checksum(arr) != expect {
+            bail!("checkpoint checksum mismatch — file corrupt ({name} array)");
+        }
     }
     Ok(TrainState::from_params(&variant, params, m, v, step))
+}
+
+// -------------------------------------------------------------------------
+// model checkpoints
+// -------------------------------------------------------------------------
+
+/// Write a model checkpoint (format version 2: all arrays checksummed).
+pub fn save_checkpoint(state: &TrainState, path: impl AsRef<Path>) -> Result<()> {
+    let mut buf = Vec::with_capacity(64 + state.params.len() * 12);
+    buf.extend_from_slice(MAGIC);
+    push_u32(&mut buf, VERSION);
+    write_state_section(&mut buf, state);
+    write_atomic(path.as_ref(), &buf)
+}
+
+/// Read a model checkpoint (version 2, or legacy version 1 with its
+/// params-only checksum).
+pub fn load_checkpoint(path: impl AsRef<Path>) -> Result<TrainState> {
+    let bytes = std::fs::read(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    let mut r = Reader::new(&bytes);
+    if r.take(4)? != MAGIC {
+        bail!("not a smalltalk checkpoint (bad magic)");
+    }
+    let version = r.u32()?;
+    let state = match version {
+        1 => read_state_section(&mut r, 1)?,
+        2 => read_state_section(&mut r, 3)?,
+        other => bail!("unsupported checkpoint version {other}"),
+    };
+    Ok(state)
+}
+
+// -------------------------------------------------------------------------
+// node checkpoints
+// -------------------------------------------------------------------------
+
+/// Orchestration mode a node checkpoint was written under (guards against
+/// resuming a staged checkpoint into an async run and vice versa).
+pub const NODE_MODE_STAGED: u8 = 0;
+pub const NODE_MODE_ASYNC: u8 = 1;
+
+/// Borrowed view of everything a trainer node persists — see
+/// [`save_node_checkpoint`].
+pub struct NodeCheckpointView<'a> {
+    pub node: u32,
+    pub mode: u8,
+    pub steps_done: u64,
+    /// Segment cycle cursor (staged mode; 0 in async mode).
+    pub cursor: u64,
+    /// Data-stream position (async mode; `None` in staged mode).
+    pub stream: Option<StreamPos>,
+    /// Sequences already routed to this node but not yet trained on.
+    pub pool: &'a [Sequence],
+    pub domain_counts: &'a [u64],
+    pub drawn: u64,
+    pub kept: u64,
+    pub snapshot_version: u64,
+    pub state: &'a TrainState,
+}
+
+/// Owned form returned by [`load_node_checkpoint`].
+pub struct NodeCheckpoint {
+    pub node: u32,
+    pub mode: u8,
+    pub steps_done: u64,
+    pub cursor: u64,
+    pub stream: Option<StreamPos>,
+    pub pool: Vec<Sequence>,
+    pub domain_counts: Vec<u64>,
+    pub drawn: u64,
+    pub kept: u64,
+    pub snapshot_version: u64,
+    pub state: TrainState,
+}
+
+/// Write a trainer-node checkpoint: header + state section + trailing
+/// FNV-64 over every preceding byte, via temp-file + rename.
+pub fn save_node_checkpoint(view: &NodeCheckpointView, path: impl AsRef<Path>) -> Result<()> {
+    let mut buf = Vec::with_capacity(256 + view.state.params.len() * 12);
+    buf.extend_from_slice(NODE_MAGIC);
+    push_u32(&mut buf, NODE_VERSION);
+    push_u32(&mut buf, view.node);
+    buf.push(view.mode);
+    push_u64(&mut buf, view.steps_done);
+    push_u64(&mut buf, view.cursor);
+    match &view.stream {
+        None => buf.push(0),
+        Some(p) => {
+            buf.push(1);
+            for w in p.rng {
+                push_u64(&mut buf, w);
+            }
+            push_u64(&mut buf, p.doc_bytes);
+            push_u64(&mut buf, p.drawn);
+        }
+    }
+    push_u64(&mut buf, view.drawn);
+    push_u64(&mut buf, view.kept);
+    push_u64(&mut buf, view.snapshot_version);
+    push_u32(&mut buf, view.domain_counts.len() as u32);
+    for &c in view.domain_counts {
+        push_u64(&mut buf, c);
+    }
+    push_u32(&mut buf, view.pool.len() as u32);
+    for seq in view.pool {
+        push_u32(&mut buf, seq.domain as u32);
+        push_u32(&mut buf, seq.tokens.len() as u32);
+        for &t in &seq.tokens {
+            push_u32(&mut buf, t);
+        }
+    }
+    write_state_section(&mut buf, view.state);
+    let digest = fnv64(&buf);
+    push_u64(&mut buf, digest);
+    write_atomic(path.as_ref(), &buf)
+}
+
+/// Read a trainer-node checkpoint, verifying the whole-file digest first
+/// (so truncation or a flipped byte anywhere is rejected).
+pub fn load_node_checkpoint(path: impl AsRef<Path>) -> Result<NodeCheckpoint> {
+    let bytes = std::fs::read(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    if bytes.len() < 16 {
+        bail!("not a smalltalk node checkpoint (too short)");
+    }
+    let (body, tail) = bytes.split_at(bytes.len() - 8);
+    let expect = u64::from_le_bytes(tail.try_into().expect("8-byte tail"));
+    if fnv64(body) != expect {
+        bail!("node checkpoint digest mismatch — file corrupt or truncated");
+    }
+    let mut r = Reader::new(body);
+    if r.take(4)? != NODE_MAGIC {
+        bail!("not a smalltalk node checkpoint (bad magic)");
+    }
+    let version = r.u32()?;
+    if version != NODE_VERSION {
+        bail!("unsupported node checkpoint version {version}");
+    }
+    let node = r.u32()?;
+    let mode = r.u8()?;
+    let steps_done = r.u64()?;
+    let cursor = r.u64()?;
+    let stream = match r.u8()? {
+        0 => None,
+        1 => {
+            let rng = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
+            let doc_bytes = r.u64()?;
+            let drawn = r.u64()?;
+            Some(StreamPos {
+                rng,
+                doc_bytes,
+                drawn,
+            })
+        }
+        other => bail!("bad stream-presence marker {other}"),
+    };
+    let drawn = r.u64()?;
+    let kept = r.u64()?;
+    let snapshot_version = r.u64()?;
+    let n_domains = r.u32()? as usize;
+    if n_domains > 1 << 16 {
+        bail!("implausible domain count {n_domains}");
+    }
+    let mut domain_counts = Vec::with_capacity(n_domains);
+    for _ in 0..n_domains {
+        domain_counts.push(r.u64()?);
+    }
+    let n_pool = r.u32()? as usize;
+    if n_pool > 1 << 24 {
+        bail!("implausible pool size {n_pool}");
+    }
+    let mut pool = Vec::with_capacity(n_pool);
+    for _ in 0..n_pool {
+        let domain = r.u32()? as usize;
+        let n_tokens = r.u32()? as usize;
+        if n_tokens > 1 << 24 {
+            bail!("implausible sequence length {n_tokens}");
+        }
+        let mut tokens = Vec::with_capacity(n_tokens);
+        for _ in 0..n_tokens {
+            tokens.push(r.u32()?);
+        }
+        pool.push(Sequence { tokens, domain });
+    }
+    let state = read_state_section(&mut r, 3)?;
+    Ok(NodeCheckpoint {
+        node,
+        mode,
+        steps_done,
+        cursor,
+        stream,
+        pool,
+        domain_counts,
+        drawn,
+        kept,
+        snapshot_version,
+        state,
+    })
 }
 
 #[cfg(test)]
@@ -147,9 +428,155 @@ mod tests {
         assert!(load_checkpoint(&path).is_err());
     }
 
+    /// The v1 gap this version closes: corruption confined to the Adam
+    /// moment arrays must be rejected, not loaded silently.
+    #[test]
+    fn detects_corruption_in_every_array() {
+        let dir = std::env::temp_dir().join("smalltalk_ckpt_test");
+        let st = state();
+        let n = st.params.len();
+        // layout: magic(4) ver(4) name_len(4) name step(8) n(8) params m v ...
+        let arrays_at = 4 + 4 + 4 + st.variant.len() + 8 + 8;
+        for (arr, label) in [(0usize, "params"), (1, "m"), (2, "v")] {
+            let path = dir.join(format!("corrupt_{label}.ckpt"));
+            save_checkpoint(&st, &path).unwrap();
+            let mut bytes = std::fs::read(&path).unwrap();
+            let off = arrays_at + arr * n * 4 + 1;
+            bytes[off] ^= 0x40;
+            std::fs::write(&path, bytes).unwrap();
+            let err = load_checkpoint(&path).unwrap_err().to_string();
+            assert!(err.contains("corrupt"), "{label}: {err}");
+        }
+    }
+
+    #[test]
+    fn detects_truncation() {
+        let dir = std::env::temp_dir().join("smalltalk_ckpt_test");
+        let path = dir.join("t.ckpt");
+        save_checkpoint(&state(), &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        for cut in [bytes.len() - 1, bytes.len() - 9, bytes.len() / 2, 10, 3] {
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            assert!(load_checkpoint(&path).is_err(), "cut at {cut} accepted");
+        }
+    }
+
+    /// A handcrafted version-1 file (single params checksum) still loads.
+    #[test]
+    fn reads_legacy_v1() {
+        let st = state();
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        push_u32(&mut buf, 1);
+        let name = st.variant.as_bytes();
+        push_u32(&mut buf, name.len() as u32);
+        buf.extend_from_slice(name);
+        push_u64(&mut buf, st.step);
+        push_u64(&mut buf, st.params.len() as u64);
+        for arr in [&st.params, &st.m, &st.v] {
+            push_f32s(&mut buf, arr);
+        }
+        push_u64(&mut buf, checksum(&st.params));
+        let dir = std::env::temp_dir().join("smalltalk_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v1.ckpt");
+        std::fs::write(&path, &buf).unwrap();
+        let loaded = load_checkpoint(&path).unwrap();
+        assert_eq!(loaded.params, st.params);
+        assert_eq!(loaded.m, st.m);
+        assert_eq!(loaded.v, st.v);
+        assert_eq!(loaded.step, st.step);
+    }
+
     #[test]
     fn missing_file_is_contextual_error() {
         let err = load_checkpoint("/nonexistent/x.ckpt").unwrap_err().to_string();
         assert!(err.contains("x.ckpt"));
+    }
+
+    #[test]
+    fn node_checkpoint_roundtrip() {
+        let st = state();
+        let pool = vec![
+            Sequence {
+                tokens: vec![1, 2, 3, 4],
+                domain: 5,
+            },
+            Sequence {
+                tokens: vec![9],
+                domain: 0,
+            },
+        ];
+        let counts = vec![3u64, 0, 7];
+        let stream = StreamPos {
+            rng: [11, 22, 33, 44],
+            doc_bytes: 640,
+            drawn: 123,
+        };
+        let view = NodeCheckpointView {
+            node: 2,
+            mode: NODE_MODE_ASYNC,
+            steps_done: 17,
+            cursor: 0,
+            stream: Some(stream),
+            pool: &pool,
+            domain_counts: &counts,
+            drawn: 200,
+            kept: 70,
+            snapshot_version: 3,
+            state: &st,
+        };
+        let dir = std::env::temp_dir().join("smalltalk_ckpt_test");
+        let path = dir.join("node.ckpt");
+        save_node_checkpoint(&view, &path).unwrap();
+        let loaded = load_node_checkpoint(&path).unwrap();
+        assert_eq!(loaded.node, 2);
+        assert_eq!(loaded.mode, NODE_MODE_ASYNC);
+        assert_eq!(loaded.steps_done, 17);
+        assert_eq!(loaded.stream, Some(stream));
+        assert_eq!(loaded.pool.len(), 2);
+        assert_eq!(loaded.pool[0].tokens, vec![1, 2, 3, 4]);
+        assert_eq!(loaded.pool[0].domain, 5);
+        assert_eq!(loaded.domain_counts, counts);
+        assert_eq!(loaded.drawn, 200);
+        assert_eq!(loaded.kept, 70);
+        assert_eq!(loaded.snapshot_version, 3);
+        assert_eq!(loaded.state.params, st.params);
+        assert_eq!(loaded.state.m, st.m);
+        assert_eq!(loaded.state.step, st.step);
+    }
+
+    #[test]
+    fn node_checkpoint_rejects_any_flipped_byte() {
+        let st = state();
+        let view = NodeCheckpointView {
+            node: 0,
+            mode: NODE_MODE_STAGED,
+            steps_done: 4,
+            cursor: 16,
+            stream: None,
+            pool: &[],
+            domain_counts: &[1, 2],
+            drawn: 0,
+            kept: 0,
+            snapshot_version: 0,
+            state: &st,
+        };
+        let dir = std::env::temp_dir().join("smalltalk_ckpt_test");
+        let path = dir.join("node_flip.ckpt");
+        save_node_checkpoint(&view, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        for off in (0..bytes.len()).step_by(5) {
+            let mut mutated = bytes.clone();
+            mutated[off] ^= 0x10;
+            std::fs::write(&path, &mutated).unwrap();
+            assert!(load_node_checkpoint(&path).is_err(), "flip at {off} accepted");
+        }
+        for cut in [0, 7, bytes.len() / 3, bytes.len() - 1] {
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            assert!(load_node_checkpoint(&path).is_err(), "cut at {cut} accepted");
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load_node_checkpoint(&path).is_ok(), "pristine file must load");
     }
 }

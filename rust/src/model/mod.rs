@@ -1,11 +1,17 @@
 //! Model state persistence: checkpoints for routers, experts and the
-//! dense baseline.
+//! dense baseline, plus trainer-node checkpoints (state + exact stream
+//! position) for crash recovery.
 //!
-//! Format (little-endian): magic `STLK`, u32 version, u32 name length,
-//! name bytes, u64 step, u64 param count, then three f32 arrays
-//! (params, adam m, adam v) and a trailing crc32-like checksum (sum of
-//! byte chunks — integrity, not security).
+//! Model format (little-endian): magic `STLK`, u32 version, u32 name
+//! length, name bytes, u64 step, u64 param count, then three f32 arrays
+//! (params, adam m, adam v) and — since version 2 — one FNV-64 checksum
+//! per array (integrity, not security). Node format: magic `STLN`, the
+//! node header (mode, counters, stream position, routed pool), the same
+//! state section, and a whole-file digest.
 
 pub mod checkpoint;
 
-pub use checkpoint::{load_checkpoint, save_checkpoint};
+pub use checkpoint::{
+    load_checkpoint, load_node_checkpoint, save_checkpoint, save_node_checkpoint,
+    NodeCheckpoint, NodeCheckpointView,
+};

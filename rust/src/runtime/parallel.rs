@@ -16,7 +16,10 @@
 //!   closes it. This is the continuous-batching mode — the scheduler in
 //!   [`crate::coordinator::server`] owns the batches, and a freed worker
 //!   immediately pulls the next one instead of waiting for a wave
-//!   barrier.
+//!   barrier. The async trainer ([`crate::coordinator::trainer`]) runs
+//!   on the same substrate: trainer nodes circulate through a
+//!   `WorkQueue` in bounded slices, so E nodes multiplex over any worker
+//!   count with no barrier between them.
 //!
 //! No external thread-pool crate: the build is offline, and
 //! `std::thread::scope` (Rust ≥1.63) lets tasks borrow the engine, the

@@ -18,6 +18,8 @@ if [ ! -f artifacts/manifest.json ] && [ ! -f rust/artifacts/manifest.json ] \
     > BENCH_routing.json
   printf '{\n  "skipped": "no artifacts/manifest.json; run make artifacts"\n}\n' \
     > BENCH_serve.json
+  printf '{\n  "skipped": "no artifacts/manifest.json; run make artifacts"\n}\n' \
+    > BENCH_train.json
   exit 0
 fi
 
@@ -50,12 +52,21 @@ if ! cargo bench --bench serve; then
   # a stale results/ copy from an earlier run must not clobber the marker
   rm -f results/bench_serve.json
 fi
+# trainer bench: staged vs async orchestration seqs/s + per-mode comm
+# ledger bytes (score all-gathers vs snapshot broadcasts). Same
+# graceful-skip contract as the other rows.
+if ! cargo bench --bench train; then
+  echo "bench_smoke: train bench failed" >&2
+  printf '{\n  "skipped": "train bench run failed"\n}\n' > BENCH_train.json
+  rm -f results/bench_train.json
+fi
 cargo bench --bench train_step
 
 # BenchSuite::write_json emits results/bench_<title>.json relative to the
 # bench's working directory (the invocation directory, i.e. repo root)
 cp results/bench_routing.json BENCH_routing.json
 [ -f results/bench_serve.json ] && cp results/bench_serve.json BENCH_serve.json
+[ -f results/bench_train.json ] && cp results/bench_train.json BENCH_train.json
 [ -f results/bench_train_step.json ] && cp results/bench_train_step.json BENCH_train_step.json
 
-echo "bench_smoke: wrote BENCH_routing.json + BENCH_serve.json"
+echo "bench_smoke: wrote BENCH_routing.json + BENCH_serve.json + BENCH_train.json"
