@@ -8,12 +8,15 @@
 #                          serial + interleaved
 #   make test-async        the trainer-orchestrator suite (staged bit-identity,
 #                          kill-and-resume, stale snapshots), serial + interleaved
+#   make test-chaos        the elastic-trainer chaos suite (seeded fault plans:
+#                          kills/adoption, leave/rejoin merges, joins, delayed
+#                          publishes), serial + interleaved
 #   make artifacts         AOT-lower every model variant to artifacts/ (needs jax;
 #                          exports the fused prefix_nll_all entries at width 4)
 #   make bench-smoke       tiny-budget routing+serve+train_step+trainer benches
 #                          -> BENCH_routing.json + BENCH_serve.json + BENCH_train.json
 
-.PHONY: build test test-concurrency test-serve test-fused test-async artifacts bench-smoke clean
+.PHONY: build test test-concurrency test-serve test-fused test-async test-chaos artifacts bench-smoke clean
 
 build:
 	cargo build --release
@@ -50,6 +53,15 @@ test-fused:
 test-async:
 	RUST_TEST_THREADS=1 cargo test -q --test async_train
 	RUST_TEST_THREADS=8 cargo test -q --test async_train
+
+# Elastic-trainer chaos suite: three fixed fault seeds on the stub
+# backend (kill+adopt, leave/rejoin merge, mid-run join, gated publish),
+# boundary-kill bit-identity, JSON replay determinism and the
+# degradation contract — all deterministic, so it runs under both serial
+# and heavily interleaved test scheduling.
+test-chaos:
+	RUST_TEST_THREADS=1 cargo test -q --test chaos_train
+	RUST_TEST_THREADS=8 cargo test -q --test chaos_train
 
 # --fused 4 matches the routing-bench/e2e expert count E=4; omit it to
 # reproduce a pre-fused manifest (the runtime then fans out per router).

@@ -1,17 +1,26 @@
 //! Bench: staged vs async trainer orchestration — trained sequences per
 //! second plus the communication ledger each mode actually generates
 //! (score all-gathers for the staged barrier pipeline, snapshot
-//! broadcasts for the async node pool). Lands in BENCH_train.json via
-//! scripts/bench_smoke.sh for the per-PR perf trajectory.
+//! broadcasts for the async node pool) — and an elastic *chaos* row
+//! (stub backend, no artifacts needed): a faulted fleet's throughput
+//! with steps lost to kills, checkpoint-recovery wall-clock and rejoin
+//! merge counts. Lands in BENCH_train.json via scripts/bench_smoke.sh
+//! for the per-PR perf trajectory.
 
+use std::path::Path;
 use std::time::Duration;
 
+use anyhow::Result;
+
 use smalltalk::coordinator::{
-    run_pipeline_reference, run_trainer, CommKind, PipelineConfig, TrainerConfig,
+    run_elastic_nodes, run_pipeline_reference, run_trainer, CommKind, ElasticPlan, ElasticPolicy,
+    ElasticReport, FaultPlan, LeaveEvent, NodeRunConfig, PipelineConfig, PlanShape, Rejoin,
+    RouterSnapshot, SnapshotStore, TrainBackend, TrainerConfig,
 };
 use smalltalk::data::corpus::Corpus;
-use smalltalk::runtime::{locate_artifacts, Engine};
-use smalltalk::tokenizer::BpeTrainer;
+use smalltalk::data::SequenceGen;
+use smalltalk::runtime::{locate_artifacts, Engine, TrainState};
+use smalltalk::tokenizer::{Bpe, BpeTrainer};
 use smalltalk::util::bench::{env_threads, BenchSuite};
 
 fn bench_cfg(threads: usize) -> PipelineConfig {
@@ -30,12 +39,152 @@ fn bench_cfg(threads: usize) -> PipelineConfig {
     }
 }
 
-fn main() {
-    let Some(artifacts) = locate_artifacts() else {
-        eprintln!("[train bench] no artifacts/manifest.json — run `make artifacts`; skipping");
-        return;
+// ------------------------------------------------------------------
+// elastic chaos row (stub backend — measures the orchestration layer)
+// ------------------------------------------------------------------
+
+const CHAOS_P: usize = 6;
+const CHAOS_SEQ: usize = 16;
+const CHAOS_BS: usize = 4;
+const CHAOS_NODES: usize = 3;
+const CHAOS_STEPS: usize = 24;
+
+/// Model-free backend matching the chaos test suite's stub: pure
+/// arithmetic training, routing on the token sum alone.
+struct ElasticStub {
+    seats: usize,
+}
+
+impl TrainBackend for ElasticStub {
+    fn train_batch_rows(&self) -> usize {
+        CHAOS_BS
+    }
+
+    fn tokens_per_step(&self) -> usize {
+        CHAOS_BS * CHAOS_SEQ
+    }
+
+    fn init_expert(&self, node: usize, seed: u64) -> Result<TrainState> {
+        let params: Vec<f32> = (0..CHAOS_P)
+            .map(|i| (seed % 1000) as f32 * 1e-3 + node as f32 + i as f32 * 0.1)
+            .collect();
+        Ok(TrainState::from_params(
+            "stub",
+            params,
+            vec![0.0; CHAOS_P],
+            vec![0.0; CHAOS_P],
+            0,
+        ))
+    }
+
+    fn train_step(&self, _node: usize, state: &mut TrainState, batch: &[&[u32]]) -> Result<f32> {
+        let mut acc = 0.0f32;
+        for row in batch {
+            for &t in *row {
+                acc += (t % 97) as f32;
+            }
+        }
+        let loss = acc / (batch.len().max(1) as f32 * 100.0);
+        for i in 0..state.params.len() {
+            let g = loss * 1e-3 + (i as f32 + 1.0) * 1e-4;
+            state.m[i] = 0.9 * state.m[i] + 0.1 * g;
+            state.v[i] = 0.99 * state.v[i] + 0.01 * g * g;
+            state.params[i] -= 0.1 * state.m[i];
+        }
+        state.step += 1;
+        Ok(loss)
+    }
+
+    fn route_local(&self, _snap: &RouterSnapshot, rows: &[&[u32]]) -> Result<Vec<usize>> {
+        Ok(rows
+            .iter()
+            .map(|r| {
+                let sum: u64 = r.iter().map(|&t| t as u64).sum();
+                (sum % self.seats as u64) as usize
+            })
+            .collect())
+    }
+}
+
+/// One elastic run under a fixed fault plan: a seeded kill (adopted from
+/// checkpoint), a scheduled leave whose offline leg merges back, and a
+/// mid-run join onto the spare seat.
+fn chaos_run(bpe: &Bpe, dir: &Path) -> ElasticReport {
+    // fresh checkpoint dir per run: stale files from a previous timed
+    // iteration must not feed an adoption
+    let _ = std::fs::remove_dir_all(dir);
+    std::fs::create_dir_all(dir).expect("chaos bench dir");
+    let backend = ElasticStub {
+        seats: CHAOS_NODES + 1,
     };
-    let engine = Engine::new(artifacts).expect("loading artifacts");
+    let plan = ElasticPlan {
+        faults: FaultPlan::generate(
+            11,
+            &PlanShape {
+                nodes: CHAOS_NODES,
+                steps_per_node: CHAOS_STEPS as u64,
+                kills: 1,
+                transients: 1,
+                stalls: 1,
+                drops: 1,
+                publish_gates: 0,
+                snapshot_versions: 1,
+            },
+        ),
+        leaves: vec![LeaveEvent {
+            node: 1,
+            at_step: 10,
+            adopt: true,
+            rejoin: Some(Rejoin {
+                offline_steps: 2,
+                merge_at_step: 16,
+            }),
+        }],
+        policy: ElasticPolicy {
+            max_retries: 5,
+            max_extra_nodes: 1,
+            ..ElasticPolicy::default()
+        },
+    };
+    let seeds: Vec<u64> = (0..CHAOS_NODES).map(|e| 0xE0 + e as u64).collect();
+    let cfg = NodeRunConfig {
+        steps_per_node: CHAOS_STEPS,
+        checkpoint_every: 2,
+        checkpoint_dir: Some(dir.to_path_buf()),
+        threads: 2,
+        snapshot_wait_us: 10_000_000,
+        ..NodeRunConfig::default()
+    };
+    let store = SnapshotStore::new(CHAOS_NODES);
+    let factory = |e: usize, salt: u64| {
+        SequenceGen::new(
+            bpe,
+            CHAOS_SEQ,
+            (0xA5_0000 + e as u64) ^ salt.wrapping_mul(0x9E37_79B9),
+        )
+    };
+    let (report, ()) = run_elastic_nodes(&backend, &store, &seeds, factory, &cfg, &plan, |h| {
+        // join before the first publish so the run cannot drain early
+        h.join_new_node(0x77)?;
+        let routers: Vec<TrainState> = (0..CHAOS_NODES + 1)
+            .map(|i| {
+                TrainState::from_params(
+                    "router",
+                    vec![0.5 + i as f32 * 0.1; CHAOS_P],
+                    vec![0.0; CHAOS_P],
+                    vec![0.0; CHAOS_P],
+                    1,
+                )
+            })
+            .collect();
+        h.store().publish(routers, 1);
+        Ok(())
+    })
+    .expect("elastic chaos run");
+    report
+}
+
+fn main() {
     let corpus = Corpus::generate(60, 400, 42, None);
     let bpe = BpeTrainer::new(512).train(corpus.texts()).unwrap();
     let threads = env_threads().unwrap_or(2);
@@ -44,6 +193,58 @@ fn main() {
     let mut suite = BenchSuite::new("train")
         .with_budget(Duration::from_millis(200), Duration::from_secs(4));
     suite.header();
+
+    // chaos row first: it needs no artifacts, so every environment gets
+    // a fault-tolerance trajectory point
+    let chaos_dir = std::env::temp_dir().join(format!(
+        "smalltalk_bench_chaos_{}",
+        std::process::id()
+    ));
+    let chaos_once = chaos_run(&bpe, &chaos_dir);
+    let chaos_seqs = ((CHAOS_NODES + 1) * CHAOS_STEPS * CHAOS_BS) as f64;
+    let r = suite.bench("elastic chaos run (3+1 nodes, kill+leave+join)", || {
+        std::hint::black_box(chaos_run(&bpe, &chaos_dir).ends.len());
+    });
+    println!(
+        "    -> {:.1} trained seqs/s under chaos",
+        r.throughput(chaos_seqs)
+    );
+    let cs = &chaos_once.stats;
+    suite.annotate("chaos_kills", cs.kills as f64);
+    suite.annotate("chaos_adoptions", cs.adoptions as f64);
+    suite.annotate("chaos_joins", cs.joins as f64);
+    suite.annotate("chaos_merges", cs.merges as f64);
+    suite.annotate("chaos_steps_lost", cs.steps_lost as f64);
+    suite.annotate("chaos_recovery_micros", cs.recovery_micros as f64);
+    suite.annotate(
+        "chaos_adopt_bytes",
+        chaos_once.ledger.kind_bytes(CommKind::CheckpointAdopt) as f64,
+    );
+    suite.annotate(
+        "chaos_merge_bytes",
+        chaos_once.ledger.kind_bytes(CommKind::ParamMerge) as f64,
+    );
+    println!(
+        "    chaos: {} kill(s), {} adoption(s), {} step(s) lost, {} µs recovering, {} merge(s)",
+        cs.kills, cs.adoptions, cs.steps_lost, cs.recovery_micros, cs.merges
+    );
+    let _ = std::fs::remove_dir_all(&chaos_dir);
+
+    let Some(artifacts) = locate_artifacts() else {
+        eprintln!(
+            "[train bench] no artifacts/manifest.json — run `make artifacts`; chaos rows only"
+        );
+        suite.write_json().unwrap();
+        return;
+    };
+    let engine = match Engine::new(artifacts) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("[train bench] engine load failed ({e:#}); chaos rows only");
+            suite.write_json().unwrap();
+            return;
+        }
+    };
 
     // determinism guard: the staged orchestrator must reproduce the
     // classic pipeline bit-for-bit before its numbers mean anything

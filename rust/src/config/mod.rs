@@ -54,6 +54,15 @@ pub struct ExperimentConfig {
     /// Async: broadcast a router snapshot every N EM rounds (the final
     /// round always broadcasts).
     pub snapshot_every: usize,
+    /// Async: JSON fault-plan spec for the elastic chaos harness
+    /// (`--chaos-spec`; empty = no injected faults).
+    pub chaos_spec: String,
+    /// Async: schedule the last trainer node to leave at this local step
+    /// (`--leave-after`; 0 = nobody leaves).
+    pub leave_after: usize,
+    /// Async: re-adopt the departed seat once the fleet reaches this many
+    /// total steps (`--join-after`; 0 = no adoption).
+    pub join_after: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -76,6 +85,9 @@ impl Default for ExperimentConfig {
             checkpoint_every: 0,
             resume: false,
             snapshot_every: 1,
+            chaos_spec: String::new(),
+            leave_after: 0,
+            join_after: 0,
         }
     }
 }
@@ -175,6 +187,15 @@ impl ExperimentConfig {
         if let Some(v) = u("snapshot_every") {
             self.snapshot_every = v;
         }
+        if let Some(v) = s("chaos_spec") {
+            self.chaos_spec = v;
+        }
+        if let Some(v) = u("leave_after") {
+            self.leave_after = v;
+        }
+        if let Some(v) = u("join_after") {
+            self.join_after = v;
+        }
     }
 
     /// Apply `--key value` CLI overrides (same keys as the JSON form).
@@ -223,6 +244,11 @@ impl ExperimentConfig {
         }
         self.checkpoint_every = args.get_usize("checkpoint-every", self.checkpoint_every)?;
         self.snapshot_every = args.get_usize("snapshot-every", self.snapshot_every)?;
+        if let Some(v) = args.get("chaos-spec") {
+            self.chaos_spec = v.to_string();
+        }
+        self.leave_after = args.get_usize("leave-after", self.leave_after)?;
+        self.join_after = args.get_usize("join-after", self.join_after)?;
         Ok(())
     }
 
@@ -269,6 +295,9 @@ impl ExperimentConfig {
             ("checkpoint_every", Json::num(self.checkpoint_every as f64)),
             ("resume", Json::Bool(self.resume)),
             ("snapshot_every", Json::num(self.snapshot_every as f64)),
+            ("chaos_spec", Json::str(self.chaos_spec.clone())),
+            ("leave_after", Json::num(self.leave_after as f64)),
+            ("join_after", Json::num(self.join_after as f64)),
         ])
     }
 }
@@ -298,6 +327,9 @@ mod tests {
         c.checkpoint_every = 25;
         c.resume = true;
         c.snapshot_every = 2;
+        c.chaos_spec = "plans/faults.json".into();
+        c.leave_after = 12;
+        c.join_after = 40;
         let j = c.to_json();
         let mut c2 = ExperimentConfig::default();
         c2.apply_json(&j);
@@ -312,6 +344,9 @@ mod tests {
         assert_eq!(c2.checkpoint_every, 25);
         assert!(c2.resume);
         assert_eq!(c2.snapshot_every, 2);
+        assert_eq!(c2.chaos_spec, "plans/faults.json");
+        assert_eq!(c2.leave_after, 12);
+        assert_eq!(c2.join_after, 40);
     }
 
     #[test]
@@ -328,6 +363,9 @@ mod tests {
             "--checkpoint-dir=ck",
             "--checkpoint-every=5",
             "--snapshot-every=2",
+            "--chaos-spec=faults.json",
+            "--leave-after=9",
+            "--join-after=30",
         ]
         .iter()
         .map(|s| s.to_string())
@@ -346,6 +384,9 @@ mod tests {
         assert_eq!(c.checkpoint_dir, "ck");
         assert_eq!(c.checkpoint_every, 5);
         assert_eq!(c.snapshot_every, 2);
+        assert_eq!(c.chaos_spec, "faults.json");
+        assert_eq!(c.leave_after, 9);
+        assert_eq!(c.join_after, 30);
     }
 
     #[test]

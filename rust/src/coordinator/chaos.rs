@@ -1,0 +1,618 @@
+//! Deterministic fault injection for the elastic trainer.
+//!
+//! A [`FaultPlan`] is a *schedule* of faults — node kills, transient
+//! backend errors, slow-node stalls, dropped snapshot deliveries, and
+//! delayed publishes — keyed on per-node **local step counts** and
+//! snapshot **versions**, never on wall-clock time. That makes every
+//! chaos run replayable: the same plan against the same seeds produces
+//! the same kills at the same stream positions regardless of thread
+//! count or machine speed.
+//!
+//! Plans come from two places and meet in one format:
+//!
+//! * [`FaultPlan::generate`] draws a plan from an [`Rng`] seed and a
+//!   [`PlanShape`] (how many of each fault, over how many steps) — the
+//!   chaos tests iterate fixed seeds this way.
+//! * [`FaultPlan::from_json`] / [`FaultPlan::to_json`] round-trip the
+//!   schedule through the repo's JSON so a failing seed can be exported,
+//!   edited, and replayed exactly via `--chaos-spec plan.json`.
+//!
+//! The plan itself is immutable after construction; *consumed* state
+//! (which kills already fired, how many transient failures remain) lives
+//! behind a mutex so one `Arc<FaultPlan>` can be shared across all node
+//! workers. Consumption is what makes kills one-shot: a replacement node
+//! adopting a checkpoint resumes at the very step its predecessor was
+//! killed at, and must not be killed again by the same spec.
+
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Kill node `node` at the top of its local step `at_step` (before the
+/// step trains — a kill at a checkpoint boundary therefore loses zero
+/// steps and the adopted replacement resumes bit-identically).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KillSpec {
+    pub node: usize,
+    pub at_step: u64,
+}
+
+/// Fail node `node`'s step `at_step` with a transient error `failures`
+/// times before letting it through — exercises the retry/backoff path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TransientSpec {
+    pub node: usize,
+    pub at_step: u64,
+    pub failures: u32,
+}
+
+/// Stall node `node` for `micros` before its local step `at_step` (a
+/// slow node; correctness must not depend on relative node speed).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StallSpec {
+    pub node: usize,
+    pub at_step: u64,
+    pub micros: u64,
+}
+
+/// Drop the delivery of snapshot `version` to node `node`: the node
+/// keeps routing against the last snapshot it actually received. Drops
+/// affect *adoption timing only* — the ledger records the broadcast
+/// against every live subscriber because the publisher did send it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DropSpec {
+    pub node: usize,
+    pub version: u64,
+}
+
+/// Delay the publish of snapshot `version` until the run's total trained
+/// steps reach `min_total_steps` (a slow router leader).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PublishGate {
+    pub version: u64,
+    pub min_total_steps: u64,
+}
+
+/// How many of each fault [`FaultPlan::generate`] should draw, and the
+/// step/version ranges to draw them over.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanShape {
+    pub nodes: usize,
+    /// Local steps each node will run; fault steps are drawn in `[1, steps_per_node)`.
+    pub steps_per_node: u64,
+    pub kills: usize,
+    pub transients: usize,
+    pub stalls: usize,
+    pub drops: usize,
+    pub publish_gates: usize,
+    /// Snapshot versions the run will publish; drops/gates draw in `[1, versions]`.
+    pub snapshot_versions: u64,
+}
+
+/// Marker error for an injected (or backend-signalled) transient fault.
+/// The elastic trainer retries steps whose error chain downcasts to this
+/// type; anything else is terminal for the node (structured
+/// `NodeFailed`, never a panic).
+#[derive(Debug, Clone, Copy)]
+pub struct TransientFault {
+    pub node: usize,
+    pub step: u64,
+}
+
+impl std::fmt::Display for TransientFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "transient backend fault (node {}, step {})",
+            self.node, self.step
+        )
+    }
+}
+
+impl std::error::Error for TransientFault {}
+
+/// `true` when `err`'s chain contains a [`TransientFault`] — the retry
+/// predicate used by the elastic node loop.
+pub fn is_transient(err: &anyhow::Error) -> bool {
+    err.chain()
+        .any(|e| e.downcast_ref::<TransientFault>().is_some())
+}
+
+/// Per-plan consumed state (which one-shot faults already fired).
+#[derive(Debug, Default)]
+struct Consumed {
+    kills: Vec<bool>,
+    transient_left: Vec<u32>,
+    stalls: Vec<bool>,
+}
+
+/// A deterministic, replayable schedule of injected faults. See the
+/// module docs for the construction/consumption contract.
+#[derive(Debug)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub kills: Vec<KillSpec>,
+    pub transients: Vec<TransientSpec>,
+    pub stalls: Vec<StallSpec>,
+    pub drops: Vec<DropSpec>,
+    pub publish_gates: Vec<PublishGate>,
+    consumed: Mutex<Consumed>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan::none()
+    }
+}
+
+impl FaultPlan {
+    /// The empty plan: no faults ever fire.
+    pub fn none() -> Self {
+        FaultPlan::from_specs(0, vec![], vec![], vec![], vec![], vec![])
+    }
+
+    fn from_specs(
+        seed: u64,
+        kills: Vec<KillSpec>,
+        transients: Vec<TransientSpec>,
+        stalls: Vec<StallSpec>,
+        drops: Vec<DropSpec>,
+        publish_gates: Vec<PublishGate>,
+    ) -> Self {
+        let consumed = Consumed {
+            kills: vec![false; kills.len()],
+            transient_left: transients.iter().map(|t| t.failures).collect(),
+            stalls: vec![false; stalls.len()],
+        };
+        FaultPlan {
+            seed,
+            kills,
+            transients,
+            stalls,
+            drops,
+            publish_gates,
+            consumed: Mutex::new(consumed),
+        }
+    }
+
+    /// Draw a plan from a seed. Fault steps land in `[1, steps_per_node)`
+    /// so every node trains at least one step before anything fires, and
+    /// kills are drawn over distinct nodes when possible (killing the
+    /// same node twice at different steps is legal but makes a thinner
+    /// test).
+    pub fn generate(seed: u64, shape: &PlanShape) -> Self {
+        assert!(shape.nodes > 0, "plan needs at least one node");
+        let mut rng = Rng::new(seed ^ 0xC4A0_5CAF_F01D_ED01);
+        let step_hi = shape.steps_per_node.max(2);
+        let mut draw_step = |rng: &mut Rng| rng.range_u64(1, step_hi);
+        let kill_nodes = {
+            let k = shape.kills.min(shape.nodes);
+            let mut picked = rng.sample_indices(shape.nodes, k);
+            // if more kills than nodes were requested, wrap around
+            while picked.len() < shape.kills {
+                picked.push(rng.usize_below(shape.nodes));
+            }
+            picked
+        };
+        let kills = kill_nodes
+            .into_iter()
+            .map(|node| KillSpec {
+                node,
+                at_step: draw_step(&mut rng),
+            })
+            .collect();
+        let transients = (0..shape.transients)
+            .map(|_| TransientSpec {
+                node: rng.usize_below(shape.nodes),
+                at_step: draw_step(&mut rng),
+                failures: 1 + rng.below(2) as u32,
+            })
+            .collect();
+        let stalls = (0..shape.stalls)
+            .map(|_| StallSpec {
+                node: rng.usize_below(shape.nodes),
+                at_step: draw_step(&mut rng),
+                micros: rng.range_u64(100, 2_000),
+            })
+            .collect();
+        let vers_hi = shape.snapshot_versions.max(1);
+        let drops = (0..shape.drops)
+            .map(|_| DropSpec {
+                node: rng.usize_below(shape.nodes),
+                version: rng.range_u64(1, vers_hi + 1),
+            })
+            .collect();
+        let publish_gates = (0..shape.publish_gates)
+            .map(|_| PublishGate {
+                version: rng.range_u64(1, vers_hi + 1),
+                min_total_steps: rng.range_u64(1, step_hi * shape.nodes as u64),
+            })
+            .collect();
+        FaultPlan::from_specs(seed, kills, transients, stalls, drops, publish_gates)
+    }
+
+    /// Forget all consumed state, making every one-shot fault live again
+    /// (replay the identical schedule against a fresh run).
+    pub fn reset(&self) {
+        let mut c = self.lock();
+        c.kills.iter_mut().for_each(|k| *k = false);
+        c.stalls.iter_mut().for_each(|s| *s = false);
+        for (left, spec) in c.transient_left.iter_mut().zip(&self.transients) {
+            *left = spec.failures;
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Consumed> {
+        self.consumed.lock().expect("fault plan poisoned")
+    }
+
+    /// One-shot kill query: `true` exactly once per matching [`KillSpec`]
+    /// (a replacement resuming at the kill step is not re-killed).
+    pub fn take_kill(&self, node: usize, step: u64) -> bool {
+        let mut c = self.lock();
+        for (i, k) in self.kills.iter().enumerate() {
+            if !c.kills[i] && k.node == node && k.at_step == step {
+                c.kills[i] = true;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Transient-failure query: `true` while the matching spec still has
+    /// failures left (each query consumes one), then `false` — so a
+    /// retrying node succeeds after `failures` attempts.
+    pub fn transient_failure(&self, node: usize, step: u64) -> bool {
+        let mut c = self.lock();
+        for (i, t) in self.transients.iter().enumerate() {
+            if c.transient_left[i] > 0 && t.node == node && t.at_step == step {
+                c.transient_left[i] -= 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// One-shot stall query: the injected delay in microseconds (0 = no
+    /// stall scheduled here).
+    pub fn take_stall_micros(&self, node: usize, step: u64) -> u64 {
+        let mut c = self.lock();
+        for (i, s) in self.stalls.iter().enumerate() {
+            if !c.stalls[i] && s.node == node && s.at_step == step {
+                c.stalls[i] = true;
+                return s.micros;
+            }
+        }
+        0
+    }
+
+    /// Pure query: is the delivery of `version` to `node` dropped?
+    pub fn drops_delivery(&self, node: usize, version: u64) -> bool {
+        self.drops
+            .iter()
+            .any(|d| d.node == node && d.version == version)
+    }
+
+    /// Pure query: the total-step threshold `version`'s publish must wait
+    /// for (`None` = publish immediately).
+    pub fn publish_gate(&self, version: u64) -> Option<u64> {
+        self.publish_gates
+            .iter()
+            .find(|g| g.version == version)
+            .map(|g| g.min_total_steps)
+    }
+
+    /// `true` when no fault of any kind is scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.kills.is_empty()
+            && self.transients.is_empty()
+            && self.stalls.is_empty()
+            && self.drops.is_empty()
+            && self.publish_gates.is_empty()
+    }
+
+    // ---------------- JSON spec ----------------
+
+    pub fn to_json(&self) -> Json {
+        let kills = self
+            .kills
+            .iter()
+            .map(|k| {
+                Json::obj(vec![
+                    ("node", Json::num(k.node as f64)),
+                    ("at_step", Json::num(k.at_step as f64)),
+                ])
+            })
+            .collect();
+        let transients = self
+            .transients
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("node", Json::num(t.node as f64)),
+                    ("at_step", Json::num(t.at_step as f64)),
+                    ("failures", Json::num(t.failures as f64)),
+                ])
+            })
+            .collect();
+        let stalls = self
+            .stalls
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("node", Json::num(s.node as f64)),
+                    ("at_step", Json::num(s.at_step as f64)),
+                    ("micros", Json::num(s.micros as f64)),
+                ])
+            })
+            .collect();
+        let drops = self
+            .drops
+            .iter()
+            .map(|d| {
+                Json::obj(vec![
+                    ("node", Json::num(d.node as f64)),
+                    ("version", Json::num(d.version as f64)),
+                ])
+            })
+            .collect();
+        let gates = self
+            .publish_gates
+            .iter()
+            .map(|g| {
+                Json::obj(vec![
+                    ("version", Json::num(g.version as f64)),
+                    ("min_total_steps", Json::num(g.min_total_steps as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("seed", Json::num(self.seed as f64)),
+            ("kills", Json::Arr(kills)),
+            ("transients", Json::Arr(transients)),
+            ("stalls", Json::Arr(stalls)),
+            ("drops", Json::Arr(drops)),
+            ("publish_gates", Json::Arr(gates)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        fn field(j: &Json, key: &str) -> Result<u64> {
+            j.get(key)
+                .and_then(|v| v.as_i64())
+                .filter(|&v| v >= 0)
+                .map(|v| v as u64)
+                .with_context(|| format!("chaos spec: missing/invalid field '{key}'"))
+        }
+        fn entries<'a>(j: &'a Json, key: &str) -> Result<&'a [Json]> {
+            match j.get(key) {
+                None => Ok(&[]),
+                Some(v) => v
+                    .as_arr()
+                    .with_context(|| format!("chaos spec: '{key}' must be an array")),
+            }
+        }
+        if j.as_obj().is_none() {
+            bail!("chaos spec: top level must be an object");
+        }
+        let seed = j.get("seed").and_then(|v| v.as_i64()).unwrap_or(0) as u64;
+        let mut kills = Vec::new();
+        for e in entries(j, "kills")? {
+            kills.push(KillSpec {
+                node: field(e, "node")? as usize,
+                at_step: field(e, "at_step")?,
+            });
+        }
+        let mut transients = Vec::new();
+        for e in entries(j, "transients")? {
+            transients.push(TransientSpec {
+                node: field(e, "node")? as usize,
+                at_step: field(e, "at_step")?,
+                failures: field(e, "failures")? as u32,
+            });
+        }
+        let mut stalls = Vec::new();
+        for e in entries(j, "stalls")? {
+            stalls.push(StallSpec {
+                node: field(e, "node")? as usize,
+                at_step: field(e, "at_step")?,
+                micros: field(e, "micros")?,
+            });
+        }
+        let mut drops = Vec::new();
+        for e in entries(j, "drops")? {
+            drops.push(DropSpec {
+                node: field(e, "node")? as usize,
+                version: field(e, "version")?,
+            });
+        }
+        let mut publish_gates = Vec::new();
+        for e in entries(j, "publish_gates")? {
+            publish_gates.push(PublishGate {
+                version: field(e, "version")?,
+                min_total_steps: field(e, "min_total_steps")?,
+            });
+        }
+        Ok(FaultPlan::from_specs(
+            seed,
+            kills,
+            transients,
+            stalls,
+            drops,
+            publish_gates,
+        ))
+    }
+
+    /// Parse a plan from JSON text (`--chaos-spec` file contents).
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        let j = Json::parse(text)
+            .map_err(|e| anyhow::anyhow!("chaos spec: {e}"))?;
+        FaultPlan::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape() -> PlanShape {
+        PlanShape {
+            nodes: 4,
+            steps_per_node: 12,
+            kills: 2,
+            transients: 2,
+            stalls: 1,
+            drops: 2,
+            publish_gates: 1,
+            snapshot_versions: 3,
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        let a = FaultPlan::generate(7, &shape());
+        let b = FaultPlan::generate(7, &shape());
+        let c = FaultPlan::generate(8, &shape());
+        assert_eq!(a.kills, b.kills);
+        assert_eq!(a.transients, b.transients);
+        assert_eq!(a.stalls, b.stalls);
+        assert_eq!(a.drops, b.drops);
+        assert_eq!(a.publish_gates, b.publish_gates);
+        assert_ne!(
+            (a.kills.clone(), a.drops.clone()),
+            (c.kills.clone(), c.drops.clone()),
+            "different seeds should draw different plans"
+        );
+    }
+
+    #[test]
+    fn generated_faults_respect_shape_bounds() {
+        for seed in 0..20 {
+            let p = FaultPlan::generate(seed, &shape());
+            assert_eq!(p.kills.len(), 2);
+            let kill_nodes: Vec<usize> = p.kills.iter().map(|k| k.node).collect();
+            let mut dedup = kill_nodes.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            assert_eq!(dedup.len(), kill_nodes.len(), "kills over distinct nodes");
+            for k in &p.kills {
+                assert!(k.node < 4 && (1..12).contains(&k.at_step));
+            }
+            for t in &p.transients {
+                assert!(t.node < 4 && (1..12).contains(&t.at_step));
+                assert!((1..=2).contains(&t.failures));
+            }
+            for s in &p.stalls {
+                assert!((100..2_000).contains(&s.micros));
+            }
+            for d in &p.drops {
+                assert!(d.node < 4 && (1..=3).contains(&d.version));
+            }
+            for g in &p.publish_gates {
+                assert!((1..=3).contains(&g.version));
+                assert!(g.min_total_steps >= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn kill_fires_exactly_once() {
+        let p = FaultPlan::from_specs(
+            0,
+            vec![KillSpec { node: 1, at_step: 5 }],
+            vec![],
+            vec![],
+            vec![],
+            vec![],
+        );
+        assert!(!p.take_kill(1, 4));
+        assert!(!p.take_kill(0, 5));
+        assert!(p.take_kill(1, 5));
+        // the adopted replacement resumes at the same step: no re-kill
+        assert!(!p.take_kill(1, 5));
+        p.reset();
+        assert!(p.take_kill(1, 5));
+    }
+
+    #[test]
+    fn transient_exhausts_after_n_failures() {
+        let p = FaultPlan::from_specs(
+            0,
+            vec![],
+            vec![TransientSpec {
+                node: 0,
+                at_step: 3,
+                failures: 2,
+            }],
+            vec![],
+            vec![],
+            vec![],
+        );
+        assert!(p.transient_failure(0, 3));
+        assert!(p.transient_failure(0, 3));
+        assert!(!p.transient_failure(0, 3), "third attempt must succeed");
+        assert!(!p.transient_failure(0, 4));
+    }
+
+    #[test]
+    fn stall_drop_and_gate_queries() {
+        let p = FaultPlan::from_specs(
+            0,
+            vec![],
+            vec![],
+            vec![StallSpec {
+                node: 2,
+                at_step: 1,
+                micros: 750,
+            }],
+            vec![DropSpec { node: 0, version: 2 }],
+            vec![PublishGate {
+                version: 2,
+                min_total_steps: 9,
+            }],
+        );
+        assert_eq!(p.take_stall_micros(2, 1), 750);
+        assert_eq!(p.take_stall_micros(2, 1), 0, "stalls are one-shot");
+        assert!(p.drops_delivery(0, 2));
+        assert!(!p.drops_delivery(1, 2));
+        assert!(p.drops_delivery(0, 2), "drop queries are pure");
+        assert_eq!(p.publish_gate(2), Some(9));
+        assert_eq!(p.publish_gate(1), None);
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let p = FaultPlan::generate(41, &shape());
+        let text = p.to_json().to_string_pretty();
+        let q = FaultPlan::from_json_str(&text).unwrap();
+        assert_eq!(p.seed, q.seed);
+        assert_eq!(p.kills, q.kills);
+        assert_eq!(p.transients, q.transients);
+        assert_eq!(p.stalls, q.stalls);
+        assert_eq!(p.drops, q.drops);
+        assert_eq!(p.publish_gates, q.publish_gates);
+    }
+
+    #[test]
+    fn json_missing_sections_default_empty() {
+        let p = FaultPlan::from_json_str(r#"{"kills": [{"node": 0, "at_step": 2}]}"#).unwrap();
+        assert_eq!(p.kills.len(), 1);
+        assert!(p.transients.is_empty() && p.drops.is_empty());
+        assert!(!p.is_empty());
+        assert!(FaultPlan::from_json_str("{}").unwrap().is_empty());
+        assert!(FaultPlan::from_json_str("[1,2]").is_err());
+        assert!(FaultPlan::from_json_str(r#"{"kills": [{"node": 0}]}"#).is_err());
+        assert!(FaultPlan::from_json_str("not json").is_err());
+    }
+
+    #[test]
+    fn transient_marker_downcasts_through_context() {
+        let err = anyhow::Error::new(TransientFault { node: 1, step: 4 })
+            .context("train_step failed");
+        assert!(is_transient(&err));
+        assert!(!is_transient(&anyhow::anyhow!("disk on fire")));
+    }
+}

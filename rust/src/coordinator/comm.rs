@@ -26,6 +26,15 @@ pub enum CommKind {
     SnapshotBroadcast,
     /// DDP gradient all-reduce (baseline comparator only).
     GradAllReduce,
+    /// A replacement node pulls a departed node's checkpoint from shared
+    /// storage and resumes its seat (elastic membership). One point-to-
+    /// point transfer of the full checkpoint file per adoption.
+    CheckpointAdopt,
+    /// A rejoining node's offline parameter delta merges back into its
+    /// seat through the delayed-Nesterov outer update (Async Local-SGD).
+    /// `staleness` records the snapshot-version lag the offline worker
+    /// trained under.
+    ParamMerge,
 }
 
 /// One recorded event.
@@ -36,6 +45,10 @@ pub struct CommEvent {
     pub bytes_sent: u64,
     pub bytes_received: u64,
     pub step: u64,
+    /// Snapshot-version lag for [`CommKind::ParamMerge`] events (how many
+    /// router-snapshot versions behind the live store the merged worker
+    /// was). Zero for every other kind.
+    pub staleness: u64,
 }
 
 /// Ledger of all communication in a run.
@@ -69,6 +82,7 @@ impl CommLedger {
                 bytes_sent: own,
                 bytes_received: own * (nodes as u64 - 1),
                 step,
+                staleness: 0,
             });
         }
     }
@@ -86,6 +100,7 @@ impl CommLedger {
             bytes_sent: snapshot_bytes * nodes as u64,
             bytes_received: 0,
             step: version,
+            staleness: 0,
         });
         for node in 0..nodes {
             self.record(CommEvent {
@@ -94,8 +109,38 @@ impl CommLedger {
                 bytes_sent: 0,
                 bytes_received: snapshot_bytes,
                 step: version,
+                staleness: 0,
             });
         }
+    }
+
+    /// Record one checkpoint adoption: the replacement taking over seat
+    /// `node` pulls the departed node's `ckpt_bytes` checkpoint from
+    /// shared storage (one point-to-point transfer; the storage side is
+    /// the sender so [`CommLedger::total_bytes`] counts it once).
+    pub fn record_checkpoint_adopt(&mut self, node: usize, ckpt_bytes: u64, step: u64) {
+        self.record(CommEvent {
+            node,
+            kind: CommKind::CheckpointAdopt,
+            bytes_sent: ckpt_bytes,
+            bytes_received: ckpt_bytes,
+            step,
+            staleness: 0,
+        });
+    }
+
+    /// Record one delayed-Nesterov parameter merge into seat `node`: the
+    /// rejoining worker ships its full `param_bytes` delta, the seat
+    /// receives it, and `staleness` snapshot versions of lag are audited.
+    pub fn record_param_merge(&mut self, node: usize, param_bytes: u64, step: u64, staleness: u64) {
+        self.record(CommEvent {
+            node,
+            kind: CommKind::ParamMerge,
+            bytes_sent: param_bytes,
+            bytes_received: param_bytes,
+            step,
+            staleness,
+        });
     }
 
     /// Record one DDP gradient all-reduce step: `2 * W * 4` bytes per node
@@ -110,8 +155,30 @@ impl CommLedger {
                 bytes_sent: bytes / 2,
                 bytes_received: bytes / 2,
                 step,
+                staleness: 0,
             });
         }
+    }
+
+    /// Total bytes sent for one event kind (exact-audit queries in the
+    /// chaos tests: snapshot vs adoption vs merge traffic).
+    pub fn kind_bytes(&self, kind: CommKind) -> u64 {
+        self.events
+            .iter()
+            .filter(|e| e.kind == kind)
+            .map(|e| e.bytes_sent)
+            .sum()
+    }
+
+    /// Largest staleness audited across all [`CommKind::ParamMerge`]
+    /// events (0 when no merge happened).
+    pub fn max_merge_staleness(&self) -> u64 {
+        self.events
+            .iter()
+            .filter(|e| e.kind == CommKind::ParamMerge)
+            .map(|e| e.staleness)
+            .max()
+            .unwrap_or(0)
     }
 
     pub fn totals_per_node(&self) -> BTreeMap<usize, NodeTotals> {
@@ -232,6 +299,35 @@ mod tests {
         }
         assert_eq!(l.total_bytes(), 2 * 3 * 64);
         assert_eq!(l.peak_node_bytes(), 2 * 3 * 64);
+    }
+
+    #[test]
+    fn adopt_and_merge_totals_exact() {
+        let mut l = CommLedger::default();
+        l.record_snapshot_broadcast(2, 64, 1);
+        l.record_checkpoint_adopt(1, 500, 10);
+        l.record_checkpoint_adopt(0, 500, 14);
+        l.record_param_merge(1, 240, 20, 3);
+        assert_eq!(l.kind_bytes(CommKind::SnapshotBroadcast), 2 * 64);
+        assert_eq!(l.kind_bytes(CommKind::CheckpointAdopt), 2 * 500);
+        assert_eq!(l.kind_bytes(CommKind::ParamMerge), 240);
+        assert_eq!(l.total_bytes(), 2 * 64 + 2 * 500 + 240);
+        assert_eq!(l.rounds(CommKind::CheckpointAdopt), 2);
+        assert_eq!(l.rounds(CommKind::ParamMerge), 1);
+        assert_eq!(l.max_merge_staleness(), 3);
+        // non-merge events never carry staleness
+        assert!(l
+            .events
+            .iter()
+            .filter(|e| e.kind != CommKind::ParamMerge)
+            .all(|e| e.staleness == 0));
+    }
+
+    #[test]
+    fn merge_staleness_empty_is_zero() {
+        let l = CommLedger::default();
+        assert_eq!(l.max_merge_staleness(), 0);
+        assert_eq!(l.kind_bytes(CommKind::ParamMerge), 0);
     }
 
     #[test]

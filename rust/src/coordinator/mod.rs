@@ -11,9 +11,13 @@
 //! * [`comm`] — communication ledger and §A.4 closed forms
 //! * [`pipeline`] — end-to-end orchestration (routers → shard → experts)
 //! * [`trainer`] — event-driven trainer nodes: staged (bit-exact classic
-//!   pipeline) and async (checkpointed, stale-router-snapshot) modes
+//!   pipeline), async (checkpointed, stale-router-snapshot), and elastic
+//!   (failure-tolerant, join/leave membership) modes
+//! * [`chaos`] — seeded deterministic fault plans for the elastic
+//!   trainer's chaos harness
 
 pub mod assignment;
+pub mod chaos;
 pub mod comm;
 pub mod em;
 pub mod expert;
@@ -33,10 +37,15 @@ pub use inference::{
     Mixture, Request, Response,
 };
 pub use pipeline::{run_pipeline, run_pipeline_reference, PipelineConfig, PipelineResult};
+pub use chaos::{
+    is_transient, DropSpec, FaultPlan, KillSpec, PlanShape, PublishGate, StallSpec, TransientFault,
+    TransientSpec,
+};
 pub use trainer::{
-    run_async_nodes, run_staged_nodes, run_trainer, EngineBackend, NodeOutcome, NodeProgress,
-    NodeRunConfig, RouterSnapshot, SnapshotStore, TrainBackend, TrainMode, TrainerConfig,
-    TrainerHandle,
+    run_async_nodes, run_elastic_nodes, run_staged_nodes, run_trainer, ElasticHandle, ElasticPlan,
+    ElasticPolicy, ElasticReport, ElasticStats, EngineBackend, LeaveEvent, NodeEnd, NodeFailure,
+    NodeOutcome, NodeProgress, NodeRunConfig, Rejoin, RouterSnapshot, SnapshotStore, TrainBackend,
+    TrainMode, TrainerConfig, TrainerHandle,
 };
 pub use server::{
     run_server, MixtureBackend, SchedStats, ServeBackend, ServerClient, ServerConfig,

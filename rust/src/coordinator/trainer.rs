@@ -50,14 +50,59 @@
 //! Per-node state (stream, pool, cursor, counters, log) is owned by the
 //! node object itself, which moves through the queue — exactly one
 //! worker touches it at a time, so it needs no lock at all.
+//!
+//! # Failure model (elastic mode — [`run_elastic_nodes`])
+//!
+//! Faults are injected deterministically through a
+//! [`FaultPlan`](super::chaos::FaultPlan) (step/version-keyed, never
+//! wall-clock) and membership changes through an [`ElasticPlan`] /
+//! [`ElasticHandle`]; every fault path produces a structured outcome —
+//! **never a panic**.
+//!
+//! **Tolerated** (the run self-heals, bit-identically where stated):
+//! * *Node kill*: the seat's replacement adopts the last v2/STLN
+//!   checkpoint — exact stream position + routed pool — and resumes; a
+//!   kill at a checkpoint boundary loses zero steps and the continuation
+//!   is bit-identical. Each adoption records a
+//!   [`CheckpointAdopt`](super::comm::CommKind::CheckpointAdopt) ledger
+//!   event (bytes = checkpoint file size) plus `steps_lost`/recovery
+//!   time in [`ElasticStats`].
+//! * *Transient backend errors* (chain downcasts to
+//!   [`TransientFault`](super::chaos::TransientFault)): retried with
+//!   linear backoff up to [`ElasticPolicy::max_retries`].
+//! * *Slow nodes / stalls*: other nodes are never blocked (no barrier);
+//!   a stalled node just routes against a staler snapshot.
+//! * *Dropped snapshot deliveries*: the node keeps routing under the
+//!   last snapshot it actually received; only adoption *timing* shifts —
+//!   ledger accounting is unaffected (the publisher did send it).
+//! * *Leave + rejoin*: a departing node's checkpoint anchors its seat;
+//!   its offline trajectory merges back through a delayed-Nesterov outer
+//!   update (Async Local-SGD) recorded as a
+//!   [`ParamMerge`](super::comm::CommKind::ParamMerge) event carrying
+//!   the snapshot-version staleness of the merge.
+//! * *Join / expert-count growth*: a new seat is seeded from the nearest
+//!   router snapshot via [`TrainBackend::init_joiner`].
+//!
+//! **Degrades** (run completes, quality reduced, recorded in the
+//! report): a node whose retries exhaust — or that hits a non-transient
+//! error — ends as [`NodeEnd::Failed`] with whatever state could be
+//! salvaged; surviving nodes finish normally. The run returns `Ok` as
+//! long as **at least one node survives**.
+//!
+//! **Aborts** (structured `Err`, never a hang): every node failed; the
+//! router driver itself failed; or a node is orphaned — waiting on a
+//! first snapshot longer than [`NodeRunConfig::snapshot_wait_us`] after
+//! the store closed or timed out.
 
 use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
+use super::chaos::{is_transient, FaultPlan, TransientFault};
 use super::comm::CommLedger;
 use super::em::{train_routers, train_routers_hooked, EmConfig};
 use super::expert::segment_batch;
@@ -68,8 +113,8 @@ use super::sharding::shard_corpus;
 use crate::data::{Sequence, SequenceGen, DOMAINS};
 use crate::metrics::RunLog;
 use crate::model::checkpoint::{
-    load_node_checkpoint, save_node_checkpoint, NodeCheckpoint, NodeCheckpointView,
-    NODE_MODE_ASYNC, NODE_MODE_STAGED,
+    load_node_checkpoint, save_node_checkpoint, sweep_stale_temps, NodeCheckpoint,
+    NodeCheckpointView, NODE_MODE_ASYNC, NODE_MODE_STAGED,
 };
 use crate::runtime::parallel::{resolve_threads, WorkQueue};
 use crate::runtime::{Engine, TrainState, VariantMeta};
@@ -105,7 +150,11 @@ struct StoreInner {
 /// driver returns) wakes any first-publish waiters; an already-published
 /// snapshot keeps serving after close.
 pub struct SnapshotStore {
-    subscribers: usize,
+    /// Live subscriber count — atomic because elastic runs adjust it as
+    /// nodes join and leave, and each publish records its broadcast
+    /// against the count *at publish time* (the ledger stays exact under
+    /// churn).
+    subscribers: AtomicUsize,
     inner: Mutex<StoreInner>,
     cv: Condvar,
     ledger: Mutex<CommLedger>,
@@ -115,7 +164,7 @@ impl SnapshotStore {
     /// A store broadcasting to `subscribers` expert nodes.
     pub fn new(subscribers: usize) -> Self {
         SnapshotStore {
-            subscribers,
+            subscribers: AtomicUsize::new(subscribers),
             inner: Mutex::new(StoreInner {
                 snap: None,
                 closed: false,
@@ -126,7 +175,37 @@ impl SnapshotStore {
     }
 
     pub fn subscribers(&self) -> usize {
-        self.subscribers
+        self.subscribers.load(Ordering::Relaxed)
+    }
+
+    /// Reset the live subscriber count (elastic run setup).
+    pub fn set_subscribers(&self, n: usize) {
+        self.subscribers.store(n, Ordering::Relaxed);
+    }
+
+    /// Adjust the live subscriber count by `delta` (a node joined or
+    /// left), returning the new count. Saturates at zero.
+    pub fn adjust_subscribers(&self, delta: isize) -> usize {
+        if delta >= 0 {
+            self.subscribers
+                .fetch_add(delta as usize, Ordering::Relaxed)
+                + delta as usize
+        } else {
+            let sub = (-delta) as usize;
+            let mut cur = self.subscribers.load(Ordering::Relaxed);
+            loop {
+                let next = cur.saturating_sub(sub);
+                match self.subscribers.compare_exchange_weak(
+                    cur,
+                    next,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => return next,
+                    Err(now) => cur = now,
+                }
+            }
+        }
     }
 
     fn lock(&self) -> std::sync::MutexGuard<'_, StoreInner> {
@@ -150,7 +229,7 @@ impl SnapshotStore {
         self.ledger
             .lock()
             .expect("snapshot ledger poisoned")
-            .record_snapshot_broadcast(self.subscribers, bytes, version);
+            .record_snapshot_broadcast(self.subscribers(), bytes, version);
         version
     }
 
@@ -168,6 +247,15 @@ impl SnapshotStore {
     /// the store is closed while still empty (the router driver exited
     /// without ever publishing).
     pub fn wait_current(&self) -> Result<Arc<RouterSnapshot>> {
+        self.wait_current_for(None)
+    }
+
+    /// [`wait_current`](SnapshotStore::wait_current) with an optional
+    /// deadline: an orphaned node (its publisher died without closing
+    /// the store) errors structurally after `timeout` instead of
+    /// blocking forever. `None` waits indefinitely.
+    pub fn wait_current_for(&self, timeout: Option<Duration>) -> Result<Arc<RouterSnapshot>> {
+        let deadline = timeout.map(|t| Instant::now() + t);
         let mut g = self.lock();
         loop {
             if let Some(s) = &g.snap {
@@ -176,7 +264,24 @@ impl SnapshotStore {
             if g.closed {
                 bail!("snapshot store closed before any router snapshot was published");
             }
-            g = self.cv.wait(g).expect("snapshot store poisoned");
+            match deadline {
+                None => g = self.cv.wait(g).expect("snapshot store poisoned"),
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        bail!(
+                            "timed out after {:?} waiting for the first router snapshot \
+                             (node orphaned: is the publisher alive?)",
+                            timeout.expect("deadline implies timeout")
+                        );
+                    }
+                    let (guard, _) = self
+                        .cv
+                        .wait_timeout(g, d - now)
+                        .expect("snapshot store poisoned");
+                    g = guard;
+                }
+            }
         }
     }
 
@@ -219,6 +324,15 @@ pub trait TrainBackend: Sync {
     fn tokens_per_step(&self) -> usize;
     /// Fresh expert state for `node` (deterministic per seed).
     fn init_expert(&self, node: usize, seed: u64) -> Result<TrainState>;
+    /// State for a node joining a *live* run (elastic expert-count
+    /// growth): re-seeded from the nearest router snapshot, so a
+    /// newcomer starts consistent with the routing the cluster is
+    /// already using. The default ignores the snapshot and falls back to
+    /// [`init_expert`](TrainBackend::init_expert); backends with
+    /// distillation-style warm starts override it.
+    fn init_joiner(&self, node: usize, seed: u64, _snap: &RouterSnapshot) -> Result<TrainState> {
+        self.init_expert(node, seed)
+    }
     /// One SGD step of `state` on `batch`; returns the batch loss.
     fn train_step(&self, node: usize, state: &mut TrainState, batch: &[&[u32]]) -> Result<f32>;
     /// Local routing: the winning expert index per row under `snap`'s
@@ -311,6 +425,10 @@ pub struct NodeRunConfig {
     /// at a uniform 1/E keep rate). Deterministic, so resume-exactness
     /// is unaffected.
     pub draw_budget: u64,
+    /// Async: how long (µs) a node waits for the *first* router snapshot
+    /// before erroring structurally — the orphaned-node valve. 0 = wait
+    /// forever. Default 60 s.
+    pub snapshot_wait_us: u64,
 }
 
 impl Default for NodeRunConfig {
@@ -324,6 +442,7 @@ impl Default for NodeRunConfig {
             threads: 0,
             route_chunk: 0,
             draw_budget: 0,
+            snapshot_wait_us: 60_000_000,
         }
     }
 }
@@ -436,6 +555,72 @@ impl NodeOutcome {
 /// any value.
 const SLICE_STEPS: usize = 8;
 
+/// Why a node handed its worker back.
+enum SliceOutcome {
+    /// Slice budget spent; re-queue the node.
+    Progress,
+    /// Step budget met (or stream exhausted): the node is done.
+    Finished,
+    /// Elastic only: a [`FaultPlan`] kill fired at the top of a step.
+    Killed,
+    /// Elastic only: the node left the run (index into the
+    /// [`ElasticPlan::leaves`] schedule). Its checkpoint was written so
+    /// an adopter can resume this exact position.
+    Left(usize),
+}
+
+/// Orphan guard: how long a node may block on the first snapshot.
+/// `0` means wait forever (the pre-elastic behavior).
+fn snapshot_wait(cfg: &NodeRunConfig) -> Option<Duration> {
+    (cfg.snapshot_wait_us != 0).then(|| Duration::from_micros(cfg.snapshot_wait_us))
+}
+
+/// One training step with the elastic retry/backoff contract: injected
+/// transients from the fault plan — and genuine backend errors whose
+/// chain downcasts to [`TransientFault`] — are retried with linear
+/// backoff up to [`ElasticPolicy::max_retries`]; anything else (or
+/// exhausted retries) propagates. Outside elastic runs this is a plain
+/// `train_step` call. Retries assume the backend leaves `state`
+/// untouched on error (true of the engine: errors happen before the
+/// optimizer update lands).
+fn step_with_retries<B: TrainBackend>(
+    backend: &B,
+    idx: usize,
+    step: u64,
+    state: &mut TrainState,
+    rows: &[&[u32]],
+    elastic: Option<&ElasticCtx<'_, '_>>,
+) -> Result<f32> {
+    let Some(ctx) = elastic else {
+        return backend.train_step(idx, state, rows);
+    };
+    let mut retries = 0u32;
+    loop {
+        let result = if ctx.faults.transient_failure(idx, step) {
+            Err(anyhow::Error::new(TransientFault { node: idx, step }))
+        } else {
+            backend.train_step(idx, state, rows)
+        };
+        match result {
+            Ok(loss) => return Ok(loss),
+            Err(e) if is_transient(&e) && retries < ctx.policy.max_retries => {
+                retries += 1;
+                ctx.stats.transient_retries.fetch_add(1, Ordering::Relaxed);
+                if ctx.policy.retry_backoff_us > 0 {
+                    std::thread::sleep(Duration::from_micros(
+                        ctx.policy.retry_backoff_us * retries as u64,
+                    ));
+                }
+            }
+            Err(e) => {
+                return Err(e.context(format!(
+                    "train step {step} failed after {retries} retries"
+                )))
+            }
+        }
+    }
+}
+
 enum Source<'env> {
     /// Staged mode: a pre-sharded segment, cycled by cursor (the classic
     /// pipeline's batch discipline — bit-identical to `train_expert`).
@@ -465,6 +650,14 @@ struct Node<'env> {
     finished: bool,
     exhausted: bool,
     last_saved: Option<usize>,
+    /// Elastic: initialize via [`TrainBackend::init_joiner`] from the
+    /// nearest snapshot (a node joining a live run) instead of
+    /// `init_expert`.
+    joiner: bool,
+    /// Elastic: the last snapshot actually *delivered* to this node —
+    /// what the node falls back to when a delivery is dropped by the
+    /// fault plan. Unused (None) outside elastic runs.
+    held_snap: Option<Arc<RouterSnapshot>>,
 }
 
 fn ckpt_path(dir: &Path, idx: usize) -> PathBuf {
@@ -491,6 +684,8 @@ impl<'env> Node<'env> {
             finished: false,
             exhausted: false,
             last_saved: None,
+            joiner: false,
+            held_snap: None,
         }
     }
 
@@ -522,6 +717,8 @@ impl<'env> Node<'env> {
             finished: false,
             exhausted: false,
             last_saved: None,
+            joiner: false,
+            held_snap: None,
         }
     }
 
@@ -634,6 +831,11 @@ impl<'env> Node<'env> {
     }
 
     /// Run up to [`SLICE_STEPS`] training steps, then yield the worker.
+    ///
+    /// `elastic` is `None` on classic runs (bit-identical legacy
+    /// behavior) and `Some` under [`run_elastic_nodes`], where the
+    /// fault plan, leave schedule and pending merges are consulted at
+    /// deterministic points (node-local step counts, never the clock).
     fn run_slice<B: TrainBackend>(
         &mut self,
         backend: &B,
@@ -641,22 +843,62 @@ impl<'env> Node<'env> {
         cfg: &NodeRunConfig,
         n_nodes: usize,
         progress: &NodeProgress,
-    ) -> Result<()> {
+        elastic: Option<&ElasticCtx<'env, '_>>,
+    ) -> Result<SliceOutcome> {
         if let Source::Segment { seqs, .. } = &self.source {
             // same contract (and message) as the classic expert trainer
             ensure!(!seqs.is_empty(), "cannot train on an empty segment");
         }
         if self.state.is_none() {
-            self.state = Some(backend.init_expert(self.idx, self.seed)?);
+            self.state = Some(if self.joiner {
+                // a joiner seeds itself from the live router snapshot
+                // instead of a cold init, so it starts stale-consistent
+                // with the fleet it is joining
+                let snap = store
+                    .expect("joiners only exist in stream runs, which have a store")
+                    .wait_current_for(snapshot_wait(cfg))?;
+                let st = backend.init_joiner(self.idx, self.seed, &snap)?;
+                self.held_snap = Some(snap);
+                st
+            } else {
+                backend.init_expert(self.idx, self.seed)?
+            });
+        }
+        if let Some(ctx) = elastic {
+            if let Some(pm) = ctx.take_due_merge(self.idx, self.steps_done) {
+                self.apply_pending_merge(backend, store, ctx, pm)?;
+            }
         }
         let bs = backend.train_batch_rows().max(1);
         let mut slice = 0usize;
         while !self.finished && self.steps_done < cfg.steps_per_node && slice < SLICE_STEPS {
+            if let Some(ctx) = elastic {
+                let step = self.steps_done as u64;
+                if ctx.faults.take_kill(self.idx, step) {
+                    // die without checkpointing: the adopter resumes
+                    // from the last *saved* boundary, losing exactly
+                    // the steps since then
+                    return Ok(SliceOutcome::Killed);
+                }
+                if let Some(li) = ctx.take_leave(self.idx, self.steps_done) {
+                    if cfg.checkpoint_dir.is_some() && self.last_saved != Some(self.steps_done) {
+                        self.save_checkpoint(cfg)?;
+                    }
+                    return Ok(SliceOutcome::Left(li));
+                }
+                let stall = ctx.faults.take_stall_micros(self.idx, step);
+                if stall > 0 {
+                    // slow-node stall: purely a scheduling perturbation,
+                    // the math is unaffected
+                    std::thread::sleep(Duration::from_micros(stall));
+                }
+            }
             let loss = match &mut self.source {
                 Source::Segment { seqs, cursor } => {
                     let batch = segment_batch(seqs, cursor, bs);
+                    let step = self.steps_done as u64;
                     let state = self.state.as_mut().expect("initialized above");
-                    backend.train_step(self.idx, state, &batch)?
+                    step_with_retries(backend, self.idx, step, state, &batch, elastic)?
                 }
                 Source::Stream {
                     gen,
@@ -670,9 +912,23 @@ impl<'env> Node<'env> {
                         let want = (*route_chunk).min((*draw_budget - self.drawn) as usize).max(1);
                         let chunk = gen.batch(want);
                         self.drawn += chunk.len() as u64;
-                        let snap = store
+                        let latest = store
                             .expect("stream nodes always run with a snapshot store")
-                            .wait_current()?;
+                            .wait_current_for(snapshot_wait(cfg))?;
+                        let snap = match elastic {
+                            Some(ctx) if ctx.faults.drops_delivery(self.idx, latest.version) => {
+                                // dropped delivery: keep routing against
+                                // the last snapshot we did receive (or
+                                // the latest, if nothing was ever held —
+                                // a node cannot route against nothing)
+                                self.held_snap.clone().unwrap_or(latest)
+                            }
+                            Some(_) => {
+                                self.held_snap = Some(Arc::clone(&latest));
+                                latest
+                            }
+                            None => latest,
+                        };
                         if snap.version != self.snapshot_version {
                             self.snapshot_version = snap.version;
                             self.log.scalar(
@@ -717,8 +973,9 @@ impl<'env> Node<'env> {
                     let batch_seqs: Vec<Sequence> = pool.drain(..bs).collect();
                     let rows: Vec<&[u32]> =
                         batch_seqs.iter().map(|s| s.tokens.as_slice()).collect();
+                    let step = self.steps_done as u64;
                     let state = self.state.as_mut().expect("initialized above");
-                    let loss = backend.train_step(self.idx, state, &rows)?;
+                    let loss = step_with_retries(backend, self.idx, step, state, &rows, elastic)?;
                     drop(rows);
                     for s in &batch_seqs {
                         if let Some(c) = self.domain_counts.get_mut(s.domain) {
@@ -755,6 +1012,73 @@ impl<'env> Node<'env> {
                 self.save_checkpoint(cfg)?;
             }
         }
+        Ok(if self.finished {
+            SliceOutcome::Finished
+        } else {
+            SliceOutcome::Progress
+        })
+    }
+
+    /// Fold a rejoining node's offline trajectory back into the live
+    /// parameters with a delayed-Nesterov outer update (Async
+    /// Local-SGD): `d = offline − anchor; v = μ·v + d; θ += γ·(d + μ·v)`
+    /// where γ/μ are [`ElasticPolicy::outer_lr`] /
+    /// [`ElasticPolicy::outer_momentum`]. Staleness (router snapshot
+    /// versions the leaver missed) is recorded on the ledger event.
+    fn apply_pending_merge<B: TrainBackend>(
+        &mut self,
+        backend: &B,
+        store: Option<&SnapshotStore>,
+        ctx: &ElasticCtx<'env, '_>,
+        pm: PendingMerge,
+    ) -> Result<()> {
+        let store = store.expect("merges only occur in stream runs, which have a store");
+        let PendingMerge {
+            seat,
+            anchor,
+            held,
+            offline_steps,
+            left_version,
+            ..
+        } = pm;
+        let offline = train_offline(backend, ctx, seat, anchor.clone(), &held, offline_steps)
+            .with_context(|| format!("offline leg of the node {seat} rejoin"))?;
+        let state = self
+            .state
+            .as_mut()
+            .expect("state initialized before any merge");
+        ensure!(
+            offline.params.len() == state.params.len(),
+            "rejoin merge shape mismatch: offline has {} params, live node has {}",
+            offline.params.len(),
+            state.params.len()
+        );
+        let gamma = ctx.policy.outer_lr as f32;
+        let mu = ctx.policy.outer_momentum as f32;
+        {
+            let mut outer = ctx.outer_v.lock().expect("outer momentum lock");
+            let v = outer[seat].get_or_insert_with(|| vec![0.0; state.params.len()]);
+            ensure!(
+                v.len() == state.params.len(),
+                "outer momentum buffer for seat {seat} has {} entries, node has {}",
+                v.len(),
+                state.params.len()
+            );
+            for i in 0..state.params.len() {
+                let d = offline.params[i] - anchor.params[i];
+                v[i] = mu * v[i] + d;
+                state.params[i] += gamma * (d + mu * v[i]);
+            }
+        }
+        let staleness = store.version().saturating_sub(left_version);
+        let param_bytes = (state.params.len() * 4) as u64;
+        ctx.ledger
+            .lock()
+            .expect("elastic ledger lock")
+            .record_param_merge(seat, param_bytes, state.step, staleness);
+        ctx.stats.merges.fetch_add(1, Ordering::Relaxed);
+        self.log
+            .scalar("merge_staleness", self.steps_done as f64, staleness as f64);
         Ok(())
     }
 
@@ -828,7 +1152,7 @@ fn node_worker<'env, B: TrainBackend>(
             continue;
         }
         let idx = node.idx;
-        match node.run_slice(backend, store, cfg, progress.len(), &progress[idx]) {
+        match node.run_slice(backend, store, cfg, progress.len(), &progress[idx], None) {
             Err(e) => {
                 error.record(e.context(format!("trainer node {idx}")));
                 if let Some(st) = store {
@@ -836,11 +1160,13 @@ fn node_worker<'env, B: TrainBackend>(
                 }
                 retire_node(remaining, queue);
             }
-            Ok(()) => {
-                if node.finished {
-                    outcomes.lock().expect("outcomes poisoned")[idx] = Some(node.into_outcome());
-                    retire_node(remaining, queue);
-                } else if error.is_set() || !queue.push(node) {
+            Ok(SliceOutcome::Finished) => {
+                outcomes.lock().expect("outcomes poisoned")[idx] = Some(node.into_outcome());
+                retire_node(remaining, queue);
+            }
+            // Killed/Left cannot fire without an elastic context
+            Ok(_) => {
+                if error.is_set() || !queue.push(node) {
                     retire_node(remaining, queue);
                 }
             }
@@ -860,6 +1186,15 @@ where
     F: FnOnce(&TrainerHandle<'_>) -> Result<R>,
 {
     let n = nodes.len();
+    if let Some(dir) = &cfg.checkpoint_dir {
+        // a crash mid-`write_atomic` leaves a `.tmp` orphan behind; clear
+        // them before anyone resumes so a dead partial write can never be
+        // mistaken for (or block) a live checkpoint
+        let swept = sweep_stale_temps(dir).context("sweeping stale checkpoint temp files")?;
+        if swept > 0 {
+            eprintln!("[trainer] swept {swept} stale checkpoint temp file(s)");
+        }
+    }
     if cfg.resume {
         for node in &mut nodes {
             node.try_resume(cfg)?;
@@ -971,6 +1306,731 @@ where
 }
 
 // -------------------------------------------------------------------------
+// elastic membership + failure tolerance
+// -------------------------------------------------------------------------
+
+/// A leaver that comes back: how long it trains offline and when its
+/// seat folds the result back in (see the failure model in the module
+/// docs and [`Node::apply_pending_merge`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Rejoin {
+    /// Steps the leaver trains offline — against its own stream and the
+    /// router snapshot it held when it left (routers frozen, exactly the
+    /// Async Local-SGD inner loop).
+    pub offline_steps: usize,
+    /// The live seat merges the offline leg at its first fault-check
+    /// once `steps_done >= merge_at_step`.
+    pub merge_at_step: usize,
+}
+
+/// A scheduled departure from an elastic run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LeaveEvent {
+    pub node: usize,
+    /// Fires at the top of this node-local step (deterministic).
+    pub at_step: usize,
+    /// Immediately re-fill the seat from the checkpoint the leaver
+    /// writes on its way out (a replacement node adopts it).
+    pub adopt: bool,
+    /// Merge the leaver's offline trajectory back in later.
+    pub rejoin: Option<Rejoin>,
+}
+
+/// Knobs for the elastic machinery's tolerance paths.
+#[derive(Clone, Copy, Debug)]
+pub struct ElasticPolicy {
+    /// Retries per training step on transient backend errors.
+    pub max_retries: u32,
+    /// Linear backoff unit between retries (sleep = unit × attempt).
+    pub retry_backoff_us: u64,
+    /// γ of the delayed-Nesterov outer update applied at rejoin merges.
+    pub outer_lr: f64,
+    /// μ of the delayed-Nesterov outer update.
+    pub outer_momentum: f64,
+    /// Spare seats beyond the initial fleet that
+    /// [`ElasticHandle::join_new_node`] may fill mid-run.
+    pub max_extra_nodes: usize,
+}
+
+impl Default for ElasticPolicy {
+    fn default() -> Self {
+        ElasticPolicy {
+            max_retries: 3,
+            retry_backoff_us: 100,
+            outer_lr: 0.5,
+            outer_momentum: 0.9,
+            max_extra_nodes: 0,
+        }
+    }
+}
+
+/// Everything an elastic run is told up front: the seeded fault plan,
+/// the membership (leave/rejoin) schedule, and the tolerance policy.
+#[derive(Default)]
+pub struct ElasticPlan {
+    pub faults: FaultPlan,
+    pub leaves: Vec<LeaveEvent>,
+    pub policy: ElasticPolicy,
+}
+
+/// A node that could not be carried to the end of the run.
+pub struct NodeFailure {
+    pub node: usize,
+    /// Steps it had completed when it failed.
+    pub steps_done: usize,
+    pub error: anyhow::Error,
+    /// Whatever trained state could be recovered from the wreck (None if
+    /// the node died before initializing).
+    pub salvage: Option<TrainState>,
+}
+
+/// How one seat ended an elastic run.
+pub enum NodeEnd {
+    /// Met its step budget (or drained its stream) normally.
+    Completed(NodeOutcome),
+    /// Left on schedule and nobody adopted the seat.
+    Left(NodeOutcome),
+    /// Failed structurally (retries exhausted or a non-transient error).
+    Failed(NodeFailure),
+}
+
+impl NodeEnd {
+    pub fn node(&self) -> usize {
+        match self {
+            NodeEnd::Completed(o) | NodeEnd::Left(o) => o.node,
+            NodeEnd::Failed(f) => f.node,
+        }
+    }
+
+    /// The trained outcome, if this end produced one.
+    pub fn outcome(&self) -> Option<&NodeOutcome> {
+        match self {
+            NodeEnd::Completed(o) | NodeEnd::Left(o) => Some(o),
+            NodeEnd::Failed(_) => None,
+        }
+    }
+}
+
+/// Counters the elastic machinery accumulates across a run.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ElasticStats {
+    pub kills: u64,
+    pub adoptions: u64,
+    pub leaves: u64,
+    pub joins: u64,
+    pub merges: u64,
+    /// Steps re-done because a kill landed past the last checkpoint.
+    pub steps_lost: u64,
+    pub transient_retries: u64,
+    /// Wall-clock spent in checkpoint adoption (the only stat that is
+    /// time-, not step-, denominated; it never feeds back into the run).
+    pub recovery_micros: u64,
+}
+
+#[derive(Default)]
+struct StatsAtomic {
+    kills: AtomicU64,
+    adoptions: AtomicU64,
+    leaves: AtomicU64,
+    joins: AtomicU64,
+    merges: AtomicU64,
+    steps_lost: AtomicU64,
+    transient_retries: AtomicU64,
+    recovery_micros: AtomicU64,
+}
+
+impl StatsAtomic {
+    fn snapshot(&self) -> ElasticStats {
+        ElasticStats {
+            kills: self.kills.load(Ordering::Relaxed),
+            adoptions: self.adoptions.load(Ordering::Relaxed),
+            leaves: self.leaves.load(Ordering::Relaxed),
+            joins: self.joins.load(Ordering::Relaxed),
+            merges: self.merges.load(Ordering::Relaxed),
+            steps_lost: self.steps_lost.load(Ordering::Relaxed),
+            transient_retries: self.transient_retries.load(Ordering::Relaxed),
+            recovery_micros: self.recovery_micros.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// What [`run_elastic_nodes`] returns alongside the driver's result.
+pub struct ElasticReport {
+    /// One entry per seat that ever ran, sorted by seat index. A seat
+    /// whose leaver was adopted reports the *replacement*'s end (the
+    /// departure itself is counted in [`ElasticStats::leaves`]).
+    pub ends: Vec<NodeEnd>,
+    pub stats: ElasticStats,
+    /// `CheckpointAdopt` + `ParamMerge` events (snapshot broadcasts stay
+    /// on the store's own ledger; callers merge the two).
+    pub ledger: CommLedger,
+}
+
+/// A leaver's parked trajectory, waiting for its seat to merge it.
+struct PendingMerge {
+    seat: usize,
+    /// The state the seat had at departure — the merge baseline.
+    anchor: TrainState,
+    /// The snapshot the leaver routes against while offline (frozen).
+    held: Arc<RouterSnapshot>,
+    offline_steps: usize,
+    merge_at_step: usize,
+    /// Store version at departure; merge staleness is measured from it.
+    left_version: u64,
+}
+
+/// Stream salt for offline rejoin legs: the leaver draws from a stream
+/// disjoint (by construction of the factory's salt mixing) from every
+/// live seat's, so a merge never replays data the seat already saw.
+const OFFLINE_STREAM_SALT: u64 = 0x0FF1;
+
+/// Shared context wired into every elastic worker (the `'p` borrows live
+/// on the [`run_elastic_nodes`] stack frame, outliving the scope).
+struct ElasticCtx<'env, 'p> {
+    faults: &'p FaultPlan,
+    leaves: &'p [LeaveEvent],
+    /// One-shot latch per leave event: a replacement that resumes at (or
+    /// re-crosses) `at_step` must not leave again.
+    leaves_fired: Mutex<Vec<bool>>,
+    policy: ElasticPolicy,
+    stats: StatsAtomic,
+    /// `CheckpointAdopt`/`ParamMerge` accounting (broadcasts stay on the
+    /// store's ledger). Taken last, never nested under another lock.
+    ledger: Mutex<CommLedger>,
+    pending: Mutex<Vec<PendingMerge>>,
+    /// Per-seat delayed-Nesterov outer momentum, lazily allocated.
+    outer_v: Mutex<Vec<Option<Vec<f32>>>>,
+    /// Per-seat stream seeds (spare seats are filled at join time).
+    seeds: Mutex<Vec<u64>>,
+    /// `(seat, salt) -> SequenceGen`: respawns and offline legs rebuild
+    /// deterministic streams without threading generators around.
+    factory: &'p (dyn Fn(usize, u64) -> SequenceGen<'env> + Sync),
+    route_chunk: usize,
+    draw_budget: u64,
+}
+
+impl<'env> ElasticCtx<'env, '_> {
+    /// Fire the first unfired leave scheduled for `node` at or before
+    /// `step` (one-shot; see `leaves_fired`).
+    fn take_leave(&self, node: usize, step: usize) -> Option<usize> {
+        let mut fired = self.leaves_fired.lock().expect("leave latch poisoned");
+        for (i, ev) in self.leaves.iter().enumerate() {
+            if !fired[i] && ev.node == node && step >= ev.at_step {
+                fired[i] = true;
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    /// Pull the first pending merge due on `seat` at `step`, if any.
+    fn take_due_merge(&self, seat: usize, step: usize) -> Option<PendingMerge> {
+        let mut pending = self.pending.lock().expect("pending merges poisoned");
+        let at = pending
+            .iter()
+            .position(|pm| pm.seat == seat && step >= pm.merge_at_step)?;
+        Some(pending.remove(at))
+    }
+}
+
+/// The offline half of a leave/rejoin: train `steps` more steps from
+/// `state`, drawing from the leaver's salted stream and routing under
+/// its *frozen* held snapshot (keeping only rows routed to `seat`). This
+/// is exactly the node's inner loop minus snapshot refreshes — which is
+/// what makes the delayed-Nesterov merge sound.
+fn train_offline<'env, B: TrainBackend>(
+    backend: &B,
+    ctx: &ElasticCtx<'env, '_>,
+    seat: usize,
+    mut state: TrainState,
+    held: &RouterSnapshot,
+    steps: usize,
+) -> Result<TrainState> {
+    let mut gen = (ctx.factory)(seat, OFFLINE_STREAM_SALT);
+    let bs = backend.train_batch_rows().max(1);
+    let n_routers = held.routers.len().max(1);
+    // same keep-rate expectation (1/n_routers) as the live loop, with
+    // 4x headroom; the budget is a draw count, so the leg stays
+    // deterministic even when the stream runs dry early
+    let budget = (steps as u64)
+        .saturating_mul(bs as u64)
+        .saturating_mul(n_routers as u64)
+        .saturating_mul(4)
+        .max(1);
+    let mut drawn = 0u64;
+    let mut pool: Vec<Sequence> = Vec::new();
+    for _ in 0..steps {
+        while pool.len() < bs && drawn < budget {
+            let want = ctx.route_chunk.min((budget - drawn) as usize).max(1);
+            let chunk = gen.batch(want);
+            drawn += chunk.len() as u64;
+            let rows: Vec<&[u32]> = chunk.iter().map(|s| s.tokens.as_slice()).collect();
+            let routes = backend.route_local(held, &rows)?;
+            ensure!(
+                routes.len() == rows.len(),
+                "backend routed {} of {} rows",
+                routes.len(),
+                rows.len()
+            );
+            drop(rows);
+            for (seq, &e) in chunk.into_iter().zip(&routes) {
+                if e == seat {
+                    pool.push(seq);
+                }
+            }
+        }
+        if pool.len() < bs {
+            break; // stream dry: a shorter offline leg, merged as-is
+        }
+        let batch: Vec<Sequence> = pool.drain(..bs).collect();
+        let rows: Vec<&[u32]> = batch.iter().map(|s| s.tokens.as_slice()).collect();
+        backend.train_step(seat, &mut state, &rows)?;
+    }
+    Ok(state)
+}
+
+/// Build a replacement node for `seat` and resume it from the seat's
+/// checkpoint if one exists (a missing checkpoint restarts the seat from
+/// scratch — still a structured recovery, just a costlier one). Returns
+/// the node, the adopted checkpoint's size in bytes (0 if none), and the
+/// step it resumed at.
+fn respawn_from_checkpoint<'env>(
+    cfg: &NodeRunConfig,
+    seat: usize,
+    ctx: &ElasticCtx<'env, '_>,
+) -> Result<(Node<'env>, u64, usize)> {
+    let dir = cfg
+        .checkpoint_dir
+        .as_ref()
+        .context("elastic adoption requires a checkpoint directory")?;
+    let seed = ctx.seeds.lock().expect("seat seeds poisoned")[seat];
+    let gen = (ctx.factory)(seat, 0);
+    let mut node = Node::stream(seat, seed, gen, ctx.route_chunk, ctx.draw_budget, cfg);
+    let path = ckpt_path(dir, seat);
+    let mut ckpt_bytes = 0u64;
+    if path.exists() {
+        ckpt_bytes = std::fs::metadata(&path)
+            .with_context(|| format!("sizing checkpoint {}", path.display()))?
+            .len();
+        node.try_resume(cfg)?;
+    }
+    let resumed = node.steps_done;
+    Ok((node, ckpt_bytes, resumed))
+}
+
+/// The elastic worker loop: like [`node_worker`], but node failures are
+/// *absorbed* (recorded as [`NodeEnd::Failed`], the store stays open,
+/// survivors keep running) and [`SliceOutcome::Killed`]/`Left` trigger
+/// the adoption / departure machinery. Only a driver failure aborts the
+/// run through the [`ErrSlot`].
+#[allow(clippy::too_many_arguments)]
+fn elastic_node_worker<'env, B: TrainBackend>(
+    backend: &B,
+    store: &SnapshotStore,
+    cfg: &NodeRunConfig,
+    ctx: &ElasticCtx<'env, '_>,
+    queue: &WorkQueue<Node<'env>>,
+    ends: &Mutex<Vec<Option<NodeEnd>>>,
+    progress: &[NodeProgress],
+    error: &ErrSlot,
+    remaining: &AtomicUsize,
+) {
+    while let Some(mut node) = queue.pop() {
+        if error.is_set() {
+            retire_node(remaining, queue);
+            continue;
+        }
+        let idx = node.idx;
+        let slice = node.run_slice(backend, Some(store), cfg, progress.len(), &progress[idx], Some(ctx));
+        match slice {
+            Err(e) => {
+                // degradation contract: record the failure and keep the
+                // run alive — never close the store, never abort
+                ends.lock().expect("ends poisoned")[idx] = Some(NodeEnd::Failed(NodeFailure {
+                    node: idx,
+                    steps_done: node.steps_done,
+                    error: e.context(format!("trainer node {idx}")),
+                    salvage: node.state.take(),
+                }));
+                store.adjust_subscribers(-1);
+                retire_node(remaining, queue);
+            }
+            Ok(SliceOutcome::Finished) => {
+                ends.lock().expect("ends poisoned")[idx] =
+                    Some(NodeEnd::Completed(node.into_outcome()));
+                retire_node(remaining, queue);
+            }
+            Ok(SliceOutcome::Progress) => {
+                if error.is_set() || !queue.push(node) {
+                    retire_node(remaining, queue);
+                }
+            }
+            Ok(SliceOutcome::Killed) => {
+                ctx.stats.kills.fetch_add(1, Ordering::Relaxed);
+                let died_at = node.steps_done;
+                drop(node); // the dead process: its in-memory state is gone
+                let t0 = Instant::now();
+                match respawn_from_checkpoint(cfg, idx, ctx) {
+                    Ok((replacement, ckpt_bytes, resumed)) => {
+                        ctx.stats.adoptions.fetch_add(1, Ordering::Relaxed);
+                        ctx.stats
+                            .steps_lost
+                            .fetch_add(died_at.saturating_sub(resumed) as u64, Ordering::Relaxed);
+                        ctx.stats
+                            .recovery_micros
+                            .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+                        ctx.ledger
+                            .lock()
+                            .expect("elastic ledger poisoned")
+                            .record_checkpoint_adopt(idx, ckpt_bytes, resumed as u64);
+                        replacement.publish_progress(&progress[idx]);
+                        // no subscriber adjustment: the seat was never
+                        // vacant from the broadcast ledger's viewpoint
+                        if error.is_set() || !queue.push(replacement) {
+                            retire_node(remaining, queue);
+                        }
+                    }
+                    Err(e) => {
+                        ends.lock().expect("ends poisoned")[idx] =
+                            Some(NodeEnd::Failed(NodeFailure {
+                                node: idx,
+                                steps_done: died_at,
+                                error: e
+                                    .context(format!("adopting the checkpoint of killed node {idx}")),
+                                salvage: None,
+                            }));
+                        store.adjust_subscribers(-1);
+                        retire_node(remaining, queue);
+                    }
+                }
+            }
+            Ok(SliceOutcome::Left(li)) => {
+                ctx.stats.leaves.fetch_add(1, Ordering::Relaxed);
+                let ev = ctx.leaves[li];
+                if let Some(rejoin) = ev.rejoin {
+                    // park the offline leg: anchor state + frozen
+                    // snapshot, merged back when the seat reaches
+                    // `merge_at_step`
+                    let held = node.held_snap.clone().or_else(|| store.current());
+                    let anchor = node.state.clone();
+                    if let (Some(held), Some(anchor)) = (held, anchor) {
+                        ctx.pending
+                            .lock()
+                            .expect("pending merges poisoned")
+                            .push(PendingMerge {
+                                seat: idx,
+                                anchor,
+                                held,
+                                offline_steps: rejoin.offline_steps,
+                                merge_at_step: rejoin.merge_at_step,
+                                left_version: store.version(),
+                            });
+                    }
+                }
+                if ev.adopt {
+                    // hand the seat straight to a replacement resuming
+                    // the checkpoint the leaver wrote on its way out —
+                    // a zero-loss, bit-identical handoff
+                    let t0 = Instant::now();
+                    match respawn_from_checkpoint(cfg, idx, ctx) {
+                        Ok((replacement, ckpt_bytes, resumed)) => {
+                            ctx.stats.adoptions.fetch_add(1, Ordering::Relaxed);
+                            ctx.stats
+                                .recovery_micros
+                                .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+                            ctx.ledger
+                                .lock()
+                                .expect("elastic ledger poisoned")
+                                .record_checkpoint_adopt(idx, ckpt_bytes, resumed as u64);
+                            replacement.publish_progress(&progress[idx]);
+                            if error.is_set() || !queue.push(replacement) {
+                                retire_node(remaining, queue);
+                            }
+                        }
+                        Err(e) => {
+                            ends.lock().expect("ends poisoned")[idx] =
+                                Some(NodeEnd::Failed(NodeFailure {
+                                    node: idx,
+                                    steps_done: node.steps_done,
+                                    error: e.context(format!(
+                                        "adopting the checkpoint of departed node {idx}"
+                                    )),
+                                    salvage: node.state.take(),
+                                }));
+                            store.adjust_subscribers(-1);
+                            retire_node(remaining, queue);
+                        }
+                    }
+                } else {
+                    store.adjust_subscribers(-1);
+                    ends.lock().expect("ends poisoned")[idx] =
+                        Some(NodeEnd::Left(node.into_outcome()));
+                    retire_node(remaining, queue);
+                }
+            }
+        }
+    }
+}
+
+/// Run an elastic, failure-tolerant async fleet: `seeds.len()` initial
+/// stream nodes (streams built by `stream_factory(seat, salt)` — salt 0
+/// for live streams) plus up to [`ElasticPolicy::max_extra_nodes`] spare
+/// seats, under `plan`'s fault/membership schedule. `driver` runs on the
+/// calling thread with an [`ElasticHandle`] that can also join/adopt
+/// nodes mid-run. Returns the [`ElasticReport`] plus the driver result;
+/// `Ok` as long as the driver succeeded and at least one node survived.
+pub fn run_elastic_nodes<'env, B, R, G, F>(
+    backend: &B,
+    store: &SnapshotStore,
+    seeds: &[u64],
+    stream_factory: G,
+    cfg: &NodeRunConfig,
+    plan: &ElasticPlan,
+    driver: F,
+) -> Result<(ElasticReport, R)>
+where
+    B: TrainBackend,
+    G: Fn(usize, u64) -> SequenceGen<'env> + Sync,
+    F: FnOnce(&ElasticHandle<'_, 'env>) -> Result<R>,
+{
+    let n = seeds.len();
+    let seats = n + plan.policy.max_extra_nodes;
+    let bs = backend.train_batch_rows().max(1);
+    let auto = (cfg.steps_per_node as u64)
+        .saturating_mul(bs as u64)
+        .saturating_mul(n.max(1) as u64)
+        .saturating_mul(2);
+    let draw_budget = if cfg.draw_budget > 0 {
+        cfg.draw_budget
+    } else {
+        auto.max(1)
+    };
+    let route_chunk = if cfg.route_chunk > 0 { cfg.route_chunk } else { bs };
+    let mut seat_seeds = seeds.to_vec();
+    seat_seeds.resize(seats, 0); // spare seats get a real seed at join time
+    plan.faults.reset();
+    let ctx = ElasticCtx {
+        faults: &plan.faults,
+        leaves: &plan.leaves,
+        leaves_fired: Mutex::new(vec![false; plan.leaves.len()]),
+        policy: plan.policy,
+        stats: StatsAtomic::default(),
+        ledger: Mutex::new(CommLedger::default()),
+        pending: Mutex::new(Vec::new()),
+        outer_v: Mutex::new(vec![None; seats]),
+        seeds: Mutex::new(seat_seeds),
+        factory: &stream_factory,
+        route_chunk,
+        draw_budget,
+    };
+    if let Some(dir) = &cfg.checkpoint_dir {
+        let swept = sweep_stale_temps(dir).context("sweeping stale checkpoint temp files")?;
+        if swept > 0 {
+            eprintln!("[trainer] swept {swept} stale checkpoint temp file(s)");
+        }
+    }
+    let mut nodes: Vec<Node<'env>> = (0..n)
+        .map(|e| Node::stream(e, seeds[e], (ctx.factory)(e, 0), route_chunk, draw_budget, cfg))
+        .collect();
+    if cfg.resume {
+        for node in &mut nodes {
+            node.try_resume(cfg)?;
+        }
+    }
+    let progress: Vec<NodeProgress> = (0..seats).map(|_| NodeProgress::default()).collect();
+    for node in &nodes {
+        node.publish_progress(&progress[node.idx]);
+    }
+    store.set_subscribers(n);
+    let queue: WorkQueue<Node<'env>> = WorkQueue::new();
+    let ends: Mutex<Vec<Option<NodeEnd>>> = Mutex::new((0..seats).map(|_| None).collect());
+    let error = ErrSlot::default();
+    let remaining = AtomicUsize::new(n);
+    let next_seat = AtomicUsize::new(n);
+    let workers = resolve_threads(cfg.threads).max(1).min(seats.max(1));
+    if n == 0 {
+        queue.close();
+    }
+
+    let driver_out = std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| {
+                elastic_node_worker(
+                    backend, store, cfg, &ctx, &queue, &ends, &progress, &error, &remaining,
+                )
+            });
+        }
+        queue.push_all(nodes);
+        let _close_store = CloseStoreOnDrop(store);
+        let handle = ElasticHandle {
+            store,
+            progress: &progress,
+            cfg,
+            ctx: &ctx,
+            queue: &queue,
+            remaining: &remaining,
+            next_seat: &next_seat,
+            failed: &error.set,
+            base_nodes: n,
+        };
+        match driver(&handle) {
+            Ok(r) => Some(r),
+            Err(e) => {
+                error.record(e.context("router driver"));
+                None
+            }
+        }
+    });
+
+    if let Some(e) = error.take() {
+        return Err(e);
+    }
+    let driver_out = driver_out.expect("driver result present when no error was recorded");
+    let slots = ends.into_inner().expect("ends poisoned");
+    let mut end_list: Vec<NodeEnd> = slots.into_iter().flatten().collect();
+    end_list.sort_by_key(NodeEnd::node);
+    let survivors = end_list
+        .iter()
+        .filter(|e| !matches!(e, NodeEnd::Failed(_)))
+        .count();
+    if n > 0 && survivors == 0 {
+        // the degradation floor: Ok requires at least one survivor
+        let first = end_list.into_iter().find_map(|e| match e {
+            NodeEnd::Failed(f) => Some(f.error),
+            _ => None,
+        });
+        return Err(match first {
+            Some(e) => e.context("every trainer node failed"),
+            None => anyhow!("elastic run ended with no node outcomes"),
+        });
+    }
+    let ElasticCtx { ledger, stats, .. } = ctx;
+    Ok((
+        ElasticReport {
+            ends: end_list,
+            stats: stats.snapshot(),
+            ledger: ledger.into_inner().expect("elastic ledger poisoned"),
+        },
+        driver_out,
+    ))
+}
+
+/// What the elastic driver can see *and do* while nodes run: everything
+/// [`TrainerHandle`] offers, plus live membership — joining brand-new
+/// nodes and re-adopting vacant seats.
+pub struct ElasticHandle<'h, 'env> {
+    store: &'h SnapshotStore,
+    progress: &'h [NodeProgress],
+    cfg: &'h NodeRunConfig,
+    ctx: &'h ElasticCtx<'env, 'h>,
+    queue: &'h WorkQueue<Node<'env>>,
+    remaining: &'h AtomicUsize,
+    next_seat: &'h AtomicUsize,
+    failed: &'h AtomicBool,
+    base_nodes: usize,
+}
+
+impl<'env> ElasticHandle<'_, 'env> {
+    pub fn store(&self) -> &SnapshotStore {
+        self.store
+    }
+
+    /// Total seats (initial fleet + spares), the progress-slot count.
+    pub fn n_seats(&self) -> usize {
+        self.progress.len()
+    }
+
+    /// Size of the initial fleet (seats below this started occupied).
+    pub fn base_nodes(&self) -> usize {
+        self.base_nodes
+    }
+
+    pub fn node(&self, seat: usize) -> &NodeProgress {
+        &self.progress[seat]
+    }
+
+    /// Training steps completed across all seats so far.
+    pub fn total_steps_done(&self) -> usize {
+        self.progress.iter().map(NodeProgress::steps).sum()
+    }
+
+    /// Seats currently in the run (not yet finished/failed/left).
+    pub fn live_nodes(&self) -> usize {
+        self.remaining.load(Ordering::Relaxed)
+    }
+
+    /// The driver itself already failed on a previous poll.
+    pub fn failed(&self) -> bool {
+        self.failed.load(Ordering::Relaxed)
+    }
+
+    pub fn stats(&self) -> ElasticStats {
+        self.ctx.stats.snapshot()
+    }
+
+    /// Grow the fleet: claim the next spare seat and start a brand-new
+    /// node on it. The newcomer seeds its expert from the current router
+    /// snapshot ([`TrainBackend::init_joiner`]) instead of a cold init.
+    /// Fails if no spare seat remains or the run has already drained.
+    pub fn join_new_node(&self, seed: u64) -> Result<usize> {
+        let seat = self.next_seat.fetch_add(1, Ordering::AcqRel);
+        ensure!(
+            seat < self.n_seats(),
+            "no spare seat left for a joiner ({} seats; raise ElasticPolicy::max_extra_nodes)",
+            self.n_seats()
+        );
+        self.ctx.seeds.lock().expect("seat seeds poisoned")[seat] = seed;
+        let gen = (self.ctx.factory)(seat, 0);
+        let mut node = Node::stream(
+            seat,
+            seed,
+            gen,
+            self.ctx.route_chunk,
+            self.ctx.draw_budget,
+            self.cfg,
+        );
+        node.joiner = true;
+        node.publish_progress(&self.progress[seat]);
+        // count the seat in *before* pushing: the queue must not close
+        // underneath a node that is about to enter it
+        self.remaining.fetch_add(1, Ordering::AcqRel);
+        if !self.queue.push(node) {
+            self.remaining.fetch_sub(1, Ordering::AcqRel);
+            bail!("cannot join a new node: the run has already drained");
+        }
+        self.store.adjust_subscribers(1);
+        self.ctx.stats.joins.fetch_add(1, Ordering::Relaxed);
+        Ok(seat)
+    }
+
+    /// Re-fill a vacant seat (one whose node left without `adopt`) from
+    /// its checkpoint. Returns the step the adopter resumed at.
+    pub fn adopt_vacant(&self, seat: usize) -> Result<usize> {
+        ensure!(seat < self.n_seats(), "seat {seat} out of range");
+        let t0 = Instant::now();
+        let (node, ckpt_bytes, resumed) = respawn_from_checkpoint(self.cfg, seat, self.ctx)?;
+        node.publish_progress(&self.progress[seat]);
+        self.remaining.fetch_add(1, Ordering::AcqRel);
+        if !self.queue.push(node) {
+            self.remaining.fetch_sub(1, Ordering::AcqRel);
+            bail!("cannot adopt seat {seat}: the run has already drained");
+        }
+        self.store.adjust_subscribers(1);
+        self.ctx.stats.adoptions.fetch_add(1, Ordering::Relaxed);
+        self.ctx
+            .ledger
+            .lock()
+            .expect("elastic ledger poisoned")
+            .record_checkpoint_adopt(seat, ckpt_bytes, resumed as u64);
+        self.ctx
+            .stats
+            .recovery_micros
+            .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        Ok(resumed)
+    }
+}
+
+// -------------------------------------------------------------------------
 // production orchestration
 // -------------------------------------------------------------------------
 
@@ -1009,6 +2069,15 @@ pub struct TrainerConfig {
     /// Async: per-node stream draw cap (0 = auto; see
     /// [`NodeRunConfig::draw_budget`]).
     pub draw_budget: u64,
+    /// Async: JSON fault-plan spec for the elastic chaos harness
+    /// (`None` and no leave/join schedule = the plain async path).
+    pub chaos_spec: Option<PathBuf>,
+    /// Async: schedule the last node to leave at this local step
+    /// (0 = nobody leaves).
+    pub leave_after: usize,
+    /// Async: re-adopt the departed seat once the fleet has this many
+    /// total steps (0 = no adoption).
+    pub join_after: usize,
 }
 
 impl TrainerConfig {
@@ -1021,6 +2090,9 @@ impl TrainerConfig {
             snapshot_every: 1,
             route_chunk: 0,
             draw_budget: 0,
+            chaos_spec: None,
+            leave_after: 0,
+            join_after: 0,
         }
     }
 
@@ -1079,11 +2151,24 @@ pub fn run_trainer(
             router_meta.prefix_batch.max(1)
         },
         draw_budget: t.draw_budget,
+        snapshot_wait_us: NodeRunConfig::default().snapshot_wait_us,
     };
+    let elastic = t.chaos_spec.is_some() || t.leave_after > 0 || t.join_after > 0;
     match t.mode {
         TrainMode::Staged => {
             run_trainer_staged(engine, bpe, p, &em, &run_cfg, &backend, expert_meta)
         }
+        TrainMode::Async if elastic => run_trainer_async_elastic(
+            engine,
+            bpe,
+            p,
+            t,
+            &em,
+            &run_cfg,
+            &backend,
+            router_meta,
+            expert_meta,
+        ),
         TrainMode::Async => run_trainer_async(
             engine,
             bpe,
@@ -1276,6 +2361,219 @@ fn run_trainer_async(
     })
 }
 
+/// Async training through the elastic machinery: same shape as
+/// [`run_trainer_async`], but nodes run under a [`FaultPlan`] (loaded
+/// from [`TrainerConfig::chaos_spec`]) and an optional leave/adopt
+/// schedule (`leave_after`/`join_after`). The returned ledger holds the
+/// snapshot broadcasts *plus* the `CheckpointAdopt`/`ParamMerge` events
+/// the recovery paths produced; failed seats degrade to their last
+/// checkpoint (or a cold init) instead of failing the run.
+#[allow(clippy::too_many_arguments)]
+fn run_trainer_async_elastic(
+    engine: &Engine,
+    bpe: &Bpe,
+    p: &PipelineConfig,
+    t: &TrainerConfig,
+    em: &EmConfig,
+    run_cfg: &NodeRunConfig,
+    backend: &EngineBackend,
+    router_meta: VariantMeta,
+    expert_meta: VariantMeta,
+) -> Result<PipelineResult> {
+    ensure!(
+        p.em_rounds > 0,
+        "async training needs at least one EM round to publish a router snapshot"
+    );
+    let faults = match &t.chaos_spec {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading chaos spec {}", path.display()))?;
+            FaultPlan::from_json_str(&text)
+                .with_context(|| format!("parsing chaos spec {}", path.display()))?
+        }
+        None => FaultPlan::none(),
+    };
+    let mut leaves = Vec::new();
+    if t.leave_after > 0 {
+        ensure!(p.n_experts > 0, "cannot schedule a leave with zero experts");
+        leaves.push(LeaveEvent {
+            node: p.n_experts - 1,
+            at_step: t.leave_after,
+            adopt: false,
+            rejoin: None,
+        });
+    }
+    let plan = ElasticPlan {
+        faults,
+        leaves,
+        policy: ElasticPolicy::default(),
+    };
+
+    let mut log = RunLog::new();
+    let store = SnapshotStore::new(p.n_experts);
+    let every = t.snapshot_every.max(1);
+    let rounds = em.rounds;
+    let seeds: Vec<u64> = (0..p.n_experts).map(|e| p.seed ^ (0xE0 + e as u64)).collect();
+    // salt 0 reproduces the plain async streams exactly; nonzero salts
+    // (offline rejoin legs) mix into a disjoint stream
+    let factory = |e: usize, salt: u64| {
+        SequenceGen::new(
+            bpe,
+            expert_meta.seq_len,
+            p.seed ^ (0xA5_0000 + e as u64) ^ salt.wrapping_mul(0x9E37_79B9),
+        )
+    };
+
+    let em_cfg = em.clone();
+    let (report, trained) = {
+        let log = &mut log;
+        let plan_ref = &plan;
+        run_elastic_nodes(backend, &store, &seeds, factory, run_cfg, &plan, |handle| {
+            let mut local_ledger = CommLedger::default();
+            let mut router_gen = SequenceGen::new(bpe, router_meta.seq_len, p.seed ^ 0x52_0000);
+            let mut next_version: u64 = 0;
+            let mut adopted = t.join_after == 0;
+            train_routers_hooked(
+                engine,
+                &p.router_variant,
+                &em_cfg,
+                &mut router_gen,
+                &mut local_ledger,
+                log,
+                |round, routers| {
+                    if !adopted
+                        && t.leave_after > 0
+                        && handle.stats().leaves > 0
+                        && handle.total_steps_done() >= t.join_after
+                    {
+                        // hot-spare adoption: re-fill the departed seat
+                        // from its checkpoint (best-effort — the run may
+                        // already have drained)
+                        adopted = true;
+                        if let Err(e) = handle.adopt_vacant(p.n_experts - 1) {
+                            eprintln!("[trainer] hot-spare adoption skipped: {e:#}");
+                        }
+                    }
+                    if (round + 1) % every == 0 || round + 1 == rounds {
+                        next_version += 1;
+                        if let Some(min) = plan_ref.faults.publish_gate(next_version) {
+                            // delayed publish: hold this snapshot until
+                            // the fleet has trained `min` total steps —
+                            // deterministic in steps, not wall-clock
+                            while (handle.total_steps_done() as u64) < min
+                                && handle.live_nodes() > 0
+                                && !handle.failed()
+                            {
+                                std::thread::sleep(Duration::from_micros(200));
+                            }
+                        }
+                        handle.store().publish(routers.to_vec(), round + 1);
+                    }
+                    Ok(())
+                },
+            )
+        })?
+    };
+
+    let ElasticReport {
+        ends,
+        stats,
+        ledger: elastic_ledger,
+    } = report;
+    let mut ledger = store.take_ledger();
+    ledger.events.extend(elastic_ledger.events);
+    log.scalar("elastic/kills", 0.0, stats.kills as f64);
+    log.scalar("elastic/adoptions", 0.0, stats.adoptions as f64);
+    log.scalar("elastic/leaves", 0.0, stats.leaves as f64);
+    log.scalar("elastic/joins", 0.0, stats.joins as f64);
+    log.scalar("elastic/merges", 0.0, stats.merges as f64);
+    log.scalar("elastic/steps_lost", 0.0, stats.steps_lost as f64);
+    log.scalar(
+        "elastic/transient_retries",
+        0.0,
+        stats.transient_retries as f64,
+    );
+    log.scalar(
+        "elastic/recovery_micros",
+        0.0,
+        stats.recovery_micros as f64,
+    );
+
+    let mut slots: Vec<Option<NodeEnd>> = (0..p.n_experts).map(|_| None).collect();
+    for end in ends {
+        let seat = end.node();
+        if seat < slots.len() {
+            slots[seat] = Some(end);
+        }
+    }
+    let mut experts = Vec::with_capacity(p.n_experts);
+    let mut segment_purity = Vec::with_capacity(p.n_experts);
+    let mut segment_sizes = Vec::with_capacity(p.n_experts);
+    for (e, slot) in slots.into_iter().enumerate() {
+        match slot {
+            Some(NodeEnd::Completed(o)) | Some(NodeEnd::Left(o)) => {
+                log.merge_prefixed(&format!("expert{e}"), &o.log);
+                log.scalar(&format!("async/node{e}_drawn"), 0.0, o.drawn as f64);
+                log.scalar(&format!("async/node{e}_kept"), 0.0, o.kept as f64);
+                log.scalar(&format!("async/node{e}_steps"), 0.0, o.steps_done as f64);
+                segment_purity.push(o.purity());
+                segment_sizes.push(o.trained_sequences() as usize);
+                experts.push(o.state);
+            }
+            other => {
+                // degraded seat: serve the best state we can find —
+                // salvage from the failure, else its checkpoint, else a
+                // cold init — and mark it in the log
+                if let Some(NodeEnd::Failed(f)) = &other {
+                    eprintln!("[trainer] node {e} degraded: {:#}", f.error);
+                }
+                log.scalar(&format!("elastic/node{e}_degraded"), 0.0, 1.0);
+                segment_purity.push(0.0);
+                segment_sizes.push(0);
+                let salvage = match other {
+                    Some(NodeEnd::Failed(f)) => f.salvage,
+                    _ => None,
+                };
+                let state = match salvage {
+                    Some(s) => s,
+                    None => {
+                        let from_ckpt = run_cfg
+                            .checkpoint_dir
+                            .as_ref()
+                            .map(|d| ckpt_path(d, e))
+                            .filter(|path| path.exists());
+                        match from_ckpt {
+                            Some(path) => {
+                                load_node_checkpoint(&path)
+                                    .with_context(|| {
+                                        format!("recovering degraded node {e} from its checkpoint")
+                                    })?
+                                    .state
+                            }
+                            None => backend.init_expert(e, p.seed ^ (0xE0 + e as u64))?,
+                        }
+                    }
+                };
+                experts.push(state);
+            }
+        }
+    }
+
+    engine_transfer_scalars(engine, &mut log);
+    Ok(PipelineResult {
+        mixture: Mixture {
+            routers: trained.routers,
+            router_meta: trained.meta,
+            experts,
+            expert_meta,
+        },
+        ledger,
+        log,
+        segment_purity,
+        segment_sizes,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1326,5 +2624,81 @@ mod tests {
         assert_send_sync::<RouterSnapshot>();
         assert_send_sync::<NodeProgress>();
         assert_send_sync::<NodeOutcome>();
+        assert_send_sync::<ElasticStats>();
+        assert_send_sync::<ElasticPlan>();
+    }
+
+    #[test]
+    fn publish_with_zero_subscribers_costs_nothing() {
+        let store = SnapshotStore::new(0);
+        let r = TrainState::from_params("r", vec![0.0; 8], vec![0.0; 8], vec![0.0; 8], 0);
+        assert_eq!(store.publish(vec![r], 1), 1);
+        let ledger = store.take_ledger();
+        // the publisher event is still recorded (the round happened), but
+        // nothing was sent and no receive events exist
+        assert_eq!(
+            ledger.rounds(crate::coordinator::comm::CommKind::SnapshotBroadcast),
+            1
+        );
+        assert_eq!(ledger.total_bytes(), 0);
+        assert_eq!(ledger.events.len(), 1);
+    }
+
+    #[test]
+    fn take_ledger_mid_run_drains_without_losing_later_events() {
+        let store = SnapshotStore::new(2);
+        let r = TrainState::from_params("r", vec![0.0; 4], vec![0.0; 4], vec![0.0; 4], 0);
+        store.publish(vec![r.clone()], 1);
+        let first = store.take_ledger();
+        assert_eq!(first.total_bytes(), 2 * 16);
+        // draining mid-run must leave the store fully functional
+        store.publish(vec![r.clone(), r], 2);
+        let second = store.take_ledger();
+        assert_eq!(second.total_bytes(), 2 * 32);
+        assert!(second.events.iter().all(|e| e.step == 2));
+        assert_eq!(store.take_ledger().events.len(), 0);
+    }
+
+    #[test]
+    fn double_close_is_idempotent_and_late_publish_still_serves() {
+        let store = SnapshotStore::new(1);
+        store.close();
+        store.close();
+        assert!(store.wait_current().is_err());
+        // a publish that raced the close still lands and serves waiters
+        let r = TrainState::from_params("r", vec![1.0], vec![0.0], vec![0.0], 0);
+        store.publish(vec![r], 1);
+        assert_eq!(store.wait_current().unwrap().version, 1);
+    }
+
+    #[test]
+    fn broadcast_byte_totals_exact_under_subscriber_churn() {
+        let store = SnapshotStore::new(3);
+        let r = TrainState::from_params("r", vec![0.0; 8], vec![0.0; 8], vec![0.0; 8], 0);
+        let b = 32u64; // one 8-param f32 router
+        store.publish(vec![r.clone()], 1);
+        assert_eq!(store.adjust_subscribers(-1), 2); // a node left
+        store.publish(vec![r.clone()], 2);
+        assert_eq!(store.adjust_subscribers(2), 4); // two joined
+        store.publish(vec![r.clone()], 3);
+        // saturating floor: over-removal can never underflow
+        assert_eq!(store.adjust_subscribers(-100), 0);
+        store.publish(vec![r], 4);
+        let ledger = store.take_ledger();
+        assert_eq!(ledger.total_bytes(), 3 * b + 2 * b + 4 * b);
+        assert_eq!(
+            ledger.rounds(crate::coordinator::comm::CommKind::SnapshotBroadcast),
+            4
+        );
+    }
+
+    #[test]
+    fn wait_current_for_times_out_structurally() {
+        let store = SnapshotStore::new(1);
+        let err = store
+            .wait_current_for(Some(Duration::from_millis(5)))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("timed out"), "{err}");
     }
 }

@@ -37,6 +37,7 @@ const VALUE_OPTS: &[&str] = &[
     "prefix", "eval-sequences", "tasks-per-domain", "seed", "requests", "out",
     "ckpt-dir", "steps", "threads", "batch-size", "max-wait-us", "stream",
     "delay-us", "checkpoint-dir", "checkpoint-every", "snapshot-every",
+    "chaos-spec", "leave-after", "join-after",
 ];
 
 const EVAL_SEED: u64 = 0xE7A1;
@@ -59,6 +60,10 @@ fn usage() -> &'static str {
                      --checkpoint-every N (steps between node checkpoints; 0 = final only)\n\
                      --resume (continue each node from its last checkpoint)\n\
                      --snapshot-every N (async: EM rounds between router broadcasts)\n\
+                     --chaos-spec f.json (async: seeded fault plan — kills, stalls,\n\
+                                          dropped deliveries, delayed publishes)\n\
+                     --leave-after N (async: last node leaves at local step N)\n\
+                     --join-after N (async: re-adopt the departed seat after N total steps)\n\
                      (e2e accepts the same training flags)\n\
      serve options:  --requests N --batch-size N (per-expert dispatch batch; 0 = eval batch)\n\
                      --max-wait-us N (linger before dispatching a partial batch)\n\
@@ -112,7 +117,8 @@ fn load_or_train_bpe(cfg: &ExperimentConfig) -> Result<Bpe> {
 
 /// Trainer-orchestration settings from the config's `--async` /
 /// `--checkpoint-dir` / `--checkpoint-every` / `--resume` /
-/// `--snapshot-every` knobs.
+/// `--snapshot-every` knobs, plus the elastic chaos knobs
+/// (`--chaos-spec` / `--leave-after` / `--join-after`).
 fn trainer_config(cfg: &ExperimentConfig) -> TrainerConfig {
     TrainerConfig {
         mode: if cfg.train_async {
@@ -130,6 +136,13 @@ fn trainer_config(cfg: &ExperimentConfig) -> TrainerConfig {
         snapshot_every: cfg.snapshot_every,
         route_chunk: 0,
         draw_budget: 0,
+        chaos_spec: if cfg.chaos_spec.is_empty() {
+            None
+        } else {
+            Some(cfg.chaos_spec.clone().into())
+        },
+        leave_after: cfg.leave_after,
+        join_after: cfg.join_after,
     }
 }
 

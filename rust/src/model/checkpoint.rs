@@ -135,6 +135,31 @@ fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
     Ok(())
 }
 
+/// Delete stale `*.tmp` orphans in a checkpoint directory. A crash
+/// between the temp-file write and the rename in [`write_atomic`] leaves
+/// a `foo.tmp` next to the (still-good) `foo.ckpt` forever; trainers call
+/// this once on startup so orphans don't accumulate across restarts.
+/// Returns the number of files removed; a missing directory is `Ok(0)`
+/// (nothing was ever written there).
+pub fn sweep_stale_temps(dir: impl AsRef<Path>) -> Result<usize> {
+    let dir = dir.as_ref();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(0),
+        Err(e) => return Err(e).with_context(|| format!("listing {}", dir.display())),
+    };
+    let mut removed = 0;
+    for entry in entries {
+        let path = entry?.path();
+        if path.is_file() && path.extension().is_some_and(|e| e == "tmp") {
+            std::fs::remove_file(&path)
+                .with_context(|| format!("removing stale temp {}", path.display()))?;
+            removed += 1;
+        }
+    }
+    Ok(removed)
+}
+
 // -------------------------------------------------------------------------
 // model state section (shared by model + node checkpoints)
 // -------------------------------------------------------------------------
@@ -492,6 +517,38 @@ mod tests {
     fn missing_file_is_contextual_error() {
         let err = load_checkpoint("/nonexistent/x.ckpt").unwrap_err().to_string();
         assert!(err.contains("x.ckpt"));
+    }
+
+    #[test]
+    fn sweep_removes_only_tmp_orphans() {
+        let dir = std::env::temp_dir().join(format!(
+            "smalltalk_sweep_test_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // a good checkpoint, two crash orphans, and an unrelated file
+        save_checkpoint(&state(), dir.join("node0.ckpt")).unwrap();
+        std::fs::write(dir.join("node0.tmp"), b"torn write").unwrap();
+        std::fs::write(dir.join("node3.tmp"), b"").unwrap();
+        std::fs::write(dir.join("notes.txt"), b"keep me").unwrap();
+        assert_eq!(sweep_stale_temps(&dir).unwrap(), 2);
+        assert!(dir.join("node0.ckpt").exists());
+        assert!(dir.join("notes.txt").exists());
+        assert!(!dir.join("node0.tmp").exists());
+        assert!(!dir.join("node3.tmp").exists());
+        // idempotent; and the surviving checkpoint still loads
+        assert_eq!(sweep_stale_temps(&dir).unwrap(), 0);
+        assert!(load_checkpoint(dir.join("node0.ckpt")).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sweep_missing_dir_is_ok_zero() {
+        assert_eq!(
+            sweep_stale_temps("/nonexistent/smalltalk_sweep_nowhere").unwrap(),
+            0
+        );
     }
 
     #[test]

@@ -13,5 +13,5 @@ pub mod checkpoint;
 
 pub use checkpoint::{
     load_checkpoint, load_node_checkpoint, save_checkpoint, save_node_checkpoint,
-    NodeCheckpoint, NodeCheckpointView,
+    sweep_stale_temps, NodeCheckpoint, NodeCheckpointView,
 };

@@ -226,12 +226,19 @@ impl<T> WorkQueue<T> {
 
     /// Enqueue a batch atomically: consumers never observe a partial
     /// batch. Returns `false` (dropping the items) if already closed.
+    ///
+    /// The batch is collected *before* the lock is taken: the caller's
+    /// iterator never runs under the queue mutex (it may block or panic),
+    /// and a panicking iterator leaves the queue untouched instead of
+    /// poisoned mid-extend — all-or-nothing even against concurrent
+    /// `close` calls.
     pub fn push_all(&self, items: impl IntoIterator<Item = T>) -> bool {
+        let batch: Vec<T> = items.into_iter().collect();
         let mut st = self.lock();
         if st.closed {
             return false;
         }
-        st.items.extend(items);
+        st.items.extend(batch);
         drop(st);
         // wake everyone: a batch may satisfy several blocked workers
         self.cv.notify_all();
@@ -440,6 +447,60 @@ mod tests {
         assert_eq!(q.drain_up_to(usize::MAX), (4..10).collect::<Vec<_>>());
         assert!(q.is_empty());
         assert!(q.drain_up_to(5).is_empty());
+    }
+
+    #[test]
+    fn push_all_is_all_or_nothing_against_concurrent_close() {
+        // Hammer push_all(batch) against close() from another thread: every
+        // accepted batch must land complete, every refused batch must leave
+        // zero items behind. A partial batch shows up as a consumed-item
+        // count that is not a multiple of the batch size.
+        const BATCH: usize = 7;
+        const ROUNDS: usize = 200;
+        for trial in 0..8 {
+            let q: WorkQueue<usize> = WorkQueue::new();
+            let accepted = AtomicUsize::new(0);
+            std::thread::scope(|s| {
+                s.spawn(|| {
+                    for r in 0..ROUNDS {
+                        if q.push_all((0..BATCH).map(move |i| r * BATCH + i)) {
+                            accepted.fetch_add(1, Ordering::SeqCst);
+                        }
+                        if q.is_closed() {
+                            break;
+                        }
+                    }
+                });
+                s.spawn(|| {
+                    // close at a trial-dependent point mid-stream
+                    while q.len() < trial * 3 {
+                        std::hint::spin_loop();
+                    }
+                    q.close();
+                });
+            });
+            let drained = q.drain_up_to(usize::MAX).len();
+            assert_eq!(
+                drained,
+                accepted.load(Ordering::SeqCst) * BATCH,
+                "partial batch observed (trial {trial})"
+            );
+        }
+    }
+
+    #[test]
+    fn push_all_iterator_panic_leaves_queue_intact() {
+        let q: WorkQueue<usize> = WorkQueue::new();
+        q.push_all([1, 2]);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            q.push_all((0..5usize).map(|i| if i == 3 { panic!("mid-batch") } else { i }));
+        }));
+        assert!(r.is_err());
+        // the earlier batch is still there, nothing from the torn batch is,
+        // and the queue lock is not poisoned
+        assert_eq!(q.drain_up_to(usize::MAX), vec![1, 2]);
+        assert!(q.push(9));
+        assert_eq!(q.pop(), Some(9));
     }
 
     #[test]

@@ -100,6 +100,21 @@ impl Rng {
         (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
     }
 
+    /// Bernoulli draw: `true` with probability `p`. `p <= 0` never fires,
+    /// `p >= 1` always fires; exactly one stream draw either way so a
+    /// replayed plan consumes the same number of states.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Uniform u64 in `[lo, hi)` (convenience over [`Rng::below`]).
+    #[inline]
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo < hi, "empty range [{lo}, {hi})");
+        lo + self.below(hi - lo)
+    }
+
     /// Standard normal via Box–Muller.
     pub fn normal(&mut self) -> f64 {
         let u1 = self.f64().max(f64::MIN_POSITIVE);
@@ -226,6 +241,38 @@ mod tests {
         s.sort_unstable();
         s.dedup();
         assert_eq!(s.len(), 20);
+    }
+
+    #[test]
+    fn chance_extremes_and_rate() {
+        let mut r = Rng::new(17);
+        for _ in 0..50 {
+            assert!(!r.chance(0.0));
+            assert!(r.chance(1.0));
+        }
+        let hits = (0..10_000).filter(|_| r.chance(0.25)).count();
+        assert!((2000..3000).contains(&hits), "hits={hits}");
+    }
+
+    #[test]
+    fn chance_consumes_one_draw_regardless_of_p() {
+        // a replayed FaultPlan must consume identical stream positions no
+        // matter which branches fire
+        let mut a = Rng::new(23);
+        let mut b = Rng::new(23);
+        a.chance(0.0);
+        b.chance(1.0);
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn range_u64_bounds() {
+        let mut r = Rng::new(29);
+        for _ in 0..500 {
+            let v = r.range_u64(10, 20);
+            assert!((10..20).contains(&v), "v={v}");
+        }
+        assert_eq!(r.range_u64(7, 8), 7);
     }
 
     #[test]

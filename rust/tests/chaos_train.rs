@@ -1,0 +1,642 @@
+//! Chaos suite for the elastic trainer (`make test-chaos`).
+//!
+//! Everything here runs on the stub backend (tier-1, no artifacts): the
+//! point is the *fault machinery*, not the model. The stub routes on the
+//! token sum alone — deliberately snapshot-version-independent — so a
+//! delayed publish or a dropped delivery perturbs scheduling without
+//! perturbing the math, and a faulted run can be compared bit-for-bit
+//! against an uninterrupted one. Coverage:
+//!
+//! * three fixed fault seeds, each run featuring a kill + adoption, a
+//!   scheduled leave (with rejoin/merge), a mid-run join and a gated
+//!   (delayed) publish — converging onto the uninterrupted run;
+//! * kill at a checkpoint boundary adopting bit-identically with zero
+//!   steps lost, and the adoption byte total matching the checkpoint
+//!   file exactly;
+//! * exact `SnapshotBroadcast` / `CheckpointAdopt` / `ParamMerge` byte
+//!   audits across the store's and the elastic run's ledgers;
+//! * a JSON fault spec replayed twice producing identical states and
+//!   stats (the `--chaos-spec` determinism contract);
+//! * the degradation contract: a structurally failing node ends as
+//!   `NodeEnd::Failed` (never a panic) while the survivors complete.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use smalltalk::coordinator::{
+    run_elastic_nodes, CommKind, CommLedger, ElasticHandle, ElasticPlan, ElasticPolicy,
+    ElasticReport, FaultPlan, LeaveEvent, NodeEnd, NodeRunConfig, PlanShape, PublishGate, Rejoin,
+    RouterSnapshot, SnapshotStore, TrainBackend,
+};
+use smalltalk::data::corpus::Corpus;
+use smalltalk::data::SequenceGen;
+use smalltalk::runtime::TrainState;
+use smalltalk::tokenizer::{Bpe, BpeTrainer};
+
+// ---------------------------------------------------------------------
+// shared fixtures (mirrors tests/async_train.rs)
+// ---------------------------------------------------------------------
+
+/// Stub expert/router parameter count.
+const P: usize = 6;
+/// Stub stream sequence length (tokens per sequence = SEQ_LEN + 1).
+const SEQ_LEN: usize = 16;
+
+static BPE: OnceLock<Bpe> = OnceLock::new();
+
+fn bpe() -> &'static Bpe {
+    BPE.get_or_init(|| {
+        let corpus = Corpus::generate(60, 400, 42, None);
+        BpeTrainer::new(512).train(corpus.texts()).unwrap()
+    })
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    let d = std::env::temp_dir().join(format!(
+        "smalltalk_chaos_train_{tag}_{}_{}",
+        std::process::id(),
+        NEXT.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn states_equal(a: &TrainState, b: &TrainState) -> bool {
+    a.params == b.params && a.m == b.m && a.v == b.v && a.step == b.step
+}
+
+/// Deterministic model-free backend. Unlike the async suite's stub, the
+/// routing key ignores `snap.version`: stale, held-back or dropped
+/// snapshots perturb *scheduling* but never the partition, which is what
+/// lets the chaos tests demand bit-identity against clean runs.
+/// Optionally injects a non-transient crash at a (node, step) to
+/// exercise the structured-failure path.
+struct ChaosStub {
+    /// Total seats (base nodes + spares); the routing modulus.
+    n: usize,
+    bs: usize,
+    fail_at: Option<(usize, u64)>,
+}
+
+impl ChaosStub {
+    fn new(n: usize, bs: usize) -> Self {
+        ChaosStub {
+            n,
+            bs,
+            fail_at: None,
+        }
+    }
+}
+
+impl TrainBackend for ChaosStub {
+    fn train_batch_rows(&self) -> usize {
+        self.bs
+    }
+
+    fn tokens_per_step(&self) -> usize {
+        self.bs * SEQ_LEN
+    }
+
+    fn init_expert(&self, node: usize, seed: u64) -> Result<TrainState> {
+        let params: Vec<f32> = (0..P)
+            .map(|i| (seed % 1000) as f32 * 1e-3 + node as f32 + i as f32 * 0.1)
+            .collect();
+        Ok(TrainState::from_params(
+            "stub",
+            params,
+            vec![0.0; P],
+            vec![0.0; P],
+            0,
+        ))
+    }
+
+    fn train_step(&self, node: usize, state: &mut TrainState, batch: &[&[u32]]) -> Result<f32> {
+        if let Some((fail_node, at)) = self.fail_at {
+            if node == fail_node && state.step >= at {
+                bail!("injected crash at node {node} step {}", state.step);
+            }
+        }
+        let mut acc = 0.0f32;
+        for row in batch {
+            for &t in *row {
+                acc += (t % 97) as f32;
+            }
+        }
+        let loss = acc / (batch.len().max(1) as f32 * 100.0);
+        for i in 0..state.params.len() {
+            let g = loss * 1e-3 + (i as f32 + 1.0) * 1e-4;
+            state.m[i] = 0.9 * state.m[i] + 0.1 * g;
+            state.v[i] = 0.99 * state.v[i] + 0.01 * g * g;
+            state.params[i] -= 0.1 * state.m[i];
+        }
+        state.step += 1;
+        Ok(loss)
+    }
+
+    fn route_local(&self, _snap: &RouterSnapshot, rows: &[&[u32]]) -> Result<Vec<usize>> {
+        Ok(rows
+            .iter()
+            .map(|r| {
+                let sum: u64 = r.iter().map(|&t| t as u64).sum();
+                (sum % self.n as u64) as usize
+            })
+            .collect())
+    }
+}
+
+/// One router state per seat, P params each (the broadcast payload whose
+/// byte total the ledger tests audit: `k * P * 4` bytes per publish).
+fn router_fleet(k: usize) -> Vec<TrainState> {
+    (0..k)
+        .map(|e| {
+            TrainState::from_params(
+                "router",
+                vec![0.5 + e as f32 * 0.1; P],
+                vec![0.0; P],
+                vec![0.0; P],
+                1,
+            )
+        })
+        .collect()
+}
+
+fn seat_seeds(n: usize) -> Vec<u64> {
+    (0..n).map(|e| 0xE0 + e as u64).collect()
+}
+
+/// The standard test driver: join the requested spares *before* the
+/// first publish (every node blocks on v1, so the queue cannot drain
+/// under the join), publish v1, honor the plan's gate on v2 (the
+/// injected *delayed publish*), publish v2.
+fn drive(
+    handle: &ElasticHandle<'_, '_>,
+    plan: &ElasticPlan,
+    join_seeds: &[u64],
+    n_routers: usize,
+) -> Result<()> {
+    for &seed in join_seeds {
+        handle.join_new_node(seed)?;
+    }
+    handle.store().publish(router_fleet(n_routers), 1);
+    if let Some(min) = plan.faults.publish_gate(2) {
+        let t0 = Instant::now();
+        while (handle.total_steps_done() as u64) < min
+            && handle.live_nodes() > 0
+            && !handle.failed()
+        {
+            if t0.elapsed() > Duration::from_secs(30) {
+                bail!("publish gate starved: fleet never reached {min} total steps");
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    handle.store().publish(router_fleet(n_routers), 2);
+    Ok(())
+}
+
+/// Run an elastic fleet over the shared stream factory and return the
+/// report plus the store's (broadcast) ledger.
+fn elastic_run<R>(
+    backend: &ChaosStub,
+    seeds: &[u64],
+    cfg: &NodeRunConfig,
+    plan: &ElasticPlan,
+    driver: impl FnOnce(&ElasticHandle<'_, 'static>) -> Result<R>,
+) -> Result<(ElasticReport, CommLedger, R)> {
+    let store = SnapshotStore::new(seeds.len());
+    let b = bpe();
+    let factory = move |e: usize, salt: u64| {
+        SequenceGen::new(
+            b,
+            SEQ_LEN,
+            (0xA5_0000 + e as u64) ^ salt.wrapping_mul(0x9E37_79B9),
+        )
+    };
+    let (report, r) = run_elastic_nodes(backend, &store, seeds, factory, cfg, plan, driver)?;
+    Ok((report, store.take_ledger(), r))
+}
+
+/// The seat's final state, demanding a normal completion.
+fn completed_state(report: &ElasticReport, seat: usize) -> &TrainState {
+    let end = report
+        .ends
+        .iter()
+        .find(|e| e.node() == seat)
+        .unwrap_or_else(|| panic!("seat {seat} has no end record"));
+    match end {
+        NodeEnd::Completed(o) => &o.state,
+        NodeEnd::Left(o) => panic!("seat {seat} left unadopted at step {}", o.steps_done),
+        NodeEnd::Failed(f) => panic!("seat {seat} failed: {:#}", f.error),
+    }
+}
+
+// ---------------------------------------------------------------------
+// three-seed chaos runs: kill + leave/rejoin + join + delayed publish
+// ---------------------------------------------------------------------
+
+/// For each of three fixed fault seeds: a chaos run with one kill (and
+/// checkpoint adoption), one scheduled leave (adopted seat, offline
+/// rejoin merged back), one mid-run join onto a spare seat and one gated
+/// publish converges onto the uninterrupted run — bit-identically on
+/// every seat the merge never touched, within tolerance on the merged
+/// one — and every byte of injected traffic is audited exactly.
+#[test]
+fn chaos_runs_converge_across_three_seeds() {
+    const NODES: usize = 3;
+    const STEPS: usize = 24;
+    let policy = ElasticPolicy {
+        // two generated transients can collide on one (node, step); give
+        // the retry loop headroom so collisions stay transient
+        max_retries: 5,
+        max_extra_nodes: 1,
+        ..ElasticPolicy::default()
+    };
+    let leave = LeaveEvent {
+        node: 1,
+        at_step: 10,
+        adopt: true,
+        rejoin: Some(Rejoin {
+            offline_steps: 2,
+            merge_at_step: 16,
+        }),
+    };
+    let backend = ChaosStub::new(NODES + 1, 4);
+    let seeds = seat_seeds(NODES);
+    let join_seeds = [0x77u64];
+
+    // the uninterrupted reference: same seats, same join, no faults
+    let clean = ElasticPlan {
+        faults: FaultPlan::none(),
+        leaves: vec![],
+        policy,
+    };
+    let ref_cfg = NodeRunConfig {
+        steps_per_node: STEPS,
+        checkpoint_every: 2,
+        checkpoint_dir: Some(temp_dir("ref")),
+        threads: 2,
+        snapshot_wait_us: 10_000_000,
+        ..NodeRunConfig::default()
+    };
+    let (ref_report, _, ()) =
+        elastic_run(&backend, &seeds, &ref_cfg, &clean, |h| {
+            drive(h, &clean, &join_seeds, NODES + 1)
+        })
+        .unwrap();
+
+    for fault_seed in [11u64, 23, 47] {
+        let mut faults = FaultPlan::generate(
+            fault_seed,
+            &PlanShape {
+                nodes: NODES,
+                steps_per_node: STEPS as u64,
+                kills: 1,
+                transients: 2,
+                stalls: 1,
+                drops: 1,
+                publish_gates: 0,
+                snapshot_versions: 2,
+            },
+        );
+        // the delayed publish is pinned by hand: a generated gate could
+        // land on v1, which nothing can ever step past
+        faults.publish_gates = vec![PublishGate {
+            version: 2,
+            min_total_steps: 6,
+        }];
+        let expected_retries: u64 = faults.transients.iter().map(|t| t.failures as u64).sum();
+        let plan = ElasticPlan {
+            faults,
+            leaves: vec![leave],
+            policy,
+        };
+        let cfg = NodeRunConfig {
+            checkpoint_dir: Some(temp_dir("chaos")),
+            ..ref_cfg.clone()
+        };
+        let (report, broadcast, ()) =
+            elastic_run(&backend, &seeds, &cfg, &plan, |h| {
+                drive(h, &plan, &join_seeds, NODES + 1)
+            })
+            .unwrap();
+
+        let s = &report.stats;
+        assert_eq!(s.kills, 1, "seed {fault_seed}: kill did not fire");
+        assert_eq!(s.leaves, 1, "seed {fault_seed}: leave did not fire");
+        assert_eq!(s.joins, 1, "seed {fault_seed}: join did not land");
+        assert_eq!(s.merges, 1, "seed {fault_seed}: rejoin never merged");
+        assert_eq!(
+            s.adoptions, 2,
+            "seed {fault_seed}: expected kill + leave adoptions"
+        );
+        assert!(
+            s.steps_lost <= 1,
+            "seed {fault_seed}: checkpoint_every=2 bounds the loss to 1, got {}",
+            s.steps_lost
+        );
+        assert_eq!(
+            s.transient_retries, expected_retries,
+            "seed {fault_seed}: every scheduled transient must be consumed"
+        );
+
+        // convergence: the merge only ever touches seat 1's params
+        assert_eq!(report.ends.len(), NODES + 1);
+        for seat in [0, 2, 3] {
+            assert!(
+                states_equal(completed_state(&report, seat), completed_state(&ref_report, seat)),
+                "seed {fault_seed}: seat {seat} diverged from the clean run"
+            );
+        }
+        let merged = completed_state(&report, 1);
+        let clean1 = completed_state(&ref_report, 1);
+        assert_eq!(merged.step, clean1.step, "seed {fault_seed}");
+        assert_eq!(merged.m, clean1.m, "seed {fault_seed}: merge must not touch m");
+        assert_eq!(merged.v, clean1.v, "seed {fault_seed}: merge must not touch v");
+        for (i, (a, b)) in merged.params.iter().zip(&clean1.params).enumerate() {
+            assert!(
+                (a - b).abs() <= 0.1,
+                "seed {fault_seed}: merged param {i} drifted: {a} vs {b}"
+            );
+        }
+
+        // exact byte audit. Broadcasts: the joiner subscribes before v1
+        // (see `drive`), so both versions go to all 4 seats — the leave
+        // is adopted and the kill re-seats, so neither sheds a
+        // subscriber; payload = 4 routers * P * 4.
+        let payload = ((NODES + 1) * P * 4) as u64;
+        assert_eq!(
+            broadcast.kind_bytes(CommKind::SnapshotBroadcast),
+            2 * 4 * payload,
+            "seed {fault_seed}: broadcast byte total"
+        );
+        assert_eq!(broadcast.rounds(CommKind::SnapshotBroadcast), 2);
+        let adopt_events = report
+            .ledger
+            .events
+            .iter()
+            .filter(|e| e.kind == CommKind::CheckpointAdopt)
+            .count();
+        assert_eq!(adopt_events as u64, s.adoptions, "seed {fault_seed}");
+        assert_eq!(
+            report.ledger.kind_bytes(CommKind::ParamMerge),
+            (P * 4) as u64,
+            "seed {fault_seed}: one merge ships exactly the param delta"
+        );
+        assert!(
+            report.ledger.max_merge_staleness() <= 1,
+            "seed {fault_seed}: only v2 can have landed after the leave"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// kill at a checkpoint boundary: bit-identical, zero-loss adoption
+// ---------------------------------------------------------------------
+
+/// A kill landing exactly on a checkpoint boundary loses nothing: the
+/// adopter resumes the just-written checkpoint and the run finishes
+/// bit-identical to an unfaulted one. The adoption's ledger bytes equal
+/// the checkpoint file's size exactly (measured by a probe run that
+/// stops at the boundary, which writes the identical file).
+#[test]
+fn kill_at_checkpoint_boundary_adopts_bit_identically() {
+    const STEPS: usize = 12;
+    const BOUNDARY: u64 = 9; // checkpoint_every = 3
+    let backend = ChaosStub::new(2, 4);
+    let seeds = seat_seeds(2);
+    let clean = ElasticPlan::default();
+    let base = NodeRunConfig {
+        steps_per_node: STEPS,
+        checkpoint_every: 3,
+        threads: 2,
+        draw_budget: 1000, // pinned so the probe's node is byte-identical
+        snapshot_wait_us: 10_000_000,
+        ..NodeRunConfig::default()
+    };
+
+    // probe: stop at the boundary; its final checkpoint *is* the file
+    // the chaos run's adopter will read
+    let probe_dir = temp_dir("probe");
+    let probe_cfg = NodeRunConfig {
+        steps_per_node: BOUNDARY as usize,
+        checkpoint_dir: Some(probe_dir.clone()),
+        ..base.clone()
+    };
+    elastic_run(&backend, &seeds, &probe_cfg, &clean, |h| {
+        drive(h, &clean, &[], 2)
+    })
+    .unwrap();
+    let ckpt_bytes = std::fs::metadata(probe_dir.join("node1.ckpt"))
+        .expect("probe run must leave node1's checkpoint behind")
+        .len();
+
+    let ref_cfg = NodeRunConfig {
+        checkpoint_dir: Some(temp_dir("boundary_ref")),
+        ..base.clone()
+    };
+    let (ref_report, _, ()) = elastic_run(&backend, &seeds, &ref_cfg, &clean, |h| {
+        drive(h, &clean, &[], 2)
+    })
+    .unwrap();
+
+    // the fault plan arrives as JSON, like a real --chaos-spec file
+    let spec = format!(r#"{{ "seed": 5, "kills": [{{ "node": 1, "at_step": {BOUNDARY} }}] }}"#);
+    let plan = ElasticPlan {
+        faults: FaultPlan::from_json_str(&spec).unwrap(),
+        ..ElasticPlan::default()
+    };
+    let cfg = NodeRunConfig {
+        checkpoint_dir: Some(temp_dir("boundary")),
+        ..base.clone()
+    };
+    let (report, _, ()) = elastic_run(&backend, &seeds, &cfg, &plan, |h| {
+        drive(h, &plan, &[], 2)
+    })
+    .unwrap();
+
+    assert_eq!(report.stats.kills, 1);
+    assert_eq!(report.stats.adoptions, 1);
+    assert_eq!(
+        report.stats.steps_lost, 0,
+        "a boundary kill must lose zero steps"
+    );
+    for seat in 0..2 {
+        assert!(
+            states_equal(completed_state(&report, seat), completed_state(&ref_report, seat)),
+            "seat {seat} diverged after boundary adoption"
+        );
+    }
+    let adopt: Vec<_> = report
+        .ledger
+        .events
+        .iter()
+        .filter(|e| e.kind == CommKind::CheckpointAdopt)
+        .collect();
+    assert_eq!(adopt.len(), 1);
+    assert_eq!(adopt[0].node, 1);
+    assert_eq!(adopt[0].step, BOUNDARY, "adopter must resume at the boundary");
+    assert_eq!(
+        report.ledger.kind_bytes(CommKind::CheckpointAdopt),
+        ckpt_bytes,
+        "adoption bytes must equal the checkpoint file size"
+    );
+    assert_eq!(adopt[0].bytes_received, ckpt_bytes);
+}
+
+// ---------------------------------------------------------------------
+// JSON spec replay determinism
+// ---------------------------------------------------------------------
+
+/// A `--chaos-spec`-shaped JSON plan (kill, retried transient, stall,
+/// dropped delivery, gated publish) replayed twice through fresh runs
+/// produces bit-identical states and identical stats — the whole point
+/// of keying faults on step counts instead of the clock. Also pins the
+/// JSON roundtrip (`to_json` -> parse -> `to_json`).
+#[test]
+fn json_fault_spec_replays_identically() {
+    let spec = r#"{
+        "seed": 9,
+        "kills": [{ "node": 0, "at_step": 5 }],
+        "transients": [{ "node": 1, "at_step": 3, "failures": 2 }],
+        "stalls": [{ "node": 1, "at_step": 7, "micros": 500 }],
+        "drops": [{ "node": 0, "version": 2 }],
+        "publish_gates": [{ "version": 2, "min_total_steps": 4 }]
+    }"#;
+    let faults = FaultPlan::from_json_str(spec).unwrap();
+    let roundtrip = FaultPlan::from_json_str(&faults.to_json().to_string()).unwrap();
+    assert_eq!(
+        roundtrip.to_json().to_string(),
+        faults.to_json().to_string(),
+        "JSON spec roundtrip must be lossless"
+    );
+
+    let backend = ChaosStub::new(2, 4);
+    let seeds = seat_seeds(2);
+    let plan = ElasticPlan {
+        faults,
+        ..ElasticPlan::default()
+    };
+    let run = |tag: &str| {
+        let cfg = NodeRunConfig {
+            steps_per_node: 12,
+            checkpoint_every: 2,
+            checkpoint_dir: Some(temp_dir(tag)),
+            threads: 2,
+            snapshot_wait_us: 10_000_000,
+            ..NodeRunConfig::default()
+        };
+        let (report, _, ()) =
+            elastic_run(&backend, &seeds, &cfg, &plan, |h| drive(h, &plan, &[], 2)).unwrap();
+        report
+    };
+    let first = run("replay_a");
+    let second = run("replay_b"); // run_elastic_nodes re-arms the plan
+
+    assert_eq!(first.stats.kills, 1);
+    assert_eq!(first.stats.transient_retries, 2);
+    for seat in 0..2 {
+        assert!(
+            states_equal(completed_state(&first, seat), completed_state(&second, seat)),
+            "seat {seat} diverged between replays of the same spec"
+        );
+    }
+    let mut a = first.stats.clone();
+    let mut b = second.stats.clone();
+    // the only wall-clock-denominated stat; everything else must replay
+    a.recovery_micros = 0;
+    b.recovery_micros = 0;
+    assert_eq!(a, b, "replays of one spec must count identical faults");
+}
+
+// ---------------------------------------------------------------------
+// membership edges
+// ---------------------------------------------------------------------
+
+/// Joining past the spare-seat budget is a structured error on the
+/// handle; the join that did fit completes its full step budget.
+#[test]
+fn join_beyond_spare_seats_is_rejected() {
+    let backend = ChaosStub::new(3, 4);
+    let seeds = seat_seeds(2);
+    let plan = ElasticPlan {
+        policy: ElasticPolicy {
+            max_extra_nodes: 1,
+            ..ElasticPolicy::default()
+        },
+        ..ElasticPlan::default()
+    };
+    let cfg = NodeRunConfig {
+        steps_per_node: 8,
+        threads: 2,
+        snapshot_wait_us: 10_000_000,
+        ..NodeRunConfig::default()
+    };
+    let (report, _, ()) = elastic_run(&backend, &seeds, &cfg, &plan, |h| {
+        // join before the first publish: everyone is still blocked on
+        // v1, so the run cannot have drained out from under the join
+        let seat = h.join_new_node(0x77)?;
+        assert_eq!(seat, 2, "the one spare seat");
+        let err = h.join_new_node(0x78).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("no spare seat"),
+            "unexpected join error: {err:#}"
+        );
+        h.store().publish(router_fleet(3), 1);
+        Ok(())
+    })
+    .unwrap();
+    assert_eq!(report.stats.joins, 1);
+    assert_eq!(report.ends.len(), 3);
+    let joiner = completed_state(&report, 2);
+    assert_eq!(joiner.step, 8, "the admitted joiner trains its full budget");
+}
+
+/// Degradation contract: a node failing *structurally* (non-transient
+/// backend error) becomes a `NodeEnd::Failed` with its salvageable state
+/// attached — no panic, no aborted run — while the survivor completes,
+/// which is all the run needs to return `Ok`.
+#[test]
+fn structural_failure_degrades_without_aborting() {
+    let backend = ChaosStub {
+        fail_at: Some((0, 4)),
+        ..ChaosStub::new(2, 4)
+    };
+    let seeds = seat_seeds(2);
+    let plan = ElasticPlan::default();
+    let cfg = NodeRunConfig {
+        steps_per_node: 12,
+        threads: 2,
+        snapshot_wait_us: 10_000_000,
+        ..NodeRunConfig::default()
+    };
+    let (report, _, ()) = elastic_run(&backend, &seeds, &cfg, &plan, |h| {
+        h.store().publish(router_fleet(2), 1);
+        Ok(())
+    })
+    .unwrap();
+
+    assert_eq!(report.ends.len(), 2);
+    match report.ends.iter().find(|e| e.node() == 0) {
+        Some(NodeEnd::Failed(f)) => {
+            assert_eq!(f.steps_done, 4);
+            assert!(
+                format!("{:#}", f.error).contains("injected crash"),
+                "error must carry the backend's cause: {:#}",
+                f.error
+            );
+            let salvage = f.salvage.as_ref().expect("state is salvageable after init");
+            assert_eq!(salvage.step, 4);
+        }
+        other => panic!(
+            "seat 0 should have failed structurally, got {:?}",
+            other.map(NodeEnd::node)
+        ),
+    }
+    let survivor = completed_state(&report, 1);
+    assert_eq!(survivor.step, 12, "the survivor finishes its budget");
+}

@@ -34,37 +34,41 @@ export SMALLTALK_BENCH_TARGET_MS="${SMALLTALK_BENCH_TARGET_MS:-300}"
 # machine's core count; pin it here for cross-machine comparability.
 export SMALLTALK_BENCH_THREADS="${SMALLTALK_BENCH_THREADS:-$(nproc 2>/dev/null || echo 4)}"
 
+routing_ok=1
 if ! cargo bench --bench routing; then
   echo "bench_smoke: routing bench failed (stub xla backend? see rust/vendor/xla)" >&2
   printf '{\n  "skipped": "bench run failed; likely the stub xla backend (no native xla_extension)"\n}\n' \
     > BENCH_routing.json
   printf '{\n  "skipped": "bench run failed; likely the stub xla backend (no native xla_extension)"\n}\n' \
     > BENCH_serve.json
-  exit 0
+  routing_ok=0
 fi
 # serve bench: steady-state req/s + p50/p95 queue/total latency at several
 # arrival rates, closed-wave vs continuous rows (see benches/serve.rs).
 # Same graceful-skip contract as the routing bench: a failure leaves a
 # marker file and the remaining benches still run.
-if ! cargo bench --bench serve; then
+if [ "$routing_ok" = 1 ] && ! cargo bench --bench serve; then
   echo "bench_smoke: serve bench failed" >&2
   printf '{\n  "skipped": "serve bench run failed"\n}\n' > BENCH_serve.json
   # a stale results/ copy from an earlier run must not clobber the marker
   rm -f results/bench_serve.json
 fi
 # trainer bench: staged vs async orchestration seqs/s + per-mode comm
-# ledger bytes (score all-gathers vs snapshot broadcasts). Same
-# graceful-skip contract as the other rows.
+# ledger bytes (score all-gathers vs snapshot broadcasts), plus the
+# elastic chaos row (steps lost to kills, recovery wall-clock, merge
+# count) — the chaos row runs on a stub backend, so this bench is
+# attempted even when the XLA-backed benches failed. Same graceful-skip
+# contract as the other rows.
 if ! cargo bench --bench train; then
   echo "bench_smoke: train bench failed" >&2
   printf '{\n  "skipped": "train bench run failed"\n}\n' > BENCH_train.json
   rm -f results/bench_train.json
 fi
-cargo bench --bench train_step
+[ "$routing_ok" = 1 ] && cargo bench --bench train_step
 
 # BenchSuite::write_json emits results/bench_<title>.json relative to the
 # bench's working directory (the invocation directory, i.e. repo root)
-cp results/bench_routing.json BENCH_routing.json
+[ -f results/bench_routing.json ] && cp results/bench_routing.json BENCH_routing.json
 [ -f results/bench_serve.json ] && cp results/bench_serve.json BENCH_serve.json
 [ -f results/bench_train.json ] && cp results/bench_train.json BENCH_train.json
 [ -f results/bench_train_step.json ] && cp results/bench_train_step.json BENCH_train_step.json
