@@ -4,6 +4,9 @@
 #   make test              cargo test -q  (XLA-backed tests self-skip without artifacts)
 #   make test-concurrency  the engine thread-safety suite, at 1 and 8 test threads
 #   make test-serve        the continuous-batching scheduler suite, serial + interleaved
+#   make test-net          the TCP/JSONL front-end suite (loopback e2e, shedding,
+#                          connection limits, adversarial lexer properties),
+#                          serial + interleaved
 #   make test-fused        the fused all-routers scoring + stacked-cache suite,
 #                          serial + interleaved
 #   make test-async        the trainer-orchestrator suite (staged bit-identity,
@@ -16,7 +19,7 @@
 #   make bench-smoke       tiny-budget routing+serve+train_step+trainer benches
 #                          -> BENCH_routing.json + BENCH_serve.json + BENCH_train.json
 
-.PHONY: build test test-concurrency test-serve test-fused test-async test-chaos artifacts bench-smoke clean
+.PHONY: build test test-concurrency test-serve test-net test-fused test-async test-chaos artifacts bench-smoke clean
 
 build:
 	cargo build --release
@@ -37,6 +40,15 @@ test-concurrency:
 test-serve:
 	RUST_TEST_THREADS=1 cargo test -q --test server
 	RUST_TEST_THREADS=8 cargo test -q --test server
+
+# TCP/JSONL front-end suite: loopback end-to-end serving against the
+# in-process reference, structured shedding and connection limits, and
+# the adversarial zero-copy-lexer properties — all tier-1 (stub backend,
+# no artifacts), under both serial and heavily interleaved test
+# scheduling.
+test-net:
+	RUST_TEST_THREADS=1 cargo test -q --test net
+	RUST_TEST_THREADS=8 cargo test -q --test net
 
 # Fused all-routers scoring + stacked-parameter cache suite (stacked-cache
 # accounting on the stub backend runs everywhere; fused-vs-fanout

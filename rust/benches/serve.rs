@@ -1,15 +1,24 @@
 //! Bench: closed-wave vs continuous-batching serve under staggered
-//! arrivals. Each continuous row streams the request set with a fixed
+//! arrivals, plus the TCP/JSONL front-end under open-loop offered load.
+//! Each continuous row streams the request set with a fixed
 //! inter-arrival gap through the admission scheduler and records
 //! steady-state req/s plus p50/p95 queue and total latency (and the
-//! scheduler counters), so `BENCH_serve.json` carries a closed-wave row
-//! and one continuous row per arrival rate for every PR.
+//! scheduler counters). Each socket row drives the same requests over a
+//! loopback connection without waiting for responses (open loop) and
+//! records client-observed p50/p95/p99 latency and shed counts, so
+//! `BENCH_serve.json` carries closed-wave, continuous, and socket rows
+//! (one per offered load, plus an overload row) for every PR. Every row
+//! asserts the served `(id, expert, nll)` set against the closed-wave
+//! reference.
 
-use std::time::Duration;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{mpsc, Mutex};
+use std::time::{Duration, Instant};
 
 use smalltalk::coordinator::{
-    response_triples, run_pipeline, run_server, serve_threaded, MixtureBackend, PipelineConfig,
-    Request, ServerConfig,
+    response_triples, run_pipeline, run_server, serve_net, serve_threaded, MixtureBackend,
+    NetConfig, PipelineConfig, Request, ServerConfig,
 };
 use smalltalk::data::corpus::Corpus;
 use smalltalk::data::SequenceGen;
@@ -17,6 +26,7 @@ use smalltalk::metrics::percentile;
 use smalltalk::runtime::{default_threads, locate_artifacts, Engine};
 use smalltalk::tokenizer::BpeTrainer;
 use smalltalk::util::bench::{env_threads, BenchSuite};
+use smalltalk::util::Json;
 
 fn main() {
     let Some(artifacts) = locate_artifacts() else {
@@ -125,6 +135,143 @@ fn main() {
             sorted_ref,
             "continuous serve (gap {gap_us} µs) diverged from the closed-wave reference"
         );
+    }
+
+    // ---- open-loop socket rows: the TCP front-end under offered load ----
+    //
+    // One client streams the request set over a loopback socket at a
+    // fixed inter-arrival gap without waiting for responses; a reader
+    // thread matches response lines back by id and records the
+    // client-observed latency (send -> response line). The server runs
+    // the identical scheduler config behind `serve_net`.
+    let request_lines: Vec<String> = requests
+        .iter()
+        .map(|r| format!("{{\"id\":{},\"tokens\":{:?}}}\n", r.id, r.tokens))
+        .collect();
+    let socket_once = |gap_us: u64, high_water: usize| {
+        let ncfg = NetConfig {
+            listen: "127.0.0.1:0".to_string(),
+            max_conns: 0,
+            high_water,
+            want_tokens: None,
+            server: ServerConfig::continuous(batch_size, 500, threads),
+        };
+        let (tx, rx) = mpsc::channel();
+        let send_t: Vec<Mutex<Option<Instant>>> =
+            requests.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|s| {
+            let (b, st) = (&backend, &send_t);
+            let server = s.spawn(move || serve_net(b, &ncfg, None, move |h| drop(tx.send(h))));
+            let h = rx.recv().expect("socket server never became ready");
+            let conn = TcpStream::connect(h.addr()).unwrap();
+            let mut wconn = conn.try_clone().unwrap();
+            let n = requests.len();
+            let reader = s.spawn(move || {
+                let mut r = BufReader::new(conn);
+                let mut trip: Vec<(u64, usize, u32)> = Vec::new();
+                let mut lat_us: Vec<f64> = Vec::new();
+                let mut shed = 0usize;
+                let mut line = String::new();
+                while trip.len() + shed < n {
+                    line.clear();
+                    if r.read_line(&mut line).unwrap() == 0 {
+                        panic!("server closed before answering every request");
+                    }
+                    let now = Instant::now();
+                    let j = Json::parse(line.trim_end()).unwrap();
+                    let id = j.get("id").and_then(Json::as_f64).expect("id") as usize;
+                    match j.get("code").and_then(Json::as_f64) {
+                        None => {
+                            let sent = st[id].lock().unwrap().expect("response before send");
+                            lat_us.push((now - sent).as_secs_f64() * 1e6);
+                            let expert = j.get("expert").and_then(Json::as_usize).unwrap();
+                            // f32 Display -> f64 parse -> f32 cast is exact
+                            let nll = j.get("nll").and_then(Json::as_f64).unwrap() as f32;
+                            trip.push((id as u64, expert, nll.to_bits()));
+                        }
+                        Some(code) if code == 429.0 => shed += 1,
+                        Some(code) => panic!("unexpected error line ({code}): {line}"),
+                    }
+                }
+                (trip, lat_us, shed)
+            });
+            for (i, line) in request_lines.iter().enumerate() {
+                if gap_us > 0 {
+                    std::thread::sleep(Duration::from_micros(gap_us));
+                }
+                *st[i].lock().unwrap() = Some(Instant::now());
+                wconn.write_all(line.as_bytes()).unwrap();
+            }
+            let (trip, lat_us, shed) = reader.join().unwrap();
+            drop(wconn);
+            h.shutdown();
+            let (stats, report) = server.join().unwrap().unwrap();
+            (trip, lat_us, shed, stats, report)
+        })
+    };
+
+    for gap_us in [0u64, 200, 1000] {
+        let r = suite.bench(
+            &format!("socket serve {n_req} requests (open loop, gap {gap_us} µs)"),
+            || {
+                std::hint::black_box(socket_once(gap_us, 1 << 20));
+            },
+        );
+        let (trip, lat_us, shed, stats, report) = socket_once(gap_us, 1 << 20);
+        assert_eq!(shed, 0, "no shedding expected below the high-water mark");
+        let mut sorted = trip;
+        sorted.sort_unstable();
+        // determinism guard: socket-served set == in-process closed wave
+        assert_eq!(
+            sorted, sorted_ref,
+            "socket serve (gap {gap_us} µs) diverged from the closed-wave reference"
+        );
+        suite.annotate("threads", threads as f64);
+        suite.annotate("arrival_gap_us", gap_us as f64);
+        suite.annotate(
+            "offered_req_per_s",
+            if gap_us == 0 { 0.0 } else { 1e6 / gap_us as f64 },
+        );
+        suite.annotate("req_per_s", r.throughput(n_req as f64));
+        suite.annotate("shed", shed as f64);
+        suite.annotate("ok_lines", report.ok_lines as f64);
+        suite.annotate("client_p50_us", percentile(&lat_us, 50.0));
+        suite.annotate("client_p95_us", percentile(&lat_us, 95.0));
+        suite.annotate("client_p99_us", percentile(&lat_us, 99.0));
+        suite.annotate("mean_queue_depth", stats.mean_queue_depth());
+    }
+
+    // overload row: full-rate flood into a tiny high-water mark — the
+    // shed count lands in the JSON, every request still gets exactly one
+    // line, and everything served is bit-correct
+    {
+        let r = suite.bench(
+            &format!("socket serve {n_req} requests (overload, high-water 8)"),
+            || {
+                std::hint::black_box(socket_once(0, 8));
+            },
+        );
+        let (trip, lat_us, shed, stats, report) = socket_once(0, 8);
+        assert_eq!(
+            trip.len() + shed,
+            n_req,
+            "every request gets exactly one response line"
+        );
+        for t in &trip {
+            assert!(
+                sorted_ref.binary_search(t).is_ok(),
+                "served triple {t:?} is not in the reference set"
+            );
+        }
+        assert_eq!(stats.shed, report.shed_lines, "wire sheds == scheduler sheds");
+        suite.annotate("threads", threads as f64);
+        suite.annotate("high_water", 8.0);
+        suite.annotate("req_per_s", r.throughput(n_req as f64));
+        suite.annotate("shed", shed as f64);
+        suite.annotate("ok_lines", report.ok_lines as f64);
+        suite.annotate("client_p50_us", percentile(&lat_us, 50.0));
+        suite.annotate("client_p95_us", percentile(&lat_us, 95.0));
+        suite.annotate("client_p99_us", percentile(&lat_us, 99.0));
     }
 
     suite.write_json().unwrap();

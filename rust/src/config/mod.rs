@@ -42,6 +42,13 @@ pub struct ExperimentConfig {
     /// Continuous serving: linger before a partial expert batch is
     /// dispatched anyway, in microseconds (`u64::MAX` disables).
     pub serve_max_wait_us: u64,
+    /// Wire serving (`serve --listen`): max simultaneous connections
+    /// (0 = unlimited); further connects get a structured 503 line.
+    pub net_max_conns: usize,
+    /// Wire serving: arrival-queue high-water mark — requests arriving
+    /// past it are shed with a structured 429-style line instead of
+    /// queueing unboundedly.
+    pub net_high_water: usize,
     /// Train with the asynchronous (barrier-free, snapshot-routed)
     /// orchestrator instead of the staged pipeline (`--async`).
     pub train_async: bool,
@@ -80,6 +87,8 @@ impl Default for ExperimentConfig {
             results_dir: "results".into(),
             serve_batch_size: 0,
             serve_max_wait_us: 2000,
+            net_max_conns: 64,
+            net_high_water: 1024,
             train_async: false,
             checkpoint_dir: String::new(),
             checkpoint_every: 0,
@@ -172,6 +181,12 @@ impl ExperimentConfig {
         if let Some(v) = u("serve_max_wait_us") {
             self.serve_max_wait_us = v as u64;
         }
+        if let Some(v) = u("net_max_conns") {
+            self.net_max_conns = v;
+        }
+        if let Some(v) = u("net_high_water") {
+            self.net_high_water = v;
+        }
         if let Some(v) = j.get("train_async").and_then(Json::as_bool) {
             self.train_async = v;
         }
@@ -226,6 +241,9 @@ impl ExperimentConfig {
         // continuous-serving knobs (also per-command `serve` overrides)
         self.serve_batch_size = args.get_usize("batch-size", self.serve_batch_size)?;
         self.serve_max_wait_us = args.get_u64("max-wait-us", self.serve_max_wait_us)?;
+        // wire front-end knobs (only read by `serve --listen`)
+        self.net_max_conns = args.get_usize("max-conns", self.net_max_conns)?;
+        self.net_high_water = args.get_usize("high-water", self.net_high_water)?;
         self.eval_sequences = args.get_usize("eval-sequences", self.eval_sequences)?;
         self.tasks_per_domain = args.get_usize("tasks-per-domain", self.tasks_per_domain)?;
         self.seed = args.get_u64("seed", self.seed)?;
@@ -290,6 +308,8 @@ impl ExperimentConfig {
             ("threads", Json::num(self.pipeline.threads as f64)),
             ("serve_batch_size", Json::num(self.serve_batch_size as f64)),
             ("serve_max_wait_us", Json::num(self.serve_max_wait_us as f64)),
+            ("net_max_conns", Json::num(self.net_max_conns as f64)),
+            ("net_high_water", Json::num(self.net_high_water as f64)),
             ("train_async", Json::Bool(self.train_async)),
             ("checkpoint_dir", Json::str(self.checkpoint_dir.clone())),
             ("checkpoint_every", Json::num(self.checkpoint_every as f64)),
@@ -322,6 +342,8 @@ mod tests {
         c.pipeline.threads = 6;
         c.serve_batch_size = 16;
         c.serve_max_wait_us = 750;
+        c.net_max_conns = 9;
+        c.net_high_water = 333;
         c.train_async = true;
         c.checkpoint_dir = "ckpts".into();
         c.checkpoint_every = 25;
@@ -339,6 +361,8 @@ mod tests {
         assert_eq!(c2.pipeline.threads, 6);
         assert_eq!(c2.serve_batch_size, 16);
         assert_eq!(c2.serve_max_wait_us, 750);
+        assert_eq!(c2.net_max_conns, 9);
+        assert_eq!(c2.net_high_water, 333);
         assert!(c2.train_async);
         assert_eq!(c2.checkpoint_dir, "ckpts");
         assert_eq!(c2.checkpoint_every, 25);
@@ -358,6 +382,8 @@ mod tests {
             "--threads=3",
             "--batch-size=8",
             "--max-wait-us=1500",
+            "--max-conns=3",
+            "--high-water=77",
             "--async",
             "--resume",
             "--checkpoint-dir=ck",
@@ -379,6 +405,8 @@ mod tests {
         assert_eq!(c.pipeline.threads, 3);
         assert_eq!(c.serve_batch_size, 8);
         assert_eq!(c.serve_max_wait_us, 1500);
+        assert_eq!(c.net_max_conns, 3);
+        assert_eq!(c.net_high_water, 77);
         assert!(c.train_async);
         assert!(c.resume);
         assert_eq!(c.checkpoint_dir, "ck");

@@ -8,6 +8,8 @@
 //! * [`inference`] — argmin routing + batched serving loop
 //! * [`server`] — continuous-batching serve: cross-wave request queue
 //!   with admission scheduling
+//! * [`net`] — the TCP/JSONL wire front-end over [`server`]: streaming
+//!   request/response lines, load shedding, per-client fairness
 //! * [`comm`] — communication ledger and §A.4 closed forms
 //! * [`pipeline`] — end-to-end orchestration (routers → shard → experts)
 //! * [`trainer`] — event-driven trainer nodes: staged (bit-exact classic
@@ -22,6 +24,7 @@ pub mod comm;
 pub mod em;
 pub mod expert;
 pub mod inference;
+pub mod net;
 pub mod pipeline;
 pub mod scoring;
 pub mod server;
@@ -47,8 +50,10 @@ pub use trainer::{
     NodeOutcome, NodeProgress, NodeRunConfig, Rejoin, RouterSnapshot, SnapshotStore, TrainBackend,
     TrainMode, TrainerConfig, TrainerHandle,
 };
+pub use net::{serve_net, NetConfig, NetHandle, NetReport};
 pub use server::{
-    run_server, MixtureBackend, SchedStats, ServeBackend, ServerClient, ServerConfig,
+    run_server, run_server_streaming, MixtureBackend, SchedStats, ServeBackend, ServerClient,
+    ServerConfig, SubmitOutcome,
 };
 pub use scoring::{
     score_matrix, score_matrix_rows, score_matrix_rows_fanout, score_matrix_rows_fused,

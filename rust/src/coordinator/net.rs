@@ -1,0 +1,651 @@
+//! TCP/JSONL wire front-end over the continuous-batching scheduler
+//! ([`super::server`]).
+//!
+//! Std-only (the build is offline — no tokio/hyper): a listener thread
+//! accepts connections, per-connection reader threads lex requests
+//! straight off the socket buffer with the zero-copy lexer
+//! ([`crate::util::lex`] — no `Json` tree on the request path), and
+//! responses stream back through [`run_server_streaming`]'s sink the
+//! moment each completes. **No request ever waits for a wave**, and no
+//! response waits for drain.
+//!
+//! # Wire protocol
+//!
+//! Newline-delimited JSON in both directions; one request or response
+//! object per line, `\r\n` tolerated, blank lines ignored. A request line
+//! is an object with an integer `id` and exactly one body field:
+//!
+//! ```text
+//! {"id": 7, "tokens": [17, 4, 1093, ...]}     pre-tokenized
+//! {"id": 8, "text": "the quick brown fox"}    server-side BPE encode
+//! ```
+//!
+//! `id` is the client's correlation key (`u64`, full precision): the
+//! server echoes it verbatim and never interprets it, so ids need not be
+//! unique across connections — internally every request is re-keyed.
+//! Responses arrive **in completion order**, not submission order; one
+//! line per request line, always one of:
+//!
+//! ```text
+//! {"id":7,"expert":2,"nll":3.125,"queue_micros":41,"route_micros":12,"exec_micros":97}
+//! {"code":429,"error":"shed","id":7}          arrival queue past high water
+//! {"code":400,"error":"bad_request","detail":"..."}   unparseable/invalid line
+//! {"code":503,"error":"draining","id":7}      submitted while shutting down
+//! ```
+//!
+//! A connection refused by the connection limit receives a single
+//! `{"code":503,"error":"too_many_connections"}` line and is closed.
+//! Non-finite NLLs are encoded as `null`.
+//!
+//! # Shedding
+//!
+//! Requests enter the scheduler through
+//! [`ServerClient::try_submit`]: when the arrival queue already holds
+//! `high_water` entries the request is refused with the 429-style line
+//! above (counted in [`SchedStats::shed`] and
+//! [`NetReport::shed_lines`]) instead of queueing unboundedly — the
+//! client sees a structured answer, never a hang or a dropped
+//! connection.
+//!
+//! # Fairness
+//!
+//! Each connection owns a lane in a round-robin multiplexer
+//! ([`FairMux`]): the single pump thread that feeds the arrival queue
+//! rotates over lanes, taking one request per turn, so a client
+//! streaming thousands of lines cannot starve a client sending one.
+//!
+//! # Drain
+//!
+//! [`NetHandle::shutdown`] stops the accept loop, half-closes every
+//! connection's read side (readers see EOF after lexing what already
+//! arrived), drains the multiplexer, and returns from the scheduler
+//! driver — at which point the scheduler answers **everything already
+//! admitted** through the sink before the sockets close. Every request
+//! line read before the half-close gets exactly one response line.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::inference::{Request, Response};
+use super::server::{
+    run_server_streaming, SchedStats, ServeBackend, ServerClient, ServerConfig, SubmitOutcome,
+};
+use crate::util::lex::{parse_request_line, LineBuf};
+use crate::util::Json;
+
+/// Server-side text → token-row encoder for `{"id","text"}` requests
+/// (wraps the BPE encoder in `main.rs`; `None` disables the text path).
+pub type Encode<'a> = &'a (dyn Fn(&str) -> Result<Vec<u32>> + Sync);
+
+/// Front-end knobs (the scheduler's own knobs ride in `server`).
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Bind address, e.g. `"127.0.0.1:7878"` (`:0` picks a free port —
+    /// read it back from [`NetHandle::addr`]).
+    pub listen: String,
+    /// Max simultaneously served connections; further connects get the
+    /// `too_many_connections` line and close. `0` = unlimited.
+    pub max_conns: usize,
+    /// Arrival-queue high-water mark: a request arriving while the queue
+    /// holds this many entries is shed. `0` sheds everything (useful only
+    /// in tests).
+    pub high_water: usize,
+    /// When set, requests whose token row length differs are rejected
+    /// with a 400 line (the fixed-shape engines want `seq_len + 1` rows;
+    /// stub backends take anything).
+    pub want_tokens: Option<usize>,
+    /// Scheduler knobs behind the socket.
+    pub server: ServerConfig,
+}
+
+/// Remote control for a running [`serve_net`]: the bound address and the
+/// shutdown trigger. Cloneable; handed to the caller via `on_ready`.
+#[derive(Clone)]
+pub struct NetHandle {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl NetHandle {
+    /// The actually-bound address (resolves `:0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Begin graceful drain (idempotent): stop accepting, answer
+    /// everything admitted, then return from [`serve_net`].
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+    }
+}
+
+/// Wire-side counters (the socket analogue of [`SchedStats`]).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct NetReport {
+    /// Connections accepted and served.
+    pub connections: usize,
+    /// Connections refused by the connection limit.
+    pub conns_refused: usize,
+    /// Successful response lines written.
+    pub ok_lines: usize,
+    /// 429-style shed lines written (equals the scheduler's
+    /// [`SchedStats::shed`] plus any drain-time refusals).
+    pub shed_lines: usize,
+    /// 400-style bad-request lines written.
+    pub bad_lines: usize,
+}
+
+#[derive(Default)]
+struct Counters {
+    connections: AtomicUsize,
+    conns_refused: AtomicUsize,
+    ok_lines: AtomicUsize,
+    shed_lines: AtomicUsize,
+    bad_lines: AtomicUsize,
+}
+
+impl Counters {
+    fn snapshot(&self) -> NetReport {
+        NetReport {
+            connections: self.connections.load(Ordering::Relaxed),
+            conns_refused: self.conns_refused.load(Ordering::Relaxed),
+            ok_lines: self.ok_lines.load(Ordering::Relaxed),
+            shed_lines: self.shed_lines.load(Ordering::Relaxed),
+            bad_lines: self.bad_lines.load(Ordering::Relaxed),
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Per-client round-robin multiplexer
+// ----------------------------------------------------------------------
+
+struct MuxState<T> {
+    lanes: Vec<VecDeque<T>>,
+    /// Next lane the rotating scan starts from.
+    cursor: usize,
+    draining: bool,
+}
+
+/// Round-robin fair multiplexer: each connection registers a lane, the
+/// pump pops one item per turn rotating over lanes. `next` blocks while
+/// every lane is empty and returns `None` only after
+/// [`drain`](FairMux::drain) with all lanes exhausted.
+struct FairMux<T> {
+    state: Mutex<MuxState<T>>,
+    cv: Condvar,
+}
+
+impl<T> FairMux<T> {
+    fn new() -> Self {
+        FairMux {
+            state: Mutex::new(MuxState {
+                lanes: Vec::new(),
+                cursor: 0,
+                draining: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, MuxState<T>> {
+        self.state.lock().expect("mux poisoned")
+    }
+
+    fn register(&self) -> usize {
+        let mut st = self.lock();
+        st.lanes.push(VecDeque::new());
+        st.lanes.len() - 1
+    }
+
+    fn push(&self, lane: usize, item: T) {
+        let mut st = self.lock();
+        st.lanes[lane].push_back(item);
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    fn next(&self) -> Option<T> {
+        let mut st = self.lock();
+        loop {
+            let n = st.lanes.len();
+            for k in 0..n {
+                let lane = (st.cursor + k) % n;
+                if let Some(item) = st.lanes[lane].pop_front() {
+                    // advance past the served lane so its next item waits
+                    // a full rotation
+                    st.cursor = (lane + 1) % n;
+                    return Some(item);
+                }
+            }
+            if st.draining {
+                return None;
+            }
+            st = self.cv.wait(st).expect("mux poisoned");
+        }
+    }
+
+    fn drain(&self) {
+        self.lock().draining = true;
+        self.cv.notify_all();
+    }
+}
+
+// ----------------------------------------------------------------------
+// Wire plumbing
+// ----------------------------------------------------------------------
+
+/// A parsed request staged between a reader thread and the pump. The
+/// internal id re-keys the request (client ids need not be unique across
+/// connections); the original id is echoed on the response line.
+struct Staged {
+    internal_id: u64,
+    orig_id: u64,
+    tokens: Vec<u32>,
+    writer: Arc<Mutex<TcpStream>>,
+}
+
+/// Where to send a response once the scheduler completes the request.
+struct PendingEntry {
+    orig_id: u64,
+    writer: Arc<Mutex<TcpStream>>,
+}
+
+type PendingMap = Mutex<HashMap<u64, PendingEntry>>;
+
+/// Write one response line (single `write_all`, so concurrent writers on
+/// the shared half never interleave bytes). A write error means the
+/// client went away — not a server error; the line is dropped.
+fn write_line(writer: &Mutex<TcpStream>, line: &str) {
+    let mut framed = String::with_capacity(line.len() + 1);
+    framed.push_str(line);
+    framed.push('\n');
+    let mut w = writer.lock().expect("writer poisoned");
+    let _ = w.write_all(framed.as_bytes());
+}
+
+/// f32 → JSON number text; non-finite values become `null` (JSON has no
+/// NaN/inf).
+fn json_f32(v: f32) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn ok_line(orig_id: u64, r: &Response) -> String {
+    format!(
+        r#"{{"id":{},"expert":{},"nll":{},"queue_micros":{},"route_micros":{},"exec_micros":{}}}"#,
+        orig_id,
+        r.expert,
+        json_f32(r.nll),
+        r.queue_micros,
+        r.route_micros,
+        r.exec_micros
+    )
+}
+
+fn shed_line(orig_id: u64) -> String {
+    format!(r#"{{"code":429,"error":"shed","id":{orig_id}}}"#)
+}
+
+fn draining_line(orig_id: u64) -> String {
+    format!(r#"{{"code":503,"error":"draining","id":{orig_id}}}"#)
+}
+
+/// 400 line; `detail` is arbitrary error text, so this one goes through
+/// the tree writer for escaping.
+fn bad_request_line(detail: &str) -> String {
+    Json::obj(vec![
+        ("code", Json::num(400.0)),
+        ("error", Json::str("bad_request")),
+        ("detail", Json::str(detail)),
+    ])
+    .to_string()
+}
+
+const REFUSED_LINE: &str = r#"{"code":503,"error":"too_many_connections"}"#;
+
+/// Serve `backend` over TCP until [`NetHandle::shutdown`]: bind
+/// `cfg.listen`, hand the caller a [`NetHandle`] through `on_ready`
+/// (called on the serving thread once the socket is listening — spawn or
+/// stash, don't block), then accept/read/schedule/respond per the module
+/// protocol. Returns the scheduler counters and the wire counters after
+/// a graceful drain; the first backend error aborts serving and returns
+/// it instead.
+pub fn serve_net<B: ServeBackend>(
+    backend: &B,
+    cfg: &NetConfig,
+    encode: Option<Encode<'_>>,
+    on_ready: impl FnOnce(NetHandle) + Send,
+) -> Result<(SchedStats, NetReport)> {
+    let listener = TcpListener::bind(&cfg.listen)
+        .with_context(|| format!("binding serve listener on {}", cfg.listen))?;
+    listener
+        .set_nonblocking(true)
+        .context("listener nonblocking")?;
+    let addr = listener.local_addr().context("listener local_addr")?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let handle = NetHandle {
+        addr,
+        shutdown: Arc::clone(&shutdown),
+    };
+
+    let counters = Counters::default();
+    let pending: PendingMap = Mutex::new(HashMap::new());
+    let next_internal = AtomicU64::new(0);
+    let mux: FairMux<Staged> = FairMux::new();
+    let live_conns = AtomicUsize::new(0);
+
+    let sink = |_seq: usize, resp: Response| {
+        // the pump inserts the entry before try_submit, so it is always
+        // present by the time the scheduler answers
+        let entry = pending
+            .lock()
+            .expect("pending map poisoned")
+            .remove(&resp.id);
+        if let Some(entry) = entry {
+            write_line(&entry.writer, &ok_line(entry.orig_id, &resp));
+            counters.ok_lines.fetch_add(1, Ordering::Relaxed);
+        }
+    };
+
+    let (stats, ()) = run_server_streaming(backend, &cfg.server, sink, |client| {
+        on_ready(handle);
+        let counters = &counters;
+        let pending = &pending;
+        let mux = &mux;
+        let next_internal = &next_internal;
+        let live_conns = &live_conns;
+        let shutdown = &shutdown;
+        std::thread::scope(|s| {
+            // pump: lane-fair feed of the arrival queue
+            s.spawn(|| pump_loop(client, mux, pending, cfg.high_water, counters));
+
+            // accept loop on the driver thread
+            let mut readers = Vec::new();
+            let mut read_halves: Vec<Arc<Mutex<TcpStream>>> = Vec::new();
+            while !shutdown.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        // the accepted socket must block (reads park the
+                        // reader thread, not spin)
+                        let _ = stream.set_nonblocking(false);
+                        if cfg.max_conns != 0
+                            && live_conns.load(Ordering::Relaxed) >= cfg.max_conns
+                        {
+                            counters.conns_refused.fetch_add(1, Ordering::Relaxed);
+                            write_line(&Mutex::new(stream), REFUSED_LINE);
+                            continue; // dropped = closed
+                        }
+                        let writer = match stream.try_clone() {
+                            Ok(w) => Arc::new(Mutex::new(w)),
+                            Err(_) => continue, // dying socket: drop it
+                        };
+                        counters.connections.fetch_add(1, Ordering::Relaxed);
+                        live_conns.fetch_add(1, Ordering::Relaxed);
+                        // a second arc of the same socket, kept by the
+                        // accept loop purely to half-close reads at drain
+                        read_halves.push(Arc::clone(&writer));
+                        let lane = mux.register();
+                        let want_tokens = cfg.want_tokens;
+                        let writer_for_reader = Arc::clone(&writer);
+                        readers.push(s.spawn(move || {
+                            reader_loop(
+                                stream,
+                                lane,
+                                mux,
+                                next_internal,
+                                writer_for_reader,
+                                encode,
+                                want_tokens,
+                                counters,
+                            );
+                            live_conns.fetch_sub(1, Ordering::Relaxed);
+                        }));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => {
+                        // transient accept failure (e.g. EMFILE): back off
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                }
+            }
+
+            // graceful drain: EOF the readers (they lex what already
+            // arrived, then exit), join them, then let the pump finish
+            // the staged backlog
+            for half in &read_halves {
+                let _ = half
+                    .lock()
+                    .expect("writer poisoned")
+                    .shutdown(Shutdown::Read);
+            }
+            for r in readers {
+                let _ = r.join();
+            }
+            mux.drain();
+            // the pump joins at scope exit; the scheduler then drains
+            // everything admitted and the sink flushes the last ok lines
+        });
+    })?;
+
+    Ok((stats, counters.snapshot()))
+}
+
+/// One connection's reader: blocking socket reads → [`LineBuf`] →
+/// zero-copy request extraction → the connection's mux lane. Malformed
+/// lines get their 400 response right here (the scheduler never sees
+/// them); EOF or a read error ends the connection.
+#[allow(clippy::too_many_arguments)]
+fn reader_loop(
+    mut stream: TcpStream,
+    lane: usize,
+    mux: &FairMux<Staged>,
+    next_internal: &AtomicU64,
+    writer: Arc<Mutex<TcpStream>>,
+    encode: Option<Encode<'_>>,
+    want_tokens: Option<usize>,
+    counters: &Counters,
+) {
+    let mut buf = LineBuf::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        let n = match stream.read(&mut chunk) {
+            Ok(0) => return, // EOF (client done, or drain half-close)
+            Ok(n) => n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return, // reset/aborted: nothing more to read
+        };
+        buf.feed(&chunk[..n]);
+        while let Some(line) = buf.next_line() {
+            if line.iter().all(|b| b.is_ascii_whitespace()) {
+                continue;
+            }
+            let wire = match parse_request_line(line) {
+                Ok(w) => w,
+                Err(e) => {
+                    counters.bad_lines.fetch_add(1, Ordering::Relaxed);
+                    write_line(&writer, &bad_request_line(&e.to_string()));
+                    continue;
+                }
+            };
+            let orig_id = wire.id;
+            let tokens = match (wire.tokens, wire.text) {
+                (Some(t), _) => t,
+                (None, Some(text)) => {
+                    let Some(enc) = encode else {
+                        counters.bad_lines.fetch_add(1, Ordering::Relaxed);
+                        write_line(
+                            &writer,
+                            &bad_request_line("this server accepts \"tokens\" only"),
+                        );
+                        continue;
+                    };
+                    match enc(&text) {
+                        Ok(t) => t,
+                        Err(e) => {
+                            counters.bad_lines.fetch_add(1, Ordering::Relaxed);
+                            write_line(&writer, &bad_request_line(&format!("encode: {e}")));
+                            continue;
+                        }
+                    }
+                }
+                (None, None) => unreachable!("extractor guarantees one body field"),
+            };
+            if let Some(n) = want_tokens {
+                if tokens.len() != n {
+                    counters.bad_lines.fetch_add(1, Ordering::Relaxed);
+                    write_line(
+                        &writer,
+                        &bad_request_line(&format!(
+                            "expected exactly {n} tokens, got {}",
+                            tokens.len()
+                        )),
+                    );
+                    continue;
+                }
+            }
+            mux.push(
+                lane,
+                Staged {
+                    internal_id: next_internal.fetch_add(1, Ordering::Relaxed),
+                    orig_id,
+                    tokens,
+                    writer: Arc::clone(&writer),
+                },
+            );
+        }
+    }
+}
+
+/// The single pump thread: rotate fairly over lanes, submit each staged
+/// request with the high-water probe, answer sheds/drain refusals
+/// immediately. Registering the pending entry **before** `try_submit`
+/// closes the race with the sink (a response can complete the instant
+/// the request is admitted).
+fn pump_loop(
+    client: &ServerClient<'_>,
+    mux: &FairMux<Staged>,
+    pending: &PendingMap,
+    high_water: usize,
+    counters: &Counters,
+) {
+    while let Some(staged) = mux.next() {
+        pending.lock().expect("pending map poisoned").insert(
+            staged.internal_id,
+            PendingEntry {
+                orig_id: staged.orig_id,
+                writer: Arc::clone(&staged.writer),
+            },
+        );
+        let req = Request {
+            id: staged.internal_id,
+            tokens: staged.tokens,
+        };
+        match client.try_submit(req, high_water) {
+            SubmitOutcome::Accepted => {}
+            SubmitOutcome::Shed => {
+                pending
+                    .lock()
+                    .expect("pending map poisoned")
+                    .remove(&staged.internal_id);
+                counters.shed_lines.fetch_add(1, Ordering::Relaxed);
+                write_line(&staged.writer, &shed_line(staged.orig_id));
+            }
+            SubmitOutcome::Closed => {
+                // only reachable after a backend error force-closed the
+                // arrival queue: still answer the line
+                pending
+                    .lock()
+                    .expect("pending map poisoned")
+                    .remove(&staged.internal_id);
+                counters.shed_lines.fetch_add(1, Ordering::Relaxed);
+                write_line(&staged.writer, &draining_line(staged.orig_id));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fair_mux_round_robins_across_lanes() {
+        let mux: FairMux<&'static str> = FairMux::new();
+        let a = mux.register();
+        let b = mux.register();
+        mux.push(a, "a1");
+        mux.push(a, "a2");
+        mux.push(a, "a3");
+        mux.push(b, "b1");
+        // one per lane per rotation: the backlogged lane cannot starve
+        // the light one
+        assert_eq!(mux.next(), Some("a1"));
+        assert_eq!(mux.next(), Some("b1"));
+        assert_eq!(mux.next(), Some("a2"));
+        assert_eq!(mux.next(), Some("a3"));
+        mux.drain();
+        assert_eq!(mux.next(), None);
+    }
+
+    #[test]
+    fn fair_mux_drain_wakes_blocked_consumer() {
+        let mux: FairMux<u32> = FairMux::new();
+        std::thread::scope(|s| {
+            let h = s.spawn(|| mux.next());
+            std::thread::sleep(Duration::from_millis(10));
+            mux.drain();
+            assert_eq!(h.join().unwrap(), None);
+        });
+    }
+
+    #[test]
+    fn response_lines_parse_back_and_round_trip_values() {
+        let r = Response {
+            id: 5,
+            expert: 2,
+            nll: 2017.25,
+            queue_micros: 41,
+            route_micros: 12,
+            exec_micros: 97,
+        };
+        // orig id on the wire, not the internal key
+        let line = ok_line(9_000_000_000, &r);
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("id").and_then(Json::as_f64), Some(9e9));
+        assert_eq!(j.get("expert").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(j.get("nll").and_then(Json::as_f64), Some(2017.25));
+        assert_eq!(j.get("queue_micros").and_then(Json::as_f64), Some(41.0));
+
+        let nan = Response { nll: f32::NAN, ..r };
+        let j = Json::parse(&ok_line(1, &nan)).unwrap();
+        assert_eq!(j.get("nll"), Some(&Json::Null), "non-finite nll is null");
+
+        let j = Json::parse(&shed_line(7)).unwrap();
+        assert_eq!(j.get("code").and_then(Json::as_f64), Some(429.0));
+        assert_eq!(j.get("id").and_then(Json::as_f64), Some(7.0));
+
+        // detail with quotes/backslashes must come back intact
+        let j = Json::parse(&bad_request_line(r#"bad "\u" escape at byte 3"#)).unwrap();
+        assert_eq!(j.get("code").and_then(Json::as_f64), Some(400.0));
+        assert_eq!(
+            j.get("detail").and_then(Json::as_str),
+            Some(r#"bad "\u" escape at byte 3"#)
+        );
+        assert!(
+            !bad_request_line("x\ny").contains('\n'),
+            "a response line must never contain a raw newline"
+        );
+    }
+}

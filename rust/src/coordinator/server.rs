@@ -75,7 +75,7 @@ use anyhow::{anyhow, bail, Result};
 
 use super::inference::{amortized_micros, eval_nll_all, Mixture, Request, Response};
 use super::scoring::pad_prefix_row;
-use crate::runtime::parallel::{resolve_threads, Pop, WorkQueue};
+use crate::runtime::parallel::{resolve_threads, Pop, PushOutcome, WorkQueue};
 use crate::runtime::Engine;
 
 /// What the scheduler needs from the model side. The production
@@ -206,8 +206,14 @@ impl ServerConfig {
 /// [`EngineStats`](crate::runtime::EngineStats)).
 #[derive(Clone, Debug, Default)]
 pub struct SchedStats {
-    /// Requests handed to [`ServerClient::submit`] / `submit_wave`.
+    /// Requests handed to [`ServerClient::submit`] / `submit_wave` and
+    /// accepted (shed requests are counted in `shed`, not here).
     pub submitted: usize,
+    /// Requests refused by [`ServerClient::try_submit`] because the
+    /// arrival queue stood at or past the caller's high-water mark (load
+    /// shed; the wire front-end answers these with a structured 429-style
+    /// line).
+    pub shed: usize,
     /// Requests routed (equals `submitted` on a clean run).
     pub admitted: usize,
     /// Admission waves processed — at most one batched router-scoring
@@ -310,10 +316,24 @@ impl ErrSlot {
     }
 }
 
+/// Outcome of a depth-bounded [`ServerClient::try_submit`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitOutcome {
+    /// The request entered the arrival queue.
+    Accepted,
+    /// The arrival queue stood at or past the high-water mark: the
+    /// request was refused without consuming a sequence slot, and
+    /// [`SchedStats::shed`] was bumped.
+    Shed,
+    /// The server is shutting down; the request was dropped.
+    Closed,
+}
+
 /// The handle a [`run_server`] driver submits requests through.
 pub struct ServerClient<'q> {
     arrivals: &'q WorkQueue<Arrival>,
     next_seq: AtomicUsize,
+    stats: &'q Mutex<SchedStats>,
 }
 
 impl ServerClient<'_> {
@@ -337,6 +357,34 @@ impl ServerClient<'_> {
             })
             .collect();
         self.arrivals.push_all(items)
+    }
+
+    /// Submit one request **only if** the arrival queue holds fewer than
+    /// `high_water` entries — the load-shedding entry point the wire
+    /// front-end uses. A shed request never consumes a sequence slot
+    /// (the `Arrival` is constructed only on admission, so
+    /// [`run_server`]'s hole check stays exact) and is counted in
+    /// [`SchedStats::shed`]. `high_water == 0` sheds everything.
+    pub fn try_submit(&self, req: Request, high_water: usize) -> SubmitOutcome {
+        let submit_t = Instant::now();
+        match self.arrivals.push_with_unless_above(high_water, || Arrival {
+            seq: self.next_seq.fetch_add(1, Ordering::Relaxed),
+            submit_t,
+            req,
+        }) {
+            PushOutcome::Pushed => SubmitOutcome::Accepted,
+            PushOutcome::Shed => {
+                self.stats.lock().expect("stats poisoned").shed += 1;
+                SubmitOutcome::Shed
+            }
+            PushOutcome::Closed => SubmitOutcome::Closed,
+        }
+    }
+
+    /// Arrival-queue depth right now (the probe behind shedding
+    /// decisions and the serve bench's offered-load sweep).
+    pub fn queued(&self) -> usize {
+        self.arrivals.len()
     }
 
     /// Requests submitted so far.
@@ -377,33 +425,19 @@ where
     R: Send,
     F: FnOnce(&ServerClient) -> R + Send,
 {
-    let threads = resolve_threads(cfg.threads).max(1);
-    let arrivals: WorkQueue<Arrival> = WorkQueue::new();
-    let dispatch: WorkQueue<Batch> = WorkQueue::new();
     let responses: Mutex<Vec<Option<Response>>> = Mutex::new(Vec::new());
-    let stats: Mutex<SchedStats> = Mutex::new(SchedStats::default());
-    let error = ErrSlot::default();
-    let client = ServerClient {
-        arrivals: &arrivals,
-        next_seq: AtomicUsize::new(0),
-    };
-
-    let driver_out = std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| worker_loop(backend, &arrivals, &dispatch, &responses, &stats, &error));
-        }
-        s.spawn(|| scheduler_loop(backend, cfg, threads, &arrivals, &dispatch, &stats, &error));
-        // the driver runs on the calling thread; closing `arrivals` (on
-        // return *or* unwind) is what lets the scheduler drain and exit
-        let _close = CloseOnDrop(&arrivals);
-        driver(&client)
-    });
-
-    if let Some(e) = error.take() {
-        return Err(e);
-    }
-    let mut stats = stats.into_inner().expect("stats poisoned");
-    stats.submitted = client.submitted();
+    let (stats, driver_out) = run_server_streaming(
+        backend,
+        cfg,
+        |seq, resp| {
+            let mut out = responses.lock().expect("responses poisoned");
+            if out.len() <= seq {
+                out.resize_with(seq + 1, || None);
+            }
+            out[seq] = Some(resp);
+        },
+        driver,
+    )?;
     let slots = responses.into_inner().expect("responses poisoned");
     let mut out = Vec::with_capacity(stats.submitted);
     for (seq, slot) in slots.into_iter().enumerate() {
@@ -417,6 +451,63 @@ where
         );
     }
     Ok((out, stats, driver_out))
+}
+
+/// [`run_server`] with responses **streamed** instead of collected: the
+/// moment a worker finishes a batch, `sink(seq, response)` fires once per
+/// request (`seq` is the submission index [`ServerClient`] assigned) — no
+/// response waits for drain, which is what lets the wire front-end
+/// ([`super::net`]) answer each client as its request completes. The sink
+/// runs on worker threads, possibly several at once (hence `Sync`), and
+/// should be brief: it sits between a finished batch and the worker's
+/// next pull.
+///
+/// Everything else matches [`run_server`]: the driver runs on the calling
+/// thread, drain on driver return answers everything admitted, and the
+/// first backend error shuts the server down and is returned after the
+/// scope joins. Delivery is exactly-once per admitted request on a clean
+/// run; on an error run the sink may have seen any subset.
+pub fn run_server_streaming<B, R, F, S>(
+    backend: &B,
+    cfg: &ServerConfig,
+    sink: S,
+    driver: F,
+) -> Result<(SchedStats, R)>
+where
+    B: ServeBackend,
+    R: Send,
+    F: FnOnce(&ServerClient) -> R + Send,
+    S: Fn(usize, Response) + Sync,
+{
+    let threads = resolve_threads(cfg.threads).max(1);
+    let arrivals: WorkQueue<Arrival> = WorkQueue::new();
+    let dispatch: WorkQueue<Batch> = WorkQueue::new();
+    let stats: Mutex<SchedStats> = Mutex::new(SchedStats::default());
+    let error = ErrSlot::default();
+    let client = ServerClient {
+        arrivals: &arrivals,
+        next_seq: AtomicUsize::new(0),
+        stats: &stats,
+    };
+
+    let driver_out = std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| worker_loop(backend, &arrivals, &dispatch, &sink, &stats, &error));
+        }
+        s.spawn(|| scheduler_loop(backend, cfg, threads, &arrivals, &dispatch, &stats, &error));
+        // the driver runs on the calling thread; closing `arrivals` (on
+        // return *or* unwind) is what lets the scheduler drain and exit
+        let _close = CloseOnDrop(&arrivals);
+        driver(&client)
+    });
+
+    if let Some(e) = error.take() {
+        return Err(e);
+    }
+    let submitted = client.submitted();
+    let mut stats = stats.into_inner().expect("stats poisoned");
+    stats.submitted = submitted;
+    Ok((stats, driver_out))
 }
 
 /// The admission/dispatch loop (one thread). Pending per-expert batches
@@ -600,11 +691,6 @@ fn admit<B: ServeBackend>(
                 a.req.id
             );
         }
-        if pending[e].is_empty() {
-            // checked_add: an absurdly large (but non-MAX) linger degrades
-            // to "no timer" instead of panicking on Instant overflow
-            deadline[e] = linger.and_then(|l| Instant::now().checked_add(l));
-        }
         pending[e].push(Admitted {
             seq: a.seq,
             pre_route_wait: t0.saturating_duration_since(a.submit_t),
@@ -615,16 +701,24 @@ fn admit<B: ServeBackend>(
         while pending[e].len() >= batch_size {
             let items: Vec<Admitted> = pending[e].drain(..batch_size).collect();
             dispatch_batch(e, items, DispatchKind::Full, dispatch, stats);
-            // survivors arrived after the dispatched ones: restart their
-            // linger window from now
-            deadline[e] = if pending[e].is_empty() {
-                None
-            } else {
-                linger.and_then(|l| Instant::now().checked_add(l))
-            };
         }
+        // the linger window is anchored at the oldest survivor's own
+        // admission time, NOT Instant::now(): restarting from "now" after
+        // a full-batch dispatch would hand a surviving request a fresh
+        // full window on top of what it already waited (~2x max_wait_us
+        // worst case)
+        deadline[e] = linger_deadline(&pending[e], linger);
     }
     Ok(())
+}
+
+/// Linger deadline of a pending batch: the oldest member's admission time
+/// plus the linger window, or `None` for an empty batch / no timer.
+/// `checked_add`: an absurdly large (but non-MAX) linger degrades to "no
+/// timer" instead of panicking on `Instant` overflow.
+fn linger_deadline(pending: &[Admitted], linger: Option<Duration>) -> Option<Instant> {
+    let oldest = pending.first()?;
+    linger.and_then(|l| oldest.routed_t.checked_add(l))
 }
 
 /// Dispatch every pending batch whose linger deadline has passed.
@@ -669,15 +763,15 @@ fn dispatch_batch(
 }
 
 /// One worker: pull dispatched batches until the queue closes, execute
-/// them, write responses into their submission-order slots. On a backend
-/// failure the worker records the first error and closes `arrivals`, so
-/// a streaming driver fails fast (its next `submit` returns false)
-/// instead of feeding a server that will drop everything.
-fn worker_loop<B: ServeBackend>(
+/// them, hand each response to the sink with its submission index. On a
+/// backend failure the worker records the first error and closes
+/// `arrivals`, so a streaming driver fails fast (its next `submit`
+/// returns false) instead of feeding a server that will drop everything.
+fn worker_loop<B: ServeBackend, S: Fn(usize, Response) + Sync>(
     backend: &B,
     arrivals: &WorkQueue<Arrival>,
     dispatch: &WorkQueue<Batch>,
-    responses: &Mutex<Vec<Option<Response>>>,
+    sink: &S,
     stats: &Mutex<SchedStats>,
     error: &ErrSlot,
 ) {
@@ -717,26 +811,24 @@ fn worker_loop<B: ServeBackend>(
             }
             Ok(nll) => {
                 let exec_us = amortized_micros(t0.elapsed(), rows.len());
-                let mut out = responses.lock().expect("responses poisoned");
                 for (item, &v) in batch.items.iter().zip(&nll) {
-                    if out.len() <= item.seq {
-                        out.resize_with(item.seq + 1, || None);
-                    }
                     // queue time = arrival-queue wait + pending/dispatch
                     // wait; the routing span in between belongs to
                     // route_micros, so total_micros never double-counts
                     let queued = item.pre_route_wait
                         + t0.saturating_duration_since(item.routed_t);
-                    out[item.seq] = Some(Response {
-                        id: item.req.id,
-                        expert: batch.expert,
-                        nll: v,
-                        queue_micros: queued.as_micros(),
-                        route_micros: item.route_us,
-                        exec_micros: exec_us,
-                    });
+                    sink(
+                        item.seq,
+                        Response {
+                            id: item.req.id,
+                            expert: batch.expert,
+                            nll: v,
+                            queue_micros: queued.as_micros(),
+                            route_micros: item.route_us,
+                            exec_micros: exec_us,
+                        },
+                    );
                 }
-                drop(out);
                 stats.lock().expect("stats poisoned").completed += batch.items.len();
             }
         }
@@ -814,6 +906,95 @@ mod tests {
         assert_eq!(stats.batches_dispatched, 2);
         assert_eq!(stats.drain_batches, 2);
         assert_eq!(stats.full_batches + stats.linger_batches, 0);
+    }
+
+    #[test]
+    fn linger_deadline_is_anchored_at_admission_not_at_dispatch() {
+        // Regression for the survivor-linger bug: after a full-batch
+        // dispatch the deadline used to restart from Instant::now(),
+        // handing survivors a fresh window on top of what they had
+        // already waited (~2x max_wait_us). The deadline must be the
+        // oldest survivor's own admission time plus the window.
+        let linger = Some(Duration::from_millis(50));
+        let routed_t = Instant::now()
+            .checked_sub(Duration::from_millis(40))
+            .unwrap_or_else(Instant::now);
+        let survivor = Admitted {
+            seq: 3,
+            pre_route_wait: Duration::ZERO,
+            routed_t,
+            route_us: 0,
+            req: req(1, vec![1, 2]),
+        };
+        let d = linger_deadline(std::slice::from_ref(&survivor), linger)
+            .expect("non-empty batch with a timer has a deadline");
+        assert_eq!(d, routed_t + Duration::from_millis(50));
+        // the pre-fix anchor (now + linger) would land ~40ms later
+        assert!(
+            d < Instant::now() + Duration::from_millis(50),
+            "deadline restarted from now instead of the survivor's admission"
+        );
+        // empty batch: no deadline
+        assert!(linger_deadline(&[], linger).is_none());
+        // absurd linger degrades to "no timer" instead of overflowing
+        let huge = Some(Duration::from_secs(u64::MAX));
+        assert!(linger_deadline(std::slice::from_ref(&survivor), huge).is_none());
+    }
+
+    #[test]
+    fn try_submit_sheds_at_high_water_without_burning_sequence_slots() {
+        let backend = StubBackend { n: 2 };
+        let cfg = ServerConfig::continuous(2, 1000, 1);
+        let (out, stats, accepted) = run_server(&backend, &cfg, |c| {
+            // high_water 0 sheds everything
+            assert_eq!(c.try_submit(req(9, vec![1]), 0), SubmitOutcome::Shed);
+            let mut accepted = 0;
+            for i in 0..5u64 {
+                if c.try_submit(req(i, vec![i as u32]), 1024) == SubmitOutcome::Accepted {
+                    accepted += 1;
+                }
+            }
+            accepted
+        })
+        .unwrap();
+        assert_eq!(accepted, 5);
+        assert_eq!(out.len(), 5, "shed request must not leave a response hole");
+        assert_eq!(stats.shed, 1);
+        assert_eq!(
+            stats.submitted, 5,
+            "a shed request must not consume a sequence slot"
+        );
+        assert_eq!(stats.completed, 5);
+    }
+
+    #[test]
+    fn streaming_sink_sees_every_response_exactly_once() {
+        let backend = StubBackend { n: 3 };
+        let cfg = ServerConfig::continuous(2, 500, 2);
+        let seen: Mutex<Vec<(usize, u64, usize, f32)>> = Mutex::new(Vec::new());
+        let (stats, ()) = run_server_streaming(
+            &backend,
+            &cfg,
+            |seq, r| {
+                seen.lock().unwrap().push((seq, r.id, r.expert, r.nll));
+            },
+            |c| {
+                for i in 0..9u64 {
+                    c.submit(req(200 + i, vec![i as u32, 7]));
+                }
+            },
+        )
+        .unwrap();
+        let mut seen = seen.into_inner().unwrap();
+        seen.sort_by_key(|&(seq, ..)| seq);
+        assert_eq!(seen.len(), 9);
+        for (i, &(seq, id, expert, nll)) in seen.iter().enumerate() {
+            assert_eq!(seq, i, "every submission index answered exactly once");
+            assert_eq!(id, 200 + i as u64);
+            assert_eq!(expert, i % 3);
+            assert_eq!(nll, (i % 3) as f32 * 1000.0 + (i as u32 + 7) as f32);
+        }
+        assert_eq!(stats.completed, 9);
     }
 
     #[test]

@@ -17,7 +17,8 @@ use smalltalk::baselines::train_dense;
 use smalltalk::config::ExperimentConfig;
 use smalltalk::coordinator::{
     comm, dense_perplexity, response_triples, run_pipeline, run_server, run_trainer,
-    serve_threaded, CommLedger, MixtureBackend, Request, ServerConfig, TrainMode, TrainerConfig,
+    serve_net, serve_threaded, CommLedger, Mixture, MixtureBackend, NetConfig, PipelineConfig,
+    Request, ServerConfig, TrainMode, TrainerConfig,
 };
 use smalltalk::data::corpus::Corpus;
 use smalltalk::data::SequenceGen;
@@ -26,7 +27,7 @@ use smalltalk::eval::{build_tasks, mixture_accuracy_threaded, single_model_accur
 use smalltalk::flops;
 use smalltalk::metrics::{percentile, sparkline, RunLog};
 use smalltalk::model::{load_checkpoint, save_checkpoint};
-use smalltalk::runtime::{resolve_threads, Engine};
+use smalltalk::runtime::{resolve_threads, Engine, VariantMeta};
 use smalltalk::tokenizer::{Bpe, BpeTrainer};
 use smalltalk::util::cli::Args;
 use smalltalk::util::json::Json;
@@ -37,7 +38,8 @@ const VALUE_OPTS: &[&str] = &[
     "prefix", "eval-sequences", "tasks-per-domain", "seed", "requests", "out",
     "ckpt-dir", "steps", "threads", "batch-size", "max-wait-us", "stream",
     "delay-us", "checkpoint-dir", "checkpoint-every", "snapshot-every",
-    "chaos-spec", "leave-after", "join-after",
+    "chaos-spec", "leave-after", "join-after", "listen", "max-conns",
+    "high-water",
 ];
 
 const EVAL_SEED: u64 = 0xE7A1;
@@ -70,6 +72,11 @@ fn usage() -> &'static str {
                      --stream f.jsonl (one request per line: {\"id\",\"tokens\",[\"delay_us\"]};\n\
                                       tokens must be exactly seq_len + 1 long)\n\
                      --delay-us N (synthetic inter-arrival gap for generated requests)\n\
+                     --listen a:p (serve over TCP instead: JSONL request/response\n\
+                                   lines, protocol in src/coordinator/net.rs;\n\
+                                   \":0\" picks a free port; stdin EOF drains)\n\
+                     --max-conns N (--listen: connection limit; 0 = unlimited)\n\
+                     --high-water N (--listen: shed arrivals past this queue depth)\n\
      see configs/ for examples and DESIGN.md for the experiment index"
 }
 
@@ -480,6 +487,12 @@ fn cmd_serve(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
     let result = run_pipeline(&engine, &bpe, &p)?;
     let meta = engine.variant(&p.expert_variant)?.clone();
 
+    // --listen: expose the mixture over TCP/JSONL (protocol documented in
+    // src/coordinator/net.rs) instead of the local request-stream demo
+    if let Some(listen) = args.get("listen") {
+        return serve_over_socket(cfg, listen, &engine, &bpe, &result.mixture, &p, &meta);
+    }
+
     // request stream: --stream file.jsonl, else generated (staggered by
     // --delay-us between arrivals)
     let arrivals: Vec<(Request, u64)> = match args.get("stream") {
@@ -603,6 +616,79 @@ fn cmd_serve(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
         by_expert[r.expert] += 1;
     }
     println!("requests per expert: {by_expert:?}");
+    Ok(())
+}
+
+/// `serve --listen`: run the TCP/JSONL front-end over the trained
+/// mixture until stdin reaches EOF (pipe `</dev/null` for scripted runs
+/// plus a SIGTERM, or hit ctrl-d interactively), then drain gracefully
+/// and print the scheduler + wire counters.
+fn serve_over_socket(
+    cfg: &ExperimentConfig,
+    listen: &str,
+    engine: &Engine,
+    bpe: &Bpe,
+    mixture: &Mixture,
+    p: &PipelineConfig,
+    meta: &VariantMeta,
+) -> Result<()> {
+    let threads = resolve_threads(p.threads);
+    let batch_size = if cfg.serve_batch_size == 0 {
+        meta.eval_batch
+    } else {
+        cfg.serve_batch_size
+    };
+    let want_len = meta.seq_len + 1;
+    let n_experts = mixture.n_experts();
+    let backend = MixtureBackend {
+        engine,
+        mixture,
+        prefix_len: p.prefix_len,
+    };
+    // `{"id","text"}` requests go through the same BPE the mixture was
+    // trained with; the front-end still enforces the engine's fixed row
+    // shape, so text that encodes to != seq_len + 1 tokens gets a 400
+    // naming both counts.
+    let encode = |text: &str| -> Result<Vec<u32>> { Ok(bpe.encode(text)) };
+    let ncfg = NetConfig {
+        listen: listen.to_string(),
+        max_conns: cfg.net_max_conns,
+        high_water: cfg.net_high_water,
+        want_tokens: Some(want_len),
+        server: ServerConfig::continuous(batch_size, cfg.serve_max_wait_us, threads),
+    };
+    let (stats, report) = serve_net(&backend, &ncfg, Some(&encode), |h| {
+        println!(
+            "serving {n_experts} experts on {} ({want_len} tokens per request; \
+             batch-size {batch_size}, max-wait {} µs, high-water {}; stdin EOF drains)",
+            h.addr(),
+            cfg.serve_max_wait_us,
+            cfg.net_high_water,
+        );
+        // detached: blocks on stdin until EOF, then triggers the drain
+        std::thread::spawn(move || {
+            let mut sink = Vec::new();
+            let _ = std::io::Read::read_to_end(&mut std::io::stdin(), &mut sink);
+            h.shutdown();
+        });
+    })?;
+    println!(
+        "drained: {} connections served ({} refused), {} ok / {} shed / {} bad lines",
+        report.connections, report.conns_refused, report.ok_lines, report.shed_lines,
+        report.bad_lines,
+    );
+    println!(
+        "  scheduler:  {} admission waves, {} batches dispatched ({} full, {} linger, {} drain), \
+         {} shed, {} route-memo hits, mean queue depth {:.2}",
+        stats.admission_waves,
+        stats.batches_dispatched,
+        stats.full_batches,
+        stats.linger_batches,
+        stats.drain_batches,
+        stats.shed,
+        stats.route_cache_hits,
+        stats.mean_queue_depth(),
+    );
     Ok(())
 }
 

@@ -24,5 +24,7 @@ pub mod state;
 
 pub use artifacts::{locate_artifacts, Manifest, VariantMeta};
 pub use engine::{Arg, DeviceBuffer, Engine, EngineStats};
-pub use parallel::{default_threads, resolve_threads, run_fallible, run_tasks, Pop, WorkQueue};
+pub use parallel::{
+    default_threads, resolve_threads, run_fallible, run_tasks, Pop, PushOutcome, WorkQueue,
+};
 pub use state::{stacked_params_buffer, TrainState};

@@ -166,6 +166,19 @@ where
 // Long-lived worker-pool mode: a closeable blocking FIFO
 // ----------------------------------------------------------------------
 
+/// Outcome of a depth-bounded push onto a [`WorkQueue`] (see
+/// [`push_with_unless_above`](WorkQueue::push_with_unless_above)).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PushOutcome {
+    /// The item was enqueued.
+    Pushed,
+    /// The queue was at or past the high-water mark; nothing was built
+    /// or enqueued (load shed).
+    Shed,
+    /// The queue is closed; nothing was built or enqueued.
+    Closed,
+}
+
 /// Outcome of a bounded wait on a [`WorkQueue`].
 #[derive(Debug)]
 pub enum Pop<T> {
@@ -243,6 +256,41 @@ impl<T> WorkQueue<T> {
         // wake everyone: a batch may satisfy several blocked workers
         self.cv.notify_all();
         true
+    }
+
+    /// Depth-bounded push for load shedding: refuse (without building the
+    /// item) when the queue already holds `high_water` or more entries.
+    /// `make` runs under the queue lock **only when the item will actually
+    /// be enqueued** — so side effects in the constructor (sequence-number
+    /// allocation, timestamps) happen iff the item is admitted, and the
+    /// depth check + construction + enqueue are one atomic step against
+    /// concurrent producers. Keep `make` cheap: it runs under the mutex.
+    ///
+    /// A closed queue reports [`PushOutcome::Closed`] (checked first — a
+    /// draining queue is not "overloaded"); `high_water == 0` sheds every
+    /// push.
+    pub fn push_with_unless_above(
+        &self,
+        high_water: usize,
+        make: impl FnOnce() -> T,
+    ) -> PushOutcome {
+        let mut st = self.lock();
+        if st.closed {
+            return PushOutcome::Closed;
+        }
+        if st.items.len() >= high_water {
+            return PushOutcome::Shed;
+        }
+        st.items.push_back(make());
+        drop(st);
+        self.cv.notify_all();
+        PushOutcome::Pushed
+    }
+
+    /// [`push_with_unless_above`](WorkQueue::push_with_unless_above) for a
+    /// pre-built item (dropped on shed/closed).
+    pub fn push_unless_above(&self, item: T, high_water: usize) -> PushOutcome {
+        self.push_with_unless_above(high_water, || item)
     }
 
     /// Non-blocking pop.
@@ -501,6 +549,43 @@ mod tests {
         assert_eq!(q.drain_up_to(usize::MAX), vec![1, 2]);
         assert!(q.push(9));
         assert_eq!(q.pop(), Some(9));
+    }
+
+    #[test]
+    fn push_unless_above_sheds_at_the_high_water_mark() {
+        let q: WorkQueue<u32> = WorkQueue::new();
+        assert_eq!(q.push_unless_above(1, 2), PushOutcome::Pushed);
+        assert_eq!(q.push_unless_above(2, 2), PushOutcome::Pushed);
+        // len == high_water: shed, and the constructor must not run
+        let mut built = false;
+        assert_eq!(
+            q.push_with_unless_above(2, || {
+                built = true;
+                3
+            }),
+            PushOutcome::Shed
+        );
+        assert!(!built, "constructor ran for a shed item");
+        assert_eq!(q.len(), 2);
+        // draining below the mark re-admits
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.push_unless_above(3, 2), PushOutcome::Pushed);
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    fn push_unless_above_closed_beats_shed_and_zero_sheds_all() {
+        let q: WorkQueue<u32> = WorkQueue::new();
+        assert_eq!(
+            q.push_unless_above(1, 0),
+            PushOutcome::Shed,
+            "high_water 0 sheds every push"
+        );
+        q.close();
+        // closed wins even when the queue would also shed
+        assert_eq!(q.push_unless_above(1, 0), PushOutcome::Closed);
+        assert_eq!(q.push_unless_above(1, 100), PushOutcome::Closed);
     }
 
     #[test]

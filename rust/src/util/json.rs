@@ -31,6 +31,79 @@ impl std::fmt::Display for ParseError {
 
 impl std::error::Error for ParseError {}
 
+/// Parser/lexer recursion bound: adversarially nested input (`[[[[...`)
+/// is a structured error instead of a blown stack. Shared by the tree
+/// parser below and the zero-copy wire lexer (`super::lex`).
+pub(crate) const MAX_DEPTH: usize = 128;
+
+/// Decode a JSON `\uXXXX` escape whose `u` sits at `b[pos]`, combining a
+/// following `\uXXXX` low surrogate when the first unit is a high
+/// surrogate. Returns the decoded char and the number of bytes consumed
+/// *after* the `u` (4 for a BMP escape, 10 for a surrogate pair).
+/// Unpaired surrogates are structured errors, never U+FFFD. Shared by
+/// the tree parser and the zero-copy wire lexer (`super::lex`).
+pub(crate) fn decode_unicode_escape(b: &[u8], pos: usize) -> Result<(char, usize), ParseError> {
+    let unit = hex4(b, pos + 1)?;
+    if (0xDC00..=0xDFFF).contains(&unit) {
+        return Err(ParseError {
+            pos,
+            msg: "unpaired low surrogate in \\u escape".to_string(),
+        });
+    }
+    if (0xD800..=0xDBFF).contains(&unit) {
+        // a high surrogate is only valid immediately followed by a
+        // \uDC00..=\uDFFF low surrogate; combine the pair
+        if b.get(pos + 5) != Some(&b'\\') || b.get(pos + 6) != Some(&b'u') {
+            return Err(ParseError {
+                pos,
+                msg: "unpaired high surrogate in \\u escape".to_string(),
+            });
+        }
+        let lo = hex4(b, pos + 7)?;
+        if !(0xDC00..=0xDFFF).contains(&lo) {
+            return Err(ParseError {
+                pos,
+                msg: "unpaired high surrogate in \\u escape".to_string(),
+            });
+        }
+        let cp = 0x10000 + ((unit - 0xD800) << 10) + (lo - 0xDC00);
+        let c = char::from_u32(cp).expect("surrogate pair combines to a valid scalar value");
+        return Ok((c, 10));
+    }
+    let c = char::from_u32(unit).expect("non-surrogate BMP code point is a valid char");
+    Ok((c, 4))
+}
+
+/// Read exactly 4 ASCII hex digits at `b[at..at + 4]`. A short buffer, a
+/// sign, or a multibyte UTF-8 char inside the window is a structured
+/// error — `from_str_radix` would accept `"+fff"`, and slicing the raw
+/// bytes through `str::from_utf8().unwrap()` panicked when a multibyte
+/// char straddled the window.
+fn hex4(b: &[u8], at: usize) -> Result<u32, ParseError> {
+    if at + 4 > b.len() {
+        return Err(ParseError {
+            pos: at,
+            msg: "truncated \\u escape".to_string(),
+        });
+    }
+    let mut v = 0u32;
+    for &d in &b[at..at + 4] {
+        let digit = match d {
+            b'0'..=b'9' => d - b'0',
+            b'a'..=b'f' => d - b'a' + 10,
+            b'A'..=b'F' => d - b'A' + 10,
+            _ => {
+                return Err(ParseError {
+                    pos: at,
+                    msg: "bad \\u escape (want 4 hex digits)".to_string(),
+                })
+            }
+        };
+        v = (v << 4) | u32::from(digit);
+    }
+    Ok(v)
+}
+
 impl Json {
     // ---------------- accessors ----------------
 
@@ -127,6 +200,7 @@ impl Json {
         let mut p = Parser {
             b: text.as_bytes(),
             pos: 0,
+            depth: 0,
         };
         p.skip_ws();
         let v = p.value()?;
@@ -231,6 +305,7 @@ fn write_escaped(out: &mut String, s: &str) {
 struct Parser<'a> {
     b: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -319,15 +394,9 @@ impl<'a> Parser<'a> {
                         Some(b'b') => s.push('\u{8}'),
                         Some(b'f') => s.push('\u{c}'),
                         Some(b'u') => {
-                            if self.pos + 4 >= self.b.len() {
-                                return Err(self.err("bad \\u escape"));
-                            }
-                            let hex =
-                                std::str::from_utf8(&self.b[self.pos + 1..self.pos + 5]).unwrap();
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
-                            self.pos += 4;
+                            let (c, used) = decode_unicode_escape(self.b, self.pos)?;
+                            s.push(c);
+                            self.pos += used;
                         }
                         _ => return Err(self.err("bad escape")),
                     }
@@ -347,10 +416,15 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Json, ParseError> {
         self.expect(b'[')?;
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
         let mut out = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(out));
         }
         loop {
@@ -361,6 +435,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b']') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(out));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
@@ -370,10 +445,15 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json, ParseError> {
         self.expect(b'{')?;
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
         let mut out = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(out));
         }
         loop {
@@ -389,6 +469,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b'}') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(out));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
@@ -445,6 +526,63 @@ mod tests {
     fn unicode_escapes() {
         let j = Json::parse(r#""éA""#).unwrap();
         assert_eq!(j.as_str(), Some("éA"));
+    }
+
+    #[test]
+    fn lone_bmp_escapes_unchanged() {
+        let j = Json::parse(r#""\u0041\u00e9\u20ac""#).unwrap();
+        assert_eq!(j.as_str(), Some("Aé€"));
+    }
+
+    #[test]
+    fn surrogate_pairs_combine() {
+        // "😀" used to decode as two U+FFFD replacement chars
+        assert_eq!(
+            Json::parse(r#""\uD83D\uDE00""#).unwrap(),
+            Json::Str("😀".into())
+        );
+        // pair embedded between literals and a BMP escape
+        assert_eq!(
+            Json::parse(r#""a\u00e9\uD834\uDD1Eb""#).unwrap(),
+            Json::Str("aé𝄞b".into())
+        );
+    }
+
+    #[test]
+    fn unpaired_surrogates_are_structured_errors() {
+        for src in [
+            r#""\uD83D""#,         // high at end of string
+            r#""\uD83Dx""#,        // high followed by a literal
+            r#""\uD83D\n""#,       // high followed by a non-\u escape
+            r#""\uD83D\uD83D""#,   // high followed by another high
+            r#""\uDE00""#,         // lone low
+        ] {
+            let e = Json::parse(src).unwrap_err();
+            assert!(e.msg.contains("surrogate"), "{src}: {e}");
+        }
+    }
+
+    #[test]
+    fn malformed_u_escapes_error_instead_of_panicking() {
+        // multibyte char straddling the 4-byte hex window: the old
+        // str::from_utf8(..).unwrap() panicked here
+        assert!(Json::parse("\"\\u000é\"").is_err());
+        // multibyte char fully inside the window
+        assert!(Json::parse("\"\\u00é\"").is_err());
+        // from_str_radix accepted a sign; require 4 ASCII hex digits
+        assert!(Json::parse(r#""\u+fff""#).is_err());
+        assert!(Json::parse(r#""\u12""#).is_err());
+        assert!(Json::parse(r#""\u12g4""#).is_err());
+        assert!(Json::parse(r#""\u""#).is_err());
+    }
+
+    #[test]
+    fn deep_nesting_is_a_structured_error_not_a_stack_overflow() {
+        let deep = "[".repeat(100_000);
+        let e = Json::parse(&deep).unwrap_err();
+        assert!(e.msg.contains("nesting"), "{e}");
+        let ok = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        assert!(Json::parse(&ok).is_ok());
     }
 
     #[test]

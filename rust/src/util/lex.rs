@@ -1,0 +1,571 @@
+//! Zero-copy incremental JSON lexing for the wire path
+//! ([`crate::coordinator::net`]).
+//!
+//! The TCP front-end parses untrusted bytes at line rate; building a
+//! [`Json`](super::json::Json) tree per request would allocate a node
+//! per token and copy every string. This module lexes straight off the
+//! connection's read buffer instead — a slice lexer with escape-aware
+//! borrowed strings — and exposes a small typed extractor for the one
+//! request shape the server understands: lazy field scans, no
+//! intermediate tree.
+//!
+//! Three layers:
+//!
+//! * [`LineBuf`] — an incremental JSONL splitter: `feed` socket reads as
+//!   they arrive, pop complete lines. A line split across any number of
+//!   reads lexes identically to one contiguous write.
+//! * [`Lexer`] — a pull lexer over one line: structural tokens, raw
+//!   number slices (validated, parsed lazily by the consumer at the
+//!   width it needs), and strings that borrow the input whenever they
+//!   contain no escapes.
+//! * [`parse_request_line`] — the typed extractor:
+//!   `{"id": N, "tokens": [..]}` / `{"id": N, "text": "..."}` →
+//!   [`WireRequest`] in one pass. Unknown fields are skipped without
+//!   materialization; nesting is depth-bounded like the tree parser.
+//!
+//! The string/`\u` machinery (surrogate pairs, strict 4-hex-digit
+//! validation) is shared with [`super::json`], so the two parsers accept
+//! the same documents — asserted by the adversarial corpus in
+//! `rust/tests/net.rs`.
+
+use std::borrow::Cow;
+
+use super::json::{decode_unicode_escape, ParseError, MAX_DEPTH};
+
+/// Incremental JSONL splitter over socket reads: [`feed`](LineBuf::feed)
+/// appends raw bytes, [`next_line`](LineBuf::next_line) pops the next
+/// complete `\n`-terminated line (with a trailing `\r` trimmed). Bytes
+/// after the last newline stay buffered until more input arrives, so a
+/// request split across read boundaries parses identically to one
+/// delivered whole.
+#[derive(Default)]
+pub struct LineBuf {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl LineBuf {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append one socket read. Consumed lines are compacted away first,
+    /// so between feeds the buffer holds at most one partial line.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        if self.pos > 0 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Pop the next complete line, or `None` until one arrives. The
+    /// returned slice borrows the read buffer — lex it before the next
+    /// [`feed`](LineBuf::feed).
+    pub fn next_line(&mut self) -> Option<&[u8]> {
+        let rest = &self.buf[self.pos..];
+        let nl = rest.iter().position(|&b| b == b'\n')?;
+        let mut line = &self.buf[self.pos..self.pos + nl];
+        self.pos += nl + 1;
+        if line.last() == Some(&b'\r') {
+            line = &line[..line.len() - 1];
+        }
+        Some(line)
+    }
+
+    /// Bytes of a partial trailing line still buffered.
+    pub fn pending(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+/// One lexical token. `Str` borrows the input when the string contains
+/// no escapes; `Num` always borrows the raw (pre-validated) text so the
+/// consumer can parse it at exactly the width it needs — `u64` ids keep
+/// full precision instead of routing through `f64`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Token<'a> {
+    ObjOpen,
+    ObjClose,
+    ArrOpen,
+    ArrClose,
+    Colon,
+    Comma,
+    Str(Cow<'a, str>),
+    Num(&'a str),
+    Bool(bool),
+    Null,
+}
+
+/// Pull lexer over one slice (a JSONL line). Grammar-agnostic: it hands
+/// out tokens; shape checks belong to the consumer (e.g.
+/// [`parse_request_line`]).
+pub struct Lexer<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Lexer<'a> {
+    pub fn new(b: &'a [u8]) -> Self {
+        Lexer { b, pos: 0 }
+    }
+
+    /// Current byte offset (for error positions).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    fn err(&self, msg: &str) -> ParseError {
+        ParseError {
+            pos: self.pos,
+            msg: msg.to_string(),
+        }
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(
+            self.b.get(self.pos),
+            Some(b' ' | b'\t' | b'\n' | b'\r')
+        ) {
+            self.pos += 1;
+        }
+    }
+
+    /// Next token, or `Ok(None)` at end of input.
+    pub fn next_token(&mut self) -> Result<Option<Token<'a>>, ParseError> {
+        self.skip_ws();
+        let Some(c) = self.b.get(self.pos).copied() else {
+            return Ok(None);
+        };
+        match c {
+            b'{' | b'}' | b'[' | b']' | b':' | b',' => {
+                self.pos += 1;
+                Ok(Some(match c {
+                    b'{' => Token::ObjOpen,
+                    b'}' => Token::ObjClose,
+                    b'[' => Token::ArrOpen,
+                    b']' => Token::ArrClose,
+                    b':' => Token::Colon,
+                    _ => Token::Comma,
+                }))
+            }
+            b'"' => Ok(Some(Token::Str(self.string()?))),
+            b't' => self.lit(b"true", Token::Bool(true)),
+            b'f' => self.lit(b"false", Token::Bool(false)),
+            b'n' => self.lit(b"null", Token::Null),
+            b'-' | b'0'..=b'9' => Ok(Some(Token::Num(self.number()?))),
+            _ => Err(self.err("unexpected character")),
+        }
+    }
+
+    fn lit(
+        &mut self,
+        word: &'static [u8],
+        tok: Token<'a>,
+    ) -> Result<Option<Token<'a>>, ParseError> {
+        if self.b[self.pos..].starts_with(word) {
+            self.pos += word.len();
+            Ok(Some(tok))
+        } else {
+            Err(self.err("bad literal"))
+        }
+    }
+
+    /// Lex a number, returning its raw text. Validated here (so the
+    /// slice is trustworthy downstream) with the same charset as the
+    /// tree parser.
+    fn number(&mut self) -> Result<&'a str, ParseError> {
+        let start = self.pos;
+        if self.b.get(self.pos) == Some(&b'-') {
+            self.pos += 1;
+        }
+        while matches!(
+            self.b.get(self.pos),
+            Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-')
+        ) {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.pos])
+            .expect("number charset is pure ASCII");
+        if s.parse::<f64>().is_err() {
+            self.pos = start;
+            return Err(self.err("bad number"));
+        }
+        Ok(s)
+    }
+
+    /// Lex one string. Escape-free content is borrowed straight from the
+    /// input; escapes fall back to an owned decode sharing the hardened
+    /// `\u` machinery (surrogate pairs and all) with the tree parser.
+    fn string(&mut self) -> Result<Cow<'a, str>, ParseError> {
+        debug_assert_eq!(self.b.get(self.pos), Some(&b'"'));
+        self.pos += 1;
+        let start = self.pos;
+        // fast scan: locate the closing quote, noting whether any escape
+        // occurs (an escaped quote is not a closer)
+        let mut i = start;
+        let mut has_escape = false;
+        loop {
+            match self.b.get(i) {
+                None => {
+                    self.pos = i;
+                    return Err(self.err("unterminated string"));
+                }
+                Some(b'"') => break,
+                Some(b'\\') => {
+                    has_escape = true;
+                    i += 2;
+                }
+                Some(_) => i += 1,
+            }
+        }
+        if !has_escape {
+            let s = std::str::from_utf8(&self.b[start..i]).map_err(|_| ParseError {
+                pos: start,
+                msg: "invalid utf-8 in string".to_string(),
+            })?;
+            self.pos = i + 1;
+            return Ok(Cow::Borrowed(s));
+        }
+        // slow path: decode escapes into an owned buffer
+        let mut out = String::with_capacity(i.saturating_sub(start));
+        let mut p = start;
+        loop {
+            match self.b.get(p) {
+                None => {
+                    self.pos = p;
+                    return Err(self.err("unterminated string"));
+                }
+                Some(b'"') => {
+                    self.pos = p + 1;
+                    return Ok(Cow::Owned(out));
+                }
+                Some(b'\\') => {
+                    p += 1;
+                    match self.b.get(p) {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            let (c, used) = decode_unicode_escape(self.b, p)?;
+                            out.push(c);
+                            p += used;
+                        }
+                        _ => {
+                            self.pos = p;
+                            return Err(self.err("bad escape"));
+                        }
+                    }
+                    p += 1;
+                }
+                Some(_) => {
+                    // decode one UTF-8 char without validating past it: a
+                    // char is at most 4 bytes, and a valid prefix of the
+                    // window is enough
+                    let end = (p + 4).min(self.b.len());
+                    let chunk = &self.b[p..end];
+                    let valid = match std::str::from_utf8(chunk) {
+                        Ok(s) => s,
+                        Err(e) if e.valid_up_to() > 0 => {
+                            std::str::from_utf8(&chunk[..e.valid_up_to()])
+                                .expect("prefix reported valid")
+                        }
+                        Err(_) => {
+                            self.pos = p;
+                            return Err(self.err("invalid utf-8 in string"));
+                        }
+                    };
+                    let c = valid.chars().next().expect("non-empty valid prefix");
+                    out.push(c);
+                    p += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    /// Skip one complete JSON value of any shape without materializing
+    /// it (unknown request fields). Balance-checked and depth-bounded
+    /// like the tree parser, so adversarially nested input is a
+    /// structured error rather than a blown stack; interior punctuation
+    /// is not shape-validated — this finds the matching close.
+    pub fn skip_value(&mut self) -> Result<(), ParseError> {
+        let mut depth = 0usize;
+        loop {
+            let t = self
+                .next_token()?
+                .ok_or_else(|| self.err("unexpected end of input"))?;
+            match t {
+                Token::ObjOpen | Token::ArrOpen => {
+                    depth += 1;
+                    if depth > MAX_DEPTH {
+                        return Err(self.err("nesting too deep"));
+                    }
+                }
+                Token::ObjClose | Token::ArrClose => {
+                    if depth == 0 {
+                        return Err(self.err("unbalanced close"));
+                    }
+                    depth -= 1;
+                }
+                Token::Colon | Token::Comma if depth == 0 => {
+                    return Err(self.err("expected a value"));
+                }
+                _ => {}
+            }
+            if depth == 0 {
+                return Ok(());
+            }
+        }
+    }
+}
+
+/// One parsed wire request line — exactly one of `tokens` / `text` is
+/// set (enforced by [`parse_request_line`]). `text` borrows the line
+/// buffer when the string needs no unescaping.
+#[derive(Debug)]
+pub struct WireRequest<'a> {
+    pub id: u64,
+    pub tokens: Option<Vec<u32>>,
+    pub text: Option<Cow<'a, str>>,
+}
+
+/// Typed extractor for a request line: `{"id": N, "tokens": [..]}` or
+/// `{"id": N, "text": "..."}` in one lexing pass, no tree. `id` and
+/// every token must be plain non-negative decimal integers (`u64` /
+/// `u32` — full precision, unlike the `f64` tree path). Unknown fields
+/// are skipped; duplicate or conflicting body fields, a missing `id`,
+/// and trailing bytes after the object are structured errors.
+pub fn parse_request_line(line: &[u8]) -> Result<WireRequest<'_>, ParseError> {
+    let mut lex = Lexer::new(line);
+    let fail = |lex: &Lexer, msg: &str| ParseError {
+        pos: lex.pos(),
+        msg: msg.to_string(),
+    };
+    match lex.next_token()? {
+        Some(Token::ObjOpen) => {}
+        _ => return Err(fail(&lex, "request line must be a JSON object")),
+    }
+    let mut id: Option<u64> = None;
+    let mut tokens: Option<Vec<u32>> = None;
+    let mut text: Option<Cow<'_, str>> = None;
+    let mut first = true;
+    loop {
+        let key = match lex.next_token()? {
+            Some(Token::ObjClose) if first => break,
+            Some(Token::Str(k)) => k,
+            _ => return Err(fail(&lex, "expected a field name")),
+        };
+        first = false;
+        match lex.next_token()? {
+            Some(Token::Colon) => {}
+            _ => return Err(fail(&lex, "expected ':'")),
+        }
+        match key.as_ref() {
+            "id" => match lex.next_token()? {
+                Some(Token::Num(raw)) => {
+                    let v = raw.parse::<u64>().map_err(|_| {
+                        fail(&lex, "\"id\" must be a non-negative integer")
+                    })?;
+                    id = Some(v);
+                }
+                _ => return Err(fail(&lex, "\"id\" must be a non-negative integer")),
+            },
+            "tokens" => {
+                if tokens.is_some() {
+                    return Err(fail(&lex, "duplicate \"tokens\" field"));
+                }
+                tokens = Some(parse_u32_array(&mut lex)?);
+            }
+            "text" => match lex.next_token()? {
+                Some(Token::Str(s)) => {
+                    if text.is_some() {
+                        return Err(fail(&lex, "duplicate \"text\" field"));
+                    }
+                    text = Some(s);
+                }
+                _ => return Err(fail(&lex, "\"text\" must be a string")),
+            },
+            _ => lex.skip_value()?,
+        }
+        match lex.next_token()? {
+            Some(Token::Comma) => {}
+            Some(Token::ObjClose) => break,
+            _ => return Err(fail(&lex, "expected ',' or '}'")),
+        }
+    }
+    if lex.next_token()?.is_some() {
+        return Err(fail(&lex, "trailing characters after request object"));
+    }
+    let id = id.ok_or_else(|| fail(&lex, "missing \"id\""))?;
+    match (&tokens, &text) {
+        (Some(_), Some(_)) => Err(fail(&lex, "request has both \"tokens\" and \"text\"")),
+        (None, None) => Err(fail(&lex, "request needs \"tokens\" or \"text\"")),
+        _ => Ok(WireRequest { id, tokens, text }),
+    }
+}
+
+fn parse_u32_array(lex: &mut Lexer) -> Result<Vec<u32>, ParseError> {
+    let fail = |lex: &Lexer<'_>, msg: &str| ParseError {
+        pos: lex.pos(),
+        msg: msg.to_string(),
+    };
+    match lex.next_token()? {
+        Some(Token::ArrOpen) => {}
+        _ => return Err(fail(lex, "\"tokens\" must be an array")),
+    }
+    let mut out = Vec::new();
+    match lex.next_token()? {
+        Some(Token::ArrClose) => return Ok(out),
+        Some(Token::Num(raw)) => out.push(parse_token(lex, raw)?),
+        _ => return Err(fail(lex, "tokens must be non-negative integers")),
+    }
+    loop {
+        match lex.next_token()? {
+            Some(Token::ArrClose) => return Ok(out),
+            Some(Token::Comma) => match lex.next_token()? {
+                Some(Token::Num(raw)) => out.push(parse_token(lex, raw)?),
+                _ => return Err(fail(lex, "tokens must be non-negative integers")),
+            },
+            _ => return Err(fail(lex, "expected ',' or ']'")),
+        }
+    }
+}
+
+fn parse_token(lex: &Lexer<'_>, raw: &str) -> Result<u32, ParseError> {
+    raw.parse::<u32>().map_err(|_| ParseError {
+        pos: lex.pos(),
+        msg: format!("token {raw:?} is not a u32"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tokens_of(b: &[u8]) -> Result<Vec<Token<'_>>, ParseError> {
+        let mut lex = Lexer::new(b);
+        let mut out = Vec::new();
+        while let Some(t) = lex.next_token()? {
+            out.push(t);
+        }
+        Ok(out)
+    }
+
+    #[test]
+    fn escape_free_strings_borrow_the_input() {
+        let mut lex = Lexer::new(br#""plain utf-8: \u0041""#);
+        // has an escape: owned
+        match lex.next_token().unwrap().unwrap() {
+            Token::Str(Cow::Owned(s)) => assert_eq!(s, "plain utf-8: A"),
+            other => panic!("expected owned string, got {other:?}"),
+        }
+        let mut lex = Lexer::new("\"héllo\"".as_bytes());
+        match lex.next_token().unwrap().unwrap() {
+            Token::Str(Cow::Borrowed(s)) => assert_eq!(s, "héllo"),
+            other => panic!("expected borrowed string, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn lexer_shares_the_hardened_u_escape_machinery() {
+        let mut lex = Lexer::new(br#""\uD83D\uDE00""#);
+        match lex.next_token().unwrap().unwrap() {
+            Token::Str(s) => assert_eq!(s.as_ref(), "😀"),
+            other => panic!("{other:?}"),
+        }
+        assert!(tokens_of(br#""\uD83D""#).is_err()); // unpaired high
+        assert!(tokens_of(br#""\u+fff""#).is_err()); // signed hex
+        assert!(tokens_of(b"\"\\u000\xc3\xa9\"").is_err()); // multibyte in window
+    }
+
+    #[test]
+    fn numbers_are_raw_validated_slices() {
+        assert_eq!(
+            tokens_of(b"-1.5e2 42").unwrap(),
+            vec![Token::Num("-1.5e2"), Token::Num("42")]
+        );
+        assert!(tokens_of(b"-").is_err());
+        assert!(tokens_of(b"1.2.3e").is_err());
+    }
+
+    #[test]
+    fn skip_value_is_balanced_and_depth_bounded() {
+        let mut lex = Lexer::new(br#"{"a":[1,{"b":null}],"x":2} 99"#);
+        lex.skip_value().unwrap();
+        assert_eq!(lex.next_token().unwrap(), Some(Token::Num("99")));
+        assert_eq!(lex.next_token().unwrap(), None);
+    }
+
+    #[test]
+    fn skip_value_rejects_deep_nesting() {
+        let deep = b"[".repeat(100_000);
+        let mut lex = Lexer::new(&deep);
+        let e = lex.skip_value().unwrap_err();
+        assert!(e.msg.contains("nesting"), "{e}");
+    }
+
+    #[test]
+    fn line_buf_reassembles_split_lines() {
+        let mut buf = LineBuf::new();
+        buf.feed(b"{\"id\":1,");
+        assert!(buf.next_line().is_none());
+        assert_eq!(buf.pending(), 8);
+        buf.feed(b"\"tokens\":[2]}\r\nnext");
+        assert_eq!(buf.next_line().unwrap(), b"{\"id\":1,\"tokens\":[2]}");
+        assert!(buf.next_line().is_none());
+        buf.feed(b"\n");
+        assert_eq!(buf.next_line().unwrap(), b"next");
+        assert_eq!(buf.pending(), 0);
+    }
+
+    #[test]
+    fn request_extractor_tokens_and_text() {
+        let w = parse_request_line(br#"{"id": 7, "tokens": [1, 2, 3]}"#).unwrap();
+        assert_eq!(w.id, 7);
+        assert_eq!(w.tokens.as_deref(), Some(&[1, 2, 3][..]));
+        assert!(w.text.is_none());
+
+        let w = parse_request_line(br#"{"text": "hi there", "id": 9}"#).unwrap();
+        assert_eq!(w.id, 9);
+        assert_eq!(w.text.as_deref(), Some("hi there"));
+
+        // u64 ids keep full precision (the f64 tree path would round)
+        let w = parse_request_line(br#"{"id": 18446744073709551615, "tokens": []}"#).unwrap();
+        assert_eq!(w.id, u64::MAX);
+
+        // unknown fields are skipped, whatever their shape
+        let w = parse_request_line(
+            br#"{"id": 1, "meta": {"a": [1, {"b": "x"}]}, "tokens": [5]}"#,
+        )
+        .unwrap();
+        assert_eq!(w.tokens.as_deref(), Some(&[5][..]));
+    }
+
+    #[test]
+    fn request_extractor_rejects_bad_shapes() {
+        for bad in [
+            &br#"{"tokens": [1]}"#[..],                       // missing id
+            br#"{"id": 1}"#,                                  // no body
+            br#"{"id": 1, "tokens": [1], "text": "x"}"#,      // both bodies
+            br#"{"id": -3, "tokens": [1]}"#,                  // negative id
+            br#"{"id": 1.5, "tokens": [1]}"#,                 // fractional id
+            br#"{"id": 1, "tokens": [1, -2]}"#,               // negative token
+            br#"{"id": 1, "tokens": [4294967296]}"#,          // token > u32
+            br#"{"id": 1, "tokens": [1.5]}"#,                 // fractional token
+            br#"{"id": 1, "tokens": [1]} trailing"#,          // trailing bytes
+            br#"[1, 2]"#,                                     // not an object
+            br#"{"id": 1, "tokens": [1]"#,                    // truncated
+        ] {
+            assert!(
+                parse_request_line(bad).is_err(),
+                "accepted {:?}",
+                String::from_utf8_lossy(bad)
+            );
+        }
+    }
+}

@@ -1,0 +1,654 @@
+//! TCP/JSONL front-end suite (tier-1, no artifacts needed): loopback
+//! end-to-end serving on the deterministic stub backend from
+//! `rust/tests/server.rs`, wire-protocol conformance (shed / bad-request /
+//! connection-limit lines), and the adversarial input properties backing
+//! the zero-copy lexer:
+//!
+//! * socket-served `(id, expert, nll)` triples equal in-process
+//!   [`run_server`] on the same requests — the determinism contract
+//!   survives the wire;
+//! * requests split across arbitrary read boundaries reassemble
+//!   identically ([`LineBuf`]);
+//! * random bytes never panic any parser (tree, lexer, extractor), and
+//!   the tree parser and lexer agree on every valid document;
+//! * overload answers with structured 429 lines, never a hang or a
+//!   dropped connection.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use anyhow::Result;
+use smalltalk::coordinator::{
+    response_triples as triples, run_server, serve_net, NetConfig, Request, ServeBackend,
+    ServerConfig,
+};
+use smalltalk::util::json::Json;
+use smalltalk::util::lex::{parse_request_line, Lexer, LineBuf, Token};
+use smalltalk::util::prop;
+use smalltalk::util::Rng;
+
+// ---------------------------------------------------------------------
+// deterministic stub backend (mirrors rust/tests/server.rs)
+// ---------------------------------------------------------------------
+
+/// Routing and NLL are pure functions of the tokens (route by first
+/// token, NLL = expert * 1000 + token sum), so socket-served triples are
+/// comparable bit-for-bit against in-process serving. `route_delay`
+/// slows the admission loop down so arrivals can pile past high water.
+struct StubBackend {
+    n: usize,
+    route_delay: Duration,
+}
+
+impl StubBackend {
+    fn new(n: usize) -> Self {
+        StubBackend {
+            n,
+            route_delay: Duration::ZERO,
+        }
+    }
+
+    fn with_route_delay(mut self, d: Duration) -> Self {
+        self.route_delay = d;
+        self
+    }
+}
+
+impl ServeBackend for StubBackend {
+    fn n_experts(&self) -> usize {
+        self.n
+    }
+
+    fn route(&self, rows: &[&[u32]], _threads: usize) -> Result<Vec<usize>> {
+        if !self.route_delay.is_zero() {
+            std::thread::sleep(self.route_delay);
+        }
+        Ok(rows
+            .iter()
+            .map(|r| r.first().copied().unwrap_or(0) as usize % self.n)
+            .collect())
+    }
+
+    fn exec_nll(&self, expert: usize, rows: &[&[u32]]) -> Result<Vec<f32>> {
+        Ok(rows
+            .iter()
+            .map(|r| expert as f32 * 1000.0 + r.iter().sum::<u32>() as f32)
+            .collect())
+    }
+}
+
+fn net_cfg(server: ServerConfig) -> NetConfig {
+    NetConfig {
+        listen: "127.0.0.1:0".to_string(),
+        max_conns: 0,
+        high_water: 10_000,
+        want_tokens: None,
+        server,
+    }
+}
+
+fn request_line(r: &Request) -> String {
+    format!("{{\"id\":{},\"tokens\":{:?}}}\n", r.id, r.tokens)
+}
+
+/// Parse an ok response line into the `(id, expert, nll_bits)` triple the
+/// in-process suite compares on. Panics on an error line.
+fn parse_ok(line: &str) -> (u64, usize, u32) {
+    let j = Json::parse(line).unwrap_or_else(|e| panic!("unparseable response {line:?}: {e}"));
+    assert!(
+        j.get("code").is_none(),
+        "expected an ok line, got an error line: {line}"
+    );
+    let id = j.get("id").and_then(Json::as_f64).expect("id") as u64;
+    let expert = j.get("expert").and_then(Json::as_usize).expect("expert");
+    // stub NLLs are small integers: exact through f64 and back
+    let nll = j.get("nll").and_then(Json::as_f64).expect("nll") as f32;
+    (id, expert, nll.to_bits())
+}
+
+fn read_line(reader: &mut BufReader<TcpStream>) -> String {
+    let mut line = String::new();
+    let n = reader.read_line(&mut line).expect("reading response line");
+    assert!(n > 0, "connection closed before a response arrived");
+    line.trim_end().to_string()
+}
+
+// ---------------------------------------------------------------------
+// loopback end-to-end
+// ---------------------------------------------------------------------
+
+/// N clients stream interleaved JSONL over real sockets (some lines split
+/// across multiple writes); every request gets exactly one ok line, and
+/// the full `(id, expert, nll)` set equals in-process serving of the same
+/// requests through the same scheduler config.
+#[test]
+fn loopback_streaming_matches_in_process_serving() {
+    let backend = StubBackend::new(3);
+    let cfg = net_cfg(ServerConfig::continuous(4, 500, 2));
+    let requests: Vec<Vec<Request>> = (0..3)
+        .map(|c| {
+            (0..10)
+                .map(|i| {
+                    let id = (c * 100 + i) as u64;
+                    Request {
+                        id,
+                        tokens: vec![(c * 7 + i) as u32, id as u32, 7],
+                    }
+                })
+                .collect()
+        })
+        .collect();
+
+    // in-process reference through the identical scheduler config
+    let flat: Vec<Request> = requests.iter().flatten().cloned().collect();
+    let (ref_out, _, ()) = run_server(&backend, &cfg.server, |cl| {
+        for r in &flat {
+            cl.submit(r.clone());
+        }
+    })
+    .unwrap();
+    let mut want = triples(&ref_out);
+    want.sort_unstable();
+
+    let mut got: Vec<(u64, usize, u32)> = std::thread::scope(|s| {
+        let (tx, rx) = mpsc::channel();
+        let (b, c) = (&backend, &cfg);
+        let server = s.spawn(move || serve_net(b, c, None, move |h| drop(tx.send(h))));
+        let h = rx.recv().expect("server never became ready");
+        let addr = h.addr();
+
+        let clients: Vec<_> = requests
+            .iter()
+            .map(|reqs| {
+                s.spawn(move || {
+                    let mut conn = TcpStream::connect(addr).unwrap();
+                    let mut reader = BufReader::new(conn.try_clone().unwrap());
+                    for (k, r) in reqs.iter().enumerate() {
+                        let line = request_line(r);
+                        if k % 3 == 0 {
+                            // split mid-line across two writes: the server
+                            // must reassemble across read boundaries
+                            let bytes = line.as_bytes();
+                            let mid = bytes.len() / 2;
+                            conn.write_all(&bytes[..mid]).unwrap();
+                            conn.flush().unwrap();
+                            std::thread::sleep(Duration::from_micros(300));
+                            conn.write_all(&bytes[mid..]).unwrap();
+                        } else {
+                            conn.write_all(line.as_bytes()).unwrap();
+                        }
+                    }
+                    // exactly one response per request, streamed as each
+                    // completes — no EOF needed to flush them
+                    (0..reqs.len())
+                        .map(|_| parse_ok(&read_line(&mut reader)))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+
+        let mut got = Vec::new();
+        for c in clients {
+            got.extend(c.join().unwrap());
+        }
+        h.shutdown();
+        let (stats, report) = server.join().unwrap().unwrap();
+        assert_eq!(report.connections, 3);
+        assert_eq!(report.conns_refused, 0);
+        assert_eq!(report.ok_lines, 30);
+        assert_eq!(report.bad_lines, 0);
+        assert_eq!(report.shed_lines, 0);
+        assert_eq!(stats.completed, 30);
+        got
+    });
+    got.sort_unstable();
+    assert_eq!(
+        got, want,
+        "socket-served triples diverged from in-process serving"
+    );
+}
+
+/// Worst-case fragmentation: a client that writes one byte per syscall
+/// still gets every request answered correctly.
+#[test]
+fn one_byte_writes_reassemble_into_requests() {
+    let backend = StubBackend::new(2);
+    let cfg = net_cfg(ServerConfig::continuous(2, 200, 1));
+    std::thread::scope(|s| {
+        let (tx, rx) = mpsc::channel();
+        let (b, c) = (&backend, &cfg);
+        let server = s.spawn(move || serve_net(b, c, None, move |h| drop(tx.send(h))));
+        let h = rx.recv().unwrap();
+
+        let mut conn = TcpStream::connect(h.addr()).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let lines = "{\"id\":1,\"tokens\":[3,1,7]}\n{\"id\":2,\"tokens\":[4,2,7]}\n";
+        for byte in lines.as_bytes() {
+            conn.write_all(&[*byte]).unwrap();
+        }
+        let mut got: Vec<_> = (0..2).map(|_| parse_ok(&read_line(&mut reader))).collect();
+        got.sort_unstable();
+        assert_eq!(
+            got,
+            vec![
+                (1, 1, 1011f32.to_bits()), // 3 % 2 = expert 1, 1000 + 3+1+7
+                (2, 0, 13f32.to_bits()),   // 4 % 2 = expert 0, 4+2+7
+            ]
+        );
+        drop((conn, reader));
+        h.shutdown();
+        server.join().unwrap().unwrap();
+    });
+}
+
+// ---------------------------------------------------------------------
+// overload and limits
+// ---------------------------------------------------------------------
+
+/// Flooding past the high-water mark sheds with structured 429 lines —
+/// every request still gets exactly one response (ok or shed), the
+/// connection stays up, and the wire counters reconcile with the
+/// scheduler's.
+#[test]
+fn queue_past_high_water_sheds_structured_lines() {
+    // slow routing stalls the admission loop, so a burst piles up in the
+    // arrival queue no matter how fast the workers are
+    let backend = StubBackend::new(2).with_route_delay(Duration::from_millis(5));
+    let mut cfg = net_cfg(ServerConfig::continuous(4, 0, 1));
+    cfg.high_water = 2;
+    std::thread::scope(|s| {
+        let (tx, rx) = mpsc::channel();
+        let (b, c) = (&backend, &cfg);
+        let server = s.spawn(move || serve_net(b, c, None, move |h| drop(tx.send(h))));
+        let h = rx.recv().unwrap();
+
+        let mut conn = TcpStream::connect(h.addr()).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let n = 40usize;
+        for i in 0..n {
+            conn.write_all(format!("{{\"id\":{i},\"tokens\":[{},{i},7]}}\n", i % 2).as_bytes())
+                .unwrap();
+        }
+        let (mut ok, mut shed) = (0usize, 0usize);
+        for _ in 0..n {
+            let line = read_line(&mut reader);
+            let j = Json::parse(&line).unwrap();
+            match j.get("code").and_then(Json::as_f64) {
+                None => ok += 1,
+                Some(code) if code == 429.0 => {
+                    assert_eq!(j.get("error").and_then(Json::as_str), Some("shed"));
+                    assert!(j.get("id").and_then(Json::as_f64).is_some(), "{line}");
+                    shed += 1;
+                }
+                Some(code) => panic!("unexpected error code {code} in {line}"),
+            }
+        }
+        assert_eq!(ok + shed, n, "exactly one response line per request");
+        assert!(ok >= 1, "the first request must be admitted");
+        assert!(shed >= 1, "a 40-request burst over high-water 2 must shed");
+
+        drop((conn, reader));
+        h.shutdown();
+        let (stats, report) = server.join().unwrap().unwrap();
+        assert_eq!(report.ok_lines, ok);
+        assert_eq!(report.shed_lines, shed);
+        assert_eq!(stats.shed, shed, "wire sheds must match scheduler sheds");
+        assert_eq!(stats.completed, ok);
+    });
+}
+
+/// Past `max_conns`, a new connection gets the structured 503 line and a
+/// clean close — while the connection already inside keeps being served.
+#[test]
+fn connection_limit_refuses_with_structured_line() {
+    let backend = StubBackend::new(2);
+    let mut cfg = net_cfg(ServerConfig::continuous(1, 0, 1));
+    cfg.max_conns = 1;
+    std::thread::scope(|s| {
+        let (tx, rx) = mpsc::channel();
+        let (b, c) = (&backend, &cfg);
+        let server = s.spawn(move || serve_net(b, c, None, move |h| drop(tx.send(h))));
+        let h = rx.recv().unwrap();
+
+        let mut first = TcpStream::connect(h.addr()).unwrap();
+        let mut r1 = BufReader::new(first.try_clone().unwrap());
+        // serving one request proves the connection is registered before
+        // the second connect below
+        first.write_all(b"{\"id\":1,\"tokens\":[3,1,7]}\n").unwrap();
+        assert_eq!(parse_ok(&read_line(&mut r1)), (1, 1, 1011f32.to_bits()));
+
+        let second = TcpStream::connect(h.addr()).unwrap();
+        let mut r2 = BufReader::new(second);
+        let refusal = read_line(&mut r2);
+        let j = Json::parse(&refusal).unwrap();
+        assert_eq!(j.get("code").and_then(Json::as_f64), Some(503.0));
+        assert_eq!(
+            j.get("error").and_then(Json::as_str),
+            Some("too_many_connections")
+        );
+        let mut rest = String::new();
+        assert_eq!(r2.read_line(&mut rest).unwrap(), 0, "refused conn must close");
+
+        // the surviving connection is unaffected
+        first.write_all(b"{\"id\":2,\"tokens\":[4,2,7]}\n").unwrap();
+        assert_eq!(parse_ok(&read_line(&mut r1)), (2, 0, 13f32.to_bits()));
+
+        drop((first, r1, r2));
+        h.shutdown();
+        let (_, report) = server.join().unwrap().unwrap();
+        assert_eq!(report.connections, 1);
+        assert_eq!(report.conns_refused, 1);
+    });
+}
+
+/// Malformed lines over the socket: each gets exactly one 400 line with a
+/// detail message, the connection survives all of them, and a valid
+/// request afterwards is served normally.
+#[test]
+fn malformed_lines_get_one_400_each_and_the_connection_survives() {
+    let backend = StubBackend::new(3);
+    let cfg = net_cfg(ServerConfig::continuous(2, 0, 1));
+    std::thread::scope(|s| {
+        let (tx, rx) = mpsc::channel();
+        let (b, c) = (&backend, &cfg);
+        let server = s.spawn(move || serve_net(b, c, None, move |h| drop(tx.send(h))));
+        let h = rx.recv().unwrap();
+
+        let mut conn = TcpStream::connect(h.addr()).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let deep = format!(
+            "{{\"id\":1,\"junk\":{}{},\"tokens\":[0,1,7]}}",
+            "[".repeat(300),
+            "]".repeat(300)
+        );
+        let bad: Vec<Vec<u8>> = vec![
+            b"this is not json".to_vec(),
+            b"{\"id\":1,\"text\":\"\\uD83D\"}".to_vec(), // unpaired surrogate
+            b"{\"id\":2,\"text\":\"truncated".to_vec(),  // unterminated string
+            deep.into_bytes(),                           // past MAX_DEPTH
+            b"{\"id\":99999999999999999999999,\"tokens\":[1]}".to_vec(), // id > u64
+            b"{\"id\":3,\"tokens\":[99999999999]}".to_vec(), // token > u32
+            b"{\"id\":4,\"text\":\"\xff\xfe\"}".to_vec(), // invalid utf-8
+            b"{\"id\":5}".to_vec(),                      // no body field
+        ];
+        for line in &bad {
+            conn.write_all(line).unwrap();
+            conn.write_all(b"\n").unwrap();
+        }
+        conn.write_all(b"   \r\n").unwrap(); // blank: ignored, no response
+        conn.write_all(b"{\"id\":7,\"tokens\":[2,7,7]}\n").unwrap();
+
+        for line in &bad {
+            let resp = read_line(&mut reader);
+            let j = Json::parse(&resp).unwrap();
+            assert_eq!(
+                j.get("code").and_then(Json::as_f64),
+                Some(400.0),
+                "for {:?} got {resp}",
+                String::from_utf8_lossy(line)
+            );
+            assert_eq!(j.get("error").and_then(Json::as_str), Some("bad_request"));
+            let detail = j.get("detail").and_then(Json::as_str).unwrap();
+            assert!(!detail.is_empty(), "400 lines must say what was wrong");
+        }
+        assert_eq!(parse_ok(&read_line(&mut reader)), (7, 2, 2016f32.to_bits()));
+
+        drop((conn, reader));
+        h.shutdown();
+        let (stats, report) = server.join().unwrap().unwrap();
+        assert_eq!(report.bad_lines, bad.len());
+        assert_eq!(report.ok_lines, 1, "the blank line must produce nothing");
+        assert_eq!(stats.completed, 1);
+    });
+}
+
+// ---------------------------------------------------------------------
+// adversarial input properties (no sockets)
+// ---------------------------------------------------------------------
+
+/// Random bytes through every parsing layer: the tree parser, the pull
+/// lexer, the request extractor, and the line splitter must return
+/// structured errors, never panic.
+#[test]
+fn random_bytes_never_panic_any_parser() {
+    prop::check(
+        "parsers-never-panic",
+        400,
+        |r| {
+            let n = r.usize_below(80);
+            (0..n).map(|_| r.below(256) as u8).collect::<Vec<u8>>()
+        },
+        |bytes| {
+            let _ = parse_request_line(bytes);
+            let mut lex = Lexer::new(bytes);
+            while let Ok(Some(_)) = lex.next_token() {}
+            let _ = Json::parse(&String::from_utf8_lossy(bytes));
+            let mut buf = LineBuf::new();
+            buf.feed(bytes);
+            while let Some(line) = buf.next_line() {
+                let _ = parse_request_line(line);
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The targeted adversarial corpus: truncated escapes, lone surrogates,
+/// pathological nesting, numbers past every width, raw garbage. All
+/// structured errors (the pre-hardening parser panicked on several).
+#[test]
+fn adversarial_corpus_yields_structured_errors() {
+    let cases: Vec<Vec<u8>> = vec![
+        b"{\"id\":1,\"text\":\"\\u".to_vec(),
+        b"{\"id\":1,\"text\":\"\\u00".to_vec(),
+        b"{\"id\":1,\"text\":\"\\u+fff\"}".to_vec(),
+        b"{\"id\":1,\"text\":\"\\u000\xc3\xa9\"}".to_vec(), // multibyte in hex window
+        b"{\"id\":1,\"text\":\"\\uD800\"}".to_vec(),        // lone high surrogate
+        b"{\"id\":1,\"text\":\"\\uDC00\"}".to_vec(),        // lone low surrogate
+        b"{\"id\":1,\"text\":\"\\uD83D\\u0041\"}".to_vec(), // high + non-low
+        "[".repeat(100_000).into_bytes(),                   // deep nesting
+        vec![0xff; 64],
+        b"\"unterminated".to_vec(),
+    ];
+    for case in &cases {
+        assert!(
+            parse_request_line(case).is_err(),
+            "extractor accepted {:?}",
+            String::from_utf8_lossy(case)
+        );
+        // the tree parser must agree that these are syntax errors (valid
+        // UTF-8 cases only — its input type already rules out the rest)
+        if let Ok(text) = std::str::from_utf8(case) {
+            assert!(Json::parse(text).is_err(), "tree parser accepted {text:?}");
+        }
+    }
+    // syntactically valid JSON the extractor still refuses: numbers past
+    // the width the wire contract demands (the f64 tree path would round
+    // them — exactly why ids go through the raw-slice lexer)
+    for case in [
+        &br#"{"id":18446744073709551616,"tokens":[]}"#[..], // u64::MAX + 1
+        br#"{"id":1,"tokens":[4294967296]}"#,               // u32::MAX + 1
+        br#"{"id":1e999,"tokens":[]}"#,
+    ] {
+        assert!(
+            parse_request_line(case).is_err(),
+            "extractor accepted {:?}",
+            String::from_utf8_lossy(case)
+        );
+        Json::parse(std::str::from_utf8(case).unwrap())
+            .expect("these are valid JSON for the f64 tree path");
+    }
+}
+
+/// Rebuild a `Json` value from the pull lexer's token stream — the test
+/// oracle for tree/lexer agreement.
+fn lex_build(lex: &mut Lexer<'_>) -> Result<Json, String> {
+    let t = next_tok(lex)?;
+    lex_build_from(lex, t)
+}
+
+fn next_tok<'a>(lex: &mut Lexer<'a>) -> Result<Token<'a>, String> {
+    lex.next_token()
+        .map_err(|e| e.to_string())?
+        .ok_or_else(|| "unexpected end of input".to_string())
+}
+
+fn lex_build_from(lex: &mut Lexer<'_>, t: Token<'_>) -> Result<Json, String> {
+    match t {
+        Token::Null => Ok(Json::Null),
+        Token::Bool(b) => Ok(Json::Bool(b)),
+        Token::Num(raw) => raw.parse::<f64>().map(Json::Num).map_err(|e| e.to_string()),
+        Token::Str(s) => Ok(Json::Str(s.into_owned())),
+        Token::ArrOpen => {
+            let mut items = Vec::new();
+            let mut t = next_tok(lex)?;
+            if matches!(t, Token::ArrClose) {
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(lex_build_from(lex, t)?);
+                match next_tok(lex)? {
+                    Token::ArrClose => return Ok(Json::Arr(items)),
+                    Token::Comma => t = next_tok(lex)?,
+                    other => return Err(format!("expected ',' or ']', got {other:?}")),
+                }
+            }
+        }
+        Token::ObjOpen => {
+            let mut m = std::collections::BTreeMap::new();
+            loop {
+                match next_tok(lex)? {
+                    Token::ObjClose => return Ok(Json::Obj(m)),
+                    Token::Str(k) => {
+                        match next_tok(lex)? {
+                            Token::Colon => {}
+                            other => return Err(format!("expected ':', got {other:?}")),
+                        }
+                        m.insert(k.into_owned(), lex_build(lex)?);
+                        match next_tok(lex)? {
+                            Token::Comma => {}
+                            Token::ObjClose => return Ok(Json::Obj(m)),
+                            other => return Err(format!("expected ',' or '}}', got {other:?}")),
+                        }
+                    }
+                    other => return Err(format!("expected a key, got {other:?}")),
+                }
+            }
+        }
+        other => Err(format!("unexpected {other:?}")),
+    }
+}
+
+fn gen_string(r: &mut Rng) -> String {
+    // escape-heavy pool: quotes, backslashes, controls, multibyte,
+    // astral (surrogate-pair territory when escaped)
+    let pool: &[&str] = &["a", "z9 ", "é", "汉", "😀", "\"", "\\", "\n", "\t", "\u{7}"];
+    (0..r.usize_below(8))
+        .map(|_| pool[r.usize_below(pool.len())])
+        .collect()
+}
+
+fn gen_json(r: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { r.below(4) } else { r.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(r.below(2) == 1),
+        // halves: exact in f64, stable through Display and reparse
+        2 => Json::Num(r.below(2_000_000) as f64 / 2.0 - 1000.0),
+        3 => Json::Str(gen_string(r)),
+        4 => Json::Arr((0..r.usize_below(4)).map(|_| gen_json(r, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..r.usize_below(4))
+                .map(|k| (format!("k{k}"), gen_json(r, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+/// For any valid document, the zero-copy lexer and the tree parser
+/// produce the same value — so hardening fixes in one cannot silently
+/// diverge from the other.
+#[test]
+fn tree_parser_and_lexer_agree_on_valid_documents() {
+    prop::check(
+        "tree-lexer-agreement",
+        250,
+        |r| gen_json(r, 3).to_string(),
+        |doc| {
+            let tree = Json::parse(doc).map_err(|e| format!("tree rejected {doc:?}: {e}"))?;
+            let mut lex = Lexer::new(doc.as_bytes());
+            let lexed = lex_build(&mut lex).map_err(|e| format!("lexer rejected {doc:?}: {e}"))?;
+            if lex.next_token().map_err(|e| e.to_string())?.is_some() {
+                return Err(format!("lexer left trailing tokens in {doc:?}"));
+            }
+            if tree != lexed {
+                return Err(format!("parsers disagree on {doc:?}: {tree:?} vs {lexed:?}"));
+            }
+            Ok(())
+        },
+    );
+    // fixed escape-heavy documents, surrogate pairs included
+    for doc in [
+        r#"{"s":"\uD83D\uDE00 \u0041\t\"x\""}"#,
+        r#"["\u00e9","\\","\/","\b\f\r\n"]"#,
+        r#"{"deep":{"a":[1,-2.5,3e2,{"b":"\uD834\uDD1E"}]}}"#,
+    ] {
+        let tree = Json::parse(doc).unwrap();
+        let mut lex = Lexer::new(doc.as_bytes());
+        assert_eq!(tree, lex_build(&mut lex).unwrap(), "on {doc}");
+    }
+}
+
+/// Splitting a byte stream at any set of points yields the same line
+/// sequence as feeding it whole — the invariant the socket reader relies
+/// on for requests fragmented across reads.
+#[test]
+fn line_splitting_is_invariant_to_read_chunking() {
+    fn lines_of(chunks: &[&[u8]]) -> Vec<Vec<u8>> {
+        let mut buf = LineBuf::new();
+        let mut out = Vec::new();
+        for chunk in chunks {
+            buf.feed(chunk);
+            while let Some(line) = buf.next_line() {
+                out.push(line.to_vec());
+            }
+        }
+        out
+    }
+
+    prop::check(
+        "linebuf-chunking",
+        250,
+        |r| {
+            let mut text = Vec::new();
+            for i in 0..1 + r.usize_below(5) {
+                text.extend_from_slice(format!("{{\"id\":{i},\"tokens\":[{}]}}", i % 7).as_bytes());
+                if r.below(3) == 0 {
+                    text.push(b'\r');
+                }
+                text.push(b'\n');
+            }
+            let mut cuts: Vec<usize> =
+                (0..r.usize_below(6)).map(|_| r.usize_below(text.len() + 1)).collect();
+            cuts.sort_unstable();
+            (text, cuts)
+        },
+        |(text, cuts)| {
+            let whole = lines_of(&[&text[..]]);
+            let mut chunks = Vec::new();
+            let mut prev = 0;
+            for &cut in cuts {
+                chunks.push(&text[prev..cut]);
+                prev = cut;
+            }
+            chunks.push(&text[prev..]);
+            let split = lines_of(&chunks);
+            if whole == split {
+                Ok(())
+            } else {
+                Err(format!("chunking changed the lines: {whole:?} vs {split:?}"))
+            }
+        },
+    );
+}

@@ -267,6 +267,43 @@ fn linger_expiry_dispatches_partial_batches() {
     assert!(lingered >= 1, "queue_micros must record the linger wait");
 }
 
+/// After a full batch dispatches mid-wave, the surviving partial batch's
+/// linger deadline stays anchored at the survivor's own admission time:
+/// no request may wait ~2x `max_wait` because a sibling batch filled.
+/// (The sharp unit check for the deadline-restart bug lives next to the
+/// `linger_deadline` helper in `coordinator::server`; this is the
+/// end-to-end bound.)
+#[test]
+fn survivors_after_full_dispatch_keep_their_linger_anchor() {
+    let backend = StubBackend::new(2);
+    let wait_us: u64 = 100_000;
+    let cfg = ServerConfig::continuous(2, wait_us, 1);
+    let (out, stats, ()) = run_server(&backend, &cfg, |c| {
+        // one wave, one expert: [0,1] fills a batch immediately, request 2
+        // survives and must leave on its own linger — the driver stays
+        // alive well past it so drain cannot be what flushes it
+        c.submit_wave(vec![req(0, 0), req(1, 0), req(2, 0)]);
+        std::thread::sleep(Duration::from_millis(400));
+    })
+    .unwrap();
+    assert_eq!(out.len(), 3);
+    assert!(stats.full_batches >= 1, "{stats:?}");
+    assert!(stats.linger_batches >= 1, "survivor must leave on linger: {stats:?}");
+    let survivor = out.iter().find(|r| r.id == 2).unwrap();
+    // 1.9x: below the ~2x the restart bug allowed, with scheduling-jitter
+    // headroom above the exact 1x budget
+    assert!(
+        survivor.queue_micros < (wait_us as u128) * 19 / 10,
+        "survivor lingered {} µs against a {wait_us} µs budget",
+        survivor.queue_micros
+    );
+    assert!(
+        survivor.queue_micros >= wait_us as u128,
+        "the survivor really lingered (queue {} µs)",
+        survivor.queue_micros
+    );
+}
+
 /// Freed worker slots are refilled from the dispatch queue without
 /// blocking: with more batches than workers, at least one pull must find
 /// work already waiting.

@@ -44,9 +44,13 @@ if ! cargo bench --bench routing; then
   routing_ok=0
 fi
 # serve bench: steady-state req/s + p50/p95 queue/total latency at several
-# arrival rates, closed-wave vs continuous rows (see benches/serve.rs).
-# Same graceful-skip contract as the routing bench: a failure leaves a
-# marker file and the remaining benches still run.
+# arrival rates, closed-wave vs continuous rows, plus the open-loop
+# serve-over-socket rows — an offered-load sweep through the TCP/JSONL
+# front-end with client-observed p50/p95/p99 latency, shed counts, and a
+# set-equality guard that the socket-served (id, expert, nll) triples
+# match in-process serving (see benches/serve.rs). Same graceful-skip
+# contract as the routing bench: a failure leaves a marker file and the
+# remaining benches still run.
 if [ "$routing_ok" = 1 ] && ! cargo bench --bench serve; then
   echo "bench_smoke: serve bench failed" >&2
   printf '{\n  "skipped": "serve bench run failed"\n}\n' > BENCH_serve.json
