@@ -9,6 +9,9 @@
 #                          serial + interleaved
 #   make test-fused        the fused all-routers scoring + stacked-cache suite,
 #                          serial + interleaved
+#   make test-fused-eval   the bucket-ladder fused expert eval suite (wave
+#                          planner properties, fused-vs-fanout bit-identity,
+#                          launch accounting), serial + interleaved
 #   make test-async        the trainer-orchestrator suite (staged bit-identity,
 #                          kill-and-resume, stale snapshots), serial + interleaved
 #   make test-chaos        the elastic-trainer chaos suite (seeded fault plans:
@@ -19,7 +22,7 @@
 #   make bench-smoke       tiny-budget routing+serve+train_step+trainer benches
 #                          -> BENCH_routing.json + BENCH_serve.json + BENCH_train.json
 
-.PHONY: build test test-concurrency test-serve test-net test-fused test-async test-chaos artifacts bench-smoke clean
+.PHONY: build test test-concurrency test-serve test-net test-fused test-fused-eval test-async test-chaos artifacts bench-smoke clean
 
 build:
 	cargo build --release
@@ -57,6 +60,14 @@ test-net:
 test-fused:
 	RUST_TEST_THREADS=1 cargo test -q --test fused_scoring
 	RUST_TEST_THREADS=8 cargo test -q --test fused_scoring
+
+# Bucket-ladder fused expert eval suite (planner properties and manifest
+# back-compat run tier-1 on the stub backend; fused-vs-fanout bit-equality
+# and the E=4 launch-accounting acceptance need fused artifacts), under
+# both serial and heavily interleaved test scheduling.
+test-fused-eval:
+	RUST_TEST_THREADS=1 cargo test -q --test fused_eval
+	RUST_TEST_THREADS=8 cargo test -q --test fused_eval
 
 # Trainer-orchestrator suite (node machinery, checkpoint/resume, and the
 # snapshot store run tier-1 on a stub backend; the staged-vs-classic

@@ -66,6 +66,14 @@ def entry_specs(v: V.Variant):
                 _spec((v.fused_experts, n)),
                 _spec((v.prefix_batch, m), jnp.int32),
             )
+    if v.fused_experts > 0:
+        # fused stacked-expert eval: stacked [E, P] params + one [E, b, S+1]
+        # token bucket per compiled ladder shape, one launch per wave slab
+        for b in v.eval_buckets():
+            specs[f"eval_nll_all_{b}"] = (
+                _spec((v.fused_experts, n)),
+                _spec((v.fused_experts, b, S + 1), jnp.int32),
+            )
     for b in v.dense_batches:
         specs[f"train_step_b{b}"] = (
             flat, flat, flat, _spec(()), _spec((b, S + 1), jnp.int32))
@@ -80,6 +88,8 @@ def entry_fn(v: V.Variant, name: str):
         fn = M.make_train_step(cfg, opt)
         # jax requires tuple output for uniform unpacking on the rust side
         return lambda flat, m, mv, step, tokens: tuple(fn(flat, m, mv, step, tokens))
+    if name.startswith("eval_nll_all"):
+        return M.make_eval_nll_all(cfg)
     if name == "eval_nll":
         return M.make_eval_nll(cfg)
     if name.startswith("prefix_nll_all"):
@@ -129,10 +139,12 @@ def main(argv=None) -> None:
                     help="comma-separated subset (default: all `default` variants)")
     ap.add_argument("--all", action="store_true", help="include non-default variants")
     ap.add_argument("--fused", type=int, default=0, metavar="E",
-                    help="also emit fused all-routers scoring entries "
-                         "`prefix_nll_all_{m}` over a stacked [E, P] parameter "
-                         "tensor (0 = omit; the Rust runtime then falls back "
-                         "to the per-router fan-out)")
+                    help="also emit fused stacked-model entries over a "
+                         "stacked [E, P] parameter tensor: all-routers "
+                         "scoring `prefix_nll_all_{m}` plus the stacked-"
+                         "expert eval bucket ladder `eval_nll_all_{b}` "
+                         "(0 = omit; the Rust runtime then falls back to "
+                         "the per-model fan-out)")
     ap.add_argument("--force", action="store_true")
     # Back-compat with the scaffold Makefile (`--out path/model.hlo.txt`).
     ap.add_argument("--out", default=None, help=argparse.SUPPRESS)

@@ -308,6 +308,29 @@ def make_prefix_nll_all(cfg: ModelCfg, *, use_kernel: bool = True):
     return prefix_nll_all
 
 
+def make_eval_nll_all(cfg: ModelCfg, *, use_kernel: bool = True):
+    """Fused stacked-expert eval: one launch evaluates a whole serve
+    wave's per-expert batches instead of one launch per expert.
+
+    ``stacked`` is ``f32[E, P]`` — each slot's flat expert parameter
+    vector — and ``tokens`` is ``i32[E, b, S+1]`` — slot ``j``'s batch of
+    ``b`` rows (``b`` is the entry's compiled bucket shape; short groups
+    pad by repeating their last row and the dead rows are discarded on
+    readback).  The result is the ``f32[E, b]`` NLL slab.  ``vmap`` over
+    both leading axes reuses the exact per-row computation of
+    :func:`make_eval_nll`, so every live row is bit-identical to the
+    single-expert entry point at any bucket shape.
+    """
+
+    def eval_nll_all(stacked, tokens):
+        nll = jax.vmap(
+            lambda flat, toks: sequence_nll(cfg, flat, toks, use_kernel=use_kernel)
+        )(stacked, tokens)  # [E, b]
+        return (nll,)
+
+    return eval_nll_all
+
+
 def make_last_logits(cfg: ModelCfg, *, use_kernel: bool = True):
     """Greedy-decode helper: logits of the final position."""
 

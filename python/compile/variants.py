@@ -43,22 +43,46 @@ class Variant:
     # Fused all-routers scoring width: when > 0, each prefix length also
     # emits `prefix_nll_all_{m}` taking a stacked `[E, P]` parameter tensor
     # and returning the `[prefix_batch, E]` NLL slab in one execution (one
-    # launch per token batch instead of E). 0 = not emitted; the Rust
-    # runtime falls back to the per-router fan-out. Set at compile time by
-    # `aot.py --fused E` so old manifests stay valid.
+    # launch per token batch instead of E), and every eval bucket emits
+    # `eval_nll_all_{b}` taking the same stacked tensor plus `[E, b, S+1]`
+    # tokens — one launch evaluating a serve wave's per-expert batches.
+    # 0 = not emitted; the Rust runtime falls back to the per-model
+    # fan-out. Set at compile time by `aot.py --fused E` so old manifests
+    # stay valid.
     fused_experts: int = 0
     emit_last_logits: bool = False
     default: bool = True  # emitted by plain `make artifacts`
+
+    def eval_buckets(self) -> List[int]:
+        """The fused-eval bucket ladder: powers of two up to `eval_batch`
+        (plus `eval_batch` itself when it is not a power of two). Expert
+        groups in a serve wave are rarely the same size; each group pads
+        up to the smallest bucket that fits, so equal-bucket groups share
+        one `eval_nll_all_{b}` launch with bounded padding waste."""
+        return eval_bucket_ladder(self.eval_batch)
 
     def entry_points(self) -> List[str]:
         eps = ["init", "train_step", "eval_nll"]
         eps += [f"prefix_nll_{m}" for m in self.prefix_lens]
         if self.fused_experts > 0:
             eps += [f"prefix_nll_all_{m}" for m in self.prefix_lens]
+            eps += [f"eval_nll_all_{b}" for b in self.eval_buckets()]
         eps += [f"train_step_b{b}" for b in self.dense_batches]
         if self.emit_last_logits:
             eps.append("last_logits")
         return eps
+
+
+def eval_bucket_ladder(eval_batch: int) -> List[int]:
+    """Ascending bucket shapes for fused eval: 1, 2, 4, ... up to (and
+    always including) `eval_batch`."""
+    ladder: List[int] = []
+    b = 1
+    while b < eval_batch:
+        ladder.append(b)
+        b *= 2
+    ladder.append(max(eval_batch, 1))
+    return ladder
 
 
 def _mcfg(h: int, l: int, a: int, seq: int = SEQ_LEN) -> ModelCfg:

@@ -134,17 +134,20 @@ def test_fused_manifest_lists_all_entry_for_every_prefix_len():
 
 def test_unfused_manifest_has_no_all_entries():
     """Omitting --fused keeps the manifest exactly fallback-shaped: the
-    fused field reads 0 and no prefix_nll_all entry is listed (the Rust
-    runtime treats that as 'fan out per router')."""
+    fused field reads 0 and no prefix_nll_all / eval_nll_all entry is
+    listed (the Rust runtime treats that as 'fan out per model')."""
     for v in V.VARIANTS:
         entry = V.manifest_entry(v, M.param_count(v.model))
         assert entry["fused_experts"] == 0
         assert not any(
-            e.startswith("prefix_nll_all") for e in entry["entry_points"]
+            e.startswith(("prefix_nll_all", "eval_nll_all"))
+            for e in entry["entry_points"]
         )
         # the fused specs are not even generated
         specs = aot.entry_specs(v)
-        assert not any(k.startswith("prefix_nll_all") for k in specs)
+        assert not any(
+            k.startswith(("prefix_nll_all", "eval_nll_all")) for k in specs
+        )
 
 
 def test_fused_cli_flag_applies_to_selected_variants(tmp_path, monkeypatch):
@@ -181,3 +184,72 @@ def test_fused_entry_lowers_and_matches_fanout():
     for e in range(3):
         col = np.asarray(jax.jit(single)(stacked[e], tokens)[0])
         np.testing.assert_array_equal(fused[:, e], col)
+
+
+# --------------------------------------------------------------------------
+# Fused stacked-expert eval export (`--fused E` -> `eval_nll_all_{b}`)
+# --------------------------------------------------------------------------
+
+
+def test_eval_bucket_ladder_shapes():
+    """Ascending powers of two, always ending in eval_batch."""
+    assert V.eval_bucket_ladder(16) == [1, 2, 4, 8, 16]
+    assert V.eval_bucket_ladder(8) == [1, 2, 4, 8]
+    assert V.eval_bucket_ladder(1) == [1]
+    # a non-power-of-two batch still gets its own top bucket
+    assert V.eval_bucket_ladder(12) == [1, 2, 4, 8, 12]
+
+
+def test_fused_manifest_lists_eval_entry_for_every_bucket():
+    """With --fused, every ladder bucket gets an eval entry whose spec
+    takes the stacked [E, P] params and an [E, b, S+1] token slab."""
+    for base in V.VARIANTS:
+        v = _fused(base)
+        entry = V.manifest_entry(v, M.param_count(v.model))
+        specs = aot.entry_specs(v)
+        n = M.param_count(v.model)
+        S = v.model.seq_len
+        buckets = v.eval_buckets()
+        assert buckets[-1] == v.eval_batch
+        assert buckets == sorted(buckets)
+        for b in buckets:
+            name = f"eval_nll_all_{b}"
+            assert name in entry["entry_points"]
+            stacked, tokens = specs[name]
+            assert stacked.shape == (4, n)
+            assert tokens.shape == (4, b, S + 1)
+            assert tokens.dtype == jnp.int32
+
+
+def test_fused_eval_entry_lowers_and_matches_single_expert():
+    """Every bucket entry lowers to parseable HLO, and each live row of
+    the [E, b] slab is bit-identical to the per-expert `eval_nll` entry
+    evaluating the same row inside a full (padded) eval batch — the
+    cross-shape guarantee the Rust bucket-ladder dispatcher relies on."""
+    v = _fused(V.by_name("router_micro"), e=3)
+    specs = aot.entry_specs(v)
+    n = M.param_count(v.model)
+    S = v.model.seq_len
+    bs = v.eval_batch
+    key = jax.random.PRNGKey(5)
+    stacked = jax.random.normal(key, (3, n), jnp.float32) * 0.02
+    rows = jax.random.randint(
+        jax.random.PRNGKey(6), (3, bs, S + 1), 0, v.model.vocab, jnp.int32
+    )
+    single = jax.jit(aot.entry_fn(v, "eval_nll"))
+    for b in v.eval_buckets():
+        name = f"eval_nll_all_{b}"
+        fn = aot.entry_fn(v, name)
+        text = aot.to_hlo_text(jax.jit(fn).lower(*specs[name]))
+        assert text.startswith("HloModule")
+        toks = rows[:, :b, :]
+        fused = np.asarray(jax.jit(fn)(stacked, toks)[0])
+        assert fused.shape == (3, b)
+        for e in range(3):
+            # reference: the per-expert entry at the full eval batch,
+            # padded by repeating the last row (the fan-out treatment)
+            pad = jnp.concatenate(
+                [toks[e]] + [toks[e, -1:]] * (bs - b), axis=0
+            )
+            ref = np.asarray(single(stacked[e], pad)[0])[:b]
+            np.testing.assert_array_equal(fused[e], ref)

@@ -213,6 +213,88 @@ fn main() {
         );
     }
 
+    // ---- fused stacked-expert eval vs per-expert fan-out: a routed
+    // wave's expert batches pad up the bucket ladder and stack into
+    // eval_nll_all_{b} launches (needs eval entries from `aot.py
+    // --fused`; pre-fused manifests skip these rows) ----
+    if mixture.expert_meta.fused_eval_buckets().is_empty() {
+        eprintln!(
+            "[routing bench] manifest has no eval_nll_all entries \
+             (re-run `make artifacts` with the fused exporter); skipping fused-expert rows"
+        );
+    } else {
+        use smalltalk::coordinator::inference::eval_nll_groups;
+        use smalltalk::coordinator::group_by_expert;
+        use smalltalk::runtime::TrainState;
+        // route the wave once; benchmark only the expert phase
+        let nll = score_matrix_threaded(&engine, &mixture.routers, &mixture.router_meta, &seqs, m, bench_threads)
+                .unwrap();
+        let routes = argmin_assign(&nll).expert_of;
+        let groups = group_by_expert(&routes, mixture.n_experts()).unwrap();
+        let group_rows: Vec<Vec<&[u32]>> = groups
+            .iter()
+            .map(|idx| idx.iter().map(|&i| seqs[i].tokens.as_slice()).collect())
+            .collect();
+        let experts: Vec<&TrainState> = mixture.experts.iter().collect();
+        let emeta = &mixture.expert_meta;
+        let mut stripped = emeta.clone();
+        stripped
+            .entry_points
+            .retain(|e| !e.starts_with("eval_nll_all_"));
+        let n_experts = experts.len();
+
+        let fan_r = suite.bench(
+            &format!("expert wave eval 32 seqs x {n_experts} experts (fan-out)"),
+            || {
+                std::hint::black_box(
+                    eval_nll_groups(&engine, &experts, &stripped, &group_rows, bench_threads)
+                        .unwrap(),
+                );
+            },
+        );
+        println!("    -> {:.0} seqs/s", fan_r.throughput(32.0));
+        let s0 = engine.stats();
+        let fan_nll =
+            eval_nll_groups(&engine, &experts, &stripped, &group_rows, bench_threads).unwrap();
+        let d = engine.stats().since(&s0);
+        suite.annotate("threads", bench_threads as f64);
+        suite.annotate("expert_launches_per_wave", d.executions as f64);
+        suite.annotate("h2d_bytes_per_iter", d.h2d_bytes as f64);
+
+        let fused_r = suite.bench(
+            &format!("expert wave eval 32 seqs x {n_experts} experts (fused bucket ladder)"),
+            || {
+                std::hint::black_box(
+                    eval_nll_groups(&engine, &experts, emeta, &group_rows, bench_threads).unwrap(),
+                );
+            },
+        );
+        println!("    -> {:.0} seqs/s", fused_r.throughput(32.0));
+        let s0 = engine.stats();
+        let fused_nll =
+            eval_nll_groups(&engine, &experts, emeta, &group_rows, bench_threads).unwrap();
+        let d = engine.stats().since(&s0);
+        suite.annotate("threads", bench_threads as f64);
+        suite.annotate("expert_launches_per_wave", d.executions as f64);
+        suite.annotate("fused_eval_launches_per_wave", d.fused_eval_executions as f64);
+        suite.annotate("expert_launches_avoided_per_wave", d.expert_execs_avoided as f64);
+        suite.annotate("eval_pad_rows_per_wave", d.eval_pad_rows as f64);
+        suite.annotate("h2d_bytes_per_iter", d.h2d_bytes as f64);
+        println!(
+            "    -> fused vs fan-out: {:.2}x seqs/s, {} launches per wave (vs {}), \
+             {} pad rows discarded",
+            fan_r.mean_ns / fused_r.mean_ns,
+            d.executions,
+            d.executions + d.expert_execs_avoided,
+            d.eval_pad_rows,
+        );
+        // score-equality guard: fused must be bit-identical to the fan-out
+        assert_eq!(
+            fan_nll, fused_nll,
+            "fused expert wave eval diverged from the per-expert fan-out"
+        );
+    }
+
     let nll = score_matrix_threaded(&engine, &mixture.routers, &mixture.router_meta, &seqs, m, bench_threads)
                 .unwrap();
     suite.bench("argmin routing decision x 32", || {

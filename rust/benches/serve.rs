@@ -17,8 +17,8 @@ use std::sync::{mpsc, Mutex};
 use std::time::{Duration, Instant};
 
 use smalltalk::coordinator::{
-    response_triples, run_pipeline, run_server, serve_net, serve_threaded, MixtureBackend,
-    NetConfig, PipelineConfig, Request, ServerConfig,
+    response_triples, run_pipeline, run_server, serve_net, serve_threaded, Mixture,
+    MixtureBackend, NetConfig, PipelineConfig, Request, ServerConfig,
 };
 use smalltalk::data::corpus::Corpus;
 use smalltalk::data::SequenceGen;
@@ -82,6 +82,70 @@ fn main() {
     suite.annotate("threads", threads as f64);
     suite.annotate("req_per_s", r.throughput(n_req as f64));
     suite.annotate("mode_closed_wave", 1.0);
+
+    // ---- fused-expert rows: the identical closed wave served with and
+    // without the manifest's fused eval_nll_all entries. The fan-out row
+    // strips the entries from a cloned expert meta (the exact pre-fused
+    // dispatch); per-wave expert launch counts and discarded pad rows
+    // come from EngineStats deltas, the wall latency distribution from
+    // repeated single-wave runs, and a triples guard pins bit-identity.
+    if mixture.expert_meta.fused_eval_buckets().is_empty() {
+        eprintln!(
+            "[serve bench] manifest has no eval_nll_all entries \
+             (re-run `make artifacts` with the fused exporter); skipping fused-expert rows"
+        );
+    } else {
+        let mut stripped = mixture.expert_meta.clone();
+        stripped
+            .entry_points
+            .retain(|e| !e.starts_with("eval_nll_all_"));
+        let fallback = Mixture {
+            routers: mixture.routers.clone(),
+            router_meta: mixture.router_meta.clone(),
+            experts: mixture.experts.clone(),
+            expert_meta: stripped,
+        };
+        let sorted_ref = response_triples(&reference);
+        let mut wave_ns: Vec<f64> = Vec::new();
+        for (mode, mix) in [("fan-out", &fallback), ("fused buckets", &mixture)] {
+            let r = suite.bench(
+                &format!("closed-wave serve {n_req} requests ({mode} experts)"),
+                || {
+                    std::hint::black_box(serve_threaded(&engine, mix, &requests, m, 1).unwrap());
+                },
+            );
+            // per-request wall latency distribution over repeated waves
+            let lat_us: Vec<f64> = (0..12)
+                .map(|_| {
+                    let t = Instant::now();
+                    std::hint::black_box(serve_threaded(&engine, mix, &requests, m, 1).unwrap());
+                    t.elapsed().as_secs_f64() * 1e6 / n_req as f64
+                })
+                .collect();
+            // one instrumented wave for the launch accounting
+            let s0 = engine.stats();
+            let responses = serve_threaded(&engine, mix, &requests, m, 1).unwrap();
+            let d = engine.stats().since(&s0);
+            suite.annotate("req_per_s", r.throughput(n_req as f64));
+            suite.annotate("wave_p50_us_per_req", percentile(&lat_us, 50.0));
+            suite.annotate("wave_p95_us_per_req", percentile(&lat_us, 95.0));
+            suite.annotate("executions_per_wave", d.executions as f64);
+            suite.annotate("fused_eval_launches_per_wave", d.fused_eval_executions as f64);
+            suite.annotate("expert_launches_avoided_per_wave", d.expert_execs_avoided as f64);
+            suite.annotate("eval_pad_rows_per_wave", d.eval_pad_rows as f64);
+            // score-equality guard: both dispatches answer identically
+            assert_eq!(
+                response_triples(&responses),
+                sorted_ref,
+                "closed-wave serve ({mode} experts) diverged from the reference"
+            );
+            wave_ns.push(r.mean_ns);
+        }
+        println!(
+            "    -> fused vs fan-out experts: {:.2}x waves/s",
+            wave_ns[0] / wave_ns[1]
+        );
+    }
 
     // ---- continuous rows: one per arrival rate ----
     let backend = MixtureBackend {

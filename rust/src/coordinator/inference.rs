@@ -7,12 +7,27 @@
 //! sequence. [`serve`] implements the batched request loop: requests are
 //! routed, grouped per expert, and executed in expert-batch-sized chunks
 //! — the dispatch pattern a vLLM-style front-end would use. The loop is
-//! allocation-light: the sequential reference path batches by index over
-//! borrowed token rows (no `Sequence`/`Vec<u32>` clones), and
-//! router/expert parameters stay device-resident across waves via the
-//! engine's buffer cache. The `threads > 1` path hands the scheduler one
-//! owned copy of the wave (the queue outlives the caller's borrow); that
-//! single memcpy is noise next to the batched model execution it feeds.
+//! allocation-free on the hot path: every group-evaluation path batches
+//! by index over borrowed `&[u32]` token rows end to end (no
+//! `Sequence`/`Vec<u32>` clones; tail padding repeats the last row by
+//! reference), and router/expert parameters stay device-resident across
+//! waves via the engine's buffer cache. The `threads > 1` path hands the
+//! scheduler one owned copy of the wave (the queue outlives the caller's
+//! borrow); that single memcpy is noise next to the batched model
+//! execution it feeds.
+//!
+//! Launch discipline: when the manifest carries fused `eval_nll_all_{b}`
+//! entries ([`VariantMeta::fused_eval_buckets`], from `aot.py --fused`),
+//! the wave's per-expert batches are evaluated through the bucket-ladder
+//! planner ([`plan_wave`]) and [`eval_nll_groups`]: each batch pads up to
+//! the smallest compiled bucket that fits, equal-bucket batches stack
+//! across experts into one `eval_nll_all_{b}` execution (the stacked
+//! `[E, P]` parameter tensor reuses the engine's versioned stack cache),
+//! and dead rows/columns are discarded on readback — so an E-expert wave
+//! drops from E expert launches + E readbacks to one or two bucketed
+//! launches. Manifests without the entries (or a single-unit slab, where
+//! stacking would multiply FLOPs for nothing) keep the per-expert
+//! `eval_nll` fan-out, bit-identical.
 //!
 //! Expert groups never talk to each other (the paper's core property), so
 //! [`serve_threaded`] / [`Mixture::eval_routed_threaded`] execute them
@@ -29,15 +44,16 @@
 
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use super::assignment::argmin_assign;
 use super::scoring::{
-    batch_spans, pad_batch, score_matrix_rows_threaded, score_matrix_threaded,
+    batch_spans, pad_batch, score_matrix_rows_threaded, score_matrix_threaded, SPAN_WINDOW,
 };
 use crate::data::Sequence;
+use crate::runtime::engine::{to_f32_vec, tokens_literal, Arg};
 use crate::runtime::parallel::{default_threads, run_fallible};
-use crate::runtime::{Engine, TrainState, VariantMeta};
+use crate::runtime::{stacked_params_buffer, DeviceBuffer, Engine, TrainState, VariantMeta};
 
 /// A trained mixture: E routers (tiny LMs) + E experts.
 pub struct Mixture {
@@ -129,27 +145,18 @@ impl Mixture {
             return Ok(Vec::new());
         }
         let routes = self.route_threaded(engine, seqs, m, threads)?;
-        let groups: Vec<Vec<usize>> = group_by_expert(&routes, self.n_experts())?;
-        // batch by index over borrowed rows — no token clones; every
-        // non-empty group is one independent task
-        let tasks: Vec<_> = groups
+        let groups = group_by_expert(&routes, self.n_experts())?;
+        // batch by index over borrowed rows — no token clones; the whole
+        // wave is one planned launch set so equal-bucket groups fuse
+        let group_rows: Vec<Vec<&[u32]>> = groups
             .iter()
-            .enumerate()
-            .filter(|(_, idx)| !idx.is_empty())
-            .map(|(e, idx)| {
-                let expert = &self.experts[e];
-                let meta = &self.expert_meta;
-                move || {
-                    let rows: Vec<&[u32]> =
-                        idx.iter().map(|&i| seqs[i].tokens.as_slice()).collect();
-                    let nll = eval_nll_all(engine, expert, meta, &rows)?;
-                    Ok((e, nll))
-                }
-            })
+            .map(|idx| idx.iter().map(|&i| seqs[i].tokens.as_slice()).collect())
             .collect();
+        let experts: Vec<&TrainState> = self.experts.iter().collect();
+        let nlls = eval_nll_groups(engine, &experts, &self.expert_meta, &group_rows, threads)?;
         let mut out = vec![(0.0f32, 0usize); seqs.len()];
-        for (e, nll) in run_fallible(tasks, threads)? {
-            for (k, &i) in groups[e].iter().enumerate() {
+        for (e, (idx, nll)) in groups.iter().zip(&nlls).enumerate() {
+            for (k, &i) in idx.iter().enumerate() {
                 out[i] = (nll[k], e);
             }
         }
@@ -179,23 +186,286 @@ impl Mixture {
 }
 
 /// Evaluate full-sequence NLL for an arbitrary number of rows, padding the
-/// tail to the compiled eval batch shape (by reference — padding rows are
+/// tail to a compiled batch shape (by reference — padding rows are
 /// discarded). Rows may be owned vectors or borrowed slices.
+///
+/// This is the single-model view of [`eval_nll_groups`]: with fused
+/// `eval_nll_all_{b}` entries in the manifest the row batches fuse into
+/// bucketed stacked launches (the same expert repeated across the stack);
+/// otherwise each batch runs one per-expert `eval_nll` execution at the
+/// compiled `eval_batch` — bit-identical either way.
 pub fn eval_nll_all<R: AsRef<[u32]>>(
     engine: &Engine,
     state: &TrainState,
     meta: &VariantMeta,
     rows: &[R],
 ) -> Result<Vec<f32>> {
-    let bs = meta.eval_batch;
-    let mut out = Vec::with_capacity(rows.len());
-    for (start, real) in batch_spans(rows.len(), bs) {
-        let batch = pad_batch(
-            rows[start..start + real].iter().map(AsRef::as_ref).collect(),
-            bs,
-        );
-        let nll = state.eval_nll(engine, &batch, meta)?;
-        out.extend_from_slice(&nll[..real]);
+    let rows: Vec<&[u32]> = rows.iter().map(AsRef::as_ref).collect();
+    let mut out = eval_nll_groups(engine, &[state], meta, std::slice::from_ref(&rows), 1)?;
+    Ok(out.pop().unwrap_or_default())
+}
+
+// ----------------------------------------------------------------------
+// Bucket-ladder wave planning (pure — unit-tested without artifacts)
+// ----------------------------------------------------------------------
+
+/// One expert-batch unit of a wave: rows `start..start + real` of group
+/// `group`, padded up to `bucket` rows inside its launch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EvalUnit {
+    pub group: usize,
+    pub start: usize,
+    pub real: usize,
+    /// The compiled batch shape this unit evaluates under: the smallest
+    /// ladder bucket that fits `real` (fused), or the plain `eval_batch`
+    /// (single fan-out).
+    pub bucket: usize,
+}
+
+/// One kernel launch of a planned wave.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EvalLaunch {
+    /// ≥ 2 equal-bucket units stacked into one `eval_nll_all_{bucket}`
+    /// execution (a short stack pads by repeating its last unit; the dead
+    /// columns are discarded on readback).
+    Fused { bucket: usize, units: Vec<EvalUnit> },
+    /// A lone unit: runs the per-expert `eval_nll` at the compiled
+    /// `eval_batch`. A one-unit stack would compute `width - 1` dead
+    /// columns of FLOPs to save zero launches, so it never fuses.
+    Single(EvalUnit),
+}
+
+impl EvalLaunch {
+    /// Rows this launch computes only to discard: bucket padding past each
+    /// unit's real rows plus whole dead columns padding a short stack to
+    /// `width`. The single path reports 0 — its `eval_batch` tail padding
+    /// is the pre-existing fan-out cost, not fused-launch waste.
+    pub fn pad_rows(&self, width: usize) -> u64 {
+        match self {
+            EvalLaunch::Single(_) => 0,
+            EvalLaunch::Fused { bucket, units } => {
+                let unit_pad: u64 = units.iter().map(|u| (bucket - u.real) as u64).sum();
+                unit_pad + (width.saturating_sub(units.len()) * bucket) as u64
+            }
+        }
+    }
+}
+
+/// A planned wave: the launch list plus its accounting, satisfying
+/// `launches.len() == fanout_launches - execs_avoided` exactly.
+#[derive(Clone, Debug, Default)]
+pub struct WavePlan {
+    pub launches: Vec<EvalLaunch>,
+    /// Launches the per-expert fan-out would have performed (one per
+    /// batch-span unit).
+    pub fanout_launches: usize,
+    /// Launches fusion removed: `k - 1` per fused launch of `k` units.
+    pub execs_avoided: usize,
+    /// Total discarded rows across fused launches
+    /// ([`EvalLaunch::pad_rows`] summed).
+    pub pad_rows: u64,
+}
+
+/// Plan a wave's expert-side launches. `group_sizes[g]` is group `g`'s row
+/// count, `bs` the compiled `eval_batch`, `buckets` the ascending fused
+/// ladder ([`VariantMeta::fused_eval_buckets`] — empty on pre-fused
+/// manifests), `width` the compiled stack width (`fused_experts`).
+///
+/// Each group tiles into `eval_batch` spans; each span becomes a unit
+/// whose bucket is the smallest ladder shape that fits its real rows.
+/// Equal-bucket units (across groups — this is where cross-expert fusion
+/// happens) chunk into `width`-wide stacks, smallest buckets first; a
+/// chunk of one unit degrades to the fan-out path. With an empty ladder
+/// or `width < 2` every unit is a [`EvalLaunch::Single`] — the exact
+/// pre-fused behaviour.
+pub fn plan_wave(group_sizes: &[usize], bs: usize, buckets: &[usize], width: usize) -> WavePlan {
+    let bs = bs.max(1);
+    let mut units: Vec<EvalUnit> = Vec::new();
+    let mut singles: Vec<EvalUnit> = Vec::new();
+    for (group, &n) in group_sizes.iter().enumerate() {
+        for (start, real) in batch_spans(n, bs) {
+            match buckets.iter().find(|&&b| b >= real) {
+                Some(&bucket) if width >= 2 => units.push(EvalUnit { group, start, real, bucket }),
+                _ => singles.push(EvalUnit { group, start, real, bucket: bs }),
+            }
+        }
+    }
+    let fanout_launches = units.len() + singles.len();
+    // stable: equal-bucket units keep (group, start) order, so the plan —
+    // and therefore the launch set and its accounting — is deterministic
+    units.sort_by_key(|u| u.bucket);
+
+    let mut plan = WavePlan {
+        fanout_launches,
+        ..WavePlan::default()
+    };
+    let mut i = 0;
+    while i < units.len() {
+        let bucket = units[i].bucket;
+        let class_end = i + units[i..].iter().take_while(|u| u.bucket == bucket).count();
+        while i < class_end {
+            let chunk = &units[i..class_end.min(i + width)];
+            i += chunk.len();
+            if chunk.len() == 1 {
+                let mut unit = chunk[0].clone();
+                unit.bucket = bs;
+                singles.push(unit);
+            } else {
+                plan.execs_avoided += chunk.len() - 1;
+                plan.launches.push(EvalLaunch::Fused {
+                    bucket,
+                    units: chunk.to_vec(),
+                });
+            }
+        }
+    }
+    plan.pad_rows = plan.launches.iter().map(|l| l.pad_rows(width)).sum();
+    plan.launches.extend(singles.into_iter().map(EvalLaunch::Single));
+    plan
+}
+
+/// Device-side inputs of one fused launch, prepped on the caller thread
+/// so worker tasks only execute and read back.
+struct FusedPrep {
+    entry: String,
+    stack: DeviceBuffer,
+    tokens: DeviceBuffer,
+    pad_rows: u64,
+}
+
+/// Evaluate a whole wave's per-expert row groups — `groups[e]` under
+/// `experts[e]` — returning one NLL vector per group. This is the
+/// expert-side hot path behind [`Mixture::eval_routed_threaded`],
+/// closed-wave serving, and (via [`eval_nll_all`]) the scheduler's
+/// dispatched batches, dense eval, and downstream scoring.
+///
+/// Launches follow [`plan_wave`] over the manifest's fused bucket ladder:
+/// equal-bucket batches from *different experts* stack into one
+/// `eval_nll_all_{b}` execution over the cached stacked `[E, P]`
+/// parameter tensor, lone units and pre-fused manifests fan out through
+/// the per-expert `eval_nll`. Both paths are bit-identical (asserted by
+/// `rust/tests/fused_eval.rs`) at any `threads` count: every launch
+/// writes a disjoint region of the output. Launches are windowed like
+/// scoring spans so device residency stays bounded on large waves.
+pub fn eval_nll_groups(
+    engine: &Engine,
+    experts: &[&TrainState],
+    meta: &VariantMeta,
+    groups: &[Vec<&[u32]>],
+    threads: usize,
+) -> Result<Vec<Vec<f32>>> {
+    ensure!(
+        experts.len() == groups.len(),
+        "{} expert groups for {} experts",
+        groups.len(),
+        experts.len()
+    );
+    let sizes: Vec<usize> = groups.iter().map(|g| g.len()).collect();
+    let plan = plan_wave(
+        &sizes,
+        meta.eval_batch,
+        &meta.fused_eval_buckets(),
+        meta.fused_experts,
+    );
+    let mut out: Vec<Vec<f32>> = sizes.iter().map(|&n| vec![0.0f32; n]).collect();
+    let bs = meta.eval_batch.max(1);
+    let width = meta.fused_experts;
+    let cols = meta.seq_len + 1;
+
+    for window in plan.launches.chunks(SPAN_WINDOW) {
+        // prep fused launches' device inputs up front (stacked params are
+        // served from the engine's versioned stack cache; the token slab
+        // uploads once and is dropped with the window)
+        let preps: Vec<Option<FusedPrep>> = window
+            .iter()
+            .map(|launch| -> Result<Option<FusedPrep>> {
+                let (bucket, units) = match launch {
+                    EvalLaunch::Fused { bucket, units } => (*bucket, units),
+                    EvalLaunch::Single(_) => return Ok(None),
+                };
+                let entry = meta.fused_eval_entry(bucket).with_context(|| {
+                    format!(
+                        "no fused eval_nll_all_{bucket} entry compiled for {} — \
+                         re-run `make artifacts` (aot.py --fused)",
+                        meta.name
+                    )
+                })?;
+                let mut members: Vec<&TrainState> =
+                    units.iter().map(|u| experts[u.group]).collect();
+                let last = *members.last().expect("fused launches hold >= 2 units");
+                members.resize(width, last);
+                let stack = stacked_params_buffer(engine, &members)?;
+                // [width, bucket, S+1] token slab: each unit's rows padded
+                // to the bucket by repeating its last row by reference;
+                // dead columns repeat the last unit's padded rows
+                let mut rows: Vec<&[u32]> = Vec::with_capacity(width * bucket);
+                for u in units {
+                    let group = &groups[u.group][u.start..u.start + u.real];
+                    rows.extend(pad_batch(group.to_vec(), bucket));
+                }
+                let tail = rows.len() - bucket;
+                for _ in units.len()..width {
+                    rows.extend_from_within(tail..tail + bucket);
+                }
+                let lit = tokens_literal(&rows, cols)?
+                    .reshape(&[width as i64, bucket as i64, cols as i64])
+                    .map_err(anyhow::Error::msg)?;
+                Ok(Some(FusedPrep {
+                    entry,
+                    stack,
+                    tokens: engine.upload(&lit)?,
+                    pad_rows: launch.pad_rows(width),
+                }))
+            })
+            .collect::<Result<_>>()?;
+
+        let tasks: Vec<_> = window
+            .iter()
+            .zip(&preps)
+            .map(|(launch, prep)| {
+                move || -> Result<Vec<f32>> {
+                    match launch {
+                        EvalLaunch::Fused { units, .. } => {
+                            let p = prep.as_ref().context("fused launch lost its prep")?;
+                            let slab = engine.run_buffers_fused_eval(
+                                &meta.name,
+                                &p.entry,
+                                &[Arg::Dev(&p.stack), Arg::Dev(&p.tokens)],
+                                units.len(),
+                                p.pad_rows,
+                            )?;
+                            to_f32_vec(slab.first().context("eval_nll_all empty")?)
+                        }
+                        EvalLaunch::Single(u) => {
+                            let group = &groups[u.group][u.start..u.start + u.real];
+                            let batch = pad_batch(group.to_vec(), bs);
+                            experts[u.group].eval_nll(engine, &batch, meta)
+                        }
+                    }
+                }
+            })
+            .collect();
+
+        for (launch, nll) in window.iter().zip(run_fallible(tasks, threads)?) {
+            match launch {
+                EvalLaunch::Fused { bucket, units } => {
+                    // row-major [width, bucket] slab: unit j's rows start
+                    // at j * bucket; everything past real is padding
+                    ensure!(
+                        nll.len() == width * bucket,
+                        "fused eval returned {} scores for a [{width}, {bucket}] slab",
+                        nll.len()
+                    );
+                    for (j, u) in units.iter().enumerate() {
+                        out[u.group][u.start..u.start + u.real]
+                            .copy_from_slice(&nll[j * bucket..j * bucket + u.real]);
+                    }
+                }
+                EvalLaunch::Single(u) => {
+                    out[u.group][u.start..u.start + u.real].copy_from_slice(&nll[..u.real]);
+                }
+            }
+        }
     }
     Ok(out)
 }
@@ -260,11 +530,13 @@ pub struct Request {
 /// request, rounded half-up ([`amortized_micros`]). Routing is a batched
 /// score-matrix per **admission wave** (the whole wave in closed-wave
 /// serving), so `route_micros` is wave-total / wave-size and identical
-/// for every response admitted together; execution is batched per
-/// **dispatched expert batch** (the whole expert group in closed-wave
-/// serving), so `exec_micros` is batch-total / batch-size and identical
-/// within a batch. Neither is an isolated single-request latency — that
-/// is the batched-serving cost model.
+/// for every response admitted together. Execution is batched per
+/// **dispatched expert batch** in the scheduler; closed-wave serving
+/// times the whole expert phase as one span and amortizes it wave-wide
+/// (fused bucket launches interleave expert groups, so per-group
+/// execution is not separable), making `exec_micros` identical for every
+/// response of a closed wave. Neither is an isolated single-request
+/// latency — that is the batched-serving cost model.
 ///
 /// `queue_micros` is different: it is this request's **true** queueing
 /// delay — the arrival-queue wait (submission → admission) plus the
@@ -390,13 +662,19 @@ fn serve_closed_wave(
         .collect();
 
     let groups = group_by_expert(&routes, mixture.n_experts())?;
-    for (e, idx) in groups.iter().enumerate().filter(|(_, idx)| !idx.is_empty()) {
-        let group: Vec<&[u32]> = idx.iter().map(|&i| rows[i]).collect();
-        let t1 = Instant::now();
-        let nll = eval_nll_all(engine, &mixture.experts[e], &mixture.expert_meta, &group)?;
-        let exec_us = amortized_micros(t1.elapsed(), idx.len());
+    let group_rows: Vec<Vec<&[u32]>> = groups
+        .iter()
+        .map(|idx| idx.iter().map(|&i| rows[i]).collect())
+        .collect();
+    let experts: Vec<&TrainState> = mixture.experts.iter().collect();
+    // the expert phase is timed whole-wave: fused launches interleave
+    // expert groups, so per-group execution is no longer separable
+    let t1 = Instant::now();
+    let nlls = eval_nll_groups(engine, &experts, &mixture.expert_meta, &group_rows, 1)?;
+    let exec_us = amortized_micros(t1.elapsed(), requests.len());
+    for (e, idx) in groups.iter().enumerate() {
         for (k, &i) in idx.iter().enumerate() {
-            responses[i].nll = nll[k];
+            responses[i].nll = nlls[e][k];
             responses[i].exec_micros = exec_us;
         }
     }
@@ -449,6 +727,190 @@ mod tests {
         assert!(group_by_expert(&[9], 0).is_err());
         // in-range max is fine
         assert!(group_by_expert(&[2], 3).is_ok());
+    }
+
+    /// Every (group, row) index is written by exactly one launch.
+    fn assert_covers_exactly_once(plan: &WavePlan, sizes: &[usize]) {
+        let mut seen: Vec<Vec<bool>> = sizes.iter().map(|&n| vec![false; n]).collect();
+        let units = plan.launches.iter().flat_map(|l| match l {
+            EvalLaunch::Fused { units, .. } => units.as_slice(),
+            EvalLaunch::Single(u) => std::slice::from_ref(u),
+        });
+        for u in units {
+            for i in u.start..u.start + u.real {
+                assert!(!seen[u.group][i], "row ({}, {i}) covered twice", u.group);
+                seen[u.group][i] = true;
+            }
+        }
+        for (g, rows) in seen.iter().enumerate() {
+            assert!(rows.iter().all(|&s| s), "group {g} not fully covered");
+        }
+    }
+
+    const LADDER: &[usize] = &[1, 2, 4, 8, 16];
+
+    #[test]
+    fn plan_wave_empty_ladder_is_pure_fanout() {
+        let plan = plan_wave(&[3, 20, 0], 16, &[], 4);
+        assert_eq!(plan.launches.len(), 3); // spans: 1 + 2 + 0
+        assert!(plan
+            .launches
+            .iter()
+            .all(|l| matches!(l, EvalLaunch::Single(_))));
+        assert_eq!(plan.fanout_launches, 3);
+        assert_eq!(plan.execs_avoided, 0);
+        assert_eq!(plan.pad_rows, 0);
+        assert_covers_exactly_once(&plan, &[3, 20, 0]);
+    }
+
+    #[test]
+    fn plan_wave_width_under_two_never_fuses() {
+        let plan = plan_wave(&[4, 4], 16, LADDER, 1);
+        assert!(plan
+            .launches
+            .iter()
+            .all(|l| matches!(l, EvalLaunch::Single(_))));
+        assert_eq!(plan.execs_avoided, 0);
+    }
+
+    #[test]
+    fn plan_wave_straddle_wave_fuses_to_two_launches() {
+        // the acceptance shape: groups {1, bs-1, bs, bs+1} at E = 4 —
+        // bucket 1 holds two one-row units, bucket 16 holds three
+        let sizes = [1, 15, 16, 17];
+        let plan = plan_wave(&sizes, 16, LADDER, 4);
+        assert_eq!(plan.fanout_launches, 5);
+        assert_eq!(plan.launches.len(), 2);
+        assert_eq!(plan.execs_avoided, 3);
+        assert_eq!(
+            plan.launches.len(),
+            plan.fanout_launches - plan.execs_avoided
+        );
+        // bucket 1: two full one-row units, two dead columns; bucket 16:
+        // one unit one row short, one dead column
+        assert_eq!(plan.pad_rows, (0 + 2 * 1) + (1 + 1 * 16));
+        assert_covers_exactly_once(&plan, &sizes);
+    }
+
+    #[test]
+    fn plan_wave_skewed_all_to_one_expert() {
+        // one expert takes the whole wave: 3 full buckets fuse (the same
+        // group stacked against itself), the 5-row tail is a lone
+        // bucket-8 unit and degrades to a single fan-out launch
+        let sizes = [53, 0, 0, 0];
+        let plan = plan_wave(&sizes, 16, LADDER, 4);
+        assert_eq!(plan.fanout_launches, 4);
+        assert_eq!(plan.launches.len(), 2);
+        assert_eq!(plan.execs_avoided, 2);
+        let fused: Vec<_> = plan
+            .launches
+            .iter()
+            .filter_map(|l| match l {
+                EvalLaunch::Fused { bucket, units } => Some((*bucket, units.len())),
+                EvalLaunch::Single(_) => None,
+            })
+            .collect();
+        assert_eq!(fused, vec![(16, 3)]);
+        // one dead column of 16 rows pads the 3-unit stack to width 4
+        assert_eq!(plan.pad_rows, 16);
+        assert_covers_exactly_once(&plan, &sizes);
+    }
+
+    #[test]
+    fn plan_wave_bucket_edges() {
+        // group sizes straddling every bucket edge pick the smallest
+        // bucket that fits (paired so every class fuses)
+        let sizes = [1, 1, 3, 4, 5, 8, 9, 16];
+        let plan = plan_wave(&sizes, 16, LADDER, 8);
+        let mut buckets: Vec<(usize, usize)> = Vec::new();
+        for l in &plan.launches {
+            if let EvalLaunch::Fused { bucket, units } = l {
+                for u in units {
+                    buckets.push((u.group, *bucket));
+                }
+            }
+        }
+        buckets.sort_unstable();
+        assert_eq!(
+            buckets,
+            vec![
+                (0, 1),
+                (1, 1),
+                (2, 4),
+                (3, 4),
+                (4, 8),
+                (5, 8),
+                (6, 16),
+                (7, 16)
+            ]
+        );
+        assert_eq!(plan.launches.len(), 4);
+        assert_eq!(plan.execs_avoided, 4);
+        assert_covers_exactly_once(&plan, &sizes);
+    }
+
+    #[test]
+    fn plan_wave_chunks_wide_classes_and_demotes_leftovers() {
+        // five equal-bucket units at width 4: one full stack + a lone
+        // leftover that must NOT burn 3 dead columns — it goes single
+        let sizes = [2, 2, 2, 2, 2];
+        let plan = plan_wave(&sizes, 16, LADDER, 4);
+        assert_eq!(plan.launches.len(), 2);
+        let (mut fused, mut single) = (0, 0);
+        for l in &plan.launches {
+            match l {
+                EvalLaunch::Fused { bucket, units } => {
+                    assert_eq!((*bucket, units.len()), (2, 4));
+                    fused += 1;
+                }
+                EvalLaunch::Single(_) => single += 1,
+            }
+        }
+        assert_eq!((fused, single), (1, 1));
+        assert_eq!(plan.execs_avoided, 3);
+        assert_eq!(plan.pad_rows, 0); // full stack, full buckets
+        assert_covers_exactly_once(&plan, &sizes);
+    }
+
+    #[test]
+    fn plan_wave_counters_reconcile_on_grids() {
+        // launch count == fan-out count - execs avoided, for every mix
+        for &width in &[2usize, 3, 4, 8] {
+            for sizes in [
+                vec![1, 15, 16, 17],
+                vec![0, 0, 35, 1],
+                vec![7; 9],
+                vec![16, 16, 16, 16],
+                vec![33],
+                vec![],
+            ] {
+                let plan = plan_wave(&sizes, 16, LADDER, width);
+                assert_eq!(
+                    plan.launches.len(),
+                    plan.fanout_launches - plan.execs_avoided,
+                    "sizes {sizes:?} width {width}"
+                );
+                assert_covers_exactly_once(&plan, &sizes);
+            }
+        }
+    }
+
+    #[test]
+    fn eval_launch_pad_rows_accounting() {
+        let unit = |real, bucket| EvalUnit {
+            group: 0,
+            start: 0,
+            real,
+            bucket,
+        };
+        // 2 units at bucket 8 (3 + 0 pad) + 2 dead columns of 8
+        let l = EvalLaunch::Fused {
+            bucket: 8,
+            units: vec![unit(5, 8), unit(8, 8)],
+        };
+        assert_eq!(l.pad_rows(4), 3 + 16);
+        // singles never report fused waste
+        assert_eq!(EvalLaunch::Single(unit(3, 16)).pad_rows(4), 0);
     }
 
     #[test]

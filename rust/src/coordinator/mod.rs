@@ -36,8 +36,9 @@ pub use comm::{CommKind, CommLedger};
 pub use em::{train_routers, train_routers_hooked, EmConfig, TrainedRouters};
 pub use expert::{train_expert, ExpertConfig};
 pub use inference::{
-    amortized_micros, dense_perplexity, group_by_expert, response_triples, serve, serve_threaded,
-    Mixture, Request, Response,
+    amortized_micros, dense_perplexity, eval_nll_groups, group_by_expert, plan_wave,
+    response_triples, serve, serve_threaded, EvalLaunch, EvalUnit, Mixture, Request, Response,
+    WavePlan,
 };
 pub use pipeline::{run_pipeline, run_pipeline_reference, PipelineConfig, PipelineResult};
 pub use chaos::{

@@ -184,8 +184,10 @@ fn upload_window(
 /// that scores it) and are dropped before the next window starts, so peak
 /// device residency is bounded at `SPAN_WINDOW * prefix_batch` rows no
 /// matter how large the scored corpus is, while the worker pool spawns
-/// once per window — not once per span.
-const SPAN_WINDOW: usize = 16;
+/// once per window — not once per span. The fused eval dispatcher
+/// ([`super::inference::eval_nll_groups`]) windows its launches under the
+/// same constant for the same residency bound.
+pub(crate) const SPAN_WINDOW: usize = 16;
 
 /// The per-router reference path: each router scores every token batch in
 /// its own execution (`E × ceil(rows / prefix_batch)` launches). This is

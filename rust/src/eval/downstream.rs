@@ -11,11 +11,15 @@
 //! domains' documents. Every option row is the same token length so the
 //! conditional NLLs are comparable (the lm-eval length-normalization
 //! concern vanishes by construction).
+//!
+//! Option scoring is allocation-free on the hot loop: rows are borrowed
+//! `&[u32]` slices straight out of the tasks, batched by span and padded
+//! by reference like every other group-evaluation path.
 
 use anyhow::Result;
 
 use crate::coordinator::inference::Mixture;
-use crate::coordinator::scoring::score_matrix_threaded;
+use crate::coordinator::scoring::{batch_spans, pad_batch, score_matrix_threaded};
 use crate::coordinator::assignment::argmin_assign;
 use crate::runtime::parallel::default_threads;
 use crate::data::corpus::{domain_name, generate_document, DOMAINS};
@@ -128,23 +132,18 @@ fn predict_options(
     tasks: &[&Task],
     row_len: usize,
 ) -> Result<Vec<usize>> {
-    // flatten all rows, score in prefix_batch chunks
-    let rows: Vec<Vec<u32>> = tasks
+    // flatten borrowed rows, score in prefix_batch chunks (tail padding
+    // repeats the last row by reference — no option-row clones)
+    let rows: Vec<&[u32]> = tasks
         .iter()
-        .flat_map(|t| t.options.iter().cloned())
+        .flat_map(|t| t.options.iter().map(Vec::as_slice))
         .collect();
     let bs = meta.prefix_batch;
     let mut scores = Vec::with_capacity(rows.len());
-    let mut i = 0;
-    while i < rows.len() {
-        let real = (rows.len() - i).min(bs);
-        let mut batch = rows[i..i + real].to_vec();
-        while batch.len() < bs {
-            batch.push(batch[real - 1].clone());
-        }
+    for (start, real) in batch_spans(rows.len(), bs) {
+        let batch = pad_batch(rows[start..start + real].to_vec(), bs);
         let nll = state.prefix_nll(engine, &batch, meta, row_len)?;
         scores.extend_from_slice(&nll[..real]);
-        i += real;
     }
     // argmin per task
     let mut out = Vec::with_capacity(tasks.len());

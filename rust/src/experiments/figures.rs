@@ -157,7 +157,8 @@ pub fn fig2(suite: &Suite) -> Result<Fig2Artifacts> {
             .with_context(|| format!("no dense comparator was trained for E={e}"))?
             .1;
         let routed = result.mixture.eval_routed(suite.engine, &held_out, b.prefix_len)?;
-        let dense_rows: Vec<Vec<u32>> = held_out.iter().map(|s| s.tokens.clone()).collect();
+        // borrow token rows — the eval path pads by reference, no clones
+        let dense_rows: Vec<&[u32]> = held_out.iter().map(|s| s.tokens.as_slice()).collect();
         let dense_nll = eval_nll_all(suite.engine, dense_e, &meta, &dense_rows)?;
         let mut seg_tokens = vec![0usize; e];
         let mut seg_nll = vec![0.0f64; e];
@@ -456,8 +457,8 @@ pub fn fig4c(suite: &Suite) -> Result<Json> {
             if idx.is_empty() {
                 continue;
             }
-            let rows_tok: Vec<Vec<u32>> =
-                idx.iter().map(|&i| held_out[i].tokens.clone()).collect();
+            let rows_tok: Vec<&[u32]> =
+                idx.iter().map(|&i| held_out[i].tokens.as_slice()).collect();
             let nll = eval_nll_all(suite.engine, &tfidf_experts[x], &meta, &rows_tok)?;
             total_nll += nll.iter().map(|&n| n as f64).sum::<f64>();
         }

@@ -44,12 +44,15 @@ pub struct VariantMeta {
     /// Dense-comparator batch sizes (entry `train_step_b{B}`, paper
     /// Table 2: dense trains the same steps at E x the expert batch).
     pub dense_batches: Vec<usize>,
-    /// Fused all-routers scoring width: when > 0, each compiled prefix
-    /// length also has a `prefix_nll_all_{m}` entry taking a stacked
+    /// Fused stacked-model width: when > 0, each compiled prefix length
+    /// also has a `prefix_nll_all_{m}` entry taking a stacked
     /// `[fused_experts, P]` parameter tensor and returning the full
-    /// `[prefix_batch, fused_experts]` NLL slab in one execution. 0 when
-    /// the manifest predates (or was exported without) `aot.py --fused` —
-    /// the runtime then fans out per router.
+    /// `[prefix_batch, fused_experts]` NLL slab in one execution, and
+    /// each compiled eval bucket has an `eval_nll_all_{b}` entry taking
+    /// the same stacked tensor plus an `[fused_experts, b, seq_len+1]`
+    /// token slab (one launch evaluating a serve wave's per-expert
+    /// batches). 0 when the manifest predates (or was exported without)
+    /// `aot.py --fused` — the runtime then fans out per model.
     pub fused_experts: usize,
     pub opt: OptMeta,
     pub entry_points: Vec<String>,
@@ -75,6 +78,38 @@ impl VariantMeta {
         }
         let entry = format!("prefix_nll_all_{m}");
         self.entry_points.contains(&entry).then_some(entry)
+    }
+
+    /// The fused stacked-expert eval entry for bucket shape `b`, when
+    /// this variant was exported with one (`aot.py --fused`). `None` —
+    /// old manifests, unfused exports, or a `b` outside the compiled
+    /// bucket ladder — means the caller must fan out per expert.
+    pub fn fused_eval_entry(&self, b: usize) -> Option<String> {
+        if self.fused_experts == 0 {
+            return None;
+        }
+        let entry = format!("eval_nll_all_{b}");
+        self.entry_points.contains(&entry).then_some(entry)
+    }
+
+    /// The compiled fused-eval bucket ladder, ascending — parsed straight
+    /// from the entry-point list (the manifest's single source of truth),
+    /// so a manifest with `fused_experts` set but no `eval_nll_all_{b}`
+    /// entries (a pre-fused-eval export) yields an empty ladder and the
+    /// dispatcher keeps the per-expert fan-out.
+    pub fn fused_eval_buckets(&self) -> Vec<usize> {
+        if self.fused_experts == 0 {
+            return Vec::new();
+        }
+        let mut buckets: Vec<usize> = self
+            .entry_points
+            .iter()
+            .filter_map(|e| e.strip_prefix("eval_nll_all_"))
+            .filter_map(|b| b.parse().ok())
+            .collect();
+        buckets.sort_unstable();
+        buckets.dedup();
+        buckets
     }
 
     fn from_json(j: &Json) -> Result<Self> {
@@ -257,6 +292,8 @@ mod tests {
         // pre-fused manifest: no fused field -> fan-out fallback
         assert_eq!(v.fused_experts, 0);
         assert_eq!(v.fused_prefix_entry(32), None);
+        assert_eq!(v.fused_eval_entry(32), None);
+        assert!(v.fused_eval_buckets().is_empty());
     }
 
     #[test]
@@ -278,6 +315,38 @@ mod tests {
         assert_eq!(v.fused_prefix_entry(8), None);
         // a fused_experts field without the entry point never dispatches
         assert_eq!(v.fused_prefix_entry(64), None);
+        // ... and a fused-routers manifest with no eval_nll_all entries
+        // (the PR-4-era export) keeps the per-expert eval fan-out
+        assert_eq!(v.fused_eval_entry(32), None);
+        assert!(v.fused_eval_buckets().is_empty());
+    }
+
+    #[test]
+    fn fused_eval_buckets_parse_sorted_from_entry_points() {
+        let base = r#"{"name":"x","role":"expert","vocab":512,"seq_len":128,
+            "d_model":32,"n_layers":2,"n_heads":2,"d_ffw":128,
+            "param_count":100,"train_batch":16,"eval_batch":16,
+            "prefix_batch":32,"prefix_len":32,
+            "fused_experts":4,
+            "opt":{"peak_lr":0.0001,"warmup_steps":20,"total_steps":2000,
+                   "weight_decay":0.1,"clip_norm":0.1},
+            "entry_points":["init","eval_nll","eval_nll_all_16",
+                            "eval_nll_all_1","eval_nll_all_4"]}"#;
+        let v = VariantMeta::from_json(&Json::parse(base).unwrap()).unwrap();
+        // ladder comes back ascending no matter the manifest order; the
+        // plain eval_nll entry is not a bucket
+        assert_eq!(v.fused_eval_buckets(), vec![1, 4, 16]);
+        assert_eq!(v.fused_eval_entry(4).as_deref(), Some("eval_nll_all_4"));
+        // a bucket outside the compiled ladder never dispatches
+        assert_eq!(v.fused_eval_entry(8), None);
+
+        // the same entries with fused_experts absent (a hand-stripped or
+        // pre-fused manifest) are dead: the gate is both conditions
+        let stripped = base.replace("\"fused_experts\":4,", "");
+        let v = VariantMeta::from_json(&Json::parse(&stripped).unwrap()).unwrap();
+        assert_eq!(v.fused_experts, 0);
+        assert!(v.fused_eval_buckets().is_empty());
+        assert_eq!(v.fused_eval_entry(4), None);
     }
 
     #[test]

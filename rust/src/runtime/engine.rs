@@ -38,16 +38,21 @@
 //!   + insert). Racing [`Engine::state_buffer`] calls for the same state
 //!   serialize — each `(state_id, version)` uploads exactly once — while
 //!   an E-expert wave uploads its E parameter vectors concurrently.
-//! * `stacked_cache` — the fused-scoring stack cache, one slot per
+//! * `stacked_cache` — the fused stacked-parameter cache, one slot per
 //!   **ordered member-id list**: [`Engine::stacked_buffer`] keeps one
-//!   `[E, P]` stacked parameter tensor resident per router set, keyed by
+//!   `[E, P]` stacked parameter tensor resident per member set, keyed by
 //!   the ordered `(state_id, version)` pairs of its members. The slot
 //!   lock is held across the miss path exactly like a device-cache slot,
-//!   so a router set re-stacks + re-uploads exactly once per version set
+//!   so a member set re-stacks + re-uploads exactly once per version set
 //!   under races — and only when some member's version bumped
-//!   ([`EngineStats::stack_rebuilds`]); different router sets (including
+//!   ([`EngineStats::stack_rebuilds`]); different member sets (including
 //!   permutations and padded chunks, which are distinct ordered lists)
-//!   build concurrently.
+//!   build concurrently. **One cache serves both fused paths:** router
+//!   sets for `prefix_nll_all_{m}` scoring and expert sets for
+//!   `eval_nll_all_{b}` wave eval are just different ordered lists (an
+//!   eval launch packing the same expert twice is an ordered list with
+//!   repeats — its own entry, resident like any other), so no second
+//!   cache or lock level exists for the expert side.
 //! * `stats` (`Mutex`) — transfer/time accounting. Always the innermost
 //!   lock.
 //!
@@ -105,6 +110,19 @@ pub struct EngineStats {
     /// Times a stacked `[E, P]` parameter tensor was (re)built and
     /// uploaded — once per distinct router-set version, not per call.
     pub stack_rebuilds: usize,
+    /// Executions that went through a fused stacked-expert eval entry —
+    /// one kernel launch evaluating a bucketed slab of a serve wave's
+    /// per-expert batches.
+    pub fused_eval_executions: usize,
+    /// Per-expert eval executions the fan-out path would have performed
+    /// instead: each fused eval launch over `e` real expert units replaces
+    /// `e` launches with one, avoiding `e - 1` dispatch/readback
+    /// round-trips.
+    pub expert_execs_avoided: usize,
+    /// Padding rows a fused eval launch computed and discarded: rows a
+    /// unit padded past its real batch to reach its bucket, plus whole
+    /// dead `bucket`-row columns padding a short slab to the stack width.
+    pub eval_pad_rows: u64,
 }
 
 impl EngineStats {
@@ -132,6 +150,13 @@ impl EngineStats {
                 .router_execs_avoided
                 .saturating_sub(earlier.router_execs_avoided),
             stack_rebuilds: self.stack_rebuilds.saturating_sub(earlier.stack_rebuilds),
+            fused_eval_executions: self
+                .fused_eval_executions
+                .saturating_sub(earlier.fused_eval_executions),
+            expert_execs_avoided: self
+                .expert_execs_avoided
+                .saturating_sub(earlier.expert_execs_avoided),
+            eval_pad_rows: self.eval_pad_rows.saturating_sub(earlier.eval_pad_rows),
         }
     }
 }
@@ -540,6 +565,32 @@ impl Engine {
         Ok(out)
     }
 
+    /// [`run_buffers`](Engine::run_buffers) for a fused stacked-expert
+    /// eval entry (`eval_nll_all_{b}`): identical execution, plus
+    /// eval-side fused accounting — the launch counts once in
+    /// [`EngineStats::fused_eval_executions`], the `experts_fused` real
+    /// expert units it replaced credit `experts_fused - 1` to
+    /// [`EngineStats::expert_execs_avoided`], and the rows the launch
+    /// computed only to discard (bucket padding + dead stack columns) are
+    /// charged to [`EngineStats::eval_pad_rows`]. `experts_fused` is the
+    /// *real* unit count — a short slab's padding columns are waste
+    /// (`pad_rows`), not avoided launches.
+    pub fn run_buffers_fused_eval(
+        &self,
+        variant: &str,
+        entry: &str,
+        args: &[Arg],
+        experts_fused: usize,
+        pad_rows: u64,
+    ) -> Result<Vec<Literal>> {
+        let out = self.run_buffers(variant, entry, args)?;
+        let mut st = lock(&self.stats);
+        st.fused_eval_executions += 1;
+        st.expert_execs_avoided += experts_fused.saturating_sub(1);
+        st.eval_pad_rows += pad_rows;
+        Ok(out)
+    }
+
     /// Execute an entry point with literal inputs — the upload-per-call
     /// path, kept for inputs that change every call (train batches, seeds).
     pub fn run(&self, variant: &str, entry: &str, args: &[Literal]) -> Result<Vec<Literal>> {
@@ -719,19 +770,31 @@ mod tests {
         a.fused_executions = 2;
         a.router_execs_avoided = 6;
         a.stack_rebuilds = 1;
+        a.fused_eval_executions = 1;
+        a.expert_execs_avoided = 3;
+        a.eval_pad_rows = 7;
         let mut b = a.clone();
         b.fused_executions = 5;
         b.router_execs_avoided = 15;
         b.stack_rebuilds = 3;
+        b.fused_eval_executions = 4;
+        b.expert_execs_avoided = 12;
+        b.eval_pad_rows = 40;
         let d = b.since(&a);
         assert_eq!(d.fused_executions, 3);
         assert_eq!(d.router_execs_avoided, 9);
         assert_eq!(d.stack_rebuilds, 2);
+        assert_eq!(d.fused_eval_executions, 3);
+        assert_eq!(d.expert_execs_avoided, 9);
+        assert_eq!(d.eval_pad_rows, 33);
         // saturating across a reset, like every other counter
         let z = a.since(&b);
         assert_eq!(z.fused_executions, 0);
         assert_eq!(z.router_execs_avoided, 0);
         assert_eq!(z.stack_rebuilds, 0);
+        assert_eq!(z.fused_eval_executions, 0);
+        assert_eq!(z.expert_execs_avoided, 0);
+        assert_eq!(z.eval_pad_rows, 0);
     }
 
     #[test]

@@ -280,16 +280,17 @@ impl TrainState {
 }
 
 /// The device-resident stacked `[E, P]` parameter tensor of an ordered
-/// router set — the first input of a fused `prefix_nll_all_{m}` entry.
-/// Served from the engine's stacked cache keyed by the members' ordered
-/// `(state_id, version)` pairs: the flat parameter vectors are
-/// concatenated and uploaded once per router-set version, and any single
-/// member's version bump (training, checkpoint load) re-stacks and
+/// model set — the first input of a fused `prefix_nll_all_{m}` scoring
+/// entry (router sets) or a fused `eval_nll_all_{b}` wave-eval entry
+/// (expert sets). Served from the engine's stacked cache keyed by the
+/// members' ordered `(state_id, version)` pairs: the flat parameter
+/// vectors are concatenated and uploaded once per set version, and any
+/// single member's version bump (training, checkpoint load) re-stacks and
 /// re-uploads automatically. A padded set (the last fused chunk repeats
-/// its final router) is simply an ordered list with repeated members —
+/// its final member) is simply an ordered list with repeated members —
 /// its own cache entry, resident like any other.
 pub fn stacked_params_buffer(engine: &Engine, states: &[&TrainState]) -> Result<DeviceBuffer> {
-    ensure!(!states.is_empty(), "cannot stack an empty router set");
+    ensure!(!states.is_empty(), "cannot stack an empty model set");
     let p = states[0].param_count();
     let members: Vec<(u64, u64)> = states.iter().map(|s| (s.id, s.version)).collect();
     engine.stacked_buffer(&members, || {

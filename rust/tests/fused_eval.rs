@@ -1,0 +1,475 @@
+//! Fused stacked-expert eval suite: the bucket-ladder wave planner and
+//! the `eval_nll_all_{b}` execution path.
+//!
+//! Two tiers, following `rust/tests/fused_scoring.rs`:
+//!
+//! * **Stub backend (tier-1, no artifacts):** handwritten temp-dir
+//!   manifests prove the back-compat gate — a pre-fused manifest and a
+//!   fused-routers-only manifest (the PR-4-era export, `fused_experts`
+//!   set but no `eval_nll_all_{b}` entries) both parse, expose an empty
+//!   bucket ladder, and plan every wave as pure per-expert fan-out.
+//!   [`plan_wave`] itself is pure, so the ladder properties (bucket
+//!   edges, chunking, counter reconciliation, exact coverage) run on
+//!   group-size grids without any device.
+//! * **Artifacts-gated (standard self-skip):** with compiled artifacts
+//!   carrying fused eval entries (`aot.py --fused`), a wave's fused
+//!   `(group, row)` NLLs are bit-identical to the fan-out fallback at
+//!   worker counts {1, E} over group sizes straddling every bucket edge,
+//!   dead padding rows never leak, an E=4 straddle wave drops from 5
+//!   expert launches to 2 bucketed launches (the acceptance criterion,
+//!   asserted via [`EngineStats`]), and the pad/avoided counters
+//!   reconcile exactly against the planner's arithmetic.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use smalltalk::coordinator::inference::{eval_nll_groups, plan_wave, EvalLaunch};
+use smalltalk::coordinator::{response_triples, run_pipeline, serve_threaded, PipelineConfig};
+use smalltalk::data::SequenceGen;
+use smalltalk::runtime::{locate_artifacts, Engine, TrainState, VariantMeta};
+use smalltalk::tokenizer::{Bpe, BpeTrainer};
+
+// ---------------------------------------------------------------------
+// stub-backend manifests (tier-1): parse + plan, no execution
+// ---------------------------------------------------------------------
+
+/// A stub manifest with the given fused field fragment and entry list.
+fn stub_engine(fused_fragment: &str, entries: &str) -> Engine {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    let manifest = format!(
+        r#"{{
+  "fingerprint": "fused-eval-test-stub",
+  "variants": [{{
+    "name": "stub", "role": "expert", "vocab": 512, "seq_len": 64,
+    "d_model": 8, "n_layers": 1, "n_heads": 1, "d_ffw": 16,
+    "param_count": 32, "train_batch": 4, "eval_batch": 4,
+    "prefix_batch": 4, "prefix_len": 8, "prefix_lens": [8],
+    {fused_fragment}
+    "opt": {{"peak_lr": 0.001, "warmup_steps": 10, "total_steps": 100,
+            "schedule": "constant", "weight_decay": 0.1, "clip_norm": 1.0}},
+    "entry_points": [{entries}]
+  }}]
+}}"#
+    );
+    let dir = std::env::temp_dir().join(format!(
+        "smalltalk_fused_eval_{}_{}",
+        std::process::id(),
+        NEXT.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&dir).expect("creating stub manifest dir");
+    std::fs::write(dir.join("manifest.json"), manifest).expect("writing stub manifest");
+    Engine::new(&dir).expect("stub engine must construct without artifacts")
+}
+
+/// Satellite: back-compat — a manifest with `fused_experts` set but no
+/// `eval_nll_all_{b}` entries (the PR-4-era fused-routers export) and a
+/// fully pre-fused manifest both parse, expose an empty bucket ladder,
+/// and plan pure fan-out; old manifests stay valid unchanged.
+#[test]
+fn backcompat_manifests_parse_and_plan_pure_fanout() {
+    // PR-4-era: fused routers, no fused eval
+    let pr4 = stub_engine(
+        r#""fused_experts": 4,"#,
+        r#""init", "train_step", "eval_nll", "prefix_nll_8", "prefix_nll_all_8""#,
+    );
+    let v = pr4.variant("stub").unwrap();
+    assert_eq!(v.fused_experts, 4);
+    assert!(v.fused_prefix_entry(8).is_some(), "router fusion untouched");
+    assert!(v.fused_eval_buckets().is_empty());
+    assert_eq!(v.fused_eval_entry(4), None);
+
+    // pre-fused: no fused field at all
+    let prefused = stub_engine("", r#""init", "train_step", "eval_nll", "prefix_nll_8""#);
+    let v2 = prefused.variant("stub").unwrap();
+    assert_eq!(v2.fused_experts, 0);
+    assert!(v2.fused_eval_buckets().is_empty());
+
+    // either way the planner degrades every wave to per-expert fan-out
+    for meta in [v, v2] {
+        let plan = plan_wave(
+            &[1, 3, 4, 9],
+            meta.eval_batch,
+            &meta.fused_eval_buckets(),
+            meta.fused_experts,
+        );
+        assert!(
+            plan.launches
+                .iter()
+                .all(|l| matches!(l, EvalLaunch::Single(_))),
+            "empty ladder must never fuse"
+        );
+        assert_eq!(plan.execs_avoided, 0);
+        assert_eq!(plan.pad_rows, 0);
+        // spans: 1 + 1 + 1 + 3 at eval_batch 4
+        assert_eq!(plan.launches.len(), 6);
+    }
+}
+
+/// A fused-eval manifest parses its ladder from the entry points — no
+/// separate manifest field to drift out of sync.
+#[test]
+fn fused_eval_manifest_parses_ladder_from_entries() {
+    let eng = stub_engine(
+        r#""fused_experts": 4,"#,
+        r#""init", "eval_nll", "eval_nll_all_1", "eval_nll_all_2", "eval_nll_all_4""#,
+    );
+    let v = eng.variant("stub").unwrap();
+    assert_eq!(v.fused_eval_buckets(), vec![1, 2, 4]);
+    assert_eq!(v.fused_eval_entry(2).as_deref(), Some("eval_nll_all_2"));
+    assert_eq!(v.fused_eval_entry(3), None, "only compiled buckets dispatch");
+}
+
+/// A mismatched experts/groups wave is a structured error before any
+/// device work.
+#[test]
+fn eval_nll_groups_rejects_mismatched_wave() {
+    let eng = stub_engine("", r#""init", "eval_nll""#);
+    let meta = eng.variant("stub").unwrap().clone();
+    let state = TrainState::from_params("stub", vec![0.0; 32], vec![0.0; 32], vec![0.0; 32], 0);
+    let groups: Vec<Vec<&[u32]>> = vec![Vec::new(), Vec::new()];
+    let err = eval_nll_groups(&eng, &[&state], &meta, &groups, 1)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("2 expert groups for 1 experts"), "{err}");
+}
+
+// ---------------------------------------------------------------------
+// planner properties on group-size grids (tier-1, pure)
+// ---------------------------------------------------------------------
+
+const LADDER: &[usize] = &[1, 2, 4, 8, 16];
+
+/// Every (group, row) index is covered by exactly one launch unit.
+fn assert_covers_exactly_once(launches: &[EvalLaunch], sizes: &[usize]) {
+    let mut seen: Vec<Vec<bool>> = sizes.iter().map(|&n| vec![false; n]).collect();
+    let units = launches.iter().flat_map(|l| match l {
+        EvalLaunch::Fused { units, .. } => units.as_slice(),
+        EvalLaunch::Single(u) => std::slice::from_ref(u),
+    });
+    for u in units {
+        for i in u.start..u.start + u.real {
+            assert!(!seen[u.group][i], "row ({}, {i}) covered twice", u.group);
+            seen[u.group][i] = true;
+        }
+    }
+    for (g, rows) in seen.iter().enumerate() {
+        assert!(rows.iter().all(|&s| s), "group {g} not fully covered");
+    }
+}
+
+/// Satellite: bucket-edge property grid — for every group-size mix
+/// straddling every bucket edge and every stack width, the plan covers
+/// each row exactly once, never overfills a stack, never mixes buckets
+/// in one launch, picks the smallest bucket that fits each unit, and its
+/// counters reconcile exactly: `launches == fanout - avoided` and
+/// `pad_rows` matches per-launch arithmetic.
+#[test]
+fn plan_wave_properties_across_bucket_edges() {
+    let bs = 16usize;
+    let edge_sizes: Vec<Vec<usize>> = vec![
+        vec![1, 15, 16, 17],          // straddling the top bucket edge
+        vec![1, 1, 2, 3],             // all tiny buckets
+        vec![2 * bs + 3, 0, 0, 0],    // skewed: one expert takes the wave
+        vec![0, 0, 0, 0],             // empty wave
+        vec![5, 8, 9, 16],            // mid-ladder edges (4|8, 8, 16, 16)
+        vec![bs + 1, bs + 1, 1, bs],  // repeated straddles
+        vec![3 * bs + 5],             // single group, multi-span
+        vec![7; 9],                   // wider than any stack
+    ];
+    for sizes in &edge_sizes {
+        for &width in &[2usize, 3, 4, 8] {
+            let plan = plan_wave(sizes, bs, LADDER, width);
+            assert_covers_exactly_once(&plan.launches, sizes);
+            let mut fused_launches = 0usize;
+            let mut avoided = 0usize;
+            let mut pad = 0u64;
+            for l in &plan.launches {
+                if let EvalLaunch::Fused { bucket, units } = l {
+                    fused_launches += 1;
+                    assert!(units.len() >= 2, "one-unit stacks must go single");
+                    assert!(units.len() <= width, "stack overfilled");
+                    avoided += units.len() - 1;
+                    for u in units {
+                        assert_eq!(u.bucket, *bucket, "launch mixes buckets");
+                        assert!(u.real <= *bucket, "unit overflows its bucket");
+                        // smallest bucket that fits
+                        let best = LADDER.iter().find(|&&b| b >= u.real).copied();
+                        assert_eq!(Some(*bucket), best, "not the smallest fitting bucket");
+                        pad += (*bucket - u.real) as u64;
+                    }
+                    pad += ((width - units.len()) * bucket) as u64;
+                }
+            }
+            assert_eq!(plan.execs_avoided, avoided, "{sizes:?} width {width}");
+            assert_eq!(plan.pad_rows, pad, "{sizes:?} width {width}");
+            assert_eq!(
+                plan.launches.len(),
+                plan.fanout_launches - plan.execs_avoided,
+                "{sizes:?} width {width}: counters must reconcile"
+            );
+            assert!(fused_launches <= plan.launches.len());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// XLA-backed tests (self-skip without artifacts; the fused tests also
+// self-skip on manifests lacking eval_nll_all entries)
+// ---------------------------------------------------------------------
+
+struct Setup {
+    engine: Engine,
+    bpe: Bpe,
+    mixture: smalltalk::coordinator::Mixture,
+}
+
+static SETUP: std::sync::OnceLock<Option<Setup>> = std::sync::OnceLock::new();
+
+/// One trained E=4 mixture shared by the execution tests (the pattern of
+/// `rust/tests/fused_scoring.rs`). Tests that assert on engine stats
+/// build their own private engine instead of touching this shared one.
+fn setup() -> Option<&'static Setup> {
+    SETUP
+        .get_or_init(|| {
+            let dir = locate_artifacts()?;
+            let engine = Engine::new(dir).expect("loading artifacts");
+            let corpus = smalltalk::data::corpus::Corpus::generate(60, 400, 42, None);
+            let bpe = BpeTrainer::new(512).train(corpus.texts()).unwrap();
+            let cfg = PipelineConfig {
+                router_variant: "router_micro".into(),
+                expert_variant: "expert_sm".into(),
+                n_experts: 4,
+                em_rounds: 2,
+                em_chunk: 96,
+                em_steps_per_round: 8,
+                shard_sequences: 128,
+                expert_steps: 10,
+                prefix_len: 32,
+                seed: 3,
+                threads: 0,
+            };
+            let mixture = run_pipeline(&engine, &bpe, &cfg)
+                .expect("training the shared test mixture")
+                .mixture;
+            Some(Setup { engine, bpe, mixture })
+        })
+        .as_ref()
+}
+
+/// `expert_meta` with the fused eval entries stripped: the dispatcher
+/// sees an empty ladder and takes the bit-identical per-expert fan-out —
+/// the reference the fused path is compared against.
+fn stripped_meta(meta: &VariantMeta) -> VariantMeta {
+    let mut stripped = meta.clone();
+    stripped
+        .entry_points
+        .retain(|e| !e.starts_with("eval_nll_all_"));
+    assert!(stripped.fused_eval_buckets().is_empty());
+    stripped
+}
+
+/// Wave token pool: full `seq_len + 1` eval rows.
+fn pool(setup: &Setup, n: usize, seed: u64) -> Vec<Vec<u32>> {
+    SequenceGen::new(&setup.bpe, setup.mixture.expert_meta.seq_len, seed)
+        .batch(n)
+        .into_iter()
+        .map(|s| s.tokens)
+        .collect()
+}
+
+/// Slice a flat pool into per-expert groups of the given sizes.
+fn groups_of<'a>(pool: &'a [Vec<u32>], sizes: &[usize]) -> Vec<Vec<&'a [u32]>> {
+    let mut start = 0usize;
+    sizes
+        .iter()
+        .map(|&n| {
+            let g: Vec<&[u32]> = pool[start..start + n].iter().map(Vec::as_slice).collect();
+            start += n;
+            g
+        })
+        .collect()
+}
+
+fn require_fused_eval(meta: &VariantMeta) -> bool {
+    if meta.fused_eval_buckets().is_empty() {
+        eprintln!(
+            "[fused_eval] manifest has no eval_nll_all entries for {} — \
+             re-run `make artifacts`; skipping",
+            meta.name
+        );
+        return false;
+    }
+    true
+}
+
+/// Satellite: fused and fan-out wave eval are bit-identical — every
+/// bucket edge, a skewed all-to-one wave, and an empty group included —
+/// at worker counts {1, E}, and no dead padding row ever leaks into a
+/// real slot (the outputs have exactly the group sizes, every value
+/// accounted against the reference).
+#[test]
+fn fused_wave_matches_fanout_bit_for_bit() {
+    let Some(setup) = setup() else { return };
+    let meta = &setup.mixture.expert_meta;
+    if !require_fused_eval(meta) {
+        return;
+    }
+    let experts: Vec<&TrainState> = setup.mixture.experts.iter().collect();
+    let e = experts.len();
+    let bs = meta.eval_batch;
+    let stripped = stripped_meta(meta);
+
+    let waves: Vec<Vec<usize>> = vec![
+        vec![1, bs - 1, bs, bs + 1],    // every bucket edge at once
+        vec![2 * bs + 3, 0, 0, 0],      // skewed: one expert, empty groups
+        vec![1, 1, 1, 1],               // all-tiny: one fused launch
+        vec![0, 0, 0, 0],               // empty wave
+        vec![bs, bs, bs, bs],           // aligned full buckets
+    ];
+    for sizes in &waves {
+        let n: usize = sizes.iter().sum();
+        let rows = pool(setup, n, 23);
+        let groups = groups_of(&rows, sizes);
+        let reference =
+            eval_nll_groups(&setup.engine, &experts, &stripped, &groups, 1).unwrap();
+        for (g, r) in reference.iter().enumerate() {
+            assert_eq!(r.len(), sizes[g], "fan-out output shape");
+        }
+        for threads in [1usize, e] {
+            let fused = eval_nll_groups(&setup.engine, &experts, meta, &groups, threads).unwrap();
+            assert_eq!(fused.len(), reference.len());
+            for (g, (f, r)) in fused.iter().zip(&reference).enumerate() {
+                assert_eq!(f.len(), r.len(), "sizes {sizes:?} group {g}: dead rows leaked");
+                for i in 0..f.len() {
+                    assert_eq!(
+                        f[i].to_bits(),
+                        r[i].to_bits(),
+                        "sizes {sizes:?} threads={threads}: [{g}][{i}] diverged from fan-out"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Launch accounting (the acceptance criterion): at E=4 a straddle wave
+/// {1, bs-1, bs, bs+1} executes 2 bucketed launches instead of the
+/// fan-out's 5, a skewed all-to-one wave executes 2 instead of 4, and
+/// the [`EngineStats`] pad/avoided counters reconcile exactly with the
+/// planner's arithmetic.
+#[test]
+fn fused_wave_launch_accounting() {
+    let Some(setup) = setup() else { return };
+    let Some(dir) = locate_artifacts() else { return };
+    let meta = &setup.mixture.expert_meta;
+    if !require_fused_eval(meta) {
+        return;
+    }
+    // private engine: isolate counters from concurrently running tests
+    let eng = Engine::new(dir).expect("loading artifacts");
+    let experts: Vec<&TrainState> = setup.mixture.experts.iter().collect();
+    let bs = meta.eval_batch;
+    let stripped = stripped_meta(meta);
+
+    for (label, sizes, fanout_want) in [
+        ("straddle", vec![1, bs - 1, bs, bs + 1], 5usize),
+        ("skewed", vec![3 * bs + 5, 0, 0, 0], 4),
+    ] {
+        let n: usize = sizes.iter().sum();
+        let rows = pool(setup, n, 29);
+        let groups = groups_of(&rows, &sizes);
+        let plan = plan_wave(&sizes, bs, &meta.fused_eval_buckets(), meta.fused_experts);
+        assert_eq!(plan.fanout_launches, fanout_want, "{label}");
+        assert!(
+            plan.launches.len() <= 2,
+            "{label}: an E=4 wave must plan at most 2 launches"
+        );
+
+        // warm the compile cache (and the stacked cache for this member
+        // set) so executions, not compiles, are measured
+        eval_nll_groups(&eng, &experts, &stripped, &groups, 1).unwrap();
+        eval_nll_groups(&eng, &experts, meta, &groups, 1).unwrap();
+
+        let s0 = eng.stats();
+        eval_nll_groups(&eng, &experts, &stripped, &groups, 1).unwrap();
+        let fanout = eng.stats().since(&s0);
+        assert_eq!(
+            fanout.executions, fanout_want,
+            "{label}: fan-out runs one launch per expert batch"
+        );
+        assert_eq!(fanout.fused_eval_executions, 0);
+        assert_eq!(fanout.eval_pad_rows, 0);
+
+        let s0 = eng.stats();
+        eval_nll_groups(&eng, &experts, meta, &groups, 1).unwrap();
+        let fused = eng.stats().since(&s0);
+        let fused_want = plan
+            .launches
+            .iter()
+            .filter(|l| matches!(l, EvalLaunch::Fused { .. }))
+            .count();
+        assert_eq!(
+            fused.executions,
+            plan.launches.len(),
+            "{label}: total launches match the plan"
+        );
+        assert_eq!(fused.fused_eval_executions, fused_want, "{label}");
+        assert_eq!(
+            fused.expert_execs_avoided, plan.execs_avoided,
+            "{label}: avoided launches reconcile with the plan"
+        );
+        assert_eq!(
+            fused.eval_pad_rows, plan.pad_rows,
+            "{label}: discarded rows reconcile with the plan"
+        );
+        assert_eq!(
+            fused.stack_rebuilds, 0,
+            "{label}: the warm-up call already stacked these versions"
+        );
+        assert_eq!(fused.compiles, 0, "{label}: warm cache — no compiles");
+    }
+}
+
+/// End to end: closed-wave serving answers identically with and without
+/// fused eval entries — same `(id, expert, nll)` triples at worker
+/// counts {1, E} — so flipping manifests can never change results.
+#[test]
+fn serve_triples_identical_fused_vs_fanout() {
+    let Some(setup) = setup() else { return };
+    let meta = &setup.mixture.expert_meta;
+    if !require_fused_eval(meta) {
+        return;
+    }
+    let bs = meta.eval_batch;
+    let m = 32usize;
+    let rows = pool(setup, 2 * bs + 3, 31);
+    let requests: Vec<smalltalk::coordinator::Request> = rows
+        .iter()
+        .enumerate()
+        .map(|(i, r)| smalltalk::coordinator::Request {
+            id: i as u64,
+            tokens: r.clone(),
+        })
+        .collect();
+
+    // a mixture whose expert manifest lacks the fused eval entries: the
+    // serving loop transparently falls back to per-expert fan-out
+    let fallback = smalltalk::coordinator::Mixture {
+        routers: setup.mixture.routers.clone(),
+        router_meta: setup.mixture.router_meta.clone(),
+        experts: setup.mixture.experts.clone(),
+        expert_meta: stripped_meta(meta),
+    };
+
+    let reference =
+        serve_threaded(&setup.engine, &fallback, &requests, m, 1).unwrap();
+    let want = response_triples(&reference);
+    for threads in [1usize, setup.mixture.n_experts()] {
+        let fused =
+            serve_threaded(&setup.engine, &setup.mixture, &requests, m, threads).unwrap();
+        assert_eq!(
+            response_triples(&fused),
+            want,
+            "threads={threads}: fused serving diverged from fan-out"
+        );
+    }
+}

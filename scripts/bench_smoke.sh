@@ -5,7 +5,12 @@
 # leaves a perf trajectory point. The routing bench's fused-vs-fan-out
 # rows (seqs/s, executions-per-request, h2d bytes) land in
 # BENCH_routing.json when the artifacts carry `prefix_nll_all` entries
-# (the default `make artifacts` exports them via `aot.py --fused 4`).
+# (the default `make artifacts` exports them via `aot.py --fused 4`);
+# its fused-expert rows (launches per wave, pad-row counts) and the serve
+# bench's fan-out-vs-fused closed-wave rows (p50/p95 per-request latency,
+# launch/pad accounting, triples guard) land in BENCH_routing.json /
+# BENCH_serve.json when the artifacts also carry `eval_nll_all` bucket
+# entries (same fused export).
 # Skips gracefully (with a marker file) when the AOT artifacts or the
 # native XLA backend are unavailable.
 set -euo pipefail
