@@ -17,12 +17,15 @@
 #   make test-chaos        the elastic-trainer chaos suite (seeded fault plans:
 #                          kills/adoption, leave/rejoin merges, joins, delayed
 #                          publishes), serial + interleaved
+#   make test-shard        the fleet-shard suite (shard-level chaos, whole-shard
+#                          re-adoption, cross-shard byte audit, JSON replay,
+#                          checkpoint namespacing), serial + interleaved
 #   make artifacts         AOT-lower every model variant to artifacts/ (needs jax;
 #                          exports the fused prefix_nll_all entries at width 4)
 #   make bench-smoke       tiny-budget routing+serve+train_step+trainer benches
 #                          -> BENCH_routing.json + BENCH_serve.json + BENCH_train.json
 
-.PHONY: build test test-concurrency test-serve test-net test-fused test-fused-eval test-async test-chaos artifacts bench-smoke clean
+.PHONY: build test test-concurrency test-serve test-net test-fused test-fused-eval test-async test-chaos test-shard artifacts bench-smoke clean
 
 build:
 	cargo build --release
@@ -85,6 +88,16 @@ test-async:
 test-chaos:
 	RUST_TEST_THREADS=1 cargo test -q --test chaos_train
 	RUST_TEST_THREADS=8 cargo test -q --test chaos_train
+
+# Fleet-shard suite: multi-shard fault domains on the stub backend
+# (shard partitions, leader losses, whole-shard kills vs a clean fleet's
+# bit-identical reference; the exact intra/inter-shard byte audit; JSON
+# spec replay; namespaced checkpoints + legacy flat resume) — all
+# deterministic, so it runs under both serial and heavily interleaved
+# test scheduling.
+test-shard:
+	RUST_TEST_THREADS=1 cargo test -q --test shard_train
+	RUST_TEST_THREADS=8 cargo test -q --test shard_train
 
 # --fused 4 matches the routing-bench/e2e expert count E=4; omit it to
 # reproduce a pre-fused manifest (the runtime then fans out per router).

@@ -13,9 +13,10 @@ use std::time::Duration;
 use anyhow::Result;
 
 use smalltalk::coordinator::{
-    run_elastic_nodes, run_pipeline_reference, run_trainer, CommKind, ElasticPlan, ElasticPolicy,
-    ElasticReport, FaultPlan, LeaveEvent, NodeRunConfig, PipelineConfig, PlanShape, Rejoin,
-    RouterSnapshot, SnapshotStore, TrainBackend, TrainerConfig,
+    run_elastic_nodes, run_pipeline_reference, run_sharded_nodes, run_trainer, CommKind,
+    ElasticHandle, ElasticPlan, ElasticPolicy, ElasticReport, FaultPlan, FleetReport, LeaveEvent,
+    NodeRunConfig, PipelineConfig, PlanShape, Rejoin, RouterSnapshot, ShardCtx, ShardPlan,
+    SnapshotStore, TrainBackend, TrainerConfig,
 };
 use smalltalk::data::corpus::Corpus;
 use smalltalk::data::SequenceGen;
@@ -129,6 +130,7 @@ fn chaos_run(bpe: &Bpe, dir: &Path) -> ElasticReport {
                 drops: 1,
                 publish_gates: 0,
                 snapshot_versions: 1,
+                ..PlanShape::default()
             },
         ),
         leaves: vec![LeaveEvent {
@@ -184,6 +186,90 @@ fn chaos_run(bpe: &Bpe, dir: &Path) -> ElasticReport {
     report
 }
 
+// ------------------------------------------------------------------
+// sharded fleet chaos row (stub backend — the multi-shard fault model)
+// ------------------------------------------------------------------
+
+const SHARD_SEATS: usize = 4;
+const SHARD_COUNT: usize = 2;
+const SHARD_ROUNDS: u64 = 3;
+const SHARD_STEPS: usize = 12;
+
+/// One fleet run under a seeded shard-level fault plan: a node kill, a
+/// cross-shard partition, a leader loss, and a whole-shard kill, all
+/// recovered — measures what the fault-domain machinery costs and how
+/// the traffic splits across the shard boundary.
+fn shard_chaos_run(bpe: &Bpe, dir: &Path) -> FleetReport {
+    let _ = std::fs::remove_dir_all(dir);
+    std::fs::create_dir_all(dir).expect("shard bench dir");
+    let backend = ElasticStub { seats: SHARD_SEATS };
+    let plan = ShardPlan::partition(SHARD_SEATS, SHARD_COUNT).expect("shard plan");
+    let fleet = ElasticPlan {
+        faults: FaultPlan::generate(
+            23,
+            &PlanShape {
+                nodes: SHARD_SEATS,
+                steps_per_node: SHARD_STEPS as u64,
+                kills: 1,
+                transients: 1,
+                shards: SHARD_COUNT,
+                partitions: 1,
+                leader_losses: 1,
+                shard_kills: 1,
+                em_rounds: SHARD_ROUNDS,
+                ..PlanShape::default()
+            },
+        ),
+        ..ElasticPlan::default()
+    };
+    let seeds: Vec<u64> = (0..SHARD_SEATS).map(|e| 0xE0 + e as u64).collect();
+    let cfg = NodeRunConfig {
+        steps_per_node: SHARD_STEPS,
+        checkpoint_every: 2,
+        checkpoint_dir: Some(dir.to_path_buf()),
+        threads: 2,
+        snapshot_wait_us: 10_000_000,
+        ..NodeRunConfig::default()
+    };
+    let factory = |e: usize, salt: u64| {
+        SequenceGen::new(
+            bpe,
+            CHAOS_SEQ,
+            (0xA5_0000 + e as u64) ^ salt.wrapping_mul(0x9E37_79B9),
+        )
+    };
+    let blocks = |s: usize, round: u64| -> Vec<TrainState> {
+        plan.members(s)
+            .iter()
+            .map(|&seat| {
+                TrainState::from_params(
+                    "router",
+                    vec![seat as f32 + round as f32 * 0.01; CHAOS_P],
+                    vec![0.0; CHAOS_P],
+                    vec![0.0; CHAOS_P],
+                    round,
+                )
+            })
+            .collect()
+    };
+    let (report, _routers) = run_sharded_nodes(
+        &backend,
+        &plan,
+        &seeds,
+        factory,
+        &cfg,
+        &fleet,
+        |s: usize, ctx: &ShardCtx<'_>, handle: &ElasticHandle<'_, '_>| {
+            for round in 1..=SHARD_ROUNDS {
+                ctx.round_boundary(handle, round, &blocks(s, round))?;
+            }
+            Ok(blocks(s, SHARD_ROUNDS))
+        },
+    )
+    .expect("sharded chaos run");
+    report
+}
+
 fn main() {
     let corpus = Corpus::generate(60, 400, 42, None);
     let bpe = BpeTrainer::new(512).train(corpus.texts()).unwrap();
@@ -229,6 +315,50 @@ fn main() {
         cs.kills, cs.adoptions, cs.steps_lost, cs.recovery_micros, cs.merges
     );
     let _ = std::fs::remove_dir_all(&chaos_dir);
+
+    // sharded fleet row: the same orchestration under multi-shard fault
+    // domains, with the intra/inter-shard traffic split on the record
+    let shard_dir = std::env::temp_dir().join(format!(
+        "smalltalk_bench_shard_{}",
+        std::process::id()
+    ));
+    let shard_once = shard_chaos_run(&bpe, &shard_dir);
+    let shard_seqs = (SHARD_SEATS * SHARD_STEPS * CHAOS_BS) as f64;
+    let r = suite.bench("sharded fleet chaos run (2 shards x 2 seats)", || {
+        std::hint::black_box(shard_chaos_run(&bpe, &shard_dir).ends.len());
+    });
+    println!(
+        "    -> {:.1} trained seqs/s under shard chaos",
+        r.throughput(shard_seqs)
+    );
+    let ss = &shard_once.stats;
+    let promotions: u64 = shard_once.shards.iter().map(|s| s.promotions).sum();
+    let rounds_missed: u64 = shard_once.shards.iter().map(|s| s.rounds_missed).sum();
+    suite.annotate("shard_chaos_shards", SHARD_COUNT as f64);
+    suite.annotate("shard_chaos_kills", ss.kills as f64);
+    suite.annotate("shard_chaos_steps_lost", ss.steps_lost as f64);
+    suite.annotate("shard_chaos_recovery_micros", ss.recovery_micros as f64);
+    suite.annotate("shard_chaos_promotions", promotions as f64);
+    suite.annotate("shard_chaos_rounds_missed", rounds_missed as f64);
+    suite.annotate(
+        "shard_chaos_intra_bytes",
+        shard_once.ledger.intra_shard_bytes() as f64,
+    );
+    suite.annotate(
+        "shard_chaos_inter_bytes",
+        shard_once.ledger.inter_shard_bytes() as f64,
+    );
+    println!(
+        "    shard chaos: {} kill(s), {} step(s) lost, {} promotion(s), {} round(s) missed, \
+         intra {} B vs inter {} B",
+        ss.kills,
+        ss.steps_lost,
+        promotions,
+        rounds_missed,
+        shard_once.ledger.intra_shard_bytes(),
+        shard_once.ledger.inter_shard_bytes(),
+    );
+    let _ = std::fs::remove_dir_all(&shard_dir);
 
     let Some(artifacts) = locate_artifacts() else {
         eprintln!(

@@ -70,6 +70,9 @@ pub struct ExperimentConfig {
     /// Async: re-adopt the departed seat once the fleet reaches this many
     /// total steps (`--join-after`; 0 = no adoption).
     pub join_after: usize,
+    /// Async: partition expert seats across this many snapshot-store
+    /// fault domains (`--shards`; 1 = the single-store elastic trainer).
+    pub shards: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -97,6 +100,7 @@ impl Default for ExperimentConfig {
             chaos_spec: String::new(),
             leave_after: 0,
             join_after: 0,
+            shards: 1,
         }
     }
 }
@@ -211,6 +215,9 @@ impl ExperimentConfig {
         if let Some(v) = u("join_after") {
             self.join_after = v;
         }
+        if let Some(v) = u("shards") {
+            self.shards = v;
+        }
     }
 
     /// Apply `--key value` CLI overrides (same keys as the JSON form).
@@ -267,6 +274,7 @@ impl ExperimentConfig {
         }
         self.leave_after = args.get_usize("leave-after", self.leave_after)?;
         self.join_after = args.get_usize("join-after", self.join_after)?;
+        self.shards = args.get_usize("shards", self.shards)?;
         Ok(())
     }
 
@@ -318,6 +326,7 @@ impl ExperimentConfig {
             ("chaos_spec", Json::str(self.chaos_spec.clone())),
             ("leave_after", Json::num(self.leave_after as f64)),
             ("join_after", Json::num(self.join_after as f64)),
+            ("shards", Json::num(self.shards as f64)),
         ])
     }
 }
@@ -352,6 +361,7 @@ mod tests {
         c.chaos_spec = "plans/faults.json".into();
         c.leave_after = 12;
         c.join_after = 40;
+        c.shards = 3;
         let j = c.to_json();
         let mut c2 = ExperimentConfig::default();
         c2.apply_json(&j);
@@ -371,6 +381,7 @@ mod tests {
         assert_eq!(c2.chaos_spec, "plans/faults.json");
         assert_eq!(c2.leave_after, 12);
         assert_eq!(c2.join_after, 40);
+        assert_eq!(c2.shards, 3);
     }
 
     #[test]
@@ -392,6 +403,7 @@ mod tests {
             "--chaos-spec=faults.json",
             "--leave-after=9",
             "--join-after=30",
+            "--shards=2",
         ]
         .iter()
         .map(|s| s.to_string())
@@ -415,6 +427,7 @@ mod tests {
         assert_eq!(c.chaos_spec, "faults.json");
         assert_eq!(c.leave_after, 9);
         assert_eq!(c.join_after, 30);
+        assert_eq!(c.shards, 2);
     }
 
     #[test]

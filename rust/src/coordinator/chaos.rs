@@ -76,6 +76,41 @@ pub struct PublishGate {
     pub min_total_steps: u64,
 }
 
+/// Cut shard `shard` off the cross-shard exchange for `rounds` EM rounds
+/// starting at `from_round` (inclusive): the partitioned shard neither
+/// sends nor receives cross-shard publishes while cut off, keeps routing
+/// against its stale held copies, and catches up through the delayed-
+/// Nesterov merge path when the partition heals. Keyed on EM rounds, not
+/// wall-clock, so replays are exact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardPartitionSpec {
+    pub shard: usize,
+    pub from_round: u64,
+    pub rounds: u64,
+}
+
+/// Kill shard `shard`'s router leader at EM round `at_round`: the next
+/// surviving member is promoted and adopts the leader's checkpoint (a
+/// [`crate::coordinator::comm::CommKind::ShardAdopt`] transfer). The
+/// round's publish still happens — re-derived deterministically by the
+/// promoted member — so leader loss perturbs accounting, never math.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LeaderLossSpec {
+    pub shard: usize,
+    pub at_round: u64,
+}
+
+/// Kill *every* seat of shard `shard` at local step `at_step`: the whole
+/// shard is re-adopted from its members' checkpoints (steps past the
+/// last checkpoint are re-done and counted in `steps_lost`), with the
+/// recovery transfers audited as `ShardAdopt` instead of in-shard
+/// `CheckpointAdopt` events.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardKillSpec {
+    pub shard: usize,
+    pub at_step: u64,
+}
+
 /// How many of each fault [`FaultPlan::generate`] should draw, and the
 /// step/version ranges to draw them over.
 #[derive(Clone, Copy, Debug)]
@@ -90,6 +125,33 @@ pub struct PlanShape {
     pub publish_gates: usize,
     /// Snapshot versions the run will publish; drops/gates draw in `[1, versions]`.
     pub snapshot_versions: u64,
+    /// Shards in the fleet; shard faults draw their shard in `[0, shards)`.
+    pub shards: usize,
+    pub partitions: usize,
+    pub leader_losses: usize,
+    pub shard_kills: usize,
+    /// EM rounds the run will train; shard faults draw rounds in `[1, em_rounds]`.
+    pub em_rounds: u64,
+}
+
+impl Default for PlanShape {
+    fn default() -> Self {
+        PlanShape {
+            nodes: 1,
+            steps_per_node: 2,
+            kills: 0,
+            transients: 0,
+            stalls: 0,
+            drops: 0,
+            publish_gates: 0,
+            snapshot_versions: 1,
+            shards: 1,
+            partitions: 0,
+            leader_losses: 0,
+            shard_kills: 0,
+            em_rounds: 1,
+        }
+    }
 }
 
 /// Marker error for an injected (or backend-signalled) transient fault.
@@ -127,6 +189,7 @@ struct Consumed {
     kills: Vec<bool>,
     transient_left: Vec<u32>,
     stalls: Vec<bool>,
+    leader_losses: Vec<bool>,
 }
 
 /// A deterministic, replayable schedule of injected faults. See the
@@ -139,6 +202,9 @@ pub struct FaultPlan {
     pub stalls: Vec<StallSpec>,
     pub drops: Vec<DropSpec>,
     pub publish_gates: Vec<PublishGate>,
+    pub partitions: Vec<ShardPartitionSpec>,
+    pub leader_losses: Vec<LeaderLossSpec>,
+    pub shard_kills: Vec<ShardKillSpec>,
     consumed: Mutex<Consumed>,
 }
 
@@ -154,7 +220,7 @@ impl FaultPlan {
         FaultPlan::from_specs(0, vec![], vec![], vec![], vec![], vec![])
     }
 
-    fn from_specs(
+    pub(crate) fn from_specs(
         seed: u64,
         kills: Vec<KillSpec>,
         transients: Vec<TransientSpec>,
@@ -166,6 +232,7 @@ impl FaultPlan {
             kills: vec![false; kills.len()],
             transient_left: transients.iter().map(|t| t.failures).collect(),
             stalls: vec![false; stalls.len()],
+            leader_losses: vec![],
         };
         FaultPlan {
             seed,
@@ -174,8 +241,29 @@ impl FaultPlan {
             stalls,
             drops,
             publish_gates,
+            partitions: vec![],
+            leader_losses: vec![],
+            shard_kills: vec![],
             consumed: Mutex::new(consumed),
         }
+    }
+
+    /// Attach the shard-level fault schedule (builder-style so the
+    /// node-level constructor keeps its shape).
+    fn with_shard_faults(
+        mut self,
+        partitions: Vec<ShardPartitionSpec>,
+        leader_losses: Vec<LeaderLossSpec>,
+        shard_kills: Vec<ShardKillSpec>,
+    ) -> Self {
+        self.consumed
+            .get_mut()
+            .expect("fault plan poisoned")
+            .leader_losses = vec![false; leader_losses.len()];
+        self.partitions = partitions;
+        self.leader_losses = leader_losses;
+        self.shard_kills = shard_kills;
+        self
     }
 
     /// Draw a plan from a seed. Fault steps land in `[1, steps_per_node)`
@@ -231,7 +319,31 @@ impl FaultPlan {
                 min_total_steps: rng.range_u64(1, step_hi * shape.nodes as u64),
             })
             .collect();
+        // shard faults draw after the node faults, so plans with zero
+        // shard clauses reproduce pre-shard plans bit-identically
+        let shards = shape.shards.max(1);
+        let round_hi = shape.em_rounds.max(1);
+        let partitions = (0..shape.partitions)
+            .map(|_| ShardPartitionSpec {
+                shard: rng.usize_below(shards),
+                from_round: rng.range_u64(1, round_hi + 1),
+                rounds: rng.range_u64(1, 3),
+            })
+            .collect();
+        let leader_losses = (0..shape.leader_losses)
+            .map(|_| LeaderLossSpec {
+                shard: rng.usize_below(shards),
+                at_round: rng.range_u64(1, round_hi + 1),
+            })
+            .collect();
+        let shard_kills = (0..shape.shard_kills)
+            .map(|_| ShardKillSpec {
+                shard: rng.usize_below(shards),
+                at_step: draw_step(&mut rng),
+            })
+            .collect();
         FaultPlan::from_specs(seed, kills, transients, stalls, drops, publish_gates)
+            .with_shard_faults(partitions, leader_losses, shard_kills)
     }
 
     /// Forget all consumed state, making every one-shot fault live again
@@ -240,6 +352,7 @@ impl FaultPlan {
         let mut c = self.lock();
         c.kills.iter_mut().for_each(|k| *k = false);
         c.stalls.iter_mut().for_each(|s| *s = false);
+        c.leader_losses.iter_mut().for_each(|l| *l = false);
         for (left, spec) in c.transient_left.iter_mut().zip(&self.transients) {
             *left = spec.failures;
         }
@@ -252,14 +365,22 @@ impl FaultPlan {
     /// One-shot kill query: `true` exactly once per matching [`KillSpec`]
     /// (a replacement resuming at the kill step is not re-killed).
     pub fn take_kill(&self, node: usize, step: u64) -> bool {
+        self.take_kill_indexed(node, step).is_some()
+    }
+
+    /// Like [`FaultPlan::take_kill`], but returns *which* spec fired —
+    /// the fleet layer tags some kill indices as shard kills so the
+    /// recovery path can audit them as `ShardAdopt` instead of in-shard
+    /// `CheckpointAdopt` transfers.
+    pub fn take_kill_indexed(&self, node: usize, step: u64) -> Option<usize> {
         let mut c = self.lock();
         for (i, k) in self.kills.iter().enumerate() {
             if !c.kills[i] && k.node == node && k.at_step == step {
                 c.kills[i] = true;
-                return true;
+                return Some(i);
             }
         }
-        false
+        None
     }
 
     /// Transient-failure query: `true` while the matching spec still has
@@ -305,6 +426,39 @@ impl FaultPlan {
             .map(|g| g.min_total_steps)
     }
 
+    /// Pure query: is shard `shard` cut off the cross-shard exchange at
+    /// EM round `round`? Partitioned shards neither send nor receive —
+    /// the cut is symmetric, like a real network partition.
+    pub fn partition_blocks(&self, shard: usize, round: u64) -> bool {
+        self.partitions.iter().any(|p| {
+            p.shard == shard && round >= p.from_round && round < p.from_round.saturating_add(p.rounds)
+        })
+    }
+
+    /// One-shot leader-loss query: `true` exactly once per matching
+    /// [`LeaderLossSpec`] (promotion must not repeat on replay within
+    /// one run; [`FaultPlan::reset`] re-arms it).
+    pub fn take_leader_loss(&self, shard: usize, round: u64) -> bool {
+        let mut c = self.lock();
+        for (i, l) in self.leader_losses.iter().enumerate() {
+            if !c.leader_losses[i] && l.shard == shard && l.at_round == round {
+                c.leader_losses[i] = true;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Pure query: the local step at which every seat of `shard` dies
+    /// (`None` = the shard is never killed). The fleet layer expands
+    /// this into per-member kill specs tagged for `ShardAdopt` audit.
+    pub fn shard_kill_step(&self, shard: usize) -> Option<u64> {
+        self.shard_kills
+            .iter()
+            .find(|k| k.shard == shard)
+            .map(|k| k.at_step)
+    }
+
     /// `true` when no fault of any kind is scheduled.
     pub fn is_empty(&self) -> bool {
         self.kills.is_empty()
@@ -312,6 +466,9 @@ impl FaultPlan {
             && self.stalls.is_empty()
             && self.drops.is_empty()
             && self.publish_gates.is_empty()
+            && self.partitions.is_empty()
+            && self.leader_losses.is_empty()
+            && self.shard_kills.is_empty()
     }
 
     // ---------------- JSON spec ----------------
@@ -369,6 +526,37 @@ impl FaultPlan {
                 ])
             })
             .collect();
+        let partitions = self
+            .partitions
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("shard", Json::num(p.shard as f64)),
+                    ("from_round", Json::num(p.from_round as f64)),
+                    ("rounds", Json::num(p.rounds as f64)),
+                ])
+            })
+            .collect();
+        let leader_losses = self
+            .leader_losses
+            .iter()
+            .map(|l| {
+                Json::obj(vec![
+                    ("shard", Json::num(l.shard as f64)),
+                    ("at_round", Json::num(l.at_round as f64)),
+                ])
+            })
+            .collect();
+        let shard_kills = self
+            .shard_kills
+            .iter()
+            .map(|k| {
+                Json::obj(vec![
+                    ("shard", Json::num(k.shard as f64)),
+                    ("at_step", Json::num(k.at_step as f64)),
+                ])
+            })
+            .collect();
         Json::obj(vec![
             ("seed", Json::num(self.seed as f64)),
             ("kills", Json::Arr(kills)),
@@ -376,6 +564,9 @@ impl FaultPlan {
             ("stalls", Json::Arr(stalls)),
             ("drops", Json::Arr(drops)),
             ("publish_gates", Json::Arr(gates)),
+            ("partitions", Json::Arr(partitions)),
+            ("leader_losses", Json::Arr(leader_losses)),
+            ("shard_kills", Json::Arr(shard_kills)),
         ])
     }
 
@@ -436,6 +627,28 @@ impl FaultPlan {
                 min_total_steps: field(e, "min_total_steps")?,
             });
         }
+        let mut partitions = Vec::new();
+        for e in entries(j, "partitions")? {
+            partitions.push(ShardPartitionSpec {
+                shard: field(e, "shard")? as usize,
+                from_round: field(e, "from_round")?,
+                rounds: field(e, "rounds")?,
+            });
+        }
+        let mut leader_losses = Vec::new();
+        for e in entries(j, "leader_losses")? {
+            leader_losses.push(LeaderLossSpec {
+                shard: field(e, "shard")? as usize,
+                at_round: field(e, "at_round")?,
+            });
+        }
+        let mut shard_kills = Vec::new();
+        for e in entries(j, "shard_kills")? {
+            shard_kills.push(ShardKillSpec {
+                shard: field(e, "shard")? as usize,
+                at_step: field(e, "at_step")?,
+            });
+        }
         Ok(FaultPlan::from_specs(
             seed,
             kills,
@@ -443,7 +656,8 @@ impl FaultPlan {
             stalls,
             drops,
             publish_gates,
-        ))
+        )
+        .with_shard_faults(partitions, leader_losses, shard_kills))
     }
 
     /// Parse a plan from JSON text (`--chaos-spec` file contents).
@@ -468,6 +682,18 @@ mod tests {
             drops: 2,
             publish_gates: 1,
             snapshot_versions: 3,
+            ..PlanShape::default()
+        }
+    }
+
+    fn sharded_shape() -> PlanShape {
+        PlanShape {
+            shards: 3,
+            partitions: 2,
+            leader_losses: 1,
+            shard_kills: 1,
+            em_rounds: 4,
+            ..shape()
         }
     }
 
@@ -584,8 +810,108 @@ mod tests {
     }
 
     #[test]
+    fn shard_faults_generate_within_bounds() {
+        for seed in 0..20 {
+            let p = FaultPlan::generate(seed, &sharded_shape());
+            assert_eq!(p.partitions.len(), 2);
+            assert_eq!(p.leader_losses.len(), 1);
+            assert_eq!(p.shard_kills.len(), 1);
+            for part in &p.partitions {
+                assert!(part.shard < 3 && (1..=4).contains(&part.from_round));
+                assert!((1..=2).contains(&part.rounds));
+            }
+            for l in &p.leader_losses {
+                assert!(l.shard < 3 && (1..=4).contains(&l.at_round));
+            }
+            for k in &p.shard_kills {
+                assert!(k.shard < 3 && (1..12).contains(&k.at_step));
+            }
+        }
+    }
+
+    #[test]
+    fn zero_shard_clauses_leave_node_faults_unchanged() {
+        // shard faults draw after node faults: a shard-free shape must
+        // reproduce the pre-shard plan for the same seed exactly
+        let a = FaultPlan::generate(7, &shape());
+        let b = FaultPlan::generate(
+            7,
+            &PlanShape {
+                shards: 4,
+                em_rounds: 9,
+                ..shape()
+            },
+        );
+        assert_eq!(a.kills, b.kills);
+        assert_eq!(a.transients, b.transients);
+        assert_eq!(a.stalls, b.stalls);
+        assert_eq!(a.drops, b.drops);
+        assert_eq!(a.publish_gates, b.publish_gates);
+        assert!(b.partitions.is_empty() && b.shard_kills.is_empty());
+    }
+
+    #[test]
+    fn partition_blocks_is_pure_and_round_windowed() {
+        let p = FaultPlan::none().with_shard_faults(
+            vec![ShardPartitionSpec {
+                shard: 1,
+                from_round: 2,
+                rounds: 2,
+            }],
+            vec![],
+            vec![],
+        );
+        assert!(!p.partition_blocks(1, 1));
+        assert!(p.partition_blocks(1, 2));
+        assert!(p.partition_blocks(1, 3));
+        assert!(!p.partition_blocks(1, 4));
+        assert!(!p.partition_blocks(0, 2));
+        assert!(p.partition_blocks(1, 2), "partition queries are pure");
+        assert!(!p.is_empty());
+    }
+
+    #[test]
+    fn leader_loss_fires_once_and_rearms_on_reset() {
+        let p = FaultPlan::none().with_shard_faults(
+            vec![],
+            vec![LeaderLossSpec { shard: 0, at_round: 3 }],
+            vec![],
+        );
+        assert!(!p.take_leader_loss(0, 2));
+        assert!(!p.take_leader_loss(1, 3));
+        assert!(p.take_leader_loss(0, 3));
+        assert!(!p.take_leader_loss(0, 3), "leader loss is one-shot");
+        p.reset();
+        assert!(p.take_leader_loss(0, 3));
+    }
+
+    #[test]
+    fn shard_kill_step_and_indexed_kill() {
+        let p = FaultPlan::from_specs(
+            0,
+            vec![
+                KillSpec { node: 0, at_step: 4 },
+                KillSpec { node: 1, at_step: 4 },
+            ],
+            vec![],
+            vec![],
+            vec![],
+            vec![],
+        )
+        .with_shard_faults(vec![], vec![], vec![ShardKillSpec { shard: 1, at_step: 4 }]);
+        assert_eq!(p.shard_kill_step(1), Some(4));
+        assert_eq!(p.shard_kill_step(0), None);
+        assert_eq!(p.take_kill_indexed(1, 4), Some(1));
+        assert_eq!(p.take_kill_indexed(1, 4), None, "indexed kills are one-shot");
+        assert!(p.take_kill(0, 4), "take_kill delegates to the indexed path");
+        assert_eq!(p.take_kill_indexed(0, 4), None);
+        p.reset();
+        assert_eq!(p.take_kill_indexed(0, 4), Some(0));
+    }
+
+    #[test]
     fn json_roundtrip_is_exact() {
-        let p = FaultPlan::generate(41, &shape());
+        let p = FaultPlan::generate(41, &sharded_shape());
         let text = p.to_json().to_string_pretty();
         let q = FaultPlan::from_json_str(&text).unwrap();
         assert_eq!(p.seed, q.seed);
@@ -594,6 +920,9 @@ mod tests {
         assert_eq!(p.stalls, q.stalls);
         assert_eq!(p.drops, q.drops);
         assert_eq!(p.publish_gates, q.publish_gates);
+        assert_eq!(p.partitions, q.partitions);
+        assert_eq!(p.leader_losses, q.leader_losses);
+        assert_eq!(p.shard_kills, q.shard_kills);
     }
 
     #[test]

@@ -35,6 +35,28 @@ pub enum CommKind {
     /// `staleness` records the snapshot-version lag the offline worker
     /// trained under.
     ParamMerge,
+    /// One shard's router block crossing the shard boundary at an
+    /// EM-round boundary: the sending shard's leader ships its routers to
+    /// another shard's leader. This is the *only* inter-shard traffic in
+    /// a healthy fleet, and it happens exclusively at round boundaries —
+    /// the fleet tests assert zero cross-shard bytes in between.
+    /// `staleness` records how many rounds behind the receiver's held
+    /// copy was (nonzero only when a partition heals).
+    CrossShardPublish,
+    /// A whole-shard recovery transfer: a promoted member (leader loss)
+    /// or a re-adopted shard (shard kill) pulls a checkpoint across the
+    /// shard's fault-domain boundary.
+    ShardAdopt,
+}
+
+impl CommKind {
+    /// `true` for event kinds that cross a shard (fault-domain) boundary.
+    /// Everything else stays inside one shard's `SnapshotStore` domain,
+    /// so [`CommLedger::intra_shard_bytes`] + [`CommLedger::inter_shard_bytes`]
+    /// always partition [`CommLedger::total_bytes`] exactly.
+    pub fn is_cross_shard(self) -> bool {
+        matches!(self, CommKind::CrossShardPublish | CommKind::ShardAdopt)
+    }
 }
 
 /// One recorded event.
@@ -143,6 +165,40 @@ impl CommLedger {
         });
     }
 
+    /// Record one cross-shard router-block publish landing on `node` (the
+    /// receiving shard's leader seat): `bytes` of router parameters cross
+    /// the shard boundary once (sender's leader → receiver's leader, so
+    /// [`CommLedger::total_bytes`] counts the transfer once). `round` is
+    /// the EM round the exchange happened at — cross-shard events carry
+    /// the round id as their step, which is what lets the fleet tests
+    /// assert "zero inter-shard bytes between round boundaries" exactly.
+    /// `staleness` is the receiver's held-copy lag in rounds (nonzero
+    /// only on partition heal, where the delayed-Nesterov catch-up runs).
+    pub fn record_cross_shard_publish(&mut self, node: usize, bytes: u64, round: u64, staleness: u64) {
+        self.record(CommEvent {
+            node,
+            kind: CommKind::CrossShardPublish,
+            bytes_sent: bytes,
+            bytes_received: bytes,
+            step: round,
+            staleness,
+        });
+    }
+
+    /// Record one shard-recovery checkpoint transfer into seat `node`
+    /// (leader promotion or whole-shard re-adoption): `ckpt_bytes` cross
+    /// the fault-domain boundary once.
+    pub fn record_shard_adopt(&mut self, node: usize, ckpt_bytes: u64, step: u64) {
+        self.record(CommEvent {
+            node,
+            kind: CommKind::ShardAdopt,
+            bytes_sent: ckpt_bytes,
+            bytes_received: ckpt_bytes,
+            step,
+            staleness: 0,
+        });
+    }
+
     /// Record one DDP gradient all-reduce step: `2 * W * 4` bytes per node
     /// (bandwidth-optimal ring, f32 gradients — §A.4 "Comparison with
     /// Distributed Training").
@@ -194,6 +250,26 @@ impl CommLedger {
 
     pub fn total_bytes(&self) -> u64 {
         self.events.iter().map(|e| e.bytes_sent).sum()
+    }
+
+    /// Bytes that stayed inside a single shard's fault domain (snapshot
+    /// broadcasts, in-shard adoptions, merges, score exchanges, ...).
+    pub fn intra_shard_bytes(&self) -> u64 {
+        self.events
+            .iter()
+            .filter(|e| !e.kind.is_cross_shard())
+            .map(|e| e.bytes_sent)
+            .sum()
+    }
+
+    /// Bytes that crossed a shard boundary ([`CommKind::is_cross_shard`]).
+    /// With `intra_shard_bytes` this partitions [`CommLedger::total_bytes`].
+    pub fn inter_shard_bytes(&self) -> u64 {
+        self.events
+            .iter()
+            .filter(|e| e.kind.is_cross_shard())
+            .map(|e| e.bytes_sent)
+            .sum()
     }
 
     /// Number of distinct collective rounds (unique (kind, step) pairs).
@@ -321,6 +397,51 @@ mod tests {
             .iter()
             .filter(|e| e.kind != CommKind::ParamMerge)
             .all(|e| e.staleness == 0));
+    }
+
+    #[test]
+    fn intra_inter_shard_split_partitions_totals() {
+        let mut l = CommLedger::default();
+        l.record_snapshot_broadcast(2, 64, 1); // intra: 2 * 64
+        l.record_checkpoint_adopt(1, 500, 10); // intra: 500
+        l.record_param_merge(0, 240, 20, 1); // intra: 240
+        l.record_cross_shard_publish(3, 96, 2, 0); // inter: 96
+        l.record_cross_shard_publish(0, 96, 3, 2); // inter: 96, healed partition
+        l.record_shard_adopt(4, 700, 12); // inter: 700
+        assert_eq!(l.intra_shard_bytes(), 2 * 64 + 500 + 240);
+        assert_eq!(l.inter_shard_bytes(), 96 + 96 + 700);
+        assert_eq!(
+            l.intra_shard_bytes() + l.inter_shard_bytes(),
+            l.total_bytes()
+        );
+        assert_eq!(l.kind_bytes(CommKind::CrossShardPublish), 192);
+        assert_eq!(l.kind_bytes(CommKind::ShardAdopt), 700);
+        // cross-shard publishes carry the EM round as their step
+        assert_eq!(l.rounds(CommKind::CrossShardPublish), 2);
+        // staleness rides only on merges and healed cross-shard publishes
+        assert!(l
+            .events
+            .iter()
+            .filter(|e| e.kind != CommKind::ParamMerge
+                && e.kind != CommKind::CrossShardPublish)
+            .all(|e| e.staleness == 0));
+    }
+
+    #[test]
+    fn cross_shard_kinds_are_flagged() {
+        assert!(CommKind::CrossShardPublish.is_cross_shard());
+        assert!(CommKind::ShardAdopt.is_cross_shard());
+        for k in [
+            CommKind::ScoreAllGather,
+            CommKind::AssignmentBroadcast,
+            CommKind::WeightTransfer,
+            CommKind::SnapshotBroadcast,
+            CommKind::GradAllReduce,
+            CommKind::CheckpointAdopt,
+            CommKind::ParamMerge,
+        ] {
+            assert!(!k.is_cross_shard(), "{k:?} must be intra-shard");
+        }
     }
 
     #[test]

@@ -1,0 +1,1391 @@
+//! Fleet-sharded elastic training: expert seats partitioned across
+//! multiple independent [`SnapshotStore`] fault domains.
+//!
+//! One *shard* is a group of expert seats plus a router leader that runs
+//! the shard's own EM loop and publishes to the shard's own store. Nodes
+//! inside a shard communicate exactly as in the single-fleet elastic
+//! runtime (snapshot broadcasts, checkpoint adoptions, merges — all
+//! intra-shard). Shards talk to each other **only at EM-round
+//! boundaries**, through a [`ShardExchange`] that swaps each shard's own
+//! router block; every cross-shard byte is audited on the merged
+//! [`CommLedger`] as [`CommKind::CrossShardPublish`] or
+//! [`CommKind::ShardAdopt`], so inter-shard traffic between boundaries
+//! is structurally zero.
+//!
+//! The shard-level failure model (partition / leader loss / shard kill)
+//! is documented with the node-level model in the
+//! [`trainer`](super::trainer) module docs; every fault is keyed on EM
+//! rounds or node-local steps — never wall-clock — so a fleet run under
+//! a seeded [`FaultPlan`] replays bit-identically after
+//! [`FaultPlan::reset`].
+//!
+//! Each shard stays authoritative for its own router block: foreign
+//! blocks only feed each shard's *held view* of the global router set
+//! (refreshed at boundaries, caught up through the delayed-Nesterov
+//! outer update after a partition heals). The final global router set is
+//! therefore assembled from the per-shard blocks and is independent of
+//! partition schedules.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use super::chaos::{DropSpec, FaultPlan, KillSpec, StallSpec, TransientSpec};
+use super::comm::{CommKind, CommLedger};
+use super::em::{train_routers_hooked, EmConfig};
+use super::inference::Mixture;
+use super::pipeline::{PipelineConfig, PipelineResult};
+use super::trainer::{
+    ckpt_path, engine_transfer_scalars, run_elastic_nodes, ElasticHandle, ElasticPlan,
+    ElasticPolicy, ElasticReport, ElasticStats, EngineBackend, LeaveEvent, NodeEnd, NodeRunConfig,
+    SeatIdentity, SnapshotStore, TrainBackend, TrainerConfig,
+};
+use crate::data::SequenceGen;
+use crate::metrics::RunLog;
+use crate::model::checkpoint::load_node_checkpoint;
+use crate::runtime::{Engine, TrainState, VariantMeta};
+use crate::tokenizer::Bpe;
+use crate::util::json::Json;
+
+// -------------------------------------------------------------------------
+// shard plan
+// -------------------------------------------------------------------------
+
+/// Which global expert seat belongs to which shard. Membership is fixed
+/// for a run; member order is the promotion order on leader loss.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    members: Vec<Vec<usize>>,
+    total: usize,
+}
+
+impl ShardPlan {
+    /// Spread `n_seats` contiguous seats near-evenly over `n_shards`
+    /// (earlier shards take the remainder).
+    pub fn partition(n_seats: usize, n_shards: usize) -> Result<Self> {
+        ensure!(n_shards > 0, "a fleet needs at least one shard");
+        ensure!(
+            n_seats >= n_shards,
+            "cannot spread {n_seats} expert seat(s) across {n_shards} shards"
+        );
+        let base = n_seats / n_shards;
+        let extra = n_seats % n_shards;
+        let mut members = Vec::with_capacity(n_shards);
+        let mut next = 0;
+        for s in 0..n_shards {
+            let k = base + usize::from(s < extra);
+            members.push((next..next + k).collect());
+            next += k;
+        }
+        Ok(ShardPlan {
+            members,
+            total: n_seats,
+        })
+    }
+
+    /// An explicit membership: every seat in `0..total` assigned to
+    /// exactly one shard, no shard empty.
+    pub fn from_members(members: Vec<Vec<usize>>) -> Result<Self> {
+        ensure!(!members.is_empty(), "a fleet needs at least one shard");
+        let total: usize = members.iter().map(Vec::len).sum();
+        let mut seen = vec![false; total];
+        for (s, m) in members.iter().enumerate() {
+            ensure!(!m.is_empty(), "shard {s} has no member seats");
+            for &g in m {
+                ensure!(g < total, "seat {g} out of range for {total} seats");
+                ensure!(!seen[g], "seat {g} assigned to two shards");
+                seen[g] = true;
+            }
+        }
+        Ok(ShardPlan { members, total })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn total_seats(&self) -> usize {
+        self.total
+    }
+
+    /// Global seats of `shard`, in promotion order.
+    pub fn members(&self, shard: usize) -> &[usize] {
+        &self.members[shard]
+    }
+
+    /// The shard a global seat belongs to.
+    pub fn shard_of(&self, seat: usize) -> usize {
+        self.members
+            .iter()
+            .position(|m| m.contains(&seat))
+            .unwrap_or(0)
+    }
+}
+
+/// Wire size of one router block: the full f32 parameter set, matching
+/// [`SnapshotStore::publish`]'s broadcast accounting — which is what
+/// makes the intra/inter byte audit reconcile in closed form.
+pub fn router_block_bytes(block: &[TrainState]) -> u64 {
+    block.iter().map(|r| r.params.len() as u64 * 4).sum()
+}
+
+// -------------------------------------------------------------------------
+// cross-shard exchange
+// -------------------------------------------------------------------------
+
+struct ExchangeInner {
+    /// Barrier generation per shard: `2*round` = arrived at `round`,
+    /// `2*round + 1` = departed (done reading). Rounds are 1-based so
+    /// any arrival beats the initial 0.
+    phase: Vec<u64>,
+    /// Dead shards are excluded from every wait (no deadlock on loss).
+    live: Vec<bool>,
+    /// Latest block each shard submitted, tagged with its round.
+    blocks: Vec<Option<(u64, Vec<TrainState>)>>,
+}
+
+/// The only inter-shard channel: a two-phase generation barrier where
+/// each shard deposits its own router block at an EM-round boundary and
+/// reads the blocks of the shards it can see. Every transfer is recorded
+/// on the exchange's own ledger (merged into the fleet ledger at the
+/// end), so cross-shard bytes are exactly the events recorded here.
+pub struct ShardExchange {
+    inner: Mutex<ExchangeInner>,
+    cv: Condvar,
+    ledger: Mutex<CommLedger>,
+}
+
+impl ShardExchange {
+    pub fn new(n_shards: usize) -> Self {
+        ShardExchange {
+            inner: Mutex::new(ExchangeInner {
+                phase: vec![0; n_shards],
+                live: vec![true; n_shards],
+                blocks: (0..n_shards).map(|_| None).collect(),
+            }),
+            cv: Condvar::new(),
+            ledger: Mutex::new(CommLedger::default()),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, ExchangeInner> {
+        self.inner.lock().expect("shard exchange poisoned")
+    }
+
+    /// Deposit `block` (None = partitioned, deposit nothing) and read the
+    /// round-`round` blocks of the shards in `wants`. Blocks from shards
+    /// that never reached this round (dead, or retired early) are
+    /// silently absent — the caller keeps its stale held view. The
+    /// depart phase guarantees nobody overwrites a block before every
+    /// live shard has read it.
+    fn exchange(
+        &self,
+        shard: usize,
+        round: u64,
+        block: Option<Vec<TrainState>>,
+        wants: &[usize],
+    ) -> Vec<(usize, Vec<TrainState>)> {
+        let arrive = 2 * round;
+        let depart = arrive + 1;
+        let mut g = self.lock();
+        if let Some(b) = block {
+            g.blocks[shard] = Some((round, b));
+        }
+        g.phase[shard] = arrive;
+        self.cv.notify_all();
+        while g.live.iter().zip(&g.phase).any(|(&l, &p)| l && p < arrive) {
+            g = self.cv.wait(g).expect("shard exchange poisoned");
+        }
+        let incoming: Vec<(usize, Vec<TrainState>)> = wants
+            .iter()
+            .filter(|&&t| t != shard)
+            .filter_map(|&t| match &g.blocks[t] {
+                Some((r, b)) if *r == round => Some((t, b.clone())),
+                _ => None,
+            })
+            .collect();
+        g.phase[shard] = depart;
+        self.cv.notify_all();
+        while g.live.iter().zip(&g.phase).any(|(&l, &p)| l && p < depart) {
+            g = self.cv.wait(g).expect("shard exchange poisoned");
+        }
+        drop(g);
+        incoming
+    }
+
+    /// Mark a shard dead: waiters stop waiting on it, its last block
+    /// stays available for salvage.
+    fn retire(&self, shard: usize) {
+        self.lock().live[shard] = false;
+        self.cv.notify_all();
+    }
+
+    /// The last block `shard` ever deposited (salvage for failed shards).
+    fn last_block(&self, shard: usize) -> Option<Vec<TrainState>> {
+        self.lock().blocks[shard].as_ref().map(|(_, b)| b.clone())
+    }
+
+    fn record_cross_shard_publish(&self, node: usize, bytes: u64, round: u64, staleness: u64) {
+        self.ledger
+            .lock()
+            .expect("exchange ledger poisoned")
+            .record_cross_shard_publish(node, bytes, round, staleness);
+    }
+
+    fn record_shard_adopt(&self, node: usize, bytes: u64, round: u64) {
+        self.ledger
+            .lock()
+            .expect("exchange ledger poisoned")
+            .record_shard_adopt(node, bytes, round);
+    }
+
+    fn take_ledger(&self) -> CommLedger {
+        std::mem::take(&mut *self.ledger.lock().expect("exchange ledger poisoned"))
+    }
+}
+
+/// Guarantees a shard retires from the exchange however its thread exits
+/// (completion, error, panic) — the liveness half of the no-deadlock
+/// argument.
+struct RetireOnDrop<'a> {
+    exchange: &'a ShardExchange,
+    shard: usize,
+}
+
+impl Drop for RetireOnDrop<'_> {
+    fn drop(&mut self) {
+        self.exchange.retire(self.shard);
+    }
+}
+
+// -------------------------------------------------------------------------
+// per-shard round-boundary driver
+// -------------------------------------------------------------------------
+
+struct ShardCtxInner {
+    /// Index into the member list of the current router leader.
+    leader_pos: usize,
+    promotions: u64,
+    rounds_missed: u64,
+    /// Held view of each foreign shard's router block `(round, block)` —
+    /// what this shard routes foreign seats against between refreshes.
+    held: Vec<Option<(u64, Vec<TrainState>)>>,
+    /// Delayed-Nesterov outer velocity per foreign shard, per router
+    /// (catch-up state for partition heals).
+    outer_v: Vec<Vec<Vec<f32>>>,
+}
+
+/// Everything one shard's router driver needs at an EM-round boundary:
+/// apply shard-level faults, exchange blocks, refresh held views, and
+/// publish the assembled global router set to the shard's own store.
+pub struct ShardCtx<'f> {
+    shard: usize,
+    plan: &'f ShardPlan,
+    /// The *fleet-level* plan — shard faults are consumed here so a
+    /// replay after [`FaultPlan::reset`] re-fires them identically.
+    faults: &'f FaultPlan,
+    exchange: &'f ShardExchange,
+    policy: ElasticPolicy,
+    inner: Mutex<ShardCtxInner>,
+}
+
+impl<'f> ShardCtx<'f> {
+    fn new(
+        shard: usize,
+        plan: &'f ShardPlan,
+        faults: &'f FaultPlan,
+        exchange: &'f ShardExchange,
+        policy: ElasticPolicy,
+    ) -> Self {
+        let n = plan.n_shards();
+        ShardCtx {
+            shard,
+            plan,
+            faults,
+            exchange,
+            policy,
+            inner: Mutex::new(ShardCtxInner {
+                leader_pos: 0,
+                promotions: 0,
+                rounds_missed: 0,
+                held: (0..n).map(|_| None).collect(),
+                outer_v: vec![Vec::new(); n],
+            }),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, ShardCtxInner> {
+        self.inner.lock().expect("shard ctx poisoned")
+    }
+
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Global seat of the current router leader.
+    pub fn leader_seat(&self) -> usize {
+        self.plan.members(self.shard)[self.lock().leader_pos]
+    }
+
+    fn counters(&self) -> (u64, u64) {
+        let g = self.lock();
+        (g.promotions, g.rounds_missed)
+    }
+
+    /// The EM-round boundary: the only place cross-shard communication
+    /// (and its audit) ever happens. `round` is 1-based; `own` is this
+    /// shard's freshly trained router block (one state per member seat,
+    /// in member order). Publishes the assembled global router set to
+    /// the shard's own store, honoring any publish gate for `round`.
+    pub fn round_boundary(
+        &self,
+        handle: &ElasticHandle<'_, '_>,
+        round: u64,
+        own: &[TrainState],
+    ) -> Result<()> {
+        let members = self.plan.members(self.shard);
+        ensure!(round >= 1, "EM rounds are 1-based at the shard exchange");
+        ensure!(
+            own.len() == members.len(),
+            "shard {} publishes {} routers for {} member seats",
+            self.shard,
+            own.len(),
+            members.len()
+        );
+
+        // Leader loss: promote the next member (deterministic order); it
+        // adopts the dead leader's router block — one audited transfer
+        // across the fault-domain boundary. The publish below is then
+        // re-derived by the promoted member: accounting, never math.
+        if self.faults.take_leader_loss(self.shard, round) {
+            let mut g = self.lock();
+            g.leader_pos = (g.leader_pos + 1) % members.len();
+            g.promotions += 1;
+            let promoted = members[g.leader_pos];
+            drop(g);
+            self.exchange
+                .record_shard_adopt(promoted, router_block_bytes(own), round);
+        }
+        let leader = members[self.lock().leader_pos];
+
+        // Partition: a cut shard neither deposits nor reads this round
+        // (symmetric, like a real network cut); participants likewise
+        // skip reading from cut shards. Both sides compute the cut from
+        // the same fleet plan, so the exclusion agrees everywhere.
+        let cut = self.faults.partition_blocks(self.shard, round);
+        let wants: Vec<usize> = if cut {
+            Vec::new()
+        } else {
+            (0..self.plan.n_shards())
+                .filter(|&t| t != self.shard && !self.faults.partition_blocks(t, round))
+                .collect()
+        };
+        if cut {
+            self.lock().rounds_missed += 1;
+        }
+        let incoming = self
+            .exchange
+            .exchange(self.shard, round, (!cut).then(|| own.to_vec()), &wants);
+
+        // Fold received blocks into held views. A fresh edge (staleness
+        // 0) replaces the view outright; a healed edge catches up via
+        // the delayed-Nesterov outer update, with the rounds missed
+        // audited as the event's staleness.
+        {
+            let mut g = self.lock();
+            let inner = &mut *g;
+            for (from, block) in incoming {
+                let staleness = match &inner.held[from] {
+                    Some((held_round, _)) => round.saturating_sub(held_round + 1),
+                    None => 0,
+                };
+                self.exchange.record_cross_shard_publish(
+                    leader,
+                    router_block_bytes(&block),
+                    round,
+                    staleness,
+                );
+                let view = if staleness > 0 {
+                    let (_, held) = inner.held[from].take().expect("stale view must be held");
+                    nesterov_catch_up(&self.policy, &held, &block, &mut inner.outer_v[from])
+                } else {
+                    block
+                };
+                inner.held[from] = Some((round, view));
+            }
+        }
+
+        // Assemble the global router set this shard's nodes route
+        // against: own block authoritative, foreign seats from held
+        // views. A seat never received (cut since round 1, or a dead
+        // sender) gets a routing-only placeholder — replaced at the
+        // first heal, and never part of the authoritative final set.
+        let total = self.plan.total_seats();
+        let mut global: Vec<Option<TrainState>> = vec![None; total];
+        for (i, &seat) in members.iter().enumerate() {
+            global[seat] = Some(own[i].clone());
+        }
+        {
+            let g = self.lock();
+            for t in 0..self.plan.n_shards() {
+                if t == self.shard {
+                    continue;
+                }
+                if let Some((_, view)) = &g.held[t] {
+                    for (i, &seat) in self.plan.members(t).iter().enumerate() {
+                        if let Some(r) = view.get(i) {
+                            global[seat] = Some(r.clone());
+                        }
+                    }
+                }
+            }
+        }
+        let global: Vec<TrainState> = global
+            .into_iter()
+            .map(|r| r.unwrap_or_else(|| own[0].clone()))
+            .collect();
+
+        // Delayed publish: hold until the shard has trained `min` total
+        // steps — deterministic in steps, not wall-clock (the same gate
+        // semantics as the single-fleet elastic path, keyed on rounds).
+        if let Some(min) = self.faults.publish_gate(round) {
+            while (handle.total_steps_done() as u64) < min
+                && handle.live_nodes() > 0
+                && !handle.failed()
+            {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+        handle.store().publish(global, round as usize);
+        Ok(())
+    }
+}
+
+/// The delayed-Nesterov outer update (the rejoin-merge rule) applied to
+/// a stale held view of a foreign router block: `d = latest − held;
+/// v = μ·v + d; view = held + γ·(d + μ·v)`. Shape mismatches (a foreign
+/// shard re-initialized a router) fall back to taking `latest` directly.
+fn nesterov_catch_up(
+    policy: &ElasticPolicy,
+    held: &[TrainState],
+    latest: &[TrainState],
+    outer_v: &mut Vec<Vec<f32>>,
+) -> Vec<TrainState> {
+    if held.len() != latest.len() {
+        return latest.to_vec();
+    }
+    outer_v.resize(latest.len(), Vec::new());
+    let gamma = policy.outer_lr as f32;
+    let mu = policy.outer_momentum as f32;
+    held.iter()
+        .zip(latest)
+        .zip(outer_v.iter_mut())
+        .map(|((h, l), vel)| {
+            if h.params.len() != l.params.len() {
+                return l.clone();
+            }
+            if vel.len() != l.params.len() {
+                *vel = vec![0.0; l.params.len()];
+            }
+            let mut params = Vec::with_capacity(l.params.len());
+            for i in 0..l.params.len() {
+                let d = l.params[i] - h.params[i];
+                vel[i] = mu * vel[i] + d;
+                params.push(h.params[i] + gamma * (d + mu * vel[i]));
+            }
+            TrainState::from_params(&l.variant, params, l.m.clone(), l.v.clone(), l.step)
+        })
+        .collect()
+}
+
+// -------------------------------------------------------------------------
+// fleet orchestration
+// -------------------------------------------------------------------------
+
+/// Global seat ids for shard `s`'s local seats `0..k+extra`: members
+/// first, then this shard's spare seats parked past every real seat.
+fn global_ids(plan: &ShardPlan, shard: usize, extra: usize) -> Vec<usize> {
+    plan.members(shard)
+        .iter()
+        .copied()
+        .chain((0..extra).map(|i| plan.total_seats() + shard * extra + i))
+        .collect()
+}
+
+/// Project the fleet-level [`ElasticPlan`] onto one shard: node faults
+/// filtered by membership and remapped to local indices, a whole-shard
+/// kill expanded to one tagged kill per member, publish gates copied
+/// (they are round-keyed, not node-keyed), and the local→global routing
+/// identity attached.
+fn shard_local_plan(plan: &ShardPlan, shard: usize, fleet: &ElasticPlan) -> ElasticPlan {
+    let members = plan.members(shard);
+    let local_of = |g: usize| members.iter().position(|&m| m == g);
+    let f = &fleet.faults;
+    let mut kills: Vec<KillSpec> = f
+        .kills
+        .iter()
+        .filter_map(|k| {
+            local_of(k.node).map(|node| KillSpec {
+                node,
+                at_step: k.at_step,
+            })
+        })
+        .collect();
+    let transients: Vec<TransientSpec> = f
+        .transients
+        .iter()
+        .filter_map(|t| local_of(t.node).map(|node| TransientSpec { node, ..*t }))
+        .collect();
+    let stalls: Vec<StallSpec> = f
+        .stalls
+        .iter()
+        .filter_map(|s| local_of(s.node).map(|node| StallSpec { node, ..*s }))
+        .collect();
+    let drops: Vec<DropSpec> = f
+        .drops
+        .iter()
+        .filter_map(|d| local_of(d.node).map(|node| DropSpec { node, ..*d }))
+        .collect();
+    let mut shard_kill_indices = Vec::new();
+    if let Some(at_step) = f.shard_kill_step(shard) {
+        for node in 0..members.len() {
+            shard_kill_indices.push(kills.len());
+            kills.push(KillSpec { node, at_step });
+        }
+    }
+    let faults = FaultPlan::from_specs(
+        f.seed,
+        kills,
+        transients,
+        stalls,
+        drops,
+        f.publish_gates.clone(),
+    );
+    let leaves: Vec<LeaveEvent> = fleet
+        .leaves
+        .iter()
+        .filter_map(|ev| local_of(ev.node).map(|node| LeaveEvent { node, ..*ev }))
+        .collect();
+    let extra = fleet.policy.max_extra_nodes;
+    ElasticPlan {
+        faults,
+        leaves,
+        policy: fleet.policy,
+        shard_kill_indices,
+        seat_identity: Some(SeatIdentity {
+            global: global_ids(plan, shard, extra),
+            space: plan.total_seats(),
+        }),
+    }
+}
+
+/// Per-shard rollup of a fleet run.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ShardStats {
+    pub shard: usize,
+    /// The shard's own elastic counters (kills, adoptions, ...).
+    pub stats: ElasticStats,
+    /// Leader promotions after leader-loss faults.
+    pub promotions: u64,
+    /// EM rounds this shard spent cut off the cross-shard exchange.
+    pub rounds_missed: u64,
+    /// Seat recoveries that crossed the shard's fault-domain boundary
+    /// (whole-shard kills re-adopted from member checkpoints).
+    pub shard_kills: u64,
+}
+
+/// What a whole fleet run reports: fleet-summed stats, per-shard rows,
+/// the merged ledger (stores + elastic recoveries + cross-shard
+/// exchange, all in global seat ids), and every seat's end.
+pub struct FleetReport {
+    pub stats: ElasticStats,
+    pub shards: Vec<ShardStats>,
+    pub ledger: CommLedger,
+    /// One entry per seat that ever ran, sorted by global seat id.
+    pub ends: Vec<NodeEnd>,
+}
+
+/// Elastic/fleet accounting as surfaced in the end-of-run report
+/// (`shards` is empty for single-fleet elastic runs).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ElasticSummary {
+    pub stats: ElasticStats,
+    pub shards: Vec<ShardStats>,
+}
+
+fn add_stats(a: &ElasticStats, b: &ElasticStats) -> ElasticStats {
+    ElasticStats {
+        kills: a.kills + b.kills,
+        adoptions: a.adoptions + b.adoptions,
+        leaves: a.leaves + b.leaves,
+        joins: a.joins + b.joins,
+        merges: a.merges + b.merges,
+        steps_lost: a.steps_lost + b.steps_lost,
+        transient_retries: a.transient_retries + b.transient_retries,
+        recovery_micros: a.recovery_micros + b.recovery_micros,
+    }
+}
+
+struct ShardRun {
+    report: ElasticReport,
+    store_ledger: CommLedger,
+    block: Vec<TrainState>,
+}
+
+struct ShardSlot {
+    shard: usize,
+    promotions: u64,
+    rounds_missed: u64,
+    outcome: Result<ShardRun>,
+}
+
+/// Run an elastic fleet partitioned into shard fault domains: one
+/// [`run_elastic_nodes`] per shard (own [`SnapshotStore`], own
+/// checkpoint namespace `<dir>/shard{s}/`), cross-shard router exchange
+/// at EM-round boundaries only, and shard-level faults from the fleet
+/// plan. `driver(shard, ctx, handle)` runs the shard's router loop and
+/// returns the shard's final router block (member order); it must call
+/// [`ShardCtx::round_boundary`] once per EM round.
+///
+/// Returns `Ok` whenever at least one shard survives: failed shards are
+/// reported in their [`ShardStats`] row and their seats degrade, with
+/// their last exchanged block salvaged into the final global router set.
+pub fn run_sharded_nodes<'env, B, G, D>(
+    backend: &B,
+    plan: &ShardPlan,
+    seeds: &[u64],
+    stream_factory: G,
+    cfg: &NodeRunConfig,
+    fleet: &ElasticPlan,
+    driver: D,
+) -> Result<(FleetReport, Vec<TrainState>)>
+where
+    B: TrainBackend,
+    G: Fn(usize, u64) -> SequenceGen<'env> + Sync,
+    D: Fn(usize, &ShardCtx<'_>, &ElasticHandle<'_, 'env>) -> Result<Vec<TrainState>> + Sync,
+{
+    ensure!(
+        seeds.len() == plan.total_seats(),
+        "{} seeds for {} expert seats",
+        seeds.len(),
+        plan.total_seats()
+    );
+    ensure!(
+        fleet.seat_identity.is_none(),
+        "fleet plans derive seat identities per shard; leave seat_identity unset"
+    );
+    ensure!(
+        fleet.shard_kill_indices.is_empty(),
+        "fleet plans derive shard-kill tags per shard; leave shard_kill_indices unset"
+    );
+    // Re-arm the fleet plan's one-shot shard faults so a replay of the
+    // same plan re-fires them identically (node faults live on the
+    // derived local plans, which run_elastic_nodes resets itself).
+    fleet.faults.reset();
+    let n_shards = plan.n_shards();
+    let exchange = ShardExchange::new(n_shards);
+
+    let slots: Vec<ShardSlot> = std::thread::scope(|scope| {
+        let exchange = &exchange;
+        let stream_factory = &stream_factory;
+        let driver = &driver;
+        let handles: Vec<_> = (0..n_shards)
+            .map(|s| {
+                scope.spawn(move || {
+                    let _retire = RetireOnDrop { exchange, shard: s };
+                    let members = plan.members(s);
+                    let local = shard_local_plan(plan, s, fleet);
+                    let identity = local
+                        .seat_identity
+                        .clone()
+                        .expect("local shard plans always carry an identity");
+                    let mut shard_cfg = cfg.clone();
+                    if let Some(root) = &cfg.checkpoint_dir {
+                        let sub = root.join(format!("shard{s}"));
+                        if let Err(e) = std::fs::create_dir_all(&sub) {
+                            return ShardSlot {
+                                shard: s,
+                                promotions: 0,
+                                rounds_missed: 0,
+                                outcome: Err(anyhow!(e).context(format!(
+                                    "creating checkpoint directory for shard {s}"
+                                ))),
+                            };
+                        }
+                        shard_cfg.checkpoint_dir = Some(sub);
+                        // pre-shard flat checkpoints only map cleanly
+                        // when the fleet is one shard (global == local)
+                        shard_cfg.legacy_flat_dir = (n_shards == 1).then(|| root.clone());
+                    }
+                    let store = SnapshotStore::new_sharded(members.len(), s);
+                    let shard_seeds: Vec<u64> = members.iter().map(|&g| seeds[g]).collect();
+                    let ident = identity.global.clone();
+                    let factory = move |l: usize, salt: u64| {
+                        stream_factory(ident.get(l).copied().unwrap_or(l), salt)
+                    };
+                    let ctx = ShardCtx::new(s, plan, &fleet.faults, exchange, fleet.policy);
+                    let run = run_elastic_nodes(
+                        backend,
+                        &store,
+                        &shard_seeds,
+                        factory,
+                        &shard_cfg,
+                        &local,
+                        |handle| driver(s, &ctx, handle),
+                    );
+                    let (promotions, rounds_missed) = ctx.counters();
+                    ShardSlot {
+                        shard: s,
+                        promotions,
+                        rounds_missed,
+                        outcome: run.map(|(report, block)| ShardRun {
+                            report,
+                            store_ledger: store.take_ledger(),
+                            block,
+                        }),
+                    }
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .enumerate()
+            .map(|(s, h)| {
+                h.join().unwrap_or_else(|_| ShardSlot {
+                    shard: s,
+                    promotions: 0,
+                    rounds_missed: 0,
+                    outcome: Err(anyhow!("shard {s} thread panicked")),
+                })
+            })
+            .collect()
+    });
+
+    let total = plan.total_seats();
+    let extra = fleet.policy.max_extra_nodes;
+    let mut merged = CommLedger::default();
+    let mut shard_rows = Vec::with_capacity(n_shards);
+    let mut agg = ElasticStats::default();
+    let mut ends: Vec<NodeEnd> = Vec::new();
+    let mut blocks: Vec<Option<Vec<TrainState>>> = (0..n_shards).map(|_| None).collect();
+    let mut failures: Vec<(usize, anyhow::Error)> = Vec::new();
+
+    for slot in slots {
+        let s = slot.shard;
+        match slot.outcome {
+            Ok(run) => {
+                let identity = global_ids(plan, s, extra);
+                let shard_kills = run
+                    .report
+                    .ledger
+                    .events
+                    .iter()
+                    .filter(|e| e.kind == CommKind::ShardAdopt)
+                    .count() as u64;
+                for mut ev in run.store_ledger.events {
+                    if ev.kind == CommKind::SnapshotBroadcast && ev.bytes_received == 0 {
+                        // the publisher pseudo-node: remap to a per-shard
+                        // leader id past every real seat and spare
+                        ev.node = total + n_shards * extra + s;
+                    } else {
+                        ev.node = identity.get(ev.node).copied().unwrap_or(ev.node);
+                    }
+                    merged.record(ev);
+                }
+                for mut ev in run.report.ledger.events {
+                    ev.node = identity.get(ev.node).copied().unwrap_or(ev.node);
+                    merged.record(ev);
+                }
+                agg = add_stats(&agg, &run.report.stats);
+                shard_rows.push(ShardStats {
+                    shard: s,
+                    stats: run.report.stats,
+                    promotions: slot.promotions,
+                    rounds_missed: slot.rounds_missed,
+                    shard_kills,
+                });
+                for mut end in run.report.ends {
+                    remap_end(&mut end, &identity);
+                    ends.push(end);
+                }
+                blocks[s] = Some(run.block);
+            }
+            Err(e) => {
+                eprintln!("[fleet] shard {s} failed: {e:#}");
+                shard_rows.push(ShardStats {
+                    shard: s,
+                    stats: ElasticStats::default(),
+                    promotions: slot.promotions,
+                    rounds_missed: slot.rounds_missed,
+                    shard_kills: 0,
+                });
+                failures.push((s, e));
+            }
+        }
+    }
+    if failures.len() == n_shards {
+        let (s, e) = failures.swap_remove(0);
+        return Err(e.context(format!("every fleet shard failed (first: shard {s})")));
+    }
+    for (s, _) in &failures {
+        // a dead shard's last exchanged block is still authoritative for
+        // its seats (it crossed the boundary before the failure)
+        blocks[*s] = exchange.last_block(*s);
+    }
+    let exchange_ledger = exchange.take_ledger();
+    merged.events.extend(exchange_ledger.events);
+
+    let fallback = blocks
+        .iter()
+        .flatten()
+        .flat_map(|b| b.first())
+        .next()
+        .cloned()
+        .context("no shard produced any router block")?;
+    let mut global: Vec<Option<TrainState>> = (0..total).map(|_| None).collect();
+    for (s, block) in blocks.iter().enumerate() {
+        if let Some(block) = block {
+            for (i, &seat) in plan.members(s).iter().enumerate() {
+                if let Some(r) = block.get(i) {
+                    global[seat] = Some(r.clone());
+                }
+            }
+        }
+    }
+    let routers: Vec<TrainState> = global
+        .into_iter()
+        .map(|r| r.unwrap_or_else(|| fallback.clone()))
+        .collect();
+
+    shard_rows.sort_by_key(|r| r.shard);
+    ends.sort_by_key(NodeEnd::node);
+    Ok((
+        FleetReport {
+            stats: agg,
+            shards: shard_rows,
+            ledger: merged,
+            ends,
+        },
+        routers,
+    ))
+}
+
+fn remap_end(end: &mut NodeEnd, identity: &[usize]) {
+    match end {
+        NodeEnd::Completed(o) | NodeEnd::Left(o) => {
+            o.node = identity.get(o.node).copied().unwrap_or(o.node);
+        }
+        NodeEnd::Failed(f) => {
+            f.node = identity.get(f.node).copied().unwrap_or(f.node);
+        }
+    }
+}
+
+// -------------------------------------------------------------------------
+// end-of-run report
+// -------------------------------------------------------------------------
+
+/// Human-readable elastic/fleet rollup for the `smalltalk train` report.
+pub fn render_elastic_summary(s: &ElasticSummary) -> String {
+    let st = &s.stats;
+    let mut out = format!(
+        "elastic: kills {}, adoptions {}, leaves {}, joins {}, merges {}, steps_lost {}, transient_retries {}, recovery {} us",
+        st.kills,
+        st.adoptions,
+        st.leaves,
+        st.joins,
+        st.merges,
+        st.steps_lost,
+        st.transient_retries,
+        st.recovery_micros
+    );
+    for row in &s.shards {
+        out.push_str(&format!(
+            "\n  shard {}: kills {}, adoptions {}, steps_lost {}, promotions {}, rounds_missed {}, shard_kills {}, recovery {} us",
+            row.shard,
+            row.stats.kills,
+            row.stats.adoptions,
+            row.stats.steps_lost,
+            row.promotions,
+            row.rounds_missed,
+            row.shard_kills,
+            row.stats.recovery_micros
+        ));
+    }
+    out
+}
+
+fn stats_json(st: &ElasticStats) -> Json {
+    Json::obj(vec![
+        ("kills", Json::num(st.kills as f64)),
+        ("adoptions", Json::num(st.adoptions as f64)),
+        ("leaves", Json::num(st.leaves as f64)),
+        ("joins", Json::num(st.joins as f64)),
+        ("merges", Json::num(st.merges as f64)),
+        ("steps_lost", Json::num(st.steps_lost as f64)),
+        ("transient_retries", Json::num(st.transient_retries as f64)),
+        ("recovery_micros", Json::num(st.recovery_micros as f64)),
+    ])
+}
+
+/// The same rollup as JSON (for `smalltalk train --json`).
+pub fn elastic_summary_json(s: &ElasticSummary) -> Json {
+    Json::obj(vec![
+        ("stats", stats_json(&s.stats)),
+        (
+            "shards",
+            Json::Arr(
+                s.shards
+                    .iter()
+                    .map(|row| {
+                        Json::obj(vec![
+                            ("shard", Json::num(row.shard as f64)),
+                            ("promotions", Json::num(row.promotions as f64)),
+                            ("rounds_missed", Json::num(row.rounds_missed as f64)),
+                            ("shard_kills", Json::num(row.shard_kills as f64)),
+                            ("stats", stats_json(&row.stats)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+// -------------------------------------------------------------------------
+// production entry point
+// -------------------------------------------------------------------------
+
+/// Async mixture training across `t.shards` fault domains: each shard
+/// runs its own router EM (over its member seats only, salted per
+/// shard) and its own elastic expert nodes, publishing the assembled
+/// global router set to its own store every EM round (`snapshot_every`
+/// does not apply — round boundaries are the cross-shard sync points).
+/// Called by [`run_trainer`](super::trainer::run_trainer) when
+/// `t.shards > 1`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_trainer_async_sharded(
+    engine: &Engine,
+    bpe: &Bpe,
+    p: &PipelineConfig,
+    t: &TrainerConfig,
+    em: &EmConfig,
+    run_cfg: &NodeRunConfig,
+    backend: &EngineBackend<'_>,
+    router_meta: VariantMeta,
+    expert_meta: VariantMeta,
+) -> Result<PipelineResult> {
+    ensure!(
+        p.em_rounds > 0,
+        "async training needs at least one EM round to publish a router snapshot"
+    );
+    ensure!(
+        t.join_after == 0,
+        "--join-after is not supported with --shards (hot-spare adoption is shard-local)"
+    );
+    let shard_plan = ShardPlan::partition(p.n_experts, t.shards)?;
+    let faults = match &t.chaos_spec {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading chaos spec {}", path.display()))?;
+            FaultPlan::from_json_str(&text)
+                .with_context(|| format!("parsing chaos spec {}", path.display()))?
+        }
+        None => FaultPlan::none(),
+    };
+    let mut leaves = Vec::new();
+    if t.leave_after > 0 {
+        ensure!(p.n_experts > 0, "cannot schedule a leave with zero experts");
+        leaves.push(LeaveEvent {
+            node: p.n_experts - 1,
+            at_step: t.leave_after,
+            adopt: false,
+            rejoin: None,
+        });
+    }
+    let fleet = ElasticPlan {
+        faults,
+        leaves,
+        ..ElasticPlan::default()
+    };
+
+    let seeds: Vec<u64> = (0..p.n_experts).map(|e| p.seed ^ (0xE0 + e as u64)).collect();
+    let factory = |e: usize, salt: u64| {
+        SequenceGen::new(
+            bpe,
+            expert_meta.seq_len,
+            p.seed ^ (0xA5_0000 + e as u64) ^ salt.wrapping_mul(0x9E37_79B9),
+        )
+    };
+    // shard 0 reproduces the single-fleet seeds exactly; other shards
+    // train their EM on salted, disjoint streams
+    let shard_salt = |s: usize| (s as u64).wrapping_mul(0x9E37_79B9_97F4_A7C5);
+    let shard_logs: Mutex<Vec<Option<RunLog>>> = Mutex::new((0..t.shards).map(|_| None).collect());
+
+    let (report, routers) = run_sharded_nodes(
+        backend,
+        &shard_plan,
+        &seeds,
+        factory,
+        run_cfg,
+        &fleet,
+        |s, ctx: &ShardCtx<'_>, handle: &ElasticHandle<'_, '_>| {
+            let em_cfg = EmConfig {
+                n_routers: shard_plan.members(s).len(),
+                rounds: em.rounds,
+                chunk_size: em.chunk_size,
+                steps_per_round: em.steps_per_round,
+                prefix_len: em.prefix_len,
+                seed: em.seed ^ shard_salt(s),
+                threads: em.threads,
+            };
+            // the leader-local score exchange costs nothing on the
+            // cluster; only the boundary traffic is audited
+            let mut local_ledger = CommLedger::default();
+            let mut log = RunLog::new();
+            let mut router_gen =
+                SequenceGen::new(bpe, router_meta.seq_len, p.seed ^ 0x52_0000 ^ shard_salt(s));
+            let trained = train_routers_hooked(
+                engine,
+                &p.router_variant,
+                &em_cfg,
+                &mut router_gen,
+                &mut local_ledger,
+                &mut log,
+                |round, routers| ctx.round_boundary(handle, round as u64 + 1, routers),
+            )?;
+            shard_logs.lock().expect("shard logs poisoned")[s] = Some(log);
+            Ok(trained.routers)
+        },
+    )?;
+
+    let mut log = RunLog::new();
+    for (s, shard_log) in shard_logs
+        .into_inner()
+        .expect("shard logs poisoned")
+        .into_iter()
+        .enumerate()
+    {
+        if let Some(shard_log) = shard_log {
+            log.merge_prefixed(&format!("shard{s}"), &shard_log);
+        }
+    }
+    let FleetReport {
+        stats,
+        shards,
+        ledger,
+        ends,
+    } = report;
+    log.scalar("elastic/kills", 0.0, stats.kills as f64);
+    log.scalar("elastic/adoptions", 0.0, stats.adoptions as f64);
+    log.scalar("elastic/leaves", 0.0, stats.leaves as f64);
+    log.scalar("elastic/joins", 0.0, stats.joins as f64);
+    log.scalar("elastic/merges", 0.0, stats.merges as f64);
+    log.scalar("elastic/steps_lost", 0.0, stats.steps_lost as f64);
+    log.scalar(
+        "elastic/transient_retries",
+        0.0,
+        stats.transient_retries as f64,
+    );
+    log.scalar("elastic/recovery_micros", 0.0, stats.recovery_micros as f64);
+    for row in &shards {
+        let s = row.shard;
+        log.scalar(
+            &format!("fleet/shard{s}_promotions"),
+            0.0,
+            row.promotions as f64,
+        );
+        log.scalar(
+            &format!("fleet/shard{s}_rounds_missed"),
+            0.0,
+            row.rounds_missed as f64,
+        );
+        log.scalar(
+            &format!("fleet/shard{s}_shard_kills"),
+            0.0,
+            row.shard_kills as f64,
+        );
+        log.scalar(&format!("fleet/shard{s}_kills"), 0.0, row.stats.kills as f64);
+        log.scalar(
+            &format!("fleet/shard{s}_steps_lost"),
+            0.0,
+            row.stats.steps_lost as f64,
+        );
+    }
+
+    let mut slots: Vec<Option<NodeEnd>> = (0..p.n_experts).map(|_| None).collect();
+    for end in ends {
+        let seat = end.node();
+        if seat < slots.len() {
+            slots[seat] = Some(end);
+        }
+    }
+    let mut experts = Vec::with_capacity(p.n_experts);
+    let mut segment_purity = Vec::with_capacity(p.n_experts);
+    let mut segment_sizes = Vec::with_capacity(p.n_experts);
+    for (e, slot) in slots.into_iter().enumerate() {
+        match slot {
+            Some(NodeEnd::Completed(o)) | Some(NodeEnd::Left(o)) => {
+                log.merge_prefixed(&format!("expert{e}"), &o.log);
+                log.scalar(&format!("async/node{e}_drawn"), 0.0, o.drawn as f64);
+                log.scalar(&format!("async/node{e}_kept"), 0.0, o.kept as f64);
+                log.scalar(&format!("async/node{e}_steps"), 0.0, o.steps_done as f64);
+                segment_purity.push(o.purity());
+                segment_sizes.push(o.trained_sequences() as usize);
+                experts.push(o.state);
+            }
+            other => {
+                // degraded seat: salvage from the failure, else its
+                // shard-namespaced checkpoint, else a cold init
+                if let Some(NodeEnd::Failed(f)) = &other {
+                    eprintln!("[fleet] node {e} degraded: {:#}", f.error);
+                }
+                log.scalar(&format!("elastic/node{e}_degraded"), 0.0, 1.0);
+                segment_purity.push(0.0);
+                segment_sizes.push(0);
+                let salvage = match other {
+                    Some(NodeEnd::Failed(f)) => f.salvage,
+                    _ => None,
+                };
+                let state = match salvage {
+                    Some(s) => s,
+                    None => {
+                        let shard = shard_plan.shard_of(e);
+                        let local = shard_plan
+                            .members(shard)
+                            .iter()
+                            .position(|&g| g == e)
+                            .unwrap_or(0);
+                        let from_ckpt = run_cfg
+                            .checkpoint_dir
+                            .as_ref()
+                            .map(|d| ckpt_path(&d.join(format!("shard{shard}")), local))
+                            .filter(|path| path.exists());
+                        match from_ckpt {
+                            Some(path) => {
+                                load_node_checkpoint(&path)
+                                    .with_context(|| {
+                                        format!("recovering degraded node {e} from its checkpoint")
+                                    })?
+                                    .state
+                            }
+                            None => backend.init_expert(e, p.seed ^ (0xE0 + e as u64))?,
+                        }
+                    }
+                };
+                experts.push(state);
+            }
+        }
+    }
+
+    engine_transfer_scalars(engine, &mut log);
+    Ok(PipelineResult {
+        mixture: Mixture {
+            routers,
+            router_meta,
+            experts,
+            expert_meta,
+        },
+        ledger,
+        log,
+        segment_purity,
+        segment_sizes,
+        elastic: Some(ElasticSummary { stats, shards }),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(x: f32) -> TrainState {
+        TrainState::from_params("router_micro", vec![x, x + 1.0], vec![0.0; 2], vec![0.0; 2], 1)
+    }
+
+    #[test]
+    fn partition_is_near_even_and_covering() {
+        let plan = ShardPlan::partition(10, 3).unwrap();
+        assert_eq!(plan.n_shards(), 3);
+        assert_eq!(plan.total_seats(), 10);
+        assert_eq!(plan.members(0), &[0, 1, 2, 3]);
+        assert_eq!(plan.members(1), &[4, 5, 6]);
+        assert_eq!(plan.members(2), &[7, 8, 9]);
+        assert_eq!(plan.shard_of(0), 0);
+        assert_eq!(plan.shard_of(6), 1);
+        assert_eq!(plan.shard_of(9), 2);
+        assert!(ShardPlan::partition(2, 3).is_err());
+        assert!(ShardPlan::partition(4, 0).is_err());
+    }
+
+    #[test]
+    fn from_members_rejects_overlap_gap_and_empty() {
+        assert!(ShardPlan::from_members(vec![vec![0, 1], vec![2]]).is_ok());
+        assert!(ShardPlan::from_members(vec![vec![0, 1], vec![1]]).is_err());
+        assert!(ShardPlan::from_members(vec![vec![0, 3], vec![1]]).is_err());
+        assert!(ShardPlan::from_members(vec![vec![0], vec![]]).is_err());
+        assert!(ShardPlan::from_members(vec![]).is_err());
+    }
+
+    #[test]
+    fn exchange_swaps_blocks_and_skips_dead_shards() {
+        let ex = ShardExchange::new(3);
+        ex.retire(2); // never shows up
+        let b0 = vec![state(1.0)];
+        let b1 = vec![state(5.0)];
+        let (got0, got1) = std::thread::scope(|scope| {
+            let ex = &ex;
+            let h0 = scope.spawn(move || ex.exchange(0, 1, Some(b0), &[1, 2]));
+            let h1 = scope.spawn(move || ex.exchange(1, 1, Some(b1), &[0, 2]));
+            (h0.join().unwrap(), h1.join().unwrap())
+        });
+        assert_eq!(got0.len(), 1);
+        assert_eq!(got0[0].0, 1);
+        assert_eq!(got0[0].1[0].params, vec![5.0, 6.0]);
+        assert_eq!(got1.len(), 1);
+        assert_eq!(got1[0].0, 0);
+        assert_eq!(got1[0].1[0].params, vec![1.0, 2.0]);
+        assert_eq!(ex.last_block(0).unwrap()[0].params, vec![1.0, 2.0]);
+        assert!(ex.last_block(2).is_none());
+    }
+
+    #[test]
+    fn exchange_rounds_never_read_stale_deposits() {
+        let ex = ShardExchange::new(2);
+        std::thread::scope(|scope| {
+            let ex = &ex;
+            for s in 0..2usize {
+                scope.spawn(move || {
+                    for round in 1..=4u64 {
+                        let mine = vec![state(s as f32 * 100.0 + round as f32)];
+                        let got = ex.exchange(s, round, Some(mine), &[1 - s]);
+                        assert_eq!(got.len(), 1, "shard {s} round {round}");
+                        let expect = (1 - s) as f32 * 100.0 + round as f32;
+                        assert_eq!(got[0].1[0].params[0], expect, "shard {s} round {round}");
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn partitioned_exchange_neither_sends_nor_receives() {
+        let ex = ShardExchange::new(2);
+        let b1 = vec![state(5.0)];
+        let (cut, open) = std::thread::scope(|scope| {
+            let ex = &ex;
+            let h0 = scope.spawn(move || ex.exchange(0, 1, None, &[]));
+            let h1 = scope.spawn(move || ex.exchange(1, 1, Some(b1), &[]));
+            (h0.join().unwrap(), h1.join().unwrap())
+        });
+        assert!(cut.is_empty());
+        assert!(open.is_empty());
+        assert!(ex.last_block(0).is_none(), "cut shard deposited nothing");
+    }
+
+    #[test]
+    fn nesterov_catch_up_matches_the_merge_rule() {
+        let policy = ElasticPolicy::default(); // gamma 0.5, mu 0.9
+        let held = vec![state(0.0)];
+        let latest = vec![state(1.0)];
+        let mut vel = Vec::new();
+        let view = nesterov_catch_up(&policy, &held, &latest, &mut vel);
+        // d = 1, v = 0.9*0 + 1 = 1, view = 0 + 0.5*(1 + 0.9) = 0.95
+        assert!((view[0].params[0] - 0.95).abs() < 1e-6, "{}", view[0].params[0]);
+        assert_eq!(vel[0][0], 1.0);
+        // a second heal from the same gap accelerates via the velocity
+        let view2 = nesterov_catch_up(&policy, &view, &vec![state(2.0)], &mut vel);
+        assert!(view2[0].params[0] > view[0].params[0]);
+    }
+
+    #[test]
+    fn nesterov_catch_up_falls_back_on_shape_mismatch() {
+        let policy = ElasticPolicy::default();
+        let held = vec![TrainState::from_params("r", vec![0.0], vec![0.0], vec![0.0], 0)];
+        let latest = vec![state(3.0)];
+        let mut vel = Vec::new();
+        let view = nesterov_catch_up(&policy, &held, &latest, &mut vel);
+        assert_eq!(view[0].params, latest[0].params);
+    }
+
+    #[test]
+    fn local_plan_filters_remaps_and_tags_shard_kills() {
+        let plan = ShardPlan::partition(4, 2).unwrap();
+        let mut faults = FaultPlan::none();
+        faults.kills = vec![
+            KillSpec { node: 0, at_step: 3 },
+            KillSpec { node: 2, at_step: 5 },
+        ];
+        faults.shard_kills = vec![super::super::chaos::ShardKillSpec { shard: 1, at_step: 7 }];
+        let fleet = ElasticPlan {
+            faults,
+            ..ElasticPlan::default()
+        };
+        let local0 = shard_local_plan(&plan, 0, &fleet);
+        assert_eq!(local0.faults.kills, vec![KillSpec { node: 0, at_step: 3 }]);
+        assert!(local0.shard_kill_indices.is_empty());
+        let id0 = local0.seat_identity.unwrap();
+        assert_eq!(id0.global, vec![0, 1]);
+        assert_eq!(id0.space, 4);
+        let local1 = shard_local_plan(&plan, 1, &fleet);
+        // node-level kill on global seat 2 remaps to local 0; the shard
+        // kill expands to one tagged kill per member after it
+        assert_eq!(
+            local1.faults.kills,
+            vec![
+                KillSpec { node: 0, at_step: 5 },
+                KillSpec { node: 0, at_step: 7 },
+                KillSpec { node: 1, at_step: 7 },
+            ]
+        );
+        assert_eq!(local1.shard_kill_indices, vec![1, 2]);
+        assert_eq!(local1.seat_identity.unwrap().global, vec![2, 3]);
+    }
+
+    #[test]
+    fn summary_render_and_json_pin_the_report_shape() {
+        let summary = ElasticSummary {
+            stats: ElasticStats {
+                kills: 3,
+                steps_lost: 7,
+                ..ElasticStats::default()
+            },
+            shards: vec![ShardStats {
+                shard: 1,
+                stats: ElasticStats {
+                    kills: 2,
+                    ..ElasticStats::default()
+                },
+                promotions: 1,
+                rounds_missed: 2,
+                shard_kills: 2,
+            }],
+        };
+        let text = render_elastic_summary(&summary);
+        assert!(text.starts_with("elastic: kills 3,"), "{text}");
+        assert!(text.contains("steps_lost 7"), "{text}");
+        assert!(text.contains("shard 1: kills 2"), "{text}");
+        assert!(text.contains("promotions 1"), "{text}");
+        assert!(text.contains("rounds_missed 2"), "{text}");
+        assert!(text.contains("shard_kills 2"), "{text}");
+
+        let j = elastic_summary_json(&summary);
+        assert_eq!(j.get("stats").unwrap().get("kills").unwrap().as_i64(), Some(3));
+        let Some(Json::Arr(rows)) = j.get("shards") else {
+            panic!("shards must be an array");
+        };
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("shard").unwrap().as_i64(), Some(1));
+        assert_eq!(rows[0].get("promotions").unwrap().as_i64(), Some(1));
+        assert_eq!(
+            rows[0].get("stats").unwrap().get("kills").unwrap().as_i64(),
+            Some(2)
+        );
+        // round-trips through the repo's own JSON printer/parser
+        let reparsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(
+            reparsed.get("shards").unwrap().get("x").is_none(),
+            true
+        );
+    }
+}

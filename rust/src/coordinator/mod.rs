@@ -17,12 +17,16 @@
 //!   (failure-tolerant, join/leave membership) modes
 //! * [`chaos`] — seeded deterministic fault plans for the elastic
 //!   trainer's chaos harness
+//! * [`fleet`] — fleet-sharded elastic training: expert seats across
+//!   multiple snapshot-store fault domains with round-boundary-only
+//!   cross-shard exchange and shard-level chaos
 
 pub mod assignment;
 pub mod chaos;
 pub mod comm;
 pub mod em;
 pub mod expert;
+pub mod fleet;
 pub mod inference;
 pub mod net;
 pub mod pipeline;
@@ -42,14 +46,18 @@ pub use inference::{
 };
 pub use pipeline::{run_pipeline, run_pipeline_reference, PipelineConfig, PipelineResult};
 pub use chaos::{
-    is_transient, DropSpec, FaultPlan, KillSpec, PlanShape, PublishGate, StallSpec, TransientFault,
-    TransientSpec,
+    is_transient, DropSpec, FaultPlan, KillSpec, LeaderLossSpec, PlanShape, PublishGate,
+    ShardKillSpec, ShardPartitionSpec, StallSpec, TransientFault, TransientSpec,
+};
+pub use fleet::{
+    elastic_summary_json, render_elastic_summary, router_block_bytes, run_sharded_nodes,
+    ElasticSummary, FleetReport, ShardCtx, ShardExchange, ShardPlan, ShardStats,
 };
 pub use trainer::{
     run_async_nodes, run_elastic_nodes, run_staged_nodes, run_trainer, ElasticHandle, ElasticPlan,
     ElasticPolicy, ElasticReport, ElasticStats, EngineBackend, LeaveEvent, NodeEnd, NodeFailure,
-    NodeOutcome, NodeProgress, NodeRunConfig, Rejoin, RouterSnapshot, SnapshotStore, TrainBackend,
-    TrainMode, TrainerConfig, TrainerHandle,
+    NodeOutcome, NodeProgress, NodeRunConfig, Rejoin, RouterSnapshot, SeatIdentity, SnapshotStore,
+    TrainBackend, TrainMode, TrainerConfig, TrainerHandle,
 };
 pub use net::{serve_net, NetConfig, NetHandle, NetReport};
 pub use server::{

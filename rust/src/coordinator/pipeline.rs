@@ -21,6 +21,7 @@ use anyhow::Result;
 use super::comm::CommLedger;
 use super::em::{train_routers, EmConfig};
 use super::expert::{train_expert, ExpertConfig};
+use super::fleet::ElasticSummary;
 use super::inference::Mixture;
 use super::sharding::shard_corpus;
 use super::trainer::{run_trainer, TrainerConfig};
@@ -83,6 +84,10 @@ pub struct PipelineResult {
     pub segment_purity: Vec<f64>,
     /// Segment sizes after sharding (async: sequences trained per node).
     pub segment_sizes: Vec<usize>,
+    /// Elastic/fleet recovery accounting — `None` for staged and plain
+    /// async runs, `Some` whenever the elastic machinery ran (per-shard
+    /// rows only in fleet mode).
+    pub elastic: Option<ElasticSummary>,
 }
 
 /// Run Algorithm 1 end to end (staged orchestration, bit-identical to
@@ -199,5 +204,6 @@ pub fn run_pipeline_reference(
         log,
         segment_purity,
         segment_sizes,
+        elastic: None,
     })
 }

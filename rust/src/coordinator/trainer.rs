@@ -93,6 +93,46 @@
 //! router driver itself failed; or a node is orphaned — waiting on a
 //! first snapshot longer than [`NodeRunConfig::snapshot_wait_us`] after
 //! the store closed or timed out.
+//!
+//! # Shard-level failure model (fleet mode — [`run_sharded_nodes`](super::fleet::run_sharded_nodes))
+//!
+//! [`super::fleet`] partitions the expert seats across several
+//! `SnapshotStore` domains — one router leader per shard — and makes the
+//! *shard* a fault unit on top of the node-level model above:
+//!
+//! * **Fault units.** Node faults stay node-scoped (a shard-local
+//!   [`FaultPlan`] derived from the fleet plan by membership). Shard
+//!   faults — `partition`, `leader loss`, `shard kill` — are keyed on EM
+//!   rounds or local steps, never wall-clock, so fleet replays are
+//!   bit-identical under [`FaultPlan::reset`].
+//! * **Partition.** A partitioned shard neither sends nor receives
+//!   cross-shard router publishes for the cut rounds (a symmetric cut).
+//!   Its members keep training against stale held copies of foreign
+//!   router blocks; on heal, each healed edge catches up through the
+//!   same delayed-Nesterov outer update as rejoin merges, with
+//!   *staleness = rounds missed* recorded on the
+//!   [`CrossShardPublish`](super::comm::CommKind::CrossShardPublish)
+//!   event. Each shard stays authoritative for its own router block, so
+//!   the final global router set is partition-independent.
+//! * **Promotion (leader loss).** At the faulted round boundary the next
+//!   surviving member is promoted deterministically (member order), and
+//!   adopts the dead leader's router checkpoint — one
+//!   [`ShardAdopt`](super::comm::CommKind::ShardAdopt) transfer of the
+//!   block. The round's publish is re-derived by the promoted member, so
+//!   promotion perturbs accounting, never math.
+//! * **Shard kill.** Every seat of the shard dies at the planned local
+//!   step; each seat is re-adopted from its member checkpoint (the
+//!   node-level adoption machinery), with the transfers audited as
+//!   `ShardAdopt` (a fault-domain crossing) instead of in-shard
+//!   `CheckpointAdopt`, and re-done steps counted in
+//!   [`ElasticStats::steps_lost`].
+//! * **Ledger contract.** [`CommLedger`] partitions exactly into
+//!   intra-shard bytes (snapshot broadcasts, in-shard adoptions, merges)
+//!   and inter-shard bytes (`CrossShardPublish` + `ShardAdopt`); cross-
+//!   shard events carry their EM round as `step` and are recorded *only*
+//!   at round boundaries — inter-shard bytes between boundaries are
+//!   structurally zero. A fleet run returns `Ok` whenever at least one
+//!   shard survives.
 
 use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
@@ -155,6 +195,10 @@ pub struct SnapshotStore {
     /// against the count *at publish time* (the ledger stays exact under
     /// churn).
     subscribers: AtomicUsize,
+    /// Which fleet shard this store serves (`None` = the single-fleet
+    /// case). Purely diagnostic: it rides on waiter errors so multi-
+    /// shard failures are attributable from the error chain alone.
+    shard: Option<usize>,
     inner: Mutex<StoreInner>,
     cv: Condvar,
     ledger: Mutex<CommLedger>,
@@ -165,6 +209,7 @@ impl SnapshotStore {
     pub fn new(subscribers: usize) -> Self {
         SnapshotStore {
             subscribers: AtomicUsize::new(subscribers),
+            shard: None,
             inner: Mutex::new(StoreInner {
                 snap: None,
                 closed: false,
@@ -172,6 +217,20 @@ impl SnapshotStore {
             cv: Condvar::new(),
             ledger: Mutex::new(CommLedger::default()),
         }
+    }
+
+    /// A store serving one fleet shard: like [`SnapshotStore::new`], but
+    /// waiter errors carry the shard id.
+    pub fn new_sharded(subscribers: usize, shard: usize) -> Self {
+        SnapshotStore {
+            shard: Some(shard),
+            ..SnapshotStore::new(subscribers)
+        }
+    }
+
+    /// The shard this store serves, if it belongs to a fleet.
+    pub fn shard(&self) -> Option<usize> {
+        self.shard
     }
 
     pub fn subscribers(&self) -> usize {
@@ -255,6 +314,32 @@ impl SnapshotStore {
     /// the store) errors structurally after `timeout` instead of
     /// blocking forever. `None` waits indefinitely.
     pub fn wait_current_for(&self, timeout: Option<Duration>) -> Result<Arc<RouterSnapshot>> {
+        self.wait_current_ctx(timeout, None)
+    }
+
+    /// The attributability suffix for waiter errors: which shard, which
+    /// node, and which snapshot version the waiter was blocked on.
+    fn wait_ctx(&self, node: Option<usize>, version: u64) -> String {
+        let shard = match self.shard {
+            Some(s) => format!("shard {s}"),
+            None => "unsharded".to_string(),
+        };
+        let node = match node {
+            Some(n) => format!("node {n}"),
+            None => "external waiter".to_string(),
+        };
+        format!("{shard}, {node}, waited on snapshot version >= {version}, store at version 0")
+    }
+
+    /// [`wait_current_for`](SnapshotStore::wait_current_for) with the
+    /// waiting node's identity attached to any close/timeout error, so a
+    /// multi-shard failure names its shard, node, and the snapshot
+    /// version waited on from the error chain alone.
+    pub fn wait_current_ctx(
+        &self,
+        timeout: Option<Duration>,
+        node: Option<usize>,
+    ) -> Result<Arc<RouterSnapshot>> {
         let deadline = timeout.map(|t| Instant::now() + t);
         let mut g = self.lock();
         loop {
@@ -262,7 +347,10 @@ impl SnapshotStore {
                 return Ok(s.clone());
             }
             if g.closed {
-                bail!("snapshot store closed before any router snapshot was published");
+                bail!(
+                    "snapshot store closed before any router snapshot was published ({})",
+                    self.wait_ctx(node, 1)
+                );
             }
             match deadline {
                 None => g = self.cv.wait(g).expect("snapshot store poisoned"),
@@ -271,8 +359,9 @@ impl SnapshotStore {
                     if now >= d {
                         bail!(
                             "timed out after {:?} waiting for the first router snapshot \
-                             (node orphaned: is the publisher alive?)",
-                            timeout.expect("deadline implies timeout")
+                             ({}; node orphaned: is the publisher alive?)",
+                            timeout.expect("deadline implies timeout"),
+                            self.wait_ctx(node, 1)
                         );
                     }
                     let (guard, _) = self
@@ -429,6 +518,12 @@ pub struct NodeRunConfig {
     /// before erroring structurally — the orphaned-node valve. 0 = wait
     /// forever. Default 60 s.
     pub snapshot_wait_us: u64,
+    /// Fleet back-compat: a pre-shard flat checkpoint directory to fall
+    /// back to when `checkpoint_dir` (shard-namespaced) holds no
+    /// checkpoint for a node yet. Only sound when global seat ids equal
+    /// local ones (a one-shard fleet) — the fleet layer sets it exactly
+    /// then. `None` everywhere else.
+    pub legacy_flat_dir: Option<PathBuf>,
 }
 
 impl Default for NodeRunConfig {
@@ -443,6 +538,7 @@ impl Default for NodeRunConfig {
             route_chunk: 0,
             draw_budget: 0,
             snapshot_wait_us: 60_000_000,
+            legacy_flat_dir: None,
         }
     }
 }
@@ -561,8 +657,10 @@ enum SliceOutcome {
     Progress,
     /// Step budget met (or stream exhausted): the node is done.
     Finished,
-    /// Elastic only: a [`FaultPlan`] kill fired at the top of a step.
-    Killed,
+    /// Elastic only: a [`FaultPlan`] kill fired at the top of a step;
+    /// carries the index of the [`KillSpec`](super::chaos::KillSpec)
+    /// that fired (fleet runs tag some indices as whole-shard kills).
+    Killed(usize),
     /// Elastic only: the node left the run (index into the
     /// [`ElasticPlan::leaves`] schedule). Its checkpoint was written so
     /// an adopter can resume this exact position.
@@ -660,7 +758,7 @@ struct Node<'env> {
     held_snap: Option<Arc<RouterSnapshot>>,
 }
 
-fn ckpt_path(dir: &Path, idx: usize) -> PathBuf {
+pub(crate) fn ckpt_path(dir: &Path, idx: usize) -> PathBuf {
     dir.join(format!("node{idx}.ckpt"))
 }
 
@@ -734,9 +832,14 @@ impl<'env> Node<'env> {
         let Some(dir) = &cfg.checkpoint_dir else {
             return Ok(());
         };
-        let path = ckpt_path(dir, self.idx);
+        let mut path = ckpt_path(dir, self.idx);
         if !path.exists() {
-            return Ok(());
+            // one-shard fleets may point at a pre-shard flat layout: the
+            // old `node{e}.ckpt` files still load (global == local there)
+            match cfg.legacy_flat_dir.as_ref().map(|d| ckpt_path(d, self.idx)) {
+                Some(flat) if flat.exists() => path = flat,
+                _ => return Ok(()),
+            }
         }
         let ck = load_node_checkpoint(&path)
             .with_context(|| format!("resuming node {} from {}", self.idx, path.display()))?;
@@ -856,7 +959,7 @@ impl<'env> Node<'env> {
                 // with the fleet it is joining
                 let snap = store
                     .expect("joiners only exist in stream runs, which have a store")
-                    .wait_current_for(snapshot_wait(cfg))?;
+                    .wait_current_ctx(snapshot_wait(cfg), Some(self.idx))?;
                 let st = backend.init_joiner(self.idx, self.seed, &snap)?;
                 self.held_snap = Some(snap);
                 st
@@ -874,11 +977,11 @@ impl<'env> Node<'env> {
         while !self.finished && self.steps_done < cfg.steps_per_node && slice < SLICE_STEPS {
             if let Some(ctx) = elastic {
                 let step = self.steps_done as u64;
-                if ctx.faults.take_kill(self.idx, step) {
+                if let Some(ki) = ctx.faults.take_kill_indexed(self.idx, step) {
                     // die without checkpointing: the adopter resumes
                     // from the last *saved* boundary, losing exactly
                     // the steps since then
-                    return Ok(SliceOutcome::Killed);
+                    return Ok(SliceOutcome::Killed(ki));
                 }
                 if let Some(li) = ctx.take_leave(self.idx, self.steps_done) {
                     if cfg.checkpoint_dir.is_some() && self.last_saved != Some(self.steps_done) {
@@ -914,7 +1017,7 @@ impl<'env> Node<'env> {
                         self.drawn += chunk.len() as u64;
                         let latest = store
                             .expect("stream nodes always run with a snapshot store")
-                            .wait_current_for(snapshot_wait(cfg))?;
+                            .wait_current_ctx(snapshot_wait(cfg), Some(self.idx))?;
                         let snap = match elastic {
                             Some(ctx) if ctx.faults.drops_delivery(self.idx, latest.version) => {
                                 // dropped delivery: keep routing against
@@ -947,12 +1050,19 @@ impl<'env> Node<'env> {
                             rows.len()
                         );
                         drop(rows);
+                        // in a fleet shard, routing runs in the global
+                        // seat space: keep rows routed to this node's
+                        // *global* seat, not its local index
+                        let (keep_id, route_space) = match elastic {
+                            Some(ctx) => ctx.route_identity(self.idx, n_nodes),
+                            None => (self.idx, n_nodes),
+                        };
                         for (seq, &e) in chunk.into_iter().zip(&routes) {
                             ensure!(
-                                e < n_nodes,
-                                "route index {e} out of range for {n_nodes} expert nodes"
+                                e < route_space,
+                                "route index {e} out of range for {route_space} expert seats"
                             );
-                            if e == self.idx {
+                            if e == keep_id {
                                 pool.push_back(seq);
                                 self.kept += 1;
                             }
@@ -1364,6 +1474,17 @@ impl Default for ElasticPolicy {
     }
 }
 
+/// Global routing identity for shard-local runs: a fleet shard runs its
+/// nodes at local indices `0..k`, but routing happens in the *global*
+/// seat space (the published snapshot concatenates every shard's router
+/// block). `global[local]` is the seat a local node keeps rows for, and
+/// `space` is the total seat count route indices are validated against.
+#[derive(Clone, Debug, Default)]
+pub struct SeatIdentity {
+    pub global: Vec<usize>,
+    pub space: usize,
+}
+
 /// Everything an elastic run is told up front: the seeded fault plan,
 /// the membership (leave/rejoin) schedule, and the tolerance policy.
 #[derive(Default)]
@@ -1371,6 +1492,14 @@ pub struct ElasticPlan {
     pub faults: FaultPlan,
     pub leaves: Vec<LeaveEvent>,
     pub policy: ElasticPolicy,
+    /// Fleet runs: kill-spec indices in `faults.kills` that belong to a
+    /// whole-shard kill — their recoveries are audited as
+    /// [`ShardAdopt`](super::comm::CommKind::ShardAdopt) (a fault-domain
+    /// crossing) instead of in-shard `CheckpointAdopt` events.
+    pub shard_kill_indices: Vec<usize>,
+    /// Fleet runs: local-seat → global-seat routing identity. `None`
+    /// (the single-fleet case) routes in the local index space.
+    pub seat_identity: Option<SeatIdentity>,
 }
 
 /// A node that could not be carried to the end of the run.
@@ -1507,9 +1636,22 @@ struct ElasticCtx<'env, 'p> {
     factory: &'p (dyn Fn(usize, u64) -> SequenceGen<'env> + Sync),
     route_chunk: usize,
     draw_budget: u64,
+    /// Fleet runs: which kill indices are whole-shard kills (see
+    /// [`ElasticPlan::shard_kill_indices`]).
+    shard_kill_indices: &'p [usize],
+    /// Fleet runs: local→global routing identity.
+    seat_identity: Option<&'p SeatIdentity>,
 }
 
 impl<'env> ElasticCtx<'env, '_> {
+    /// The `(keep-id, route-space)` a seat routes under: its global seat
+    /// id in a fleet, its local index otherwise.
+    fn route_identity(&self, seat: usize, n_nodes: usize) -> (usize, usize) {
+        match self.seat_identity {
+            Some(si) => (si.global.get(seat).copied().unwrap_or(seat), si.space),
+            None => (seat, n_nodes),
+        }
+    }
     /// Fire the first unfired leave scheduled for `node` at or before
     /// `step` (one-shot; see `leaves_fired`).
     fn take_leave(&self, node: usize, step: usize) -> Option<usize> {
@@ -1573,8 +1715,9 @@ fn train_offline<'env, B: TrainBackend>(
                 rows.len()
             );
             drop(rows);
+            let (keep_id, _) = ctx.route_identity(seat, n_routers);
             for (seq, &e) in chunk.into_iter().zip(&routes) {
-                if e == seat {
+                if e == keep_id {
                     pool.push(seq);
                 }
             }
@@ -1665,7 +1808,7 @@ fn elastic_node_worker<'env, B: TrainBackend>(
                     retire_node(remaining, queue);
                 }
             }
-            Ok(SliceOutcome::Killed) => {
+            Ok(SliceOutcome::Killed(ki)) => {
                 ctx.stats.kills.fetch_add(1, Ordering::Relaxed);
                 let died_at = node.steps_done;
                 drop(node); // the dead process: its in-memory state is gone
@@ -1679,10 +1822,16 @@ fn elastic_node_worker<'env, B: TrainBackend>(
                         ctx.stats
                             .recovery_micros
                             .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
-                        ctx.ledger
-                            .lock()
-                            .expect("elastic ledger poisoned")
-                            .record_checkpoint_adopt(idx, ckpt_bytes, resumed as u64);
+                        let mut ledger =
+                            ctx.ledger.lock().expect("elastic ledger poisoned");
+                        if ctx.shard_kill_indices.contains(&ki) {
+                            // a whole-shard kill: the recovery crosses
+                            // the shard's fault-domain boundary
+                            ledger.record_shard_adopt(idx, ckpt_bytes, resumed as u64);
+                        } else {
+                            ledger.record_checkpoint_adopt(idx, ckpt_bytes, resumed as u64);
+                        }
+                        drop(ledger);
                         replacement.publish_progress(&progress[idx]);
                         // no subscriber adjustment: the seat was never
                         // vacant from the broadcast ledger's viewpoint
@@ -1822,7 +1971,16 @@ where
         factory: &stream_factory,
         route_chunk,
         draw_budget,
+        shard_kill_indices: &plan.shard_kill_indices,
+        seat_identity: plan.seat_identity.as_ref(),
     };
+    if let Some(si) = &plan.seat_identity {
+        ensure!(
+            si.global.len() >= seats,
+            "seat identity covers {} seats, run has {seats}",
+            si.global.len()
+        );
+    }
     if let Some(dir) = &cfg.checkpoint_dir {
         let swept = sweep_stale_temps(dir).context("sweeping stale checkpoint temp files")?;
         if swept > 0 {
@@ -2078,6 +2236,10 @@ pub struct TrainerConfig {
     /// Async: re-adopt the departed seat once the fleet has this many
     /// total steps (0 = no adoption).
     pub join_after: usize,
+    /// Async: partition the expert seats across this many independent
+    /// `SnapshotStore` fault domains (1 = single-fleet; see
+    /// [`run_sharded_nodes`](super::fleet::run_sharded_nodes)).
+    pub shards: usize,
 }
 
 impl TrainerConfig {
@@ -2093,6 +2255,7 @@ impl TrainerConfig {
             chaos_spec: None,
             leave_after: 0,
             join_after: 0,
+            shards: 1,
         }
     }
 
@@ -2152,12 +2315,28 @@ pub fn run_trainer(
         },
         draw_budget: t.draw_budget,
         snapshot_wait_us: NodeRunConfig::default().snapshot_wait_us,
+        legacy_flat_dir: None,
     };
+    ensure!(
+        t.shards <= 1 || matches!(t.mode, TrainMode::Async),
+        "--shards requires async mode (staged mode has a single coordinator)"
+    );
     let elastic = t.chaos_spec.is_some() || t.leave_after > 0 || t.join_after > 0;
     match t.mode {
         TrainMode::Staged => {
             run_trainer_staged(engine, bpe, p, &em, &run_cfg, &backend, expert_meta)
         }
+        TrainMode::Async if t.shards > 1 => super::fleet::run_trainer_async_sharded(
+            engine,
+            bpe,
+            p,
+            t,
+            &em,
+            &run_cfg,
+            &backend,
+            router_meta,
+            expert_meta,
+        ),
         TrainMode::Async if elastic => run_trainer_async_elastic(
             engine,
             bpe,
@@ -2183,7 +2362,7 @@ pub fn run_trainer(
     }
 }
 
-fn engine_transfer_scalars(engine: &Engine, log: &mut RunLog) {
+pub(crate) fn engine_transfer_scalars(engine: &Engine, log: &mut RunLog) {
     // Transfer accounting: engine-lifetime totals at completion, so run
     // records show what the device-resident buffer cache saved.
     let stats = engine.stats();
@@ -2264,6 +2443,7 @@ fn run_trainer_staged(
         log,
         segment_purity,
         segment_sizes,
+        elastic: None,
     })
 }
 
@@ -2358,6 +2538,7 @@ fn run_trainer_async(
         log,
         segment_purity,
         segment_sizes,
+        elastic: None,
     })
 }
 
@@ -2406,7 +2587,7 @@ fn run_trainer_async_elastic(
     let plan = ElasticPlan {
         faults,
         leaves,
-        policy: ElasticPolicy::default(),
+        ..ElasticPlan::default()
     };
 
     let mut log = RunLog::new();
@@ -2571,6 +2752,10 @@ fn run_trainer_async_elastic(
         log,
         segment_purity,
         segment_sizes,
+        elastic: Some(super::fleet::ElasticSummary {
+            stats,
+            shards: Vec::new(),
+        }),
     })
 }
 
@@ -2605,6 +2790,8 @@ mod tests {
         store.close();
         let err = store.wait_current().unwrap_err().to_string();
         assert!(err.contains("closed before any"), "{err}");
+        assert!(err.contains("unsharded"), "{err}");
+        assert!(err.contains("external waiter"), "{err}");
     }
 
     #[test]
@@ -2700,5 +2887,33 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("timed out"), "{err}");
+        // an anonymous waiter on an unsharded store still gets full context
+        assert!(err.contains("unsharded"), "{err}");
+        assert!(err.contains("external waiter"), "{err}");
+        assert!(err.contains("version >= 1"), "{err}");
+    }
+
+    #[test]
+    fn wait_errors_carry_shard_and_node_context() {
+        let store = SnapshotStore::new_sharded(2, 1);
+        assert_eq!(store.shard(), Some(1));
+        let err = store
+            .wait_current_ctx(Some(Duration::from_millis(5)), Some(3))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("timed out"), "{err}");
+        assert!(err.contains("shard 1"), "{err}");
+        assert!(err.contains("node 3"), "{err}");
+        assert!(err.contains("version >= 1"), "{err}");
+
+        let closed = SnapshotStore::new_sharded(1, 0);
+        closed.close();
+        let err = closed
+            .wait_current_ctx(None, Some(0))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("closed before any"), "{err}");
+        assert!(err.contains("shard 0"), "{err}");
+        assert!(err.contains("node 0"), "{err}");
     }
 }

@@ -16,9 +16,9 @@ use anyhow::{bail, Context, Result};
 use smalltalk::baselines::train_dense;
 use smalltalk::config::ExperimentConfig;
 use smalltalk::coordinator::{
-    comm, dense_perplexity, response_triples, run_pipeline, run_server, run_trainer,
-    serve_net, serve_threaded, CommLedger, Mixture, MixtureBackend, NetConfig, PipelineConfig,
-    Request, ServerConfig, TrainMode, TrainerConfig,
+    comm, dense_perplexity, elastic_summary_json, render_elastic_summary, response_triples,
+    run_pipeline, run_server, run_trainer, serve_net, serve_threaded, CommLedger, Mixture,
+    MixtureBackend, NetConfig, PipelineConfig, Request, ServerConfig, TrainMode, TrainerConfig,
 };
 use smalltalk::data::corpus::Corpus;
 use smalltalk::data::SequenceGen;
@@ -38,8 +38,8 @@ const VALUE_OPTS: &[&str] = &[
     "prefix", "eval-sequences", "tasks-per-domain", "seed", "requests", "out",
     "ckpt-dir", "steps", "threads", "batch-size", "max-wait-us", "stream",
     "delay-us", "checkpoint-dir", "checkpoint-every", "snapshot-every",
-    "chaos-spec", "leave-after", "join-after", "listen", "max-conns",
-    "high-water",
+    "chaos-spec", "leave-after", "join-after", "shards", "listen",
+    "max-conns", "high-water",
 ];
 
 const EVAL_SEED: u64 = 0xE7A1;
@@ -66,6 +66,9 @@ fn usage() -> &'static str {
                                           dropped deliveries, delayed publishes)\n\
                      --leave-after N (async: last node leaves at local step N)\n\
                      --join-after N (async: re-adopt the departed seat after N total steps)\n\
+                     --shards N (async: partition expert seats across N snapshot-store\n\
+                                 fault domains; routers cross shards only at EM\n\
+                                 round boundaries. chaos-spec may add shard faults)\n\
                      (e2e accepts the same training flags)\n\
      serve options:  --requests N --batch-size N (per-expert dispatch batch; 0 = eval batch)\n\
                      --max-wait-us N (linger before dispatching a partial batch)\n\
@@ -150,6 +153,7 @@ fn trainer_config(cfg: &ExperimentConfig) -> TrainerConfig {
         },
         leave_after: cfg.leave_after,
         join_after: cfg.join_after,
+        shards: cfg.shards.max(1),
     }
 }
 
@@ -277,6 +281,9 @@ fn cmd_e2e(cfg: &ExperimentConfig) -> Result<()> {
         result.ledger.peak_node_bytes(),
         comm::ddp_bytes_per_step(meta.param_count as u64),
     );
+    if let Some(summary) = &result.elastic {
+        println!("{}", render_elastic_summary(summary));
+    }
 
     // persist
     std::fs::create_dir_all(&cfg.results_dir).ok();
@@ -343,6 +350,26 @@ fn cmd_train(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
         result.ledger.total_bytes(),
         result.ledger.peak_node_bytes()
     );
+    let (intra, inter) = (
+        result.ledger.intra_shard_bytes(),
+        result.ledger.inter_shard_bytes(),
+    );
+    if inter > 0 {
+        println!("comm: {intra} intra-shard bytes, {inter} inter-shard bytes");
+    }
+    if let Some(summary) = &result.elastic {
+        println!("{}", render_elastic_summary(summary));
+        std::fs::create_dir_all(&cfg.results_dir).ok();
+        let report = Json::obj(vec![
+            ("elastic", elastic_summary_json(summary)),
+            ("intra_shard_bytes", Json::num(intra as f64)),
+            ("inter_shard_bytes", Json::num(inter as f64)),
+        ]);
+        let path = format!("{}/train_report.json", cfg.results_dir);
+        std::fs::write(&path, report.to_string_pretty())
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote elastic report to {path}");
+    }
 
     let dir = args.get_or("ckpt-dir", "checkpoints");
     for (e, r) in result.mixture.routers.iter().enumerate() {

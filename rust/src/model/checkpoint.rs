@@ -139,8 +139,11 @@ fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
 /// between the temp-file write and the rename in [`write_atomic`] leaves
 /// a `foo.tmp` next to the (still-good) `foo.ckpt` forever; trainers call
 /// this once on startup so orphans don't accumulate across restarts.
-/// Returns the number of files removed; a missing directory is `Ok(0)`
-/// (nothing was ever written there).
+/// Fleet runs namespace node checkpoints into `shard{N}/` subdirectories,
+/// so the sweep descends one level into any `shard*` child (and only
+/// those — unrelated subdirectories are left alone). Returns the number
+/// of files removed; a missing directory is `Ok(0)` (nothing was ever
+/// written there).
 pub fn sweep_stale_temps(dir: impl AsRef<Path>) -> Result<usize> {
     let dir = dir.as_ref();
     let entries = match std::fs::read_dir(dir) {
@@ -155,6 +158,13 @@ pub fn sweep_stale_temps(dir: impl AsRef<Path>) -> Result<usize> {
             std::fs::remove_file(&path)
                 .with_context(|| format!("removing stale temp {}", path.display()))?;
             removed += 1;
+        } else if path.is_dir()
+            && path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("shard"))
+        {
+            removed += sweep_stale_temps(&path)?;
         }
     }
     Ok(removed)
@@ -540,6 +550,32 @@ mod tests {
         // idempotent; and the surviving checkpoint still loads
         assert_eq!(sweep_stale_temps(&dir).unwrap(), 0);
         assert!(load_checkpoint(dir.join("node0.ckpt")).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sweep_descends_into_shard_subdirectories() {
+        let dir = std::env::temp_dir().join(format!(
+            "smalltalk_sweep_shard_test_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(dir.join("shard0")).unwrap();
+        std::fs::create_dir_all(dir.join("shard1")).unwrap();
+        std::fs::create_dir_all(dir.join("unrelated")).unwrap();
+        // orphans at the root and inside each shard; a decoy in an
+        // unrelated subdirectory must survive
+        std::fs::write(dir.join("node0.tmp"), b"torn").unwrap();
+        std::fs::write(dir.join("shard0").join("node0.tmp"), b"torn").unwrap();
+        std::fs::write(dir.join("shard1").join("node2.tmp"), b"torn").unwrap();
+        std::fs::write(dir.join("unrelated").join("keep.tmp"), b"keep").unwrap();
+        save_checkpoint(&state(), dir.join("shard0").join("node0.ckpt")).unwrap();
+        assert_eq!(sweep_stale_temps(&dir).unwrap(), 3);
+        assert!(dir.join("shard0").join("node0.ckpt").exists());
+        assert!(dir.join("unrelated").join("keep.tmp").exists());
+        assert!(!dir.join("shard0").join("node0.tmp").exists());
+        assert!(!dir.join("shard1").join("node2.tmp").exists());
+        assert_eq!(sweep_stale_temps(&dir).unwrap(), 0);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

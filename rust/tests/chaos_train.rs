@@ -274,6 +274,7 @@ fn chaos_runs_converge_across_three_seeds() {
         faults: FaultPlan::none(),
         leaves: vec![],
         policy,
+        ..ElasticPlan::default()
     };
     let ref_cfg = NodeRunConfig {
         steps_per_node: STEPS,
@@ -301,6 +302,7 @@ fn chaos_runs_converge_across_three_seeds() {
                 drops: 1,
                 publish_gates: 0,
                 snapshot_versions: 2,
+                ..PlanShape::default()
             },
         );
         // the delayed publish is pinned by hand: a generated gate could
@@ -314,6 +316,7 @@ fn chaos_runs_converge_across_three_seeds() {
             faults,
             leaves: vec![leave],
             policy,
+            ..ElasticPlan::default()
         };
         let cfg = NodeRunConfig {
             checkpoint_dir: Some(temp_dir("chaos")),

@@ -1,0 +1,973 @@
+//! Fleet-shard suite for the sharded elastic trainer (`make test-shard`).
+//!
+//! Everything runs on the stub backend (tier-1, no artifacts), mirroring
+//! `tests/chaos_train.rs`: the stub routes on the token sum alone, so
+//! shard-level faults (partitions, leader losses, whole-shard kills)
+//! perturb scheduling and accounting but never the expert math — which is
+//! what lets a faulted fleet be compared bit-for-bit against a clean one.
+//! Coverage:
+//!
+//! * a JSON fault spec with a 2-round partition, a leader loss and a
+//!   whole-shard kill completes `Ok` and converges bit-identically onto
+//!   the uninterrupted fleet (experts and routers);
+//! * the intra/inter-shard byte split reconciles exactly against closed-
+//!   form publish/adopt/broadcast counts, with `CrossShardPublish`
+//!   traffic landing only at EM-round boundaries;
+//! * a generated sharded plan, exported to JSON and replayed twice,
+//!   produces bit-identical states, stats and byte totals;
+//! * a failed shard degrades (run stays `Ok`, its last exchanged block is
+//!   salvaged into the final routers) and an all-shards failure aborts
+//!   structurally;
+//! * checkpoints are namespaced `<dir>/shard{s}/` (regression: the flat
+//!   layout must be gone), stale temps in shard subdirectories are swept,
+//!   and a one-shard fleet resumes pre-shard flat checkpoints;
+//! * orphaned nodes error with shard/node/version context;
+//! * the `FaultPlan` JSON surface round-trips over random shapes and
+//!   rejects malformed specs with structured errors, never panics.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use smalltalk::coordinator::{
+    run_elastic_nodes, run_sharded_nodes, CommKind, ElasticHandle, ElasticPlan, ElasticStats,
+    FaultPlan, FleetReport, NodeEnd, NodeRunConfig, PlanShape, RouterSnapshot, ShardCtx,
+    ShardPlan, SnapshotStore, TrainBackend,
+};
+use smalltalk::data::corpus::Corpus;
+use smalltalk::data::SequenceGen;
+use smalltalk::runtime::TrainState;
+use smalltalk::tokenizer::{Bpe, BpeTrainer};
+use smalltalk::util::prop;
+
+// ---------------------------------------------------------------------
+// shared fixtures (mirrors tests/chaos_train.rs)
+// ---------------------------------------------------------------------
+
+/// Stub expert/router parameter count.
+const P: usize = 6;
+/// Stub stream sequence length (tokens per sequence = SEQ_LEN + 1).
+const SEQ_LEN: usize = 16;
+
+static BPE: OnceLock<Bpe> = OnceLock::new();
+
+fn bpe() -> &'static Bpe {
+    BPE.get_or_init(|| {
+        let corpus = Corpus::generate(60, 400, 42, None);
+        BpeTrainer::new(512).train(corpus.texts()).unwrap()
+    })
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    let d = std::env::temp_dir().join(format!(
+        "smalltalk_shard_train_{tag}_{}_{}",
+        std::process::id(),
+        NEXT.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn states_equal(a: &TrainState, b: &TrainState) -> bool {
+    a.params == b.params && a.m == b.m && a.v == b.v && a.step == b.step
+}
+
+/// Deterministic model-free backend; the routing key ignores the snapshot
+/// contents entirely (token sum modulo the *global* seat count), so stale
+/// or missing cross-shard views perturb nothing but accounting — the
+/// fleet tests can therefore demand bit-identity against clean runs.
+struct ChaosStub {
+    /// Total global seats; the routing modulus.
+    n: usize,
+    bs: usize,
+}
+
+impl ChaosStub {
+    fn new(n: usize, bs: usize) -> Self {
+        ChaosStub { n, bs }
+    }
+}
+
+impl TrainBackend for ChaosStub {
+    fn train_batch_rows(&self) -> usize {
+        self.bs
+    }
+
+    fn tokens_per_step(&self) -> usize {
+        self.bs * SEQ_LEN
+    }
+
+    fn init_expert(&self, node: usize, seed: u64) -> Result<TrainState> {
+        let params: Vec<f32> = (0..P)
+            .map(|i| (seed % 1000) as f32 * 1e-3 + node as f32 + i as f32 * 0.1)
+            .collect();
+        Ok(TrainState::from_params(
+            "stub",
+            params,
+            vec![0.0; P],
+            vec![0.0; P],
+            0,
+        ))
+    }
+
+    fn train_step(&self, _node: usize, state: &mut TrainState, batch: &[&[u32]]) -> Result<f32> {
+        let mut acc = 0.0f32;
+        for row in batch {
+            for &t in *row {
+                acc += (t % 97) as f32;
+            }
+        }
+        let loss = acc / (batch.len().max(1) as f32 * 100.0);
+        for i in 0..state.params.len() {
+            let g = loss * 1e-3 + (i as f32 + 1.0) * 1e-4;
+            state.m[i] = 0.9 * state.m[i] + 0.1 * g;
+            state.v[i] = 0.99 * state.v[i] + 0.01 * g * g;
+            state.params[i] -= 0.1 * state.m[i];
+        }
+        state.step += 1;
+        Ok(loss)
+    }
+
+    fn route_local(&self, _snap: &RouterSnapshot, rows: &[&[u32]]) -> Result<Vec<usize>> {
+        Ok(rows
+            .iter()
+            .map(|r| {
+                let sum: u64 = r.iter().map(|&t| t as u64).sum();
+                (sum % self.n as u64) as usize
+            })
+            .collect())
+    }
+}
+
+fn seat_seeds(n: usize) -> Vec<u64> {
+    (0..n).map(|e| 0xE0 + e as u64).collect()
+}
+
+/// The deterministic router block shard `shard` publishes at `round`
+/// (one state per member seat, member order). A pure function of
+/// (seat, round), so clean and faulted fleets must assemble identical
+/// final router sets regardless of partition schedules.
+fn shard_block(plan: &ShardPlan, shard: usize, round: u64) -> Vec<TrainState> {
+    plan.members(shard)
+        .iter()
+        .map(|&seat| {
+            let params: Vec<f32> = (0..P)
+                .map(|i| seat as f32 + round as f32 * 0.01 + i as f32 * 0.001)
+                .collect();
+            TrainState::from_params("router", params, vec![0.0; P], vec![0.0; P], round)
+        })
+        .collect()
+}
+
+/// Run a sharded fleet over the shared stream factory.
+fn fleet_run(
+    backend: &ChaosStub,
+    plan: &ShardPlan,
+    seeds: &[u64],
+    cfg: &NodeRunConfig,
+    fleet: &ElasticPlan,
+    driver: impl Fn(usize, &ShardCtx<'_>, &ElasticHandle<'_, 'static>) -> Result<Vec<TrainState>>
+        + Sync,
+) -> Result<(FleetReport, Vec<TrainState>)> {
+    let b = bpe();
+    let factory = move |e: usize, salt: u64| {
+        SequenceGen::new(
+            b,
+            SEQ_LEN,
+            (0xA5_0000 + e as u64) ^ salt.wrapping_mul(0x9E37_79B9),
+        )
+    };
+    run_sharded_nodes(backend, plan, seeds, factory, cfg, fleet, driver)
+}
+
+/// The seat's final state, demanding a normal completion.
+fn completed_state(ends: &[NodeEnd], seat: usize) -> &TrainState {
+    let end = ends
+        .iter()
+        .find(|e| e.node() == seat)
+        .unwrap_or_else(|| panic!("seat {seat} has no end record"));
+    match end {
+        NodeEnd::Completed(o) => &o.state,
+        NodeEnd::Left(o) => panic!("seat {seat} left unadopted at step {}", o.steps_done),
+        NodeEnd::Failed(f) => panic!("seat {seat} failed: {:#}", f.error),
+    }
+}
+
+/// The shared 3-shard chaos scenario: a 2-round partition and a leader
+/// loss on shard 1, a whole-shard kill on shard 2 — arriving as JSON,
+/// like a real `--chaos-spec` file.
+const ROUNDS: u64 = 4;
+const STEPS: usize = 12;
+
+fn chaos_spec() -> &'static str {
+    r#"{
+        "seed": 7,
+        "partitions": [{ "shard": 1, "from_round": 2, "rounds": 2 }],
+        "leader_losses": [{ "shard": 1, "at_round": 2 }],
+        "shard_kills": [{ "shard": 2, "at_step": 8 }]
+    }"#
+}
+
+fn base_cfg(tag: &str) -> NodeRunConfig {
+    NodeRunConfig {
+        steps_per_node: STEPS,
+        checkpoint_every: 3,
+        checkpoint_dir: Some(temp_dir(tag)),
+        threads: 2,
+        snapshot_wait_us: 10_000_000,
+        ..NodeRunConfig::default()
+    }
+}
+
+// ---------------------------------------------------------------------
+// shard chaos converges onto the clean fleet
+// ---------------------------------------------------------------------
+
+/// A 3-shard fleet under partition + leader loss + whole-shard kill
+/// completes `Ok`, converges bit-identically onto the uninterrupted
+/// fleet on every expert seat, assembles the identical (partition-
+/// independent) global router set, and rolls the faults up into the
+/// right per-shard rows.
+#[test]
+fn shard_chaos_converges_onto_the_clean_fleet() {
+    let plan = ShardPlan::partition(6, 3).unwrap();
+    let backend = ChaosStub::new(6, 4);
+    let seeds = seat_seeds(6);
+    let driver = |s: usize, ctx: &ShardCtx<'_>, handle: &ElasticHandle<'_, '_>| {
+        for round in 1..=ROUNDS {
+            ctx.round_boundary(handle, round, &shard_block(&plan, s, round))?;
+        }
+        Ok(shard_block(&plan, s, ROUNDS))
+    };
+
+    let clean_fleet = ElasticPlan::default();
+    let (clean, clean_routers) =
+        fleet_run(&backend, &plan, &seeds, &base_cfg("clean"), &clean_fleet, driver).unwrap();
+
+    let fleet = ElasticPlan {
+        faults: FaultPlan::from_json_str(chaos_spec()).unwrap(),
+        ..ElasticPlan::default()
+    };
+    let (report, routers) =
+        fleet_run(&backend, &plan, &seeds, &base_cfg("chaos"), &fleet, driver).unwrap();
+
+    // fleet-level rollup: 2 seats killed (the whole of shard 2), both
+    // re-adopted from their step-6 checkpoints (kill at step 8,
+    // checkpoint_every 3 -> exactly 2 steps re-done per seat)
+    assert_eq!(report.stats.kills, 2);
+    assert_eq!(report.stats.adoptions, 2);
+    assert_eq!(report.stats.steps_lost, 4);
+    assert_eq!(report.stats.leaves, 0);
+    assert_eq!(report.stats.joins, 0);
+    assert_eq!(report.stats.merges, 0);
+    assert_eq!(report.stats.transient_retries, 0);
+
+    // per-shard rows
+    assert_eq!(report.shards.len(), 3);
+    let s0 = &report.shards[0];
+    assert_eq!((s0.shard, s0.promotions, s0.rounds_missed, s0.shard_kills), (0, 0, 0, 0));
+    assert_eq!(s0.stats, ElasticStats::default(), "shard 0 saw no faults");
+    let s1 = &report.shards[1];
+    assert_eq!(s1.shard, 1);
+    assert_eq!(s1.promotions, 1, "the leader loss promotes exactly once");
+    assert_eq!(s1.rounds_missed, 2, "the partition cuts rounds 2 and 3");
+    assert_eq!(s1.shard_kills, 0);
+    assert_eq!(s1.stats.kills, 0, "partition and promotion kill nobody");
+    let s2 = &report.shards[2];
+    assert_eq!(s2.shard, 2);
+    assert_eq!(s2.shard_kills, 2, "one ShardAdopt recovery per member seat");
+    assert_eq!(s2.stats.kills, 2);
+    assert_eq!(s2.stats.adoptions, 2);
+    assert_eq!(s2.stats.steps_lost, 4);
+    assert_eq!((s2.promotions, s2.rounds_missed), (0, 0));
+
+    // convergence: every expert seat bit-identical to the clean fleet
+    assert_eq!(clean.ends.len(), 6);
+    assert_eq!(report.ends.len(), 6);
+    for seat in 0..6 {
+        let state = completed_state(&report.ends, seat);
+        assert_eq!(state.step, STEPS as u64, "seat {seat} must finish its budget");
+        assert!(
+            states_equal(state, completed_state(&clean.ends, seat)),
+            "seat {seat} diverged from the clean fleet"
+        );
+    }
+
+    // the final global router set: each shard authoritative for its own
+    // block, independent of the partition schedule
+    assert_eq!(routers.len(), 6);
+    for s in 0..3 {
+        let expect = shard_block(&plan, s, ROUNDS);
+        for (i, &seat) in plan.members(s).iter().enumerate() {
+            assert_eq!(routers[seat].params, expect[i].params, "router seat {seat}");
+            assert_eq!(routers[seat].step, ROUNDS);
+            assert_eq!(clean_routers[seat].params, expect[i].params);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// exact intra/inter-shard byte audit
+// ---------------------------------------------------------------------
+
+/// Every cross-shard byte reconciles in closed form: 16 boundary
+/// publishes of one 2-router block each (6 per healthy round, 2 per
+/// partitioned round), one promotion adoption, two shard-kill
+/// re-adoptions — and `CrossShardPublish` traffic exists *only* at
+/// EM-round boundaries. Intra-shard bytes are exactly the snapshot
+/// broadcasts; intra + inter partitions the total.
+#[test]
+fn cross_shard_byte_audit_reconciles_exactly() {
+    let plan = ShardPlan::partition(6, 3).unwrap();
+    let backend = ChaosStub::new(6, 4);
+    let seeds = seat_seeds(6);
+    let fleet = ElasticPlan {
+        faults: FaultPlan::from_json_str(chaos_spec()).unwrap(),
+        ..ElasticPlan::default()
+    };
+    let (report, _) = fleet_run(
+        &backend,
+        &plan,
+        &seeds,
+        &base_cfg("audit"),
+        &fleet,
+        |s: usize, ctx: &ShardCtx<'_>, handle: &ElasticHandle<'_, '_>| {
+            for round in 1..=ROUNDS {
+                ctx.round_boundary(handle, round, &shard_block(&plan, s, round))?;
+            }
+            Ok(shard_block(&plan, s, ROUNDS))
+        },
+    )
+    .unwrap();
+    let ledger = &report.ledger;
+    let block = (2 * P * 4) as u64; // one 2-member router block on the wire
+
+    // boundary publishes: rounds 1 and 4 have all 3 shards live (each
+    // reads 2 foreign blocks -> 6 events); rounds 2 and 3 cut shard 1
+    // (shards 0 and 2 read each other -> 2 events)
+    let cross: Vec<_> = ledger
+        .events
+        .iter()
+        .filter(|e| e.kind == CommKind::CrossShardPublish)
+        .collect();
+    assert_eq!(cross.len(), 16);
+    let per_round = |r: u64| cross.iter().filter(|e| e.step == r).count();
+    assert_eq!(per_round(1), 6);
+    assert_eq!(per_round(2), 2, "the cut shard neither sends nor receives");
+    assert_eq!(per_round(3), 2);
+    assert_eq!(per_round(4), 6, "the healed shard rejoins the exchange");
+    for e in &cross {
+        assert_eq!(e.bytes_sent, block);
+        assert_eq!(e.bytes_received, block);
+        assert!(
+            (1..=ROUNDS).contains(&e.step),
+            "cross-shard publish outside an EM-round boundary (step {})",
+            e.step
+        );
+    }
+    assert_eq!(ledger.kind_bytes(CommKind::CrossShardPublish), 16 * block);
+
+    // partition heal: at round 4 exactly four edges carry a held view
+    // that is 2 rounds stale (0<-1, 2<-1, 1<-0, 1<-2); every other
+    // publish is fresh
+    assert_eq!(
+        cross.iter().filter(|e| e.staleness == 2 && e.step == 4).count(),
+        4,
+        "the heal must audit the rounds missed as staleness"
+    );
+    assert!(cross.iter().all(|e| e.staleness == 2 || e.staleness == 0));
+
+    // receipts land on the *current* leader seat: shard 1 receives on
+    // seat 2 before the promotion, on seat 3 after
+    assert!(cross.iter().any(|e| e.node == 2 && e.step == 1));
+    assert!(cross.iter().any(|e| e.node == 3 && e.step == 4));
+    assert!(cross.iter().all(|e| [0, 2, 3, 4].contains(&e.node)));
+
+    // ShardAdopt: one promotion (the dead leader's block, at its round)
+    // plus two whole-shard recoveries (the step-6 member checkpoints)
+    let adopts: Vec<_> = ledger
+        .events
+        .iter()
+        .filter(|e| e.kind == CommKind::ShardAdopt)
+        .collect();
+    assert_eq!(adopts.len(), 3);
+    let promo: Vec<_> = adopts.iter().filter(|e| e.node == 3).collect();
+    assert_eq!(promo.len(), 1, "the promoted member adopts the leader block");
+    assert_eq!(promo[0].step, 2);
+    assert_eq!(promo[0].bytes_sent, block);
+    let rescue: Vec<_> = adopts
+        .iter()
+        .filter(|e| e.node == 4 || e.node == 5)
+        .collect();
+    assert_eq!(rescue.len(), 2, "every seat of the killed shard re-adopts");
+    for e in &rescue {
+        assert_eq!(e.step, 6, "re-adoption resumes the step-6 checkpoint");
+        assert!(e.bytes_sent > 0, "the checkpoint file crosses the boundary");
+    }
+
+    // no in-shard adoption traffic: the only kills were the shard kill,
+    // audited as fault-domain crossings
+    assert_eq!(ledger.kind_bytes(CommKind::CheckpointAdopt), 0);
+
+    // intra-shard traffic is exactly the snapshot broadcasts: 3 shards x
+    // 4 rounds x 2 subscribers x the full 6-router global set
+    let payload = (6 * P * 4) as u64;
+    assert_eq!(ledger.kind_bytes(CommKind::SnapshotBroadcast), 3 * 4 * 2 * payload);
+    assert_eq!(ledger.intra_shard_bytes(), 3 * 4 * 2 * payload);
+
+    // the split reconciles and partitions the total exactly
+    assert_eq!(
+        ledger.inter_shard_bytes(),
+        ledger.kind_bytes(CommKind::CrossShardPublish) + ledger.kind_bytes(CommKind::ShardAdopt)
+    );
+    assert_eq!(
+        ledger.intra_shard_bytes() + ledger.inter_shard_bytes(),
+        ledger.total_bytes()
+    );
+
+    // publisher pseudo-nodes sit past every real seat, one per shard
+    let publishers: std::collections::BTreeSet<usize> = ledger
+        .events
+        .iter()
+        .filter(|e| e.kind == CommKind::SnapshotBroadcast && e.bytes_received == 0)
+        .map(|e| e.node)
+        .collect();
+    assert_eq!(publishers, [6, 7, 8].into_iter().collect());
+}
+
+// ---------------------------------------------------------------------
+// generated sharded plan: JSON export + bit-identical replay
+// ---------------------------------------------------------------------
+
+/// A seeded, *generated* plan with shard clauses, exported to JSON and
+/// replayed through two fresh fleets, produces bit-identical states,
+/// identical fault counts and identical byte totals — the `--chaos-spec`
+/// determinism contract extended to shard faults. Event *order* in the
+/// ledger is scheduling-dependent and deliberately not compared.
+#[test]
+fn generated_shard_spec_replays_bit_identically() {
+    const R: u64 = 3;
+    let plan = ShardPlan::partition(4, 2).unwrap();
+    let backend = ChaosStub::new(4, 4);
+    let seeds = seat_seeds(4);
+    let shape = PlanShape {
+        nodes: 4,
+        steps_per_node: 10,
+        kills: 1,
+        transients: 1,
+        snapshot_versions: 3,
+        shards: 2,
+        partitions: 1,
+        leader_losses: 1,
+        shard_kills: 1,
+        em_rounds: R,
+        ..PlanShape::default()
+    };
+    let text = FaultPlan::generate(31, &shape).to_json().to_string_pretty();
+
+    let run = |tag: &str| {
+        let fleet = ElasticPlan {
+            faults: FaultPlan::from_json_str(&text).unwrap(),
+            ..ElasticPlan::default()
+        };
+        let cfg = NodeRunConfig {
+            steps_per_node: 10,
+            checkpoint_every: 2,
+            checkpoint_dir: Some(temp_dir(tag)),
+            threads: 2,
+            snapshot_wait_us: 10_000_000,
+            ..NodeRunConfig::default()
+        };
+        fleet_run(
+            &backend,
+            &plan,
+            &seeds,
+            &cfg,
+            &fleet,
+            |s: usize, ctx: &ShardCtx<'_>, handle: &ElasticHandle<'_, '_>| {
+                for round in 1..=R {
+                    ctx.round_boundary(handle, round, &shard_block(&plan, s, round))?;
+                }
+                Ok(shard_block(&plan, s, R))
+            },
+        )
+        .unwrap()
+    };
+    let (a, routers_a) = run("replay_a");
+    let (b, routers_b) = run("replay_b");
+
+    for seat in 0..4 {
+        assert!(
+            states_equal(
+                completed_state(&a.ends, seat),
+                completed_state(&b.ends, seat)
+            ),
+            "seat {seat} diverged between replays of the same spec"
+        );
+    }
+    for (ra, rb) in routers_a.iter().zip(&routers_b) {
+        assert_eq!(ra.params, rb.params);
+    }
+
+    // stats replay exactly, modulo the one wall-clock-denominated field
+    let mut sa = a.stats.clone();
+    let mut sb = b.stats.clone();
+    sa.recovery_micros = 0;
+    sb.recovery_micros = 0;
+    assert_eq!(sa, sb, "replays of one spec must count identical faults");
+    assert_eq!(a.shards.len(), b.shards.len());
+    for (ra, rb) in a.shards.iter().zip(&b.shards) {
+        let mut x = ra.clone();
+        let mut y = rb.clone();
+        x.stats.recovery_micros = 0;
+        y.stats.recovery_micros = 0;
+        assert_eq!(x, y, "shard {} rows diverged between replays", ra.shard);
+    }
+
+    // byte totals replay exactly (event order may not)
+    assert_eq!(a.ledger.total_bytes(), b.ledger.total_bytes());
+    assert_eq!(a.ledger.intra_shard_bytes(), b.ledger.intra_shard_bytes());
+    assert_eq!(a.ledger.inter_shard_bytes(), b.ledger.inter_shard_bytes());
+    assert_eq!(
+        a.ledger.kind_bytes(CommKind::CrossShardPublish),
+        b.ledger.kind_bytes(CommKind::CrossShardPublish)
+    );
+    assert_eq!(
+        a.ledger.kind_bytes(CommKind::ShardAdopt),
+        b.ledger.kind_bytes(CommKind::ShardAdopt)
+    );
+}
+
+// ---------------------------------------------------------------------
+// shard-failure degradation and salvage
+// ---------------------------------------------------------------------
+
+/// A shard whose driver crashes mid-run degrades without taking the
+/// fleet down: the run returns `Ok`, the dead shard's last exchanged
+/// block is salvaged into the final router set, its seats report no
+/// ends, and it contributes no cross-shard bytes after death. When
+/// *every* shard fails, the run aborts structurally.
+#[test]
+fn failed_shard_degrades_and_its_last_block_is_salvaged() {
+    const R: u64 = 2;
+    let plan = ShardPlan::partition(4, 2).unwrap();
+    let backend = ChaosStub::new(4, 4);
+    let seeds = seat_seeds(4);
+    let fleet = ElasticPlan::default();
+    let cfg = NodeRunConfig {
+        steps_per_node: 6,
+        threads: 2,
+        snapshot_wait_us: 10_000_000,
+        ..NodeRunConfig::default()
+    };
+    let (report, routers) = fleet_run(
+        &backend,
+        &plan,
+        &seeds,
+        &cfg,
+        &fleet,
+        |s: usize, ctx: &ShardCtx<'_>, handle: &ElasticHandle<'_, '_>| {
+            for round in 1..=R {
+                ctx.round_boundary(handle, round, &shard_block(&plan, s, round))?;
+                if s == 1 {
+                    bail!("injected shard driver crash");
+                }
+            }
+            Ok(shard_block(&plan, s, R))
+        },
+    )
+    .unwrap();
+
+    // only the surviving shard reports seats and stats
+    assert_eq!(report.ends.len(), 2);
+    for seat in 0..2 {
+        assert_eq!(completed_state(&report.ends, seat).step, 6);
+    }
+    assert_eq!(report.stats, ElasticStats::default());
+    assert_eq!(report.shards.len(), 2);
+    assert_eq!(report.shards[1].stats, ElasticStats::default());
+
+    // salvage: shard 1 deposited its round-1 block before dying — that
+    // block is authoritative for its seats in the final router set
+    let survivor = shard_block(&plan, 0, R);
+    let salvaged = shard_block(&plan, 1, 1);
+    for (i, &seat) in plan.members(0).iter().enumerate() {
+        assert_eq!(routers[seat].params, survivor[i].params);
+    }
+    for (i, &seat) in plan.members(1).iter().enumerate() {
+        assert_eq!(routers[seat].params, salvaged[i].params, "seat {seat}");
+        assert_eq!(routers[seat].step, 1, "salvage must be the round-1 deposit");
+    }
+
+    // a dead shard stops producing cross-shard traffic: round 1 swapped
+    // two blocks; at round 2 the survivor finds no round-2 deposit
+    let cross: Vec<_> = report
+        .ledger
+        .events
+        .iter()
+        .filter(|e| e.kind == CommKind::CrossShardPublish)
+        .collect();
+    assert_eq!(cross.len(), 2);
+    assert!(cross.iter().all(|e| e.step == 1));
+
+    // every shard failing is a structured abort, chaining the cause
+    let err = match fleet_run(
+        &backend,
+        &plan,
+        &seeds,
+        &cfg,
+        &fleet,
+        |_s: usize, _ctx: &ShardCtx<'_>, _handle: &ElasticHandle<'_, '_>| bail!("boom"),
+    ) {
+        Ok(_) => panic!("a fleet with every shard failed must abort"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("every fleet shard failed"), "{msg}");
+    assert!(msg.contains("boom"), "{msg}");
+}
+
+// ---------------------------------------------------------------------
+// checkpoint namespacing (regression: flat layout must be gone)
+// ---------------------------------------------------------------------
+
+/// Fleet checkpoints land under `<dir>/shard{s}/node{local}.ckpt` — the
+/// flat single-fleet layout must NOT appear at the root — and stale
+/// `*.tmp` orphans inside shard subdirectories are swept at startup.
+#[test]
+fn checkpoints_are_namespaced_per_shard_and_temps_swept() {
+    const R: u64 = 2;
+    let plan = ShardPlan::partition(4, 2).unwrap();
+    let backend = ChaosStub::new(4, 4);
+    let seeds = seat_seeds(4);
+    let root = temp_dir("ns");
+    std::fs::create_dir_all(root.join("shard0")).unwrap();
+    std::fs::write(root.join("shard0").join("node0.ckpt.tmp"), b"stale").unwrap();
+    let cfg = NodeRunConfig {
+        steps_per_node: 6,
+        checkpoint_every: 2,
+        checkpoint_dir: Some(root.clone()),
+        threads: 2,
+        snapshot_wait_us: 10_000_000,
+        ..NodeRunConfig::default()
+    };
+    fleet_run(
+        &backend,
+        &plan,
+        &seeds,
+        &cfg,
+        &ElasticPlan::default(),
+        |s: usize, ctx: &ShardCtx<'_>, handle: &ElasticHandle<'_, '_>| {
+            for round in 1..=R {
+                ctx.round_boundary(handle, round, &shard_block(&plan, s, round))?;
+            }
+            Ok(shard_block(&plan, s, R))
+        },
+    )
+    .unwrap();
+
+    for s in 0..2 {
+        for l in 0..2 {
+            let path = root.join(format!("shard{s}")).join(format!("node{l}.ckpt"));
+            assert!(path.exists(), "missing namespaced checkpoint {path:?}");
+        }
+    }
+    assert!(
+        !root.join("node0.ckpt").exists() && !root.join("node1.ckpt").exists(),
+        "fleet checkpoints must not use the flat single-fleet layout"
+    );
+    assert!(
+        !root.join("shard0").join("node0.ckpt.tmp").exists(),
+        "stale temp files inside shard subdirectories must be swept"
+    );
+}
+
+/// Back-compat: a one-shard fleet pointed at a pre-shard flat checkpoint
+/// directory resumes those flat files (`legacy_flat_dir` fallback) and
+/// finishes bit-identical to an uninterrupted fleet run of the full
+/// budget.
+#[test]
+fn single_shard_fleet_resumes_legacy_flat_checkpoints() {
+    const R: u64 = 2;
+    let backend = ChaosStub::new(2, 4);
+    let seeds = seat_seeds(2);
+    let plan = ShardPlan::partition(2, 1).unwrap();
+    let base = NodeRunConfig {
+        steps_per_node: STEPS,
+        checkpoint_every: 3,
+        threads: 2,
+        draw_budget: 1000, // pinned so the flat leg's draws are resume-exact
+        snapshot_wait_us: 10_000_000,
+        ..NodeRunConfig::default()
+    };
+    let driver = |s: usize, ctx: &ShardCtx<'_>, handle: &ElasticHandle<'_, '_>| {
+        for round in 1..=R {
+            ctx.round_boundary(handle, round, &shard_block(&plan, s, round))?;
+        }
+        Ok(shard_block(&plan, s, R))
+    };
+
+    // a pre-shard flat elastic run leaves its checkpoints at the root
+    let root = temp_dir("legacy");
+    let store = SnapshotStore::new(2);
+    let b = bpe();
+    let factory = move |e: usize, salt: u64| {
+        SequenceGen::new(
+            b,
+            SEQ_LEN,
+            (0xA5_0000 + e as u64) ^ salt.wrapping_mul(0x9E37_79B9),
+        )
+    };
+    let flat_cfg = NodeRunConfig {
+        steps_per_node: 6,
+        checkpoint_dir: Some(root.clone()),
+        ..base.clone()
+    };
+    run_elastic_nodes(
+        &backend,
+        &store,
+        &seeds,
+        factory,
+        &flat_cfg,
+        &ElasticPlan::default(),
+        |h| {
+            h.store().publish(shard_block(&plan, 0, 1), 1);
+            Ok(())
+        },
+    )
+    .unwrap();
+    assert!(root.join("node0.ckpt").exists() && root.join("node1.ckpt").exists());
+
+    // resume as a one-shard fleet: shard0/ holds no checkpoints yet, so
+    // the flat files must be picked up through the legacy fallback
+    let resume_cfg = NodeRunConfig {
+        resume: true,
+        checkpoint_dir: Some(root.clone()),
+        ..base.clone()
+    };
+    let (resumed, _) = fleet_run(
+        &backend,
+        &plan,
+        &seeds,
+        &resume_cfg,
+        &ElasticPlan::default(),
+        driver,
+    )
+    .unwrap();
+
+    // the clean reference trains the full budget from scratch
+    let clean_cfg = NodeRunConfig {
+        checkpoint_dir: Some(temp_dir("legacy_ref")),
+        ..base.clone()
+    };
+    let (clean, _) = fleet_run(
+        &backend,
+        &plan,
+        &seeds,
+        &clean_cfg,
+        &ElasticPlan::default(),
+        driver,
+    )
+    .unwrap();
+
+    for seat in 0..2 {
+        let r = completed_state(&resumed.ends, seat);
+        assert_eq!(r.step, STEPS as u64, "seat {seat} must finish the full budget");
+        assert!(
+            states_equal(r, completed_state(&clean.ends, seat)),
+            "seat {seat} diverged across the legacy flat resume"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// orphaned-node error context (shard + node + version attributability)
+// ---------------------------------------------------------------------
+
+/// Nodes orphaned on a sharded store (publisher never publishes) fail
+/// structurally after `snapshot_wait_us`, and the error chain alone
+/// names the shard, the node, and the snapshot version waited on.
+#[test]
+fn orphaned_fleet_nodes_fail_with_shard_and_node_context() {
+    let backend = ChaosStub::new(2, 4);
+    let seeds = seat_seeds(2);
+    let store = SnapshotStore::new_sharded(2, 3);
+    let b = bpe();
+    let factory = move |e: usize, salt: u64| {
+        SequenceGen::new(
+            b,
+            SEQ_LEN,
+            (0xA5_0000 + e as u64) ^ salt.wrapping_mul(0x9E37_79B9),
+        )
+    };
+    let cfg = NodeRunConfig {
+        steps_per_node: 4,
+        threads: 2,
+        snapshot_wait_us: 50_000,
+        ..NodeRunConfig::default()
+    };
+    let err = match run_elastic_nodes(
+        &backend,
+        &store,
+        &seeds,
+        factory,
+        &cfg,
+        &ElasticPlan::default(),
+        |_h| {
+            // the silent publisher: outlive every node's orphan valve
+            std::thread::sleep(Duration::from_millis(300));
+            Ok(())
+        },
+    ) {
+        Ok(_) => panic!("orphaned nodes must fail the run"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("every trainer node failed"), "{msg}");
+    assert!(msg.contains("timed out"), "{msg}");
+    assert!(msg.contains("shard 3"), "{msg}");
+    assert!(msg.contains("node "), "{msg}");
+    assert!(msg.contains("version >= 1"), "{msg}");
+    assert!(msg.contains("orphaned"), "{msg}");
+}
+
+// ---------------------------------------------------------------------
+// FaultPlan JSON surface: property tests
+// ---------------------------------------------------------------------
+
+/// `generate -> to_json -> from_json_str` is the identity on every fault
+/// section (shard clauses included) over random seeds and shapes, and a
+/// second serialization is byte-stable.
+#[test]
+fn fault_plan_json_roundtrips_over_random_shapes() {
+    prop::check(
+        "fault-plan-json-roundtrip",
+        120,
+        |r| {
+            let shape = PlanShape {
+                nodes: 1 + r.usize_below(6),
+                steps_per_node: 2 + r.below(20),
+                kills: r.usize_below(4),
+                transients: r.usize_below(3),
+                stalls: r.usize_below(3),
+                drops: r.usize_below(3),
+                publish_gates: r.usize_below(3),
+                snapshot_versions: 1 + r.below(4),
+                shards: 1 + r.usize_below(4),
+                partitions: r.usize_below(4),
+                leader_losses: r.usize_below(3),
+                shard_kills: r.usize_below(3),
+                em_rounds: 1 + r.below(6),
+            };
+            (r.below(1 << 32), shape)
+        },
+        |&(seed, shape)| {
+            let p = FaultPlan::generate(seed, &shape);
+            let text = p.to_json().to_string_pretty();
+            let q = FaultPlan::from_json_str(&text)
+                .map_err(|e| format!("reparse failed: {e:#}"))?;
+            if p.seed != q.seed {
+                return Err("seed drifted".into());
+            }
+            if p.kills != q.kills
+                || p.transients != q.transients
+                || p.stalls != q.stalls
+                || p.drops != q.drops
+                || p.publish_gates != q.publish_gates
+            {
+                return Err("node-fault sections drifted".into());
+            }
+            if p.partitions != q.partitions
+                || p.leader_losses != q.leader_losses
+                || p.shard_kills != q.shard_kills
+            {
+                return Err("shard-fault sections drifted".into());
+            }
+            if q.to_json().to_string() != p.to_json().to_string() {
+                return Err("second serialization differs".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Malformed specs — wrong top-level shape, non-array sections, missing
+/// or negative or mistyped fields, truncations, corruptions, garbage —
+/// always produce a structured `chaos spec` error and never panic.
+#[test]
+fn malformed_chaos_specs_error_structurally_never_panic() {
+    for bad in [
+        "",
+        "not json",
+        "[1, 2, 3]",
+        "42",
+        "\"kills\"",
+        r#"{"kills": 3}"#,
+        r#"{"kills": [{"node": 0}]}"#,
+        r#"{"kills": [{"node": -1, "at_step": 2}]}"#,
+        r#"{"transients": [{"node": 0, "at_step": 1}]}"#,
+        r#"{"partitions": [{"shard": 0, "from_round": 1}]}"#,
+        r#"{"partitions": [{"shard": "x", "from_round": 1, "rounds": 1}]}"#,
+        r#"{"leader_losses": [{"shard": 0}]}"#,
+        r#"{"shard_kills": [{"shard": 0, "at_step": null}]}"#,
+        r#"{"shard_kills": {"shard": 0}}"#,
+    ] {
+        let err = FaultPlan::from_json_str(bad).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("chaos spec"), "unstructured error for {bad:?}: {msg}");
+    }
+
+    // property: random truncations/corruptions of a valid sharded spec
+    // parse to Ok or a structured error — never a panic
+    let shape = PlanShape {
+        nodes: 3,
+        steps_per_node: 9,
+        kills: 2,
+        transients: 1,
+        stalls: 1,
+        drops: 1,
+        publish_gates: 1,
+        snapshot_versions: 2,
+        shards: 2,
+        partitions: 1,
+        leader_losses: 1,
+        shard_kills: 1,
+        em_rounds: 3,
+    };
+    prop::check(
+        "chaos-spec-corruption-is-structured",
+        200,
+        move |r| {
+            let text = FaultPlan::generate(r.below(64), &shape)
+                .to_json()
+                .to_string_pretty();
+            match r.below(3) {
+                0 => text[..r.usize_below(text.len())].to_string(),
+                1 => {
+                    let mut bytes = text.into_bytes();
+                    let i = r.usize_below(bytes.len());
+                    bytes[i] = 0x20 + r.below(0x5f) as u8;
+                    String::from_utf8(bytes).unwrap()
+                }
+                _ => (0..r.usize_below(40))
+                    .map(|_| (0x20 + r.below(0x5f) as u8) as char)
+                    .collect(),
+            }
+        },
+        |text| match FaultPlan::from_json_str(text) {
+            Ok(_) => Ok(()),
+            Err(e) => {
+                let msg = format!("{e:#}");
+                if msg.contains("chaos spec") {
+                    Ok(())
+                } else {
+                    Err(format!("unstructured error: {msg}"))
+                }
+            }
+        },
+    );
+}
