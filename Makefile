@@ -4,6 +4,8 @@
 #   make test              cargo test -q  (XLA-backed tests self-skip without artifacts)
 #   make test-concurrency  the engine thread-safety suite, at 1 and 8 test threads
 #   make test-serve        the continuous-batching scheduler suite, serial + interleaved
+#   make test-replica      the replica-fleet dispatch suite (placement, hot-expert
+#                          balance, sync-byte audit), serial + interleaved
 #   make test-net          the TCP/JSONL front-end suite (loopback e2e, shedding,
 #                          connection limits, adversarial lexer properties),
 #                          serial + interleaved
@@ -25,7 +27,7 @@
 #   make bench-smoke       tiny-budget routing+serve+train_step+trainer benches
 #                          -> BENCH_routing.json + BENCH_serve.json + BENCH_train.json
 
-.PHONY: build test test-concurrency test-serve test-net test-fused test-fused-eval test-async test-chaos test-shard artifacts bench-smoke clean
+.PHONY: build test test-concurrency test-serve test-replica test-net test-fused test-fused-eval test-async test-chaos test-shard artifacts bench-smoke clean
 
 build:
 	cargo build --release
@@ -46,6 +48,14 @@ test-concurrency:
 test-serve:
 	RUST_TEST_THREADS=1 cargo test -q --test server
 	RUST_TEST_THREADS=8 cargo test -q --test server
+
+# Replica-fleet dispatch suite: triple-set determinism across fleet
+# shapes, ≤2x per-replica balance under hot-expert skew, and the
+# closed-form replica-sync byte audit — all tier-1 (stub backend, no
+# artifacts), under both serial and heavily interleaved test scheduling.
+test-replica:
+	RUST_TEST_THREADS=1 cargo test -q --test replica
+	RUST_TEST_THREADS=8 cargo test -q --test replica
 
 # TCP/JSONL front-end suite: loopback end-to-end serving against the
 # in-process reference, structured shedding and connection limits, and

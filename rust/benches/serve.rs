@@ -1,5 +1,7 @@
 //! Bench: closed-wave vs continuous-batching serve under staggered
-//! arrivals, plus the TCP/JSONL front-end under open-loop offered load.
+//! arrivals, the replica-fleet dispatch layer under hot-expert skew
+//! (stub backend — these rows run even without artifacts), plus the
+//! TCP/JSONL front-end under open-loop offered load.
 //! Each continuous row streams the request set with a fixed
 //! inter-arrival gap through the admission scheduler and records
 //! steady-state req/s plus p50/p95 queue and total latency (and the
@@ -18,7 +20,7 @@ use std::time::{Duration, Instant};
 
 use smalltalk::coordinator::{
     response_triples, run_pipeline, run_server, serve_net, serve_threaded, Mixture,
-    MixtureBackend, NetConfig, PipelineConfig, Request, ServerConfig,
+    MixtureBackend, NetConfig, PipelineConfig, Request, ServeBackend, ServerConfig,
 };
 use smalltalk::data::corpus::Corpus;
 use smalltalk::data::SequenceGen;
@@ -28,9 +30,130 @@ use smalltalk::tokenizer::BpeTrainer;
 use smalltalk::util::bench::{env_threads, BenchSuite};
 use smalltalk::util::Json;
 
+/// Deterministic model-free backend for the replica-fleet rows (route by
+/// first token, NLL = expert * 1000 + token sum — same idiom as
+/// `rust/tests/replica.rs`), so the fleet sweep runs on any machine.
+/// `expert_param_bytes` makes the rebalance sync audit non-trivial.
+struct StubFleetBackend {
+    n: usize,
+}
+
+impl ServeBackend for StubFleetBackend {
+    fn n_experts(&self) -> usize {
+        self.n
+    }
+    fn route(&self, rows: &[&[u32]], _threads: usize) -> anyhow::Result<Vec<usize>> {
+        Ok(rows
+            .iter()
+            .map(|r| r.first().copied().unwrap_or(0) as usize % self.n)
+            .collect())
+    }
+    fn exec_nll(&self, expert: usize, rows: &[&[u32]]) -> anyhow::Result<Vec<f32>> {
+        Ok(rows
+            .iter()
+            .map(|r| expert as f32 * 1000.0 + r.iter().sum::<u32>() as f32)
+            .collect())
+    }
+    fn expert_param_bytes(&self) -> u64 {
+        1 << 20 // a 1 MiB expert: sync bytes are legible in the JSON
+    }
+}
+
+/// Replica-fleet sweep on the stub backend: req/s and p50/p95/p99 total
+/// latency at replicas {1,2,4} x replication {1,2} under 70%-hot-expert
+/// skewed arrivals, plus rebalance move counts and sync bytes. Runs even
+/// without artifacts, so `BENCH_serve.json` always carries a fleet
+/// trajectory point.
+fn stub_replica_rows(suite: &mut BenchSuite) {
+    let backend = StubFleetBackend { n: 4 };
+    let n_req = 240usize;
+    // 70% of arrivals hit expert 0; the rest spread over experts 1..=3
+    let requests: Vec<Request> = (0..n_req)
+        .map(|i| Request {
+            id: i as u64,
+            tokens: vec![
+                if i % 10 < 7 { 0 } else { (1 + i % 3) as u32 },
+                i as u32,
+                3,
+            ],
+        })
+        .collect();
+    let mut reference: Option<Vec<(u64, usize, u32)>> = None;
+    for replicas in [1usize, 2, 4] {
+        for replication in [1usize, 2] {
+            let scfg =
+                ServerConfig::continuous(4, 200, 2).with_replicas(replicas, replication, 1);
+            let run_once = || {
+                run_server(&backend, &scfg, |client| {
+                    for req in &requests {
+                        client.submit(req.clone());
+                    }
+                })
+                .unwrap()
+            };
+            let r = suite.bench(
+                &format!(
+                    "stub replica serve {n_req} skewed requests \
+                     (replicas {replicas}, replication {replication})"
+                ),
+                || {
+                    std::hint::black_box(run_once());
+                },
+            );
+            let (responses, stats, ()) = run_once();
+            // determinism guard: every fleet shape answers exactly like
+            // the replicas=1 reference
+            let triples = response_triples(&responses);
+            match &reference {
+                None => reference = Some(triples),
+                Some(sorted_ref) => assert_eq!(
+                    &triples, sorted_ref,
+                    "fleet ({replicas},{replication}) diverged from replicas=1"
+                ),
+            }
+            let total_us: Vec<f64> =
+                responses.iter().map(|x| x.total_micros() as f64).collect();
+            suite.annotate("stub_backend", 1.0);
+            suite.annotate("replicas", replicas as f64);
+            suite.annotate("replication", replication as f64);
+            suite.annotate("hot_expert_share", 0.7);
+            suite.annotate("req_per_s", r.throughput(n_req as f64));
+            suite.annotate("total_p50_us", percentile(&total_us, 50.0));
+            suite.annotate("total_p95_us", percentile(&total_us, 95.0));
+            suite.annotate("total_p99_us", percentile(&total_us, 99.0));
+            suite.annotate("mean_queue_depth", stats.mean_queue_depth());
+            if let Some(rep) = &stats.replica {
+                let rows = &rep.executed_rows;
+                suite.annotate("rebalances", rep.rebalances as f64);
+                suite.annotate("placement_moves", rep.moves as f64);
+                suite.annotate("replica_sync_bytes", rep.sync_bytes as f64);
+                suite.annotate(
+                    "executed_rows_min",
+                    rows.iter().copied().min().unwrap_or(0) as f64,
+                );
+                suite.annotate(
+                    "executed_rows_max",
+                    rows.iter().copied().max().unwrap_or(0) as f64,
+                );
+            }
+        }
+    }
+}
+
 fn main() {
+    let mut suite =
+        BenchSuite::new("serve").with_budget(Duration::from_millis(300), Duration::from_secs(3));
+    suite.header();
+
+    // ---- replica-fleet rows: stub backend, never artifact-gated ----
+    stub_replica_rows(&mut suite);
+
     let Some(artifacts) = locate_artifacts() else {
-        eprintln!("[serve bench] no artifacts/manifest.json — run `make artifacts`; skipping");
+        eprintln!(
+            "[serve bench] no artifacts/manifest.json — run `make artifacts`; \
+             wrote the stub replica rows only"
+        );
+        suite.write_json().unwrap();
         return;
     };
     let engine = Engine::new(artifacts).expect("loading artifacts");
@@ -67,10 +190,6 @@ fn main() {
             tokens: s.tokens,
         })
         .collect();
-
-    let mut suite =
-        BenchSuite::new("serve").with_budget(Duration::from_millis(300), Duration::from_secs(3));
-    suite.header();
 
     // ---- closed-wave reference: the whole set as one wave ----
     let reference = serve_threaded(&engine, &mixture, &requests, m, 1).unwrap();

@@ -49,6 +49,15 @@ pub struct ExperimentConfig {
     /// past it are shed with a structured 429-style line instead of
     /// queueing unboundedly.
     pub net_high_water: usize,
+    /// Continuous serving: engine replicas behind the dispatch queue
+    /// (1 = the single-queue bit-exact reference path).
+    pub serve_replicas: usize,
+    /// Continuous serving: placement-copy floor for hot experts; demand
+    /// can escalate past it, up to one copy per replica.
+    pub serve_replication: usize,
+    /// Continuous serving: admission waves between online placement
+    /// rebalances from the route histogram (0 = never rebalance).
+    pub serve_rebalance_every: usize,
     /// Train with the asynchronous (barrier-free, snapshot-routed)
     /// orchestrator instead of the staged pipeline (`--async`).
     pub train_async: bool,
@@ -92,6 +101,9 @@ impl Default for ExperimentConfig {
             serve_max_wait_us: 2000,
             net_max_conns: 64,
             net_high_water: 1024,
+            serve_replicas: 1,
+            serve_replication: 1,
+            serve_rebalance_every: 0,
             train_async: false,
             checkpoint_dir: String::new(),
             checkpoint_every: 0,
@@ -191,6 +203,15 @@ impl ExperimentConfig {
         if let Some(v) = u("net_high_water") {
             self.net_high_water = v;
         }
+        if let Some(v) = u("serve_replicas") {
+            self.serve_replicas = v;
+        }
+        if let Some(v) = u("serve_replication") {
+            self.serve_replication = v;
+        }
+        if let Some(v) = u("serve_rebalance_every") {
+            self.serve_rebalance_every = v;
+        }
         if let Some(v) = j.get("train_async").and_then(Json::as_bool) {
             self.train_async = v;
         }
@@ -251,6 +272,10 @@ impl ExperimentConfig {
         // wire front-end knobs (only read by `serve --listen`)
         self.net_max_conns = args.get_usize("max-conns", self.net_max_conns)?;
         self.net_high_water = args.get_usize("high-water", self.net_high_water)?;
+        self.serve_replicas = args.get_usize("replicas", self.serve_replicas)?;
+        self.serve_replication = args.get_usize("replication", self.serve_replication)?;
+        self.serve_rebalance_every =
+            args.get_usize("rebalance-every", self.serve_rebalance_every)?;
         self.eval_sequences = args.get_usize("eval-sequences", self.eval_sequences)?;
         self.tasks_per_domain = args.get_usize("tasks-per-domain", self.tasks_per_domain)?;
         self.seed = args.get_u64("seed", self.seed)?;
@@ -318,6 +343,12 @@ impl ExperimentConfig {
             ("serve_max_wait_us", Json::num(self.serve_max_wait_us as f64)),
             ("net_max_conns", Json::num(self.net_max_conns as f64)),
             ("net_high_water", Json::num(self.net_high_water as f64)),
+            ("serve_replicas", Json::num(self.serve_replicas as f64)),
+            ("serve_replication", Json::num(self.serve_replication as f64)),
+            (
+                "serve_rebalance_every",
+                Json::num(self.serve_rebalance_every as f64),
+            ),
             ("train_async", Json::Bool(self.train_async)),
             ("checkpoint_dir", Json::str(self.checkpoint_dir.clone())),
             ("checkpoint_every", Json::num(self.checkpoint_every as f64)),
@@ -353,6 +384,9 @@ mod tests {
         c.serve_max_wait_us = 750;
         c.net_max_conns = 9;
         c.net_high_water = 333;
+        c.serve_replicas = 4;
+        c.serve_replication = 2;
+        c.serve_rebalance_every = 6;
         c.train_async = true;
         c.checkpoint_dir = "ckpts".into();
         c.checkpoint_every = 25;
@@ -373,6 +407,9 @@ mod tests {
         assert_eq!(c2.serve_max_wait_us, 750);
         assert_eq!(c2.net_max_conns, 9);
         assert_eq!(c2.net_high_water, 333);
+        assert_eq!(c2.serve_replicas, 4);
+        assert_eq!(c2.serve_replication, 2);
+        assert_eq!(c2.serve_rebalance_every, 6);
         assert!(c2.train_async);
         assert_eq!(c2.checkpoint_dir, "ckpts");
         assert_eq!(c2.checkpoint_every, 25);
@@ -404,6 +441,9 @@ mod tests {
             "--leave-after=9",
             "--join-after=30",
             "--shards=2",
+            "--replicas=4",
+            "--replication=2",
+            "--rebalance-every=12",
         ]
         .iter()
         .map(|s| s.to_string())
@@ -419,6 +459,9 @@ mod tests {
         assert_eq!(c.serve_max_wait_us, 1500);
         assert_eq!(c.net_max_conns, 3);
         assert_eq!(c.net_high_water, 77);
+        assert_eq!(c.serve_replicas, 4);
+        assert_eq!(c.serve_replication, 2);
+        assert_eq!(c.serve_rebalance_every, 12);
         assert!(c.train_async);
         assert!(c.resume);
         assert_eq!(c.checkpoint_dir, "ck");

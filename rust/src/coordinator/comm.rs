@@ -47,6 +47,13 @@ pub enum CommKind {
     /// or a re-adopted shard (shard kill) pulls a checkpoint across the
     /// shard's fault-domain boundary.
     ShardAdopt,
+    /// A serving-fleet placement move: an engine replica gaining a copy
+    /// of an expert pulls the full expert parameter set once (the serve
+    /// analogue of [`CommKind::WeightTransfer`]). Replicas live inside
+    /// one serving domain, so this is intra-shard traffic; `step` carries
+    /// the rebalance epoch, which is what lets the fleet tests reconcile
+    /// ledger bytes against the move count in closed form.
+    ReplicaSync,
 }
 
 impl CommKind {
@@ -195,6 +202,25 @@ impl CommLedger {
             bytes_sent: ckpt_bytes,
             bytes_received: ckpt_bytes,
             step,
+            staleness: 0,
+        });
+    }
+
+    /// Record one serving-fleet placement move: replica `node` gains a
+    /// copy of an expert and pulls its full `param_bytes` once (one
+    /// point-to-point transfer, counted once in
+    /// [`CommLedger::total_bytes`]). `epoch` is the rebalance epoch the
+    /// move belongs to — every move of one rebalance shares it, so
+    /// [`CommLedger::rounds`] counts rebalances that actually moved
+    /// something and `kind_bytes(ReplicaSync)` is exactly
+    /// `moves * param_bytes`.
+    pub fn record_replica_sync(&mut self, node: usize, param_bytes: u64, epoch: u64) {
+        self.record(CommEvent {
+            node,
+            kind: CommKind::ReplicaSync,
+            bytes_sent: param_bytes,
+            bytes_received: param_bytes,
+            step: epoch,
             staleness: 0,
         });
     }
@@ -439,9 +465,23 @@ mod tests {
             CommKind::GradAllReduce,
             CommKind::CheckpointAdopt,
             CommKind::ParamMerge,
+            CommKind::ReplicaSync,
         ] {
             assert!(!k.is_cross_shard(), "{k:?} must be intra-shard");
         }
+    }
+
+    #[test]
+    fn replica_sync_bytes_reconcile_against_moves() {
+        let mut l = CommLedger::default();
+        // epoch 1: two moves; epoch 2: one move; same 4 KiB expert
+        l.record_replica_sync(1, 4096, 1);
+        l.record_replica_sync(2, 4096, 1);
+        l.record_replica_sync(0, 4096, 2);
+        assert_eq!(l.kind_bytes(CommKind::ReplicaSync), 3 * 4096);
+        assert_eq!(l.rounds(CommKind::ReplicaSync), 2, "one round per epoch");
+        assert_eq!(l.inter_shard_bytes(), 0, "replica syncs stay in-domain");
+        assert_eq!(l.intra_shard_bytes(), 3 * 4096);
     }
 
     #[test]

@@ -163,6 +163,46 @@ impl Mixture {
         Ok(out)
     }
 
+    /// [`Mixture::eval_routed_threaded`] through the continuous-batching
+    /// scheduler with an explicit [`ServerConfig`](super::server::ServerConfig)
+    /// — with `cfg.replicas > 1` the expert executions spread across the
+    /// replica fleet (see [`super::replica`]). Returns the same
+    /// `(nll, expert)` per input sequence as the closed-wave path —
+    /// bit-identical for any replica count — plus the scheduler stats
+    /// carrying the fleet report.
+    pub fn eval_routed_replicated(
+        &self,
+        engine: &Engine,
+        seqs: &[Sequence],
+        m: usize,
+        cfg: &super::server::ServerConfig,
+    ) -> Result<(Vec<(f32, usize)>, super::server::SchedStats)> {
+        if seqs.is_empty() {
+            return Ok((Vec::new(), super::server::SchedStats::default()));
+        }
+        let requests: Vec<Request> = seqs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| Request {
+                id: i as u64,
+                tokens: s.tokens.clone(),
+            })
+            .collect();
+        let backend = super::server::MixtureBackend {
+            engine,
+            mixture: self,
+            prefix_len: m,
+        };
+        let (responses, stats, ()) = super::server::run_server(&backend, cfg, |client| {
+            client.submit_wave(requests);
+        })?;
+        // run_server returns responses in submission order == seqs order
+        Ok((
+            responses.iter().map(|r| (r.nll, r.expert)).collect(),
+            stats,
+        ))
+    }
+
     /// Mixture perplexity on a held-out set (routing with prefix `m`).
     /// Routing and expert groups fan across [`default_threads`] workers.
     pub fn perplexity(&self, engine: &Engine, seqs: &[Sequence], m: usize) -> Result<f64> {
@@ -630,6 +670,34 @@ pub fn serve_threaded(
         client.submit_wave(requests.to_vec());
     })?;
     Ok(responses)
+}
+
+/// [`serve_threaded`] through an explicit [`ServerConfig`] — the entry
+/// point the replica fleet rides in on: a `cfg` with `replicas > 1`
+/// dispatches each batch to the least-loaded live holder of its expert
+/// (see [`super::replica`]) and reports the fleet accounting in
+/// [`SchedStats::replica`]. Responses still come back in input order and
+/// the `(id, expert, nll)` triples are bit-identical to `replicas = 1` —
+/// replica choice cannot change an NLL.
+pub fn serve_replicated(
+    engine: &Engine,
+    mixture: &Mixture,
+    requests: &[Request],
+    m: usize,
+    cfg: &super::server::ServerConfig,
+) -> Result<(Vec<Response>, super::server::SchedStats)> {
+    if requests.is_empty() {
+        return Ok((Vec::new(), super::server::SchedStats::default()));
+    }
+    let backend = super::server::MixtureBackend {
+        engine,
+        mixture,
+        prefix_len: m,
+    };
+    let (responses, stats, ()) = super::server::run_server(&backend, cfg, |client| {
+        client.submit_wave(requests.to_vec());
+    })?;
+    Ok((responses, stats))
 }
 
 /// The sequential closed-wave loop: route everything in one score-matrix

@@ -8,6 +8,9 @@
 //! * [`inference`] — argmin routing + batched serving loop
 //! * [`server`] — continuous-batching serve: cross-wave request queue
 //!   with admission scheduling
+//! * [`replica`] — the serving fleet behind [`server`]'s dispatch queue:
+//!   expert→replica placement with hot-expert replication, least-loaded
+//!   dispatch, and histogram-driven online rebalance
 //! * [`net`] — the TCP/JSONL wire front-end over [`server`]: streaming
 //!   request/response lines, load shedding, per-client fairness
 //! * [`comm`] — communication ledger and §A.4 closed forms
@@ -30,6 +33,7 @@ pub mod fleet;
 pub mod inference;
 pub mod net;
 pub mod pipeline;
+pub mod replica;
 pub mod scoring;
 pub mod server;
 pub mod sharding;
@@ -41,8 +45,8 @@ pub use em::{train_routers, train_routers_hooked, EmConfig, TrainedRouters};
 pub use expert::{train_expert, ExpertConfig};
 pub use inference::{
     amortized_micros, dense_perplexity, eval_nll_groups, group_by_expert, plan_wave,
-    response_triples, serve, serve_threaded, EvalLaunch, EvalUnit, Mixture, Request, Response,
-    WavePlan,
+    response_triples, serve, serve_replicated, serve_threaded, EvalLaunch, EvalUnit, Mixture,
+    Request, Response, WavePlan,
 };
 pub use pipeline::{run_pipeline, run_pipeline_reference, PipelineConfig, PipelineResult};
 pub use chaos::{
@@ -59,7 +63,10 @@ pub use trainer::{
     NodeOutcome, NodeProgress, NodeRunConfig, Rejoin, RouterSnapshot, SeatIdentity, SnapshotStore,
     TrainBackend, TrainMode, TrainerConfig, TrainerHandle,
 };
-pub use net::{serve_net, NetConfig, NetHandle, NetReport};
+pub use net::{serve_net, FairMux, NetConfig, NetHandle, NetReport};
+pub use replica::{
+    DispatchPick, PlacementMap, PlacementMove, ReplicaLane, ReplicaReport, ReplicaSet,
+};
 pub use server::{
     run_server, run_server_streaming, MixtureBackend, SchedStats, ServeBackend, ServerClient,
     ServerConfig, SubmitOutcome,

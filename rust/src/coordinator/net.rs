@@ -177,13 +177,25 @@ struct MuxState<T> {
 /// pump pops one item per turn rotating over lanes. `next` blocks while
 /// every lane is empty and returns `None` only after
 /// [`drain`](FairMux::drain) with all lanes exhausted.
-struct FairMux<T> {
+///
+/// Fairness contract (asserted by `rust/tests/net.rs`): one pop serves
+/// at most one item from a lane before the scan moves past it, so a lane
+/// holding a single item waits at most one full rotation behind any
+/// backlog the other lanes have — a firehose client cannot starve a
+/// trickle client.
+pub struct FairMux<T> {
     state: Mutex<MuxState<T>>,
     cv: Condvar,
 }
 
+impl<T> Default for FairMux<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl<T> FairMux<T> {
-    fn new() -> Self {
+    pub fn new() -> Self {
         FairMux {
             state: Mutex::new(MuxState {
                 lanes: Vec::new(),
@@ -198,20 +210,24 @@ impl<T> FairMux<T> {
         self.state.lock().expect("mux poisoned")
     }
 
-    fn register(&self) -> usize {
+    /// Open a new lane and return its index.
+    pub fn register(&self) -> usize {
         let mut st = self.lock();
         st.lanes.push(VecDeque::new());
         st.lanes.len() - 1
     }
 
-    fn push(&self, lane: usize, item: T) {
+    /// Queue `item` on `lane` and wake any blocked [`next`](FairMux::next).
+    pub fn push(&self, lane: usize, item: T) {
         let mut st = self.lock();
         st.lanes[lane].push_back(item);
         drop(st);
         self.cv.notify_all();
     }
 
-    fn next(&self) -> Option<T> {
+    /// Pop the next item, rotating over lanes; blocks while every lane is
+    /// empty, returns `None` only after [`drain`](FairMux::drain).
+    pub fn next(&self) -> Option<T> {
         let mut st = self.lock();
         loop {
             let n = st.lanes.len();
@@ -231,7 +247,9 @@ impl<T> FairMux<T> {
         }
     }
 
-    fn drain(&self) {
+    /// Switch to drain mode: [`next`](FairMux::next) stops blocking and
+    /// returns `None` once every lane is exhausted.
+    pub fn drain(&self) {
         self.lock().draining = true;
         self.cv.notify_all();
     }

@@ -1,0 +1,563 @@
+//! Multi-replica expert serving: the placement and dispatch layer between
+//! admission and the worker pool (the ROADMAP's "multi-replica expert
+//! sharding" open item).
+//!
+//! At millions of users a single engine owning every expert makes the hot
+//! expert the serving bottleneck — the router concentrates traffic on few
+//! experts *because* specialization works. This module models a fleet of
+//! N engine replicas (engine-per-device; the stub backend keeps the whole
+//! fleet tier-1-testable):
+//!
+//! * [`PlacementMap`] — which replicas hold which expert. Every expert has
+//!   at least one holder; **hot** experts are replicated onto several.
+//! * [`ReplicaSet`] — one work lane per replica (own queue + load
+//!   counters) and a least-loaded dispatcher: each dispatched batch goes
+//!   to the cheapest *live* replica holding its expert, load measured as
+//!   queued rows + in-flight rows.
+//! * [`ReplicaReport`] — per-replica executed-row accounting plus the
+//!   rebalance/sync audit the serve path surfaces through `SchedStats`.
+//!
+//! # Replication semantics: a floor, escalated by demand
+//!
+//! The `replication` knob is the **minimum holder count for hot experts**,
+//! not a cap. An expert whose histogram load exceeds its fair share
+//! (`total / replicas`) gets
+//!
+//! ```text
+//! copies = min(replicas, max(replication, ceil(load / fair_share)))
+//! ```
+//!
+//! holders; a cold expert gets exactly one. `replication == 1` disables
+//! replication entirely (pure partitioning). The escalation term is what
+//! makes heavy skew balanceable: with 4 replicas and 70% of traffic on
+//! one expert, a hard cap of 2 copies could never get per-replica load
+//! under 35% vs 15% (2.33x); escalating the hot expert to 3 holders lands
+//! every replica between ~23% and 30% (≤ 1.3x).
+//!
+//! # Determinism
+//!
+//! Replica choice can never change a response: expert NLL is a pure
+//! function of `(expert, rows)` and batch composition is decided *before*
+//! the replica is picked, so the `(id, expert, nll)` triple set is
+//! identical for any replica count, placement, or rebalance schedule —
+//! `rust/tests/replica.rs` asserts this against the replicas=1 reference.
+//! Load counters are read racily by design (they only steer balance), and
+//! equal-load ties rotate round-robin so an idle fleet still spreads a
+//! hot expert across all of its holders.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+use super::comm::CommLedger;
+use crate::runtime::parallel::WorkQueue;
+
+/// One placement move: `to_replica` becomes a (new) holder of `expert`
+/// and must sync the expert's parameters — audited through the comm
+/// ledger as a [`super::comm::CommKind::ReplicaSync`] event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlacementMove {
+    pub expert: usize,
+    pub to_replica: usize,
+}
+
+/// Expert → replica placement: `holders[e]` is the sorted, non-empty set
+/// of replica indices serving expert `e`.
+#[derive(Clone, Debug)]
+pub struct PlacementMap {
+    replicas: usize,
+    holders: Vec<Vec<usize>>,
+}
+
+/// Holder count for an expert under the floor-plus-escalation rule (see
+/// the module header). `total == 0` never reaches here (rebalance is a
+/// no-op on an empty histogram).
+fn copies_for(load: usize, total: usize, replicas: usize, replication: usize) -> usize {
+    if replication <= 1 || replicas <= 1 || load == 0 {
+        return 1;
+    }
+    let fair = total as f64 / replicas as f64;
+    if (load as f64) <= fair {
+        1
+    } else {
+        let demand = ((load as f64) / fair).ceil() as usize;
+        demand.max(replication).min(replicas)
+    }
+}
+
+impl PlacementMap {
+    /// Placement before any traffic has been observed: with no histogram
+    /// there are no hot experts yet, so every expert gets
+    /// `min(replication, replicas)` holders, assigned round-robin.
+    pub fn initial(n_experts: usize, replicas: usize, replication: usize) -> Self {
+        let replicas = replicas.max(1);
+        let copies = replication.clamp(1, replicas);
+        let mut cursor = 0usize;
+        let holders = (0..n_experts)
+            .map(|_| {
+                let mut h: Vec<usize> = (0..copies)
+                    .map(|_| {
+                        let r = cursor % replicas;
+                        cursor += 1;
+                        r
+                    })
+                    .collect();
+                h.sort_unstable();
+                h
+            })
+            .collect();
+        PlacementMap { replicas, holders }
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.holders.len()
+    }
+
+    /// Replicas holding `expert` (sorted, never empty).
+    pub fn holders(&self, expert: usize) -> &[usize] {
+        &self.holders[expert]
+    }
+
+    /// Add `replica` as a holder of `expert` (the emergency path when
+    /// every mapped holder is dead). Returns `true` if it was new — the
+    /// caller audits the implied parameter sync.
+    pub fn insert_holder(&mut self, expert: usize, replica: usize) -> bool {
+        let h = &mut self.holders[expert];
+        match h.binary_search(&replica) {
+            Ok(_) => false,
+            Err(i) => {
+                h.insert(i, replica);
+                true
+            }
+        }
+    }
+
+    /// Recompute placement from a route histogram (`histogram[e]` =
+    /// requests admitted for expert `e`). Returns the new map plus the
+    /// moves (new holders only — dropping a copy ships no bytes), so the
+    /// comm ledger's replica-sync traffic reconciles in closed form:
+    /// `sync_bytes == moves.len() * expert_param_bytes`.
+    ///
+    /// Deterministic greedy: experts in descending load order (ties by
+    /// index) each place `copies_for(load)` holders, one at a time, on
+    /// the replica with the least accumulated load share that doesn't
+    /// already hold the expert — preferring current holders on exact ties
+    /// so a steady histogram converges to zero moves.
+    pub fn rebalanced(&self, histogram: &[usize], replication: usize) -> (PlacementMap, Vec<PlacementMove>) {
+        let ne = self.holders.len();
+        let load = |e: usize| histogram.get(e).copied().unwrap_or(0);
+        let total: usize = (0..ne).map(load).sum();
+        if total == 0 || self.replicas <= 1 {
+            return (self.clone(), Vec::new());
+        }
+        let mut order: Vec<usize> = (0..ne).collect();
+        order.sort_by(|&a, &b| load(b).cmp(&load(a)).then(a.cmp(&b)));
+        let mut acc = vec![0.0f64; self.replicas];
+        let mut holders: Vec<Vec<usize>> = vec![Vec::new(); ne];
+        for e in order {
+            let copies = copies_for(load(e), total, self.replicas, replication);
+            let share = load(e) as f64 / copies as f64;
+            for _ in 0..copies {
+                let r = (0..self.replicas)
+                    .filter(|r| !holders[e].contains(r))
+                    .min_by(|&a, &b| {
+                        acc[a]
+                            .total_cmp(&acc[b])
+                            .then_with(|| {
+                                let held = |r: usize| usize::from(!self.holders[e].contains(&r));
+                                held(a).cmp(&held(b))
+                            })
+                            .then(a.cmp(&b))
+                    })
+                    .expect("copies <= replicas leaves a candidate");
+                holders[e].push(r);
+                acc[r] += share;
+            }
+            holders[e].sort_unstable();
+        }
+        let mut moves = Vec::new();
+        for (e, new) in holders.iter().enumerate() {
+            for &r in new {
+                if !self.holders[e].contains(&r) {
+                    moves.push(PlacementMove { expert: e, to_replica: r });
+                }
+            }
+        }
+        (
+            PlacementMap {
+                replicas: self.replicas,
+                holders,
+            },
+            moves,
+        )
+    }
+}
+
+/// One replica's work lane: its own dispatch queue plus the load/audit
+/// counters. Queued/in-flight counts are the dispatcher's load signal;
+/// executed counts feed [`ReplicaReport`]. All atomics are `Relaxed` —
+/// they steer balance and report totals, they synchronize nothing.
+pub struct ReplicaLane<T> {
+    pub queue: WorkQueue<T>,
+    queued_rows: AtomicUsize,
+    inflight_rows: AtomicUsize,
+    executed_rows: AtomicUsize,
+    executed_batches: AtomicUsize,
+    live: AtomicBool,
+}
+
+impl<T> ReplicaLane<T> {
+    fn new() -> Self {
+        ReplicaLane {
+            queue: WorkQueue::new(),
+            queued_rows: AtomicUsize::new(0),
+            inflight_rows: AtomicUsize::new(0),
+            executed_rows: AtomicUsize::new(0),
+            executed_batches: AtomicUsize::new(0),
+            live: AtomicBool::new(true),
+        }
+    }
+
+    /// The dispatcher's load signal: rows waiting in this lane's queue
+    /// plus rows currently executing on the replica.
+    pub fn load(&self) -> usize {
+        self.queued_rows.load(Ordering::Relaxed) + self.inflight_rows.load(Ordering::Relaxed)
+    }
+
+    /// Worker-side: a popped batch of `rows` rows starts executing.
+    pub fn begin(&self, rows: usize) {
+        self.queued_rows.fetch_sub(rows, Ordering::Relaxed);
+        self.inflight_rows.fetch_add(rows, Ordering::Relaxed);
+    }
+
+    /// Worker-side: the batch finished successfully.
+    pub fn complete(&self, rows: usize) {
+        self.inflight_rows.fetch_sub(rows, Ordering::Relaxed);
+        self.executed_rows.fetch_add(rows, Ordering::Relaxed);
+        self.executed_batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Worker-side: the batch was dropped (error drain) — in-flight rows
+    /// leave without counting as executed.
+    pub fn abort(&self, rows: usize) {
+        self.inflight_rows.fetch_sub(rows, Ordering::Relaxed);
+    }
+
+    pub fn executed_rows(&self) -> usize {
+        self.executed_rows.load(Ordering::Relaxed)
+    }
+
+    pub fn executed_batches(&self) -> usize {
+        self.executed_batches.load(Ordering::Relaxed)
+    }
+
+    pub fn is_live(&self) -> bool {
+        self.live.load(Ordering::Relaxed)
+    }
+
+    /// Mark the replica dead/alive (chaos hooks and unit tests; the serve
+    /// path keeps every replica live).
+    pub fn set_live(&self, live: bool) {
+        self.live.store(live, Ordering::Relaxed);
+    }
+}
+
+/// Outcome of one [`ReplicaSet::dispatch`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DispatchPick {
+    /// The lane the batch went to.
+    pub replica: usize,
+    /// That lane's queue depth (batches) sampled before the push — the
+    /// scheduler's `mean_queue_depth` sample, same convention as the
+    /// single-queue path.
+    pub depth: usize,
+    /// `true` when no live holder existed and the batch fell back to the
+    /// least-loaded live replica *outside* the placement — the caller
+    /// must promote that replica to a holder and audit the sync.
+    pub fallback: bool,
+}
+
+/// The replica fleet: one [`ReplicaLane`] per engine replica.
+pub struct ReplicaSet<T> {
+    lanes: Vec<ReplicaLane<T>>,
+    /// Rotates equal-load tie-breaking so an idle fleet round-robins a
+    /// hot expert across all of its holders instead of pinning the
+    /// lowest index.
+    rotation: AtomicUsize,
+}
+
+impl<T> ReplicaSet<T> {
+    pub fn new(replicas: usize) -> Self {
+        ReplicaSet {
+            lanes: (0..replicas.max(1)).map(|_| ReplicaLane::new()).collect(),
+            rotation: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn lane(&self, replica: usize) -> &ReplicaLane<T> {
+        &self.lanes[replica]
+    }
+
+    /// Route one batch of `rows` rows to the least-loaded live replica in
+    /// `holders` (ties rotate). Falls back to the least-loaded live
+    /// replica overall when every holder is dead, and returns `None` only
+    /// when no replica is live at all (the batch is handed back in that
+    /// case — the caller owns the failure).
+    pub fn dispatch(&self, holders: &[usize], rows: usize, item: T) -> Result<DispatchPick, T> {
+        let n = self.lanes.len();
+        let rot = self.rotation.fetch_add(1, Ordering::Relaxed);
+        // rotate over candidate-list *position*, not replica index: a
+        // holder set that is a strict subset of the fleet would otherwise
+        // favor whichever index the modular wrap lands on (e.g. holders
+        // {0,1,2} of 4 send half of all equal-load ties to replica 0)
+        let pick_from = |cands: &[usize]| -> Option<usize> {
+            let m = cands.len();
+            cands
+                .iter()
+                .enumerate()
+                .min_by_key(|&(i, &r)| (self.lanes[r].load(), (i + m - rot % m) % m))
+                .map(|(_, &r)| r)
+        };
+        let live_holders: Vec<usize> = holders
+            .iter()
+            .copied()
+            .filter(|&r| r < n && self.lanes[r].is_live())
+            .collect();
+        let (replica, fallback) = match pick_from(&live_holders) {
+            Some(r) => (r, false),
+            None => {
+                let live: Vec<usize> =
+                    (0..n).filter(|&r| self.lanes[r].is_live()).collect();
+                match pick_from(&live) {
+                    Some(r) => (r, true),
+                    None => return Err(item),
+                }
+            }
+        };
+        let lane = &self.lanes[replica];
+        let depth = lane.queue.len();
+        lane.queued_rows.fetch_add(rows, Ordering::Relaxed);
+        if !lane.queue.push(item) {
+            // closed (shutdown): the item was dropped by the queue
+            lane.queued_rows.fetch_sub(rows, Ordering::Relaxed);
+        }
+        Ok(DispatchPick {
+            replica,
+            depth,
+            fallback,
+        })
+    }
+
+    /// Close every lane queue (drain/shutdown; idempotent).
+    pub fn close_all(&self) {
+        for lane in &self.lanes {
+            lane.queue.close();
+        }
+    }
+
+    pub fn executed_rows(&self) -> Vec<usize> {
+        self.lanes.iter().map(|l| l.executed_rows()).collect()
+    }
+
+    pub fn executed_batches(&self) -> Vec<usize> {
+        self.lanes.iter().map(|l| l.executed_batches()).collect()
+    }
+}
+
+/// Replica-fleet accounting surfaced through `SchedStats::replica` after
+/// a replicated serve run.
+#[derive(Clone, Debug, Default)]
+pub struct ReplicaReport {
+    /// Engine replicas in the fleet.
+    pub replicas: usize,
+    /// The configured hot-expert replication floor.
+    pub replication: usize,
+    /// Rebalance epochs that ran (histogram recomputations, with or
+    /// without resulting moves).
+    pub rebalances: usize,
+    /// Placement moves applied (new holders only), including emergency
+    /// fallback promotions.
+    pub moves: usize,
+    /// Exact replica-sync bytes audited — always `moves * expert_param_bytes`.
+    pub sync_bytes: u64,
+    /// Dispatches that found every mapped holder dead and fell back.
+    pub fallback_dispatches: usize,
+    /// Rows executed per replica — the balance acceptance signal.
+    pub executed_rows: Vec<usize>,
+    /// Batches executed per replica.
+    pub executed_batches: Vec<usize>,
+    /// The full replica-sync ledger (one `ReplicaSync` event per move).
+    pub ledger: CommLedger,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_placement_spreads_copies_round_robin() {
+        let p = PlacementMap::initial(4, 4, 2);
+        assert_eq!(p.n_replicas(), 4);
+        assert_eq!(p.n_experts(), 4);
+        // cursor walk: e0 {0,1}, e1 {2,3}, e2 {0,1}, e3 {2,3}
+        assert_eq!(p.holders(0), &[0, 1]);
+        assert_eq!(p.holders(1), &[2, 3]);
+        assert_eq!(p.holders(2), &[0, 1]);
+        assert_eq!(p.holders(3), &[2, 3]);
+        // replication is clamped to the fleet size, and never below 1
+        let p = PlacementMap::initial(2, 3, 9);
+        assert!(p.holders(0).len() == 3 && p.holders(1).len() == 3);
+        let p = PlacementMap::initial(3, 2, 0);
+        for e in 0..3 {
+            assert_eq!(p.holders(e).len(), 1);
+        }
+    }
+
+    #[test]
+    fn rebalance_is_a_noop_on_an_empty_histogram() {
+        let p = PlacementMap::initial(3, 2, 2);
+        let (q, moves) = p.rebalanced(&[0, 0, 0], 2);
+        assert!(moves.is_empty());
+        for e in 0..3 {
+            assert_eq!(q.holders(e), p.holders(e));
+        }
+    }
+
+    #[test]
+    fn replication_one_is_pure_partitioning() {
+        let p = PlacementMap::initial(4, 4, 1);
+        let (q, _) = p.rebalanced(&[70, 10, 10, 10], 1);
+        for e in 0..4 {
+            assert_eq!(q.holders(e).len(), 1, "replication=1 never replicates");
+        }
+    }
+
+    #[test]
+    fn hot_expert_escalates_past_the_replication_floor() {
+        // 70% on expert 0, fair share 25%: floor 2 escalates to
+        // ceil(70/25) = 3 holders; cold experts keep exactly 1.
+        let p = PlacementMap::initial(4, 4, 2);
+        let hist = [70usize, 10, 10, 10];
+        let (q, moves) = p.rebalanced(&hist, 2);
+        assert_eq!(q.holders(0).len(), 3);
+        for e in 1..4 {
+            assert_eq!(q.holders(e).len(), 1);
+        }
+        // implied per-replica load (each expert splits evenly over its
+        // holders) lands within the 2x acceptance bound
+        let mut per = [0.0f64; 4];
+        for e in 0..4 {
+            let share = hist[e] as f64 / q.holders(e).len() as f64;
+            for &r in q.holders(e) {
+                per[r] += share;
+            }
+        }
+        let (min, max) = per
+            .iter()
+            .fold((f64::INFINITY, 0.0f64), |(lo, hi), &v| (lo.min(v), hi.max(v)));
+        assert!(min > 0.0, "no replica may sit idle: {per:?}");
+        assert!(max / min <= 2.0, "imbalance {:.2}x: {per:?}", max / min);
+        // every move lands in the new map and none was already held
+        for mv in &moves {
+            assert!(q.holders(mv.expert).contains(&mv.to_replica));
+            assert!(!p.holders(mv.expert).contains(&mv.to_replica));
+        }
+    }
+
+    #[test]
+    fn rebalance_converges_to_zero_moves_on_a_steady_histogram() {
+        let p = PlacementMap::initial(4, 4, 2);
+        let hist = [70usize, 10, 10, 10];
+        let (q, first) = p.rebalanced(&hist, 2);
+        assert!(!first.is_empty(), "skew must move something off the initial map");
+        let (r, second) = q.rebalanced(&hist, 2);
+        assert!(second.is_empty(), "steady histogram re-moved: {second:?}");
+        for e in 0..4 {
+            assert_eq!(r.holders(e), q.holders(e));
+        }
+    }
+
+    #[test]
+    fn dispatch_picks_the_least_loaded_holder() {
+        let set: ReplicaSet<u32> = ReplicaSet::new(3);
+        // preload lane 0 with 8 rows, lane 2 with 2 rows
+        set.dispatch(&[0], 8, 1).unwrap();
+        set.dispatch(&[2], 2, 2).unwrap();
+        let pick = set.dispatch(&[0, 2], 4, 3).unwrap();
+        assert_eq!(pick.replica, 2);
+        assert!(!pick.fallback);
+        assert_eq!(set.lane(2).load(), 6);
+        // depth sampled before the push: lane 2 already held one batch
+        assert_eq!(pick.depth, 1);
+    }
+
+    #[test]
+    fn equal_load_ties_rotate_across_holders() {
+        // instant execution leaves every lane at load 0; the rotation
+        // must still spread a hot expert over all of its holders
+        let set: ReplicaSet<u32> = ReplicaSet::new(4);
+        let mut seen = [0usize; 4];
+        for i in 0..12 {
+            let pick = set.dispatch(&[0, 1, 2], 1, i).unwrap();
+            seen[pick.replica] += 1;
+            // drain immediately: back to all-zero loads
+            let lane = set.lane(pick.replica);
+            lane.queue.try_pop().unwrap();
+            lane.begin(1);
+            lane.complete(1);
+        }
+        assert_eq!(seen[3], 0, "non-holder must never be picked");
+        for r in 0..3 {
+            assert_eq!(seen[r], 4, "ties must round-robin: {seen:?}");
+        }
+        assert_eq!(set.executed_rows(), vec![4, 4, 4, 0]);
+    }
+
+    #[test]
+    fn dead_holders_fall_back_to_a_live_replica() {
+        let set: ReplicaSet<u32> = ReplicaSet::new(3);
+        set.lane(0).set_live(false);
+        set.lane(1).set_live(false);
+        let pick = set.dispatch(&[0, 1], 1, 7).unwrap();
+        assert_eq!(pick.replica, 2);
+        assert!(pick.fallback);
+        // a whole-fleet outage hands the batch back
+        set.lane(2).set_live(false);
+        assert_eq!(set.dispatch(&[0, 1], 1, 8).unwrap_err(), 8);
+    }
+
+    #[test]
+    fn lane_accounting_balances() {
+        let set: ReplicaSet<u32> = ReplicaSet::new(1);
+        let lane = set.lane(0);
+        set.dispatch(&[0], 5, 1).unwrap();
+        set.dispatch(&[0], 3, 2).unwrap();
+        assert_eq!(lane.load(), 8);
+        lane.queue.try_pop().unwrap();
+        lane.begin(5);
+        assert_eq!(lane.load(), 8, "in-flight rows still count as load");
+        lane.complete(5);
+        assert_eq!(lane.load(), 3);
+        lane.queue.try_pop().unwrap();
+        lane.begin(3);
+        lane.abort(3);
+        assert_eq!(lane.load(), 0);
+        assert_eq!(lane.executed_rows(), 5);
+        assert_eq!(lane.executed_batches(), 1);
+    }
+
+    #[test]
+    fn insert_holder_is_idempotent() {
+        let mut p = PlacementMap::initial(2, 3, 1);
+        let r = (p.holders(0)[0] + 1) % 3;
+        assert!(p.insert_holder(0, r));
+        assert!(!p.insert_holder(0, r));
+        assert!(p.holders(0).windows(2).all(|w| w[0] < w[1]), "holders stay sorted");
+    }
+}

@@ -29,6 +29,30 @@
 //!               write each response into its submission-order slot
 //! ```
 //!
+//! With `replicas > 1` the single dispatch queue becomes a replica fleet
+//! (see [`super::replica`]): dispatch consults the expert→replica
+//! placement map and pushes the batch onto the least-loaded live holder's
+//! own lane queue, and one worker per replica (engine-per-device) drains
+//! its lane:
+//!
+//! ```text
+//!  dispatched ─▶ placement lookup ─▶ replica lane queues (one per
+//!      │         (PlacementMap)       replica; least-loaded live holder)
+//!      ▼
+//!  completed    replica r's worker pops lane r only — per-replica
+//!               executed-row accounting is exact
+//! ```
+//!
+//! Placement rebalances online from the scheduler's own route histogram
+//! ([`SchedStats::route_histogram`]) every `rebalance_every` admission
+//! waves; each move is audited as a [`CommKind::ReplicaSync`] ledger
+//! event carrying the exact expert parameter bytes. `replicas <= 1` is
+//! the untouched single-queue reference path, and replica choice cannot
+//! change a response (NLL is a pure function of `(expert, rows)` and the
+//! batch is composed before the replica is picked), so triples stay
+//! bit-identical across any replica count / placement / rebalance
+//! schedule — asserted by `rust/tests/replica.rs`.
+//!
 //! Workers pull from the dispatch queue the moment they free up
 //! ([`SchedStats::slots_refilled`] counts pulls that never blocked), so a
 //! straggling expert batch delays only its own worker — the property the
@@ -55,6 +79,15 @@
 //! * `error` — first-failure slot (`AtomicBool` + `Mutex`); the flag is
 //!   checked lock-free, the slot lock is only taken to record or take
 //!   the error, never nested under anything else.
+//! * `Fleet::place` (`Mutex`, replicated mode only) — the placement map
+//!   plus the move/sync ledger. Ordering rules: it is **never nested**
+//!   with any other lock — never held across a lane-queue push, the
+//!   `stats` lock, or backend execution (the scheduler clones the
+//!   holder list out, drops the lock, then dispatches; rebalance reads
+//!   the histogram under `stats`, releases it, and only then takes
+//!   `place`). Workers never touch it at all — they only update their
+//!   own lane's relaxed atomics — so placement reads/writes stay a
+//!   scheduler-thread affair exactly like the pending batches.
 //!
 //! Pending per-expert batches and their linger deadlines live entirely on
 //! the scheduler thread and need no lock at all — and so does the
@@ -73,7 +106,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use super::comm::{CommKind, CommLedger};
 use super::inference::{amortized_micros, eval_nll_all, Mixture, Request, Response};
+use super::replica::{PlacementMap, ReplicaLane, ReplicaReport, ReplicaSet};
 use super::scoring::pad_prefix_row;
 use crate::runtime::parallel::{resolve_threads, Pop, PushOutcome, WorkQueue};
 use crate::runtime::Engine;
@@ -105,6 +140,23 @@ pub trait ServeBackend: Sync {
     /// route whenever this value changes (e.g. any router's version
     /// bumps). Only consulted when `route_memo_key` returns keys.
     fn router_fingerprint(&self) -> u64 {
+        0
+    }
+
+    /// [`exec_nll`](ServeBackend::exec_nll) on engine replica `replica`
+    /// (replicated serving; `replica` is always a valid fleet index). The
+    /// default forwards to `exec_nll`: NLL is a pure function of
+    /// `(expert, rows)`, so any override MUST return bit-identical values
+    /// on every replica — that purity is the whole determinism contract
+    /// of replicated serving.
+    fn exec_nll_replica(&self, _replica: usize, expert: usize, rows: &[&[u32]]) -> Result<Vec<f32>> {
+        self.exec_nll(expert, rows)
+    }
+
+    /// Bytes one placement move ships: the full parameter set a replica
+    /// pulls when it becomes a new holder of an expert (audited per move
+    /// as [`CommKind::ReplicaSync`]). Default `0` for model-free stubs.
+    fn expert_param_bytes(&self) -> u64 {
         0
     }
 }
@@ -144,6 +196,12 @@ impl ServeBackend for MixtureBackend<'_> {
         Some(pad_prefix_row(row, self.prefix_len))
     }
 
+    /// f32 parameters of one expert — what a new holder pulls on a
+    /// placement move.
+    fn expert_param_bytes(&self) -> u64 {
+        self.mixture.expert_meta.param_count as u64 * 4
+    }
+
     /// Hash of the routers' ordered `(state_id, version)` pairs: any
     /// router training step / checkpoint load / clone swap changes it.
     fn router_fingerprint(&self) -> u64 {
@@ -171,8 +229,22 @@ pub struct ServerConfig {
     /// takes every arrival queued at that moment).
     pub admission_max: usize,
     /// Worker threads executing dispatched batches (also the router
-    /// fan-out width inside an admission wave); `0` = auto.
+    /// fan-out width inside an admission wave); `0` = auto. With
+    /// `replicas > 1` the executing pool is one worker per replica
+    /// instead (engine-per-device); `threads` then only sizes the router
+    /// fan-out.
     pub threads: usize,
+    /// Engine replicas behind the dispatch queue. `0`/`1` = the single
+    /// dispatch-queue reference path, bit-exact with pre-replica serving.
+    pub replicas: usize,
+    /// Hot-expert replication floor (see [`super::replica`]): `1`
+    /// disables replication (pure partitioning); `k > 1` gives every hot
+    /// expert at least `k` holders, escalated up to `replicas` by demand.
+    pub replication: usize,
+    /// Rebalance the placement map from [`SchedStats::route_histogram`]
+    /// every this many admission waves (`0` = keep the initial placement
+    /// for the whole run). Ignored when `replicas <= 1`.
+    pub rebalance_every: usize,
 }
 
 impl ServerConfig {
@@ -185,7 +257,19 @@ impl ServerConfig {
             max_wait_us,
             admission_max: if batch_size == 0 { 32 } else { batch_size },
             threads,
+            replicas: 1,
+            replication: 1,
+            rebalance_every: 0,
         }
+    }
+
+    /// Replica-fleet knobs on top of any base config (`replicas <= 1`
+    /// restores the single-queue reference path).
+    pub fn with_replicas(mut self, replicas: usize, replication: usize, rebalance_every: usize) -> Self {
+        self.replicas = replicas;
+        self.replication = replication;
+        self.rebalance_every = rebalance_every;
+        self
     }
 
     /// The closed-wave configuration [`super::serve_threaded`] wraps: one
@@ -198,6 +282,9 @@ impl ServerConfig {
             max_wait_us: u64::MAX,
             admission_max: 0,
             threads,
+            replicas: 1,
+            replication: 1,
+            rebalance_every: 0,
         }
     }
 }
@@ -237,6 +324,14 @@ pub struct SchedStats {
     /// [`SchedStats::mean_queue_depth`]).
     pub depth_sum: usize,
     pub depth_samples: usize,
+    /// Admitted requests per routed expert — the scheduler's own route
+    /// histogram, and the input replica placement rebalances from. Sized
+    /// lazily to `n_experts` on the first admission (empty on a
+    /// zero-request run).
+    pub route_histogram: Vec<usize>,
+    /// Replica-fleet accounting when `cfg.replicas > 1`; `None` on the
+    /// single-queue reference path.
+    pub replica: Option<ReplicaReport>,
 }
 
 impl SchedStats {
@@ -403,6 +498,160 @@ impl<T> Drop for CloseOnDrop<'_, T> {
     }
 }
 
+/// Placement state of a replicated run: the expert→replica map plus the
+/// rebalance/sync audit. See the module header's locking order — this
+/// lock is never nested with any other.
+struct FleetPlace {
+    map: PlacementMap,
+    /// Admission waves seen (the rebalance cadence counter).
+    waves: usize,
+    /// Rebalance epochs run (also the `step` on ReplicaSync events).
+    epochs: usize,
+    moves: usize,
+    fallbacks: usize,
+    ledger: CommLedger,
+}
+
+/// The replica fleet a replicated run dispatches into: one lane per
+/// engine replica plus the placement map.
+struct Fleet {
+    set: ReplicaSet<Batch>,
+    place: Mutex<FleetPlace>,
+    replication: usize,
+    rebalance_every: usize,
+    expert_param_bytes: u64,
+}
+
+impl Fleet {
+    fn new(
+        replicas: usize,
+        replication: usize,
+        rebalance_every: usize,
+        n_experts: usize,
+        expert_param_bytes: u64,
+    ) -> Self {
+        Fleet {
+            set: ReplicaSet::new(replicas),
+            place: Mutex::new(FleetPlace {
+                map: PlacementMap::initial(n_experts, replicas, replication),
+                waves: 0,
+                epochs: 0,
+                moves: 0,
+                fallbacks: 0,
+                ledger: CommLedger::default(),
+            }),
+            replication,
+            rebalance_every,
+            expert_param_bytes,
+        }
+    }
+
+    fn lock_place(&self) -> std::sync::MutexGuard<'_, FleetPlace> {
+        self.place.lock().expect("placement poisoned")
+    }
+
+    /// Route one dispatched batch to the least-loaded live holder of its
+    /// expert. Returns the chosen lane's pre-push queue depth (the
+    /// `mean_queue_depth` sample). An emergency fallback (every mapped
+    /// holder dead) promotes the chosen replica to a holder and audits
+    /// the implied parameter sync as a move.
+    fn dispatch(&self, batch: Batch) -> Option<usize> {
+        let expert = batch.expert;
+        let holders: Vec<usize> = {
+            // clone the (tiny) holder list out: the placement lock must
+            // not be held across the lane push
+            self.lock_place().map.holders(expert).to_vec()
+        };
+        let rows = batch.items.len();
+        let pick = self.set.dispatch(&holders, rows, batch).ok()?;
+        if pick.fallback {
+            let mut p = self.lock_place();
+            p.fallbacks += 1;
+            if p.map.insert_holder(expert, pick.replica) {
+                p.moves += 1;
+                let (epoch, bytes) = (p.epochs as u64, self.expert_param_bytes);
+                p.ledger.record_replica_sync(pick.replica, bytes, epoch);
+            }
+        }
+        Some(pick.depth)
+    }
+
+    /// Scheduler hook after each admission wave: every `rebalance_every`
+    /// waves, recompute placement from the route histogram and audit each
+    /// move as a [`CommKind::ReplicaSync`] event of exactly
+    /// `expert_param_bytes` — so ledger bytes reconcile in closed form
+    /// against the move count.
+    fn maybe_rebalance(&self, stats: &Mutex<SchedStats>) {
+        if self.rebalance_every == 0 {
+            return;
+        }
+        {
+            let mut p = self.lock_place();
+            p.waves += 1;
+            if p.waves % self.rebalance_every != 0 {
+                return;
+            }
+        } // released: never nest the placement lock under/over `stats`
+        let histogram = stats
+            .lock()
+            .expect("stats poisoned")
+            .route_histogram
+            .clone();
+        let mut p = self.lock_place();
+        let (map, moves) = p.map.rebalanced(&histogram, self.replication);
+        p.epochs += 1;
+        let epoch = p.epochs as u64;
+        for mv in &moves {
+            p.ledger
+                .record_replica_sync(mv.to_replica, self.expert_param_bytes, epoch);
+        }
+        p.moves += moves.len();
+        p.map = map;
+    }
+
+    fn report(&self) -> ReplicaReport {
+        let p = self.lock_place();
+        ReplicaReport {
+            replicas: self.set.n_replicas(),
+            replication: self.replication,
+            rebalances: p.epochs,
+            moves: p.moves,
+            sync_bytes: p.ledger.kind_bytes(CommKind::ReplicaSync),
+            fallback_dispatches: p.fallbacks,
+            executed_rows: self.set.executed_rows(),
+            executed_batches: self.set.executed_batches(),
+            ledger: p.ledger.clone(),
+        }
+    }
+}
+
+/// Where dispatched batches go: the single reference queue, or the
+/// replica fleet.
+enum Dispatch<'q> {
+    Single(&'q WorkQueue<Batch>),
+    Fleet(&'q Fleet),
+}
+
+impl Dispatch<'_> {
+    fn close(&self) {
+        match self {
+            Dispatch::Single(q) => q.close(),
+            Dispatch::Fleet(f) => f.set.close_all(),
+        }
+    }
+}
+
+/// Closes every dispatch queue when dropped, so a panicking scheduler
+/// cannot strand workers in a blocking `pop` (fleet analogue of
+/// [`CloseOnDrop`]).
+struct CloseDispatchOnDrop<'a, 'q>(&'a Dispatch<'q>);
+
+impl Drop for CloseDispatchOnDrop<'_, '_> {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
 /// Run the continuous-batching server over `backend` for the lifetime of
 /// `driver`: the driver submits requests through the [`ServerClient`]
 /// (streaming them in, sleeping between waves, whatever the workload
@@ -480,8 +729,24 @@ where
     S: Fn(usize, Response) + Sync,
 {
     let threads = resolve_threads(cfg.threads).max(1);
+    let replicas = cfg.replicas.max(1);
     let arrivals: WorkQueue<Arrival> = WorkQueue::new();
-    let dispatch: WorkQueue<Batch> = WorkQueue::new();
+    // replicas=1 keeps the single shared dispatch queue (the bit-exact
+    // reference path); replicas>1 swaps in the fleet's per-replica lanes
+    let single: WorkQueue<Batch> = WorkQueue::new();
+    let fleet = (replicas > 1).then(|| {
+        Fleet::new(
+            replicas,
+            cfg.replication.max(1),
+            cfg.rebalance_every,
+            backend.n_experts(),
+            backend.expert_param_bytes(),
+        )
+    });
+    let dispatch = match fleet.as_ref() {
+        Some(f) => Dispatch::Fleet(f),
+        None => Dispatch::Single(&single),
+    };
     let stats: Mutex<SchedStats> = Mutex::new(SchedStats::default());
     let error = ErrSlot::default();
     let client = ServerClient {
@@ -491,8 +756,34 @@ where
     };
 
     let driver_out = std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| worker_loop(backend, &arrivals, &dispatch, &sink, &stats, &error));
+        // move-closure-friendly aliases (the spawns below capture per-
+        // replica indices by value, so they must not move the shared
+        // structures themselves)
+        let (arrivals_r, sink_r, stats_r, error_r) = (&arrivals, &sink, &stats, &error);
+        match &dispatch {
+            Dispatch::Single(q) => {
+                for _ in 0..threads {
+                    let q = *q;
+                    s.spawn(move || worker_loop(backend, arrivals_r, q, sink_r, stats_r, error_r));
+                }
+            }
+            Dispatch::Fleet(f) => {
+                // engine-per-device: exactly one worker drains each lane
+                for r in 0..f.set.n_replicas() {
+                    let f = *f;
+                    s.spawn(move || {
+                        replica_worker_loop(
+                            backend,
+                            r,
+                            f.set.lane(r),
+                            arrivals_r,
+                            sink_r,
+                            stats_r,
+                            error_r,
+                        )
+                    });
+                }
+            }
         }
         s.spawn(|| scheduler_loop(backend, cfg, threads, &arrivals, &dispatch, &stats, &error));
         // the driver runs on the calling thread; closing `arrivals` (on
@@ -507,6 +798,9 @@ where
     let submitted = client.submitted();
     let mut stats = stats.into_inner().expect("stats poisoned");
     stats.submitted = submitted;
+    if let Some(f) = fleet {
+        stats.replica = Some(f.report());
+    }
     Ok((stats, driver_out))
 }
 
@@ -518,12 +812,12 @@ fn scheduler_loop<B: ServeBackend>(
     cfg: &ServerConfig,
     threads: usize,
     arrivals: &WorkQueue<Arrival>,
-    dispatch: &WorkQueue<Batch>,
+    dispatch: &Dispatch<'_>,
     stats: &Mutex<SchedStats>,
     error: &ErrSlot,
 ) {
     // a panicking or erroring scheduler must still release the workers
-    let _close = CloseOnDrop(dispatch);
+    let _close = CloseDispatchOnDrop(dispatch);
     let ne = backend.n_experts();
     let batch_size = if cfg.batch_size == 0 {
         usize::MAX
@@ -597,6 +891,9 @@ fn scheduler_loop<B: ServeBackend>(
                 arrivals.close();
                 return;
             }
+            if let Dispatch::Fleet(f) = dispatch {
+                f.maybe_rebalance(stats);
+            }
         }
         flush_expired(&mut pending, &mut deadline, dispatch, stats);
     }
@@ -631,7 +928,7 @@ fn admit<B: ServeBackend>(
     memo: &mut RouteMemo,
     pending: &mut [Vec<Admitted>],
     deadline: &mut [Option<Instant>],
-    dispatch: &WorkQueue<Batch>,
+    dispatch: &Dispatch<'_>,
     stats: &Mutex<SchedStats>,
 ) -> Result<()> {
     let ne = pending.len();
@@ -682,6 +979,16 @@ fn admit<B: ServeBackend>(
         st.admission_waves += 1;
         st.admitted += wave.len();
         st.route_cache_hits += hits;
+        // per-expert route counts feed the fleet's online rebalance;
+        // out-of-range routes are rejected below, so skip them here
+        if st.route_histogram.len() < ne {
+            st.route_histogram.resize(ne, 0);
+        }
+        for e in routes.iter().flatten() {
+            if *e < ne {
+                st.route_histogram[*e] += 1;
+            }
+        }
     }
     for (a, e) in wave.into_iter().zip(routes) {
         let e = e.expect("every admission route resolved above");
@@ -725,7 +1032,7 @@ fn linger_deadline(pending: &[Admitted], linger: Option<Duration>) -> Option<Ins
 fn flush_expired(
     pending: &mut [Vec<Admitted>],
     deadline: &mut [Option<Instant>],
-    dispatch: &WorkQueue<Batch>,
+    dispatch: &Dispatch<'_>,
     stats: &Mutex<SchedStats>,
 ) {
     let now = Instant::now();
@@ -744,13 +1051,21 @@ fn dispatch_batch(
     expert: usize,
     items: Vec<Admitted>,
     kind: DispatchKind,
-    dispatch: &WorkQueue<Batch>,
+    dispatch: &Dispatch<'_>,
     stats: &Mutex<SchedStats>,
 ) {
     // sample the backlog BEFORE pushing: an idle pool reads 0, not a
-    // self-inflicted 1
-    let depth = dispatch.len();
-    dispatch.push(Batch { expert, items });
+    // self-inflicted 1 (the fleet samples the chosen lane's own depth)
+    let depth = match dispatch {
+        Dispatch::Single(q) => {
+            let depth = q.len();
+            q.push(Batch { expert, items });
+            depth
+        }
+        // a fully closed fleet (shutdown race) drops the batch exactly
+        // like a closed single queue would
+        Dispatch::Fleet(f) => f.dispatch(Batch { expert, items }).unwrap_or(0),
+    };
     let mut st = stats.lock().expect("stats poisoned");
     st.batches_dispatched += 1;
     match kind {
@@ -794,45 +1109,106 @@ fn worker_loop<B: ServeBackend, S: Fn(usize, Response) + Sync>(
             finished_one = true;
             continue; // shutting down: drop the batch, keep draining
         }
-        let rows: Vec<&[u32]> = batch.items.iter().map(|a| a.req.tokens.as_slice()).collect();
-        let t0 = Instant::now();
-        match backend.exec_nll(batch.expert, &rows) {
-            Err(e) => {
-                error.record(e);
-                arrivals.close();
-            }
-            Ok(nll) if nll.len() != rows.len() => {
-                error.record(anyhow!(
-                    "backend returned {} NLLs for a {}-row batch",
-                    nll.len(),
-                    rows.len()
-                ));
-                arrivals.close();
-            }
-            Ok(nll) => {
-                let exec_us = amortized_micros(t0.elapsed(), rows.len());
-                for (item, &v) in batch.items.iter().zip(&nll) {
-                    // queue time = arrival-queue wait + pending/dispatch
-                    // wait; the routing span in between belongs to
-                    // route_micros, so total_micros never double-counts
-                    let queued = item.pre_route_wait
-                        + t0.saturating_duration_since(item.routed_t);
-                    sink(
-                        item.seq,
-                        Response {
-                            id: item.req.id,
-                            expert: batch.expert,
-                            nll: v,
-                            queue_micros: queued.as_micros(),
-                            route_micros: item.route_us,
-                            exec_micros: exec_us,
-                        },
-                    );
+        execute_batch(backend, 0, batch, arrivals, sink, stats, error);
+        finished_one = true;
+    }
+}
+
+/// Replica `replica`'s worker: drains its own lane only, keeping the
+/// lane's queued/in-flight/executed row counters exact so the
+/// dispatcher's load signal and the per-replica balance accounting stay
+/// truthful. Same shutdown behavior as [`worker_loop`].
+fn replica_worker_loop<B: ServeBackend, S: Fn(usize, Response) + Sync>(
+    backend: &B,
+    replica: usize,
+    lane: &ReplicaLane<Batch>,
+    arrivals: &WorkQueue<Arrival>,
+    sink: &S,
+    stats: &Mutex<SchedStats>,
+    error: &ErrSlot,
+) {
+    let mut finished_one = false;
+    loop {
+        let batch = match lane.queue.try_pop() {
+            Some(b) => {
+                if finished_one {
+                    stats.lock().expect("stats poisoned").slots_refilled += 1;
                 }
-                stats.lock().expect("stats poisoned").completed += batch.items.len();
+                b
             }
+            None => match lane.queue.pop() {
+                Some(b) => b,
+                None => return,
+            },
+        };
+        let rows = batch.items.len();
+        lane.begin(rows);
+        if error.is_set() {
+            lane.abort(rows);
+            finished_one = true;
+            continue; // shutting down: drop the batch, keep draining
+        }
+        if execute_batch(backend, replica, batch, arrivals, sink, stats, error) {
+            lane.complete(rows);
+        } else {
+            lane.abort(rows);
         }
         finished_one = true;
+    }
+}
+
+/// Execute one dispatched batch on `replica` and sink its responses.
+/// Returns whether execution succeeded; on failure the first error is
+/// recorded and `arrivals` is closed so a streaming driver fails fast.
+fn execute_batch<B: ServeBackend, S: Fn(usize, Response) + Sync>(
+    backend: &B,
+    replica: usize,
+    batch: Batch,
+    arrivals: &WorkQueue<Arrival>,
+    sink: &S,
+    stats: &Mutex<SchedStats>,
+    error: &ErrSlot,
+) -> bool {
+    let rows: Vec<&[u32]> = batch.items.iter().map(|a| a.req.tokens.as_slice()).collect();
+    let t0 = Instant::now();
+    match backend.exec_nll_replica(replica, batch.expert, &rows) {
+        Err(e) => {
+            error.record(e);
+            arrivals.close();
+            false
+        }
+        Ok(nll) if nll.len() != rows.len() => {
+            error.record(anyhow!(
+                "backend returned {} NLLs for a {}-row batch",
+                nll.len(),
+                rows.len()
+            ));
+            arrivals.close();
+            false
+        }
+        Ok(nll) => {
+            let exec_us = amortized_micros(t0.elapsed(), rows.len());
+            for (item, &v) in batch.items.iter().zip(&nll) {
+                // queue time = arrival-queue wait + pending/dispatch
+                // wait; the routing span in between belongs to
+                // route_micros, so total_micros never double-counts
+                let queued = item.pre_route_wait
+                    + t0.saturating_duration_since(item.routed_t);
+                sink(
+                    item.seq,
+                    Response {
+                        id: item.req.id,
+                        expert: batch.expert,
+                        nll: v,
+                        queue_micros: queued.as_micros(),
+                        route_micros: item.route_us,
+                        exec_micros: exec_us,
+                    },
+                );
+            }
+            stats.lock().expect("stats poisoned").completed += batch.items.len();
+            true
+        }
     }
 }
 
@@ -995,6 +1371,38 @@ mod tests {
             assert_eq!(nll, (i % 3) as f32 * 1000.0 + (i as u32 + 7) as f32);
         }
         assert_eq!(stats.completed, 9);
+    }
+
+    #[test]
+    fn replicated_dispatch_matches_the_single_queue_reference() {
+        let backend = StubBackend { n: 3 };
+        let reqs: Vec<Request> = (0..24).map(|i| req(300 + i, vec![i as u32, 9])).collect();
+        let run = |cfg: &ServerConfig| {
+            let (out, stats, ()) = run_server(&backend, cfg, |c| {
+                for r in &reqs {
+                    c.submit(r.clone());
+                }
+            })
+            .unwrap();
+            let mut triples: Vec<(u64, usize, u32)> =
+                out.iter().map(|r| (r.id, r.expert, r.nll.to_bits())).collect();
+            triples.sort_unstable();
+            (triples, stats)
+        };
+        let (reference, ref_stats) = run(&ServerConfig::continuous(2, 1000, 2));
+        assert!(ref_stats.replica.is_none(), "replicas=1 must not build a fleet");
+        let (fleet, stats) = run(&ServerConfig::continuous(2, 1000, 2).with_replicas(3, 2, 1));
+        assert_eq!(fleet, reference, "replica choice changed a triple");
+        let rep = stats.replica.expect("replicated run reports fleet stats");
+        assert_eq!(rep.replicas, 3);
+        assert_eq!(rep.executed_rows.iter().sum::<usize>(), stats.completed);
+        assert_eq!(
+            rep.sync_bytes,
+            rep.moves as u64 * backend.expert_param_bytes(),
+            "ledger bytes must reconcile against placement moves"
+        );
+        // the route histogram feeds the rebalance: every admit counted
+        assert_eq!(stats.route_histogram.iter().sum::<usize>(), stats.admitted);
     }
 
     #[test]

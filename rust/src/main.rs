@@ -39,7 +39,7 @@ const VALUE_OPTS: &[&str] = &[
     "ckpt-dir", "steps", "threads", "batch-size", "max-wait-us", "stream",
     "delay-us", "checkpoint-dir", "checkpoint-every", "snapshot-every",
     "chaos-spec", "leave-after", "join-after", "shards", "listen",
-    "max-conns", "high-water",
+    "max-conns", "high-water", "replicas", "replication", "rebalance-every",
 ];
 
 const EVAL_SEED: u64 = 0xE7A1;
@@ -80,6 +80,12 @@ fn usage() -> &'static str {
                                    \":0\" picks a free port; stdin EOF drains)\n\
                      --max-conns N (--listen: connection limit; 0 = unlimited)\n\
                      --high-water N (--listen: shed arrivals past this queue depth)\n\
+                     --replicas N (engine replicas behind the dispatch queue;\n\
+                                   1 = the single-queue reference path)\n\
+                     --replication N (placement copies floor for hot experts)\n\
+                     --rebalance-every N (admission waves between placement\n\
+                                          rebalances from the route histogram;\n\
+                                          0 = never rebalance)\n\
      see configs/ for examples and DESIGN.md for the experiment index"
 }
 
@@ -591,7 +597,8 @@ fn cmd_serve(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
         mixture: &result.mixture,
         prefix_len: p.prefix_len,
     };
-    let scfg = ServerConfig::continuous(batch_size, cfg.serve_max_wait_us, threads);
+    let scfg = ServerConfig::continuous(batch_size, cfg.serve_max_wait_us, threads)
+        .with_replicas(cfg.serve_replicas, cfg.serve_replication, cfg.serve_rebalance_every);
     let t0 = std::time::Instant::now();
     let (responses, stats, ()) = run_server(&backend, &scfg, |client| {
         for (req, delay_us) in &arrivals {
@@ -614,11 +621,14 @@ fn cmd_serve(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
         cfg.serve_max_wait_us,
     );
     println!(
-        "  latency µs: queue p50 {:.0} / p95 {:.0}, total p50 {:.0} / p95 {:.0}",
+        "  latency µs: queue p50 {:.0} / p95 {:.0} / p99 {:.0}, \
+         total p50 {:.0} / p95 {:.0} / p99 {:.0}",
         percentile(&queue_us, 50.0),
         percentile(&queue_us, 95.0),
+        percentile(&queue_us, 99.0),
         percentile(&total_us, 50.0),
         percentile(&total_us, 95.0),
+        percentile(&total_us, 99.0),
     );
     println!(
         "  scheduler:  {} admission waves, {} batches dispatched ({} full, {} linger, {} drain), \
@@ -632,6 +642,19 @@ fn cmd_serve(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
         stats.route_cache_hits,
         stats.mean_queue_depth(),
     );
+    if let Some(rep) = &stats.replica {
+        println!(
+            "  replicas:   {} lanes (replication {}), executed rows {:?}, \
+             {} rebalances / {} moves ({} fallback), {} sync bytes",
+            rep.replicas,
+            rep.replication,
+            rep.executed_rows,
+            rep.rebalances,
+            rep.moves,
+            rep.fallback_dispatches,
+            rep.sync_bytes,
+        );
+    }
 
     // the continuous server must answer every request identically
     if response_triples(&closed) != response_triples(&responses) {
@@ -682,7 +705,8 @@ fn serve_over_socket(
         max_conns: cfg.net_max_conns,
         high_water: cfg.net_high_water,
         want_tokens: Some(want_len),
-        server: ServerConfig::continuous(batch_size, cfg.serve_max_wait_us, threads),
+        server: ServerConfig::continuous(batch_size, cfg.serve_max_wait_us, threads)
+            .with_replicas(cfg.serve_replicas, cfg.serve_replication, cfg.serve_rebalance_every),
     };
     let (stats, report) = serve_net(&backend, &ncfg, Some(&encode), |h| {
         println!(
@@ -716,6 +740,19 @@ fn serve_over_socket(
         stats.route_cache_hits,
         stats.mean_queue_depth(),
     );
+    if let Some(rep) = &stats.replica {
+        println!(
+            "  replicas:   {} lanes (replication {}), executed rows {:?}, \
+             {} rebalances / {} moves ({} fallback), {} sync bytes",
+            rep.replicas,
+            rep.replication,
+            rep.executed_rows,
+            rep.rebalances,
+            rep.moves,
+            rep.fallback_dispatches,
+            rep.sync_bytes,
+        );
+    }
     Ok(())
 }
 

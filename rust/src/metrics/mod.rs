@@ -214,4 +214,34 @@ mod tests {
         assert_eq!(percentile(&[7.0], 50.0), 7.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
     }
+
+    #[test]
+    fn percentile_empty_sample_is_zero_at_every_p() {
+        for p in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[], p), 0.0);
+        }
+    }
+
+    #[test]
+    fn percentile_single_sample_is_that_sample_at_every_p() {
+        for p in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[42.5], p), 42.5);
+        }
+    }
+
+    #[test]
+    fn percentile_exact_boundary_ranks() {
+        // p * n / 100 lands exactly on a rank: ceil must not skip ahead
+        let v = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&v, 25.0), 10.0); // rank 1 exactly
+        assert_eq!(percentile(&v, 50.0), 20.0); // rank 2 exactly
+        assert_eq!(percentile(&v, 75.0), 30.0); // rank 3 exactly
+        assert_eq!(percentile(&v, 100.0), 40.0); // rank 4 exactly
+        // just past a boundary: next rank up
+        assert_eq!(percentile(&v, 25.1), 20.0);
+        assert_eq!(percentile(&v, 75.1), 40.0);
+        // p99 on 100 samples is the 99th order statistic, not the max
+        let w: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&w, 99.0), 99.0);
+    }
 }

@@ -21,7 +21,7 @@ use std::time::Duration;
 
 use anyhow::Result;
 use smalltalk::coordinator::{
-    response_triples as triples, run_server, serve_net, NetConfig, Request, ServeBackend,
+    response_triples as triples, run_server, serve_net, FairMux, NetConfig, Request, ServeBackend,
     ServerConfig,
 };
 use smalltalk::util::json::Json;
@@ -651,4 +651,95 @@ fn line_splitting_is_invariant_to_read_chunking() {
             }
         },
     );
+}
+
+// ---------------------------------------------------------------------
+// FairMux fairness
+// ---------------------------------------------------------------------
+
+/// One firehose lane with a deep backlog, one trickle lane with a single
+/// item: the rotating scan must pump the trickle item within one full
+/// rotation (here: within 2 pops), no matter how deep the firehose
+/// backlog is.
+#[test]
+fn fairmux_trickle_item_is_served_within_one_rotation() {
+    let mux: FairMux<u64> = FairMux::new();
+    let firehose = mux.register();
+    let trickle = mux.register();
+    // the firehose piles up 100 items before the trickle client speaks
+    for i in 0..100 {
+        mux.push(firehose, i);
+    }
+    mux.push(trickle, 1_000);
+    // pop twice: one rotation over 2 lanes must include the trickle lane
+    let first_two = [mux.next().unwrap(), mux.next().unwrap()];
+    assert!(
+        first_two.contains(&1_000),
+        "trickle item waited past a full rotation: {first_two:?}"
+    );
+}
+
+/// Under sustained pressure from the firehose, the pump alternates: each
+/// rotation serves at most one firehose item before the trickle lane gets
+/// its turn, so neither lane starves — the trickle lane's k-th item is
+/// pumped within k rotations, and the firehose still drains completely.
+#[test]
+fn fairmux_neither_lane_starves_under_full_queues() {
+    let mux: FairMux<(usize, u64)> = FairMux::new();
+    let firehose = mux.register();
+    let trickle = mux.register();
+    for i in 0..50 {
+        mux.push(firehose, (firehose, i));
+    }
+    for i in 0..5 {
+        mux.push(trickle, (trickle, i));
+    }
+    mux.drain();
+    let order: Vec<(usize, u64)> = std::iter::from_fn(|| mux.next()).collect();
+    assert_eq!(order.len(), 55, "drain must pump every queued item");
+    // every trickle item appears within a bounded number of rounds: item
+    // k sits behind at most k firehose items (strict alternation while
+    // both lanes are non-empty)
+    for (k, pos) in order
+        .iter()
+        .enumerate()
+        .filter(|(_, &(lane, _))| lane == trickle)
+        .map(|(pos, &(_, k))| (k, pos))
+    {
+        assert!(
+            pos <= 2 * (k as usize) + 1,
+            "trickle item {k} starved until position {pos}: {order:?}"
+        );
+    }
+    // the firehose is not starved either: it drains in FIFO order
+    let fire: Vec<u64> = order
+        .iter()
+        .filter(|&&(lane, _)| lane == firehose)
+        .map(|&(_, i)| i)
+        .collect();
+    assert_eq!(fire, (0..50).collect::<Vec<u64>>());
+}
+
+/// `next` blocks while every lane is empty; `drain` releases it. A pump
+/// thread must see an item pushed *after* it started waiting.
+#[test]
+fn fairmux_next_wakes_on_late_push_and_drain() {
+    let mux: std::sync::Arc<FairMux<u32>> = std::sync::Arc::new(FairMux::new());
+    let lane = mux.register();
+    let pump = {
+        let mux = std::sync::Arc::clone(&mux);
+        std::thread::spawn(move || {
+            let mut got = Vec::new();
+            while let Some(v) = mux.next() {
+                got.push(v);
+            }
+            got
+        })
+    };
+    std::thread::sleep(Duration::from_millis(20));
+    mux.push(lane, 7);
+    std::thread::sleep(Duration::from_millis(20));
+    mux.drain();
+    let got = pump.join().expect("pump thread panicked");
+    assert_eq!(got, vec![7]);
 }

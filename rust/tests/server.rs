@@ -166,6 +166,9 @@ fn all_requests_to_one_expert_batches_exactly() {
         max_wait_us: u64::MAX, // no linger: dispatch boundaries are exact
         admission_max: 0,
         threads: 2,
+        replicas: 1,
+        replication: 1,
+        rebalance_every: 0,
     };
     let (out, stats, ()) = run_server(&backend, &cfg, |c| {
         c.submit_wave(reqs.clone());
@@ -326,6 +329,24 @@ fn freed_slots_are_refilled_under_backlog() {
          freed slots without blocking: {stats:?}"
     );
     assert!(stats.mean_queue_depth() > 0.0, "dispatch queue was never observed non-empty");
+}
+
+/// Regression: a run that never dispatches a batch (no requests at all)
+/// has zero depth samples — `mean_queue_depth` must report 0, not divide
+/// by zero.
+#[test]
+fn mean_queue_depth_is_zero_on_a_zero_dispatch_run() {
+    let backend = StubBackend::new(2);
+    let cfg = ServerConfig::continuous(4, 1000, 2);
+    let (out, stats, ()) = run_server(&backend, &cfg, |_c| {
+        // submit nothing: drain fires with every pending batch empty
+    })
+    .unwrap();
+    assert!(out.is_empty());
+    assert_eq!(stats.batches_dispatched, 0);
+    let depth = stats.mean_queue_depth();
+    assert_eq!(depth, 0.0, "zero-dispatch run must report 0, got {depth}");
+    assert!(depth.is_finite());
 }
 
 /// The straggler property the closed wave lacks: one slow expert batch
@@ -638,6 +659,9 @@ fn one_by_one(threads: usize) -> ServerConfig {
         max_wait_us: u64::MAX,
         admission_max: 1,
         threads,
+        replicas: 1,
+        replication: 1,
+        rebalance_every: 0,
     }
 }
 

@@ -23,11 +23,22 @@ if [ ! -f artifacts/manifest.json ] && [ ! -f rust/artifacts/manifest.json ] \
     > BENCH_routing.json
   printf '{\n  "skipped": "no artifacts/manifest.json; run make artifacts"\n}\n' \
     > BENCH_serve.json
+  export SMALLTALK_BENCH_WARMUP_MS="${SMALLTALK_BENCH_WARMUP_MS:-50}"
+  export SMALLTALK_BENCH_TARGET_MS="${SMALLTALK_BENCH_TARGET_MS:-300}"
+  # the serve bench's replica-fleet rows run on a stub backend (req/s +
+  # p50/p95/p99 at replicas {1,2,4} x replication {1,2} under hot-expert
+  # skew, rebalance moves, sync bytes), so even an artifact-less
+  # environment gets a fleet trajectory point (the bench itself skips
+  # its XLA-backed rows and still writes its JSON)
+  if cargo bench --bench serve; then
+    [ -f results/bench_serve.json ] && cp results/bench_serve.json BENCH_serve.json
+  else
+    echo "bench_smoke: serve bench failed" >&2
+    printf '{\n  "skipped": "serve bench run failed"\n}\n' > BENCH_serve.json
+  fi
   # the train bench's chaos + sharded-fleet rows run on a stub backend,
   # so even an artifact-less environment gets a fault-tolerance
   # trajectory point (the bench itself skips its XLA-backed rows)
-  export SMALLTALK_BENCH_WARMUP_MS="${SMALLTALK_BENCH_WARMUP_MS:-50}"
-  export SMALLTALK_BENCH_TARGET_MS="${SMALLTALK_BENCH_TARGET_MS:-300}"
   if cargo bench --bench train; then
     [ -f results/bench_train.json ] && cp results/bench_train.json BENCH_train.json
   else
